@@ -1,0 +1,51 @@
+//! Full accelerator report: cycles per stage, resources, FPS and FPJ for
+//! all six paper configurations (Fig. 1 / Table II / Table III in one
+//! view), paper values alongside.
+//!
+//! ```sh
+//! cargo run --release --example fpga_report
+//! ```
+
+use fastcaps::config::SystemConfig;
+use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
+
+fn main() {
+    let pm = PowerModel::default();
+    for (name, cfg, paper_fps) in [
+        ("original-mnist", SystemConfig::original("mnist"), 5.0),
+        ("pruned-mnist", SystemConfig::pruned("mnist"), 82.0),
+        ("proposed-mnist", SystemConfig::proposed("mnist"), 1351.0),
+        ("original-fmnist", SystemConfig::original("fmnist"), 5.0),
+        ("pruned-fmnist", SystemConfig::pruned("fmnist"), 48.0),
+        ("proposed-fmnist", SystemConfig::proposed("fmnist"), 934.0),
+    ] {
+        let d = DeployedModel::synthetic(&cfg, 7);
+        let t = d.estimate_frame();
+        let u = resources::estimate(&cfg);
+        let w = pm.watts(&u, !cfg.is_pruned());
+        println!(
+            "{name:18} fps={:8.1} (paper {paper_fps:6.1})  cycles={:>11}  lat={:.5}s  \
+             P={w:.2}W fpj={:.1}",
+            t.fps(),
+            fastcaps::util::fmt_thousands(t.total_cycles()),
+            t.latency_s(),
+            t.fps() / w,
+        );
+        println!(
+            "    resources: LUT={} LUTRAM={} BRAM={} DSP={}",
+            u.luts, u.lutram, u.bram36, u.dsp48e
+        );
+        for s in &t.stages {
+            println!("    {:24} {:>11} cycles", s.name, fastcaps::util::fmt_thousands(s.cycles));
+        }
+        if t.ddr_cycles > 0 {
+            println!(
+                "    {:24} {:>11} cycles (overlapped)",
+                "ddr weight streaming",
+                fastcaps::util::fmt_thousands(t.ddr_cycles)
+            );
+        }
+        println!();
+    }
+    println!("Routing-op detail (Fig. 8): `fastcaps report fig8`");
+}

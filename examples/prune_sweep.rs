@@ -1,0 +1,112 @@
+//! Pruning sweep on the full-size CapsNet: LAKP vs KP vs unstructured vs
+//! capsule pruning across sparsities — compression rate, surviving
+//! capsule count, index-memory cost, and the resulting simulated FPS.
+//!
+//! ```sh
+//! cargo run --release --example prune_sweep [-- --weights artifacts/weights-mnist.fcw]
+//! ```
+
+use fastcaps::capsnet::weights::Weights;
+use fastcaps::config::{CapsNetConfig, FpgaBudget, SparsityPlan, SystemConfig};
+use fastcaps::fpga::DeployedModel;
+use fastcaps::pruning::{capsule, kp, lakp, magnitude, surviving_capsule_types, AdjacencyNorms};
+use fastcaps::util::cli::Args;
+use fastcaps::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> fastcaps::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    // The sweep runs on the *full* (unpruned) architecture, like §III-A.
+    let cfg = CapsNetConfig::paper_full("capsnet-mnist");
+    let weights = match args.get("weights") {
+        Some(p) => Weights::load(Path::new(p))?,
+        None => Weights::random(&cfg, &mut Rng::new(11)),
+    };
+
+    println!(
+        "CapsNet {}: {} prunable conv kernels ({} params)\n",
+        cfg.name,
+        cfg.conv1_ch + cfg.pc_channels() * cfg.conv1_ch,
+        SparsityPlan::dense(&cfg).survived_conv_params(&cfg),
+    );
+    println!(
+        "{:>9} | {:>22} {:>8} {:>10} | {:>10} {:>8} | {:>12}",
+        "sparsity", "method", "kernels", "capsules", "compress%", "idx B", "sim FPS"
+    );
+    println!("{}", "-".repeat(95));
+
+    for sparsity in [0.5, 0.9, 0.97, 0.99, 0.995] {
+        // LAKP with real adjacency (Eq. 1).
+        let adj = AdjacencyNorms {
+            prev: AdjacencyNorms::prev_from_conv(&weights.conv1_w),
+            next: AdjacencyNorms::next_from_digitcaps(&weights.w_ij, cfg.pc_types, cfg.pc_dim),
+        };
+        let r_lakp = lakp::prune_layer(&weights.pc_w, &adj, sparsity);
+        let r_kp = kp::prune_layer(&weights.pc_w, sparsity);
+        let m_caps = capsule::prune_types(&weights.pc_w, cfg.pc_dim, sparsity);
+        let m_unstr = magnitude::prune_layer(&weights.pc_w, sparsity);
+
+        for (name, survived, types, idx_bytes) in [
+            (
+                "LAKP (proposed)",
+                r_lakp.mask.survived(),
+                surviving_capsule_types(&r_lakp.mask, cfg.pc_dim),
+                r_lakp.mask.index_bytes(),
+            ),
+            (
+                "KP (magnitude)",
+                r_kp.mask.survived(),
+                surviving_capsule_types(&r_kp.mask, cfg.pc_dim),
+                r_kp.mask.index_bytes(),
+            ),
+            (
+                "capsule pruning",
+                m_caps.survived(),
+                surviving_capsule_types(&m_caps, cfg.pc_dim),
+                m_caps.index_bytes(),
+            ),
+            (
+                "unstructured",
+                m_unstr.survived() / (cfg.pc_k * cfg.pc_k), // kernel-equivalents
+                cfg.pc_types,
+                m_unstr.index_bytes(),
+            ),
+        ] {
+            let (h2, w2) = cfg.pc_out();
+            let caps = types * h2 * w2;
+            let plan = SparsityPlan {
+                conv1_kernels: cfg.conv1_ch,
+                pc_kernels: survived,
+                conv1_channels: cfg.conv1_ch,
+                pc_types: types,
+            };
+            let compression = plan.compression_rate(&cfg, &cfg);
+            // Simulated throughput of this deployment.
+            let sys = SystemConfig {
+                model: cfg.clone(),
+                sparsity: plan,
+                budget: FpgaBudget::pynq_z1(),
+                options: fastcaps::config::AcceleratorOptions::optimized(),
+            };
+            let fps = DeployedModel::synthetic(&sys, 5).estimate_frame().fps();
+            println!(
+                "{:>8.1}% | {:>22} {:>8} {:>10} | {:>9.2}% {:>8} | {:>11.1}",
+                sparsity * 100.0,
+                name,
+                survived,
+                caps,
+                compression,
+                idx_bytes,
+                fps
+            );
+        }
+        println!("{}", "-".repeat(95));
+    }
+    println!(
+        "\nNote: capsule pruning saturates at whole-type granularity and unstructured\n\
+         pruning needs per-weight indices ({}x more index memory at equal sparsity) —\n\
+         the §III-C argument for kernel-structured LAKP.",
+        (cfg.pc_k * cfg.pc_k)
+    );
+    Ok(())
+}

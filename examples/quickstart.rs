@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT artifacts, classify one synthetic digit via
+//! the PJRT runtime, and show the same frame on the FPGA simulator.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fastcaps::config::SystemConfig;
+use fastcaps::data::{generate, Task};
+use fastcaps::fpga::DeployedModel;
+use std::path::Path;
+
+fn main() -> fastcaps::Result<()> {
+    // A synthetic MNIST-like digit (class 3).
+    let data = generate(Task::Digits, 4, 42);
+    let img = &data.images[3];
+    println!("input: 28x28 digit, label {}", data.labels[3]);
+
+    // --- Functional path: the JAX-lowered HLO on the PJRT CPU client.
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = fastcaps::runtime::Runtime::open(dir)?;
+        let engine = rt.engine("capsnet-mnist-pruned", 1, &dir.join("weights-mnist.fcw"))?;
+        let lengths = engine.run_batch(std::slice::from_ref(img))?;
+        let pred = lengths[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("PJRT  : predicted {pred} (capsule lengths {:?})", &lengths[0]);
+        println!("        (weights are random-init; train with `make table1` for meaning)");
+    } else {
+        println!("PJRT  : skipped — run `make artifacts` first");
+    }
+
+    // --- Timing path: the same frame on the cycle-level accelerator.
+    let model = DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 7);
+    let (pred, _, t) = model.run_frame(img)?;
+    println!(
+        "FPGA  : predicted {pred}, {} cycles = {:.2} ms @100MHz ({:.0} FPS)",
+        fastcaps::util::fmt_thousands(t.total_cycles()),
+        t.latency_s() * 1e3,
+        t.fps()
+    );
+    for s in &t.stages {
+        println!("        {:<18} {:>9} cycles", s.name, s.cycles);
+    }
+    Ok(())
+}

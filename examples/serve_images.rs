@@ -1,0 +1,115 @@
+//! End-to-end serving driver (deliverable (b)/(e) of DESIGN.md):
+//! the coordinator serves batched classification requests from concurrent
+//! clients through the PJRT runtime, while the FPGA simulator produces the
+//! modeled on-device timing/energy ledger for the same workload.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_images -- \
+//!     --requests 256 --clients 8
+//! ```
+//! Falls back to the simulator backend when artifacts are missing
+//! (`--backend sim`).
+
+use fastcaps::config::SystemConfig;
+use fastcaps::coordinator::server::{Backend, PjrtBackend, Server, SimBackend};
+use fastcaps::data::{generate, Task};
+use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
+use fastcaps::util::cli::Args;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() -> fastcaps::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.get_usize("requests", 128);
+    let n_clients = args.get_usize("clients", 4).max(1);
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let use_pjrt =
+        args.get_or("backend", "pjrt") == "pjrt" && dir.join("manifest.json").exists();
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
+
+    let server = if use_pjrt {
+        let dir2 = dir.clone();
+        Server::start(
+            move || {
+                let rt = fastcaps::runtime::Runtime::open(&dir2)?;
+                let weights = dir2.join("weights-mnist.fcw");
+                let mut engines = Vec::new();
+                for b in rt.batch_buckets("capsnet-mnist-pruned") {
+                    engines.push(rt.engine("capsnet-mnist-pruned", b, &weights)?);
+                }
+                Ok(Box::new(PjrtBackend::new(engines)?) as Box<dyn Backend>)
+            },
+            max_wait,
+        )
+    } else {
+        println!("(artifacts missing or --backend sim: using simulator backend)");
+        Server::start(
+            move || {
+                Ok(Box::new(SimBackend {
+                    model: DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 7),
+                }) as Box<dyn Backend>)
+            },
+            max_wait,
+        )
+    };
+
+    println!(
+        "end-to-end: {n_requests} requests, {n_clients} clients, backend={}",
+        if use_pjrt { "pjrt" } else { "sim" }
+    );
+    let t0 = std::time::Instant::now();
+    let mut agreement = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let server = &server;
+            handles.push(scope.spawn(move || {
+                let data = generate(Task::Digits, n_requests / n_clients, 100 + c as u64);
+                let mut hits = 0usize;
+                for (img, &label) in data.images.into_iter().zip(&data.labels) {
+                    if let Ok(resp) = server.classify(img) {
+                        if resp.predicted == label {
+                            hits += 1;
+                        }
+                    }
+                }
+                hits
+            }));
+        }
+        for h in handles {
+            agreement += h.join().unwrap();
+        }
+    });
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+
+    println!("\n=== serving metrics (host) ===");
+    println!("{}", m.summary());
+    println!(
+        "wall {:.2}s  → {:.1} req/s end-to-end",
+        wall.as_secs_f64(),
+        m.requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "label-agreement {}/{} (random weights — chance ≈ 10%)",
+        agreement, m.requests
+    );
+
+    // Modeled on-device ledger for the identical workload.
+    let cfg = SystemConfig::proposed("mnist");
+    let model = DeployedModel::synthetic(&cfg, 7);
+    let t = model.estimate_frame();
+    let u = resources::estimate(&cfg);
+    let pm = PowerModel::default();
+    println!("\n=== modeled PYNQ-Z1 ledger (same workload) ===");
+    println!(
+        "per-frame {:.3} ms  → {:.0} FPS, {:.1} FPJ; {} frames = {:.2} s, {:.1} J",
+        t.latency_s() * 1e3,
+        t.fps(),
+        pm.fpj(t.fps(), &u, false),
+        m.requests,
+        m.requests as f64 * t.latency_s(),
+        m.requests as f64 * t.latency_s() * pm.watts(&u, false),
+    );
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT bridge: lower the L2 CapsNet forward to HLO *text* for the rust
+runtime (L3).
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that
+the `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written to `artifacts/`:
+  capsnet-{mnist,fmnist}-pruned.b{1,8}.hlo.txt   — pruned+optimized model
+  capsnet-mnist.b1.hlo.txt                       — original (unpruned)
+  manifest.json                                  — shapes + param order
+  weights-{mnist,fmnist}.fcw                     — deployable weights
+
+Weights are *parameters* of the HLO (not baked constants) so the rust
+coordinator can hot-swap trained `.fcw` files without recompiling.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--fast]
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CapsConfig, forward, init_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: CapsConfig, batch: int, *, taylor: bool = True) -> str:
+    """Lower `forward(params, x)` for a fixed batch size."""
+
+    def fn(params, x):
+        lengths, v = forward(
+            params, x, cfg, taylor=taylor, use_pallas=True, batch_mode="map"
+        )
+        return (lengths, v)
+
+    param_spec = {
+        name: jax.ShapeDtypeStruct(shape, jnp.float32)
+        for name, shape in cfg.param_shapes()
+    }
+    x_spec = jax.ShapeDtypeStruct((batch, *cfg.input), jnp.float32)
+    lowered = jax.jit(fn).lower(param_spec, x_spec)
+    return to_hlo_text(lowered)
+
+
+def write_fcw(path, params, cfg: CapsConfig):
+    """Serialize params in the rust `.fcw` interchange format."""
+    order = [name for name, _ in cfg.param_shapes()]
+    with open(path, "wb") as f:
+        f.write(b"FCW1")
+        f.write(struct.pack("<I", len(order)))
+        for name in order:
+            import numpy as np
+
+            arr = np.asarray(params[name], dtype=np.float32)
+            f.write(struct.pack("<I", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def build_all(out_dir: str, fast: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    configs = [
+        (CapsConfig.paper_pruned_mnist(), [1, 8]),
+        (CapsConfig.paper_pruned_fmnist(), [1, 8]),
+    ]
+    if not fast:
+        # The original (unpruned) model, batch 1 — for end-to-end parity
+        # checks against the simulator's original configuration.
+        configs.append((CapsConfig.paper_full("capsnet-mnist"), [1]))
+    for cfg, batches in configs:
+        for b in batches:
+            name = f"{cfg.name}.b{b}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            print(f"lowering {name} ...", flush=True)
+            text = lower_model(cfg, b)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "model": cfg.name,
+                    "file": os.path.basename(path),
+                    "batch": b,
+                    "input_shape": [b, *cfg.input],
+                    "num_classes": cfg.num_classes,
+                    "dc_dim": cfg.dc_dim,
+                    # jax.jit flattens the params dict in sorted-key order;
+                    # the manifest records that order so the rust runtime
+                    # feeds literals to the right executable parameters.
+                    "params": [
+                        {"name": n, "shape": list(s)}
+                        for n, s in sorted(cfg.param_shapes())
+                    ],
+                    "outputs": ["lengths", "digit_caps"],
+                }
+            )
+    # Deployable (random-init) weights; `make table1` overwrites with
+    # trained ones.
+    for cfg, tag in [
+        (CapsConfig.paper_pruned_mnist(), "mnist"),
+        (CapsConfig.paper_pruned_fmnist(), "fmnist"),
+    ]:
+        wpath = os.path.join(out_dir, f"weights-{tag}.fcw")
+        if not os.path.exists(wpath):
+            params = init_params(cfg, jax.random.PRNGKey(42))
+            write_fcw(wpath, params, cfg)
+            print(f"wrote {wpath}")
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--fast", action="store_true", help="skip the original-model HLO")
+    args = ap.parse_args(argv)
+    manifest = build_all(args.out_dir, fast=args.fast)
+    print(f"wrote {len(manifest['entries'])} HLO artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

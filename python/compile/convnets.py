@@ -1,0 +1,119 @@
+"""Scaled VGG-style and ResNet-style conv nets for the Table I rows.
+
+The paper prunes VGG-19 (CIFAR-10, GTSRB) and ResNet-18 (CIFAR-10,
+GTSRB). Full-size training is out of budget on this CPU-only testbed, so
+these are faithful *structural* reductions (DESIGN.md §4): VGG-small
+keeps the plain stacked-3×3-conv + maxpool shape; ResNet-small keeps
+identity-skip residual blocks. What Table I measures — how KP vs LAKP
+degrade with sparsity — depends on the layer-to-layer coupling structure,
+which both reductions preserve.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv(x, w, stride=1, padding="SAME"):
+    """NCHW conv with OIHW weights."""
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+@dataclass
+class ConvNetSpec:
+    """A plain conv net: list of (out_ch, stride-or-'pool') conv layers +
+    a linear head. `residual` turns pairs of same-width convs into
+    identity-skip blocks (ResNet-small)."""
+
+    name: str
+    in_ch: int = 3
+    layers: list = field(default_factory=list)
+    residual: bool = False
+    num_classes: int = 10
+
+    @staticmethod
+    def vgg_small(name="vgg-small"):
+        # VGG shape: stacked 3x3 convs, pool between width jumps.
+        return ConvNetSpec(
+            name=name,
+            layers=[(16, 1), (16, "pool"), (32, 1), (32, "pool"),
+                    (64, 1), (64, "pool")],
+            residual=False,
+        )
+
+    @staticmethod
+    def resnet_small(name="resnet-small"):
+        # ResNet shape: stem + 3 residual pairs.
+        return ConvNetSpec(
+            name=name,
+            layers=[(16, 1), (16, 1), (16, 1), (32, "pool"), (32, 1),
+                    (64, "pool"), (64, 1)],
+            residual=True,
+        )
+
+    def conv_shapes(self):
+        """Ordered OIHW shapes of all conv layers."""
+        shapes = []
+        c = self.in_ch
+        for out_ch, _ in self.layers:
+            shapes.append((out_ch, c, 3, 3))
+            c = out_ch
+        return shapes
+
+
+def init_params(spec: ConvNetSpec, key, input_hw=32):
+    ks = jax.random.split(key, len(spec.layers) + 1)
+    params = {"convs": [], "head_w": None, "head_b": None}
+    c = spec.in_ch
+    hw = input_hw
+    for i, (out_ch, s) in enumerate(spec.layers):
+        std = (2.0 / (c * 9)) ** 0.5
+        params["convs"].append(std * jax.random.normal(ks[i], (out_ch, c, 3, 3)))
+        c = out_ch
+        if s == "pool":
+            hw //= 2
+    # Flatten-linear head (like VGG's FC head) — position-sensitive tasks
+    # (GTSRB-like glyph angles) lose their signal under global pooling.
+    feat = c * hw * hw
+    params["head_w"] = (1.0 / feat) ** 0.5 * jax.random.normal(
+        ks[-1], (feat, spec.num_classes)
+    )
+    params["head_b"] = jnp.zeros((spec.num_classes,))
+    return params
+
+
+def forward(params, x, spec: ConvNetSpec):
+    """x: [B,C,H,W] → logits [B,num_classes]. Flattened-feature head."""
+    h = x
+    prev_block_input = None
+    for i, ((out_ch, s), w) in enumerate(zip(spec.layers, params["convs"])):
+        h_in = h
+        h = conv(h, w)
+        if spec.residual and prev_block_input is not None \
+                and prev_block_input.shape == h.shape:
+            h = h + prev_block_input  # identity skip over the pair
+            prev_block_input = None
+        elif spec.residual and i > 0 and h_in.shape == h.shape:
+            prev_block_input = h_in
+        h = jax.nn.relu(h)
+        if s == "pool":
+            h = maxpool2(h)
+            prev_block_input = None
+    feat = h.reshape(h.shape[0], -1)  # [B, C·H·W]
+    return feat @ params["head_w"] + params["head_b"]
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))

@@ -1,0 +1,191 @@
+"""Synthetic datasets for the training-side experiments (Table I, Fig. 5).
+
+Procedural 10-class image tasks mirroring `rust/src/data` (DESIGN.md §4):
+
+* ``digits``    — MNIST-like stroke digits, 28×28 grayscale.
+* ``garments``  — F-MNIST-like filled silhouettes with texture, 28×28.
+* ``blobs32``   — CIFAR-10-like 32×32×3 class-conditioned compositions.
+* ``signs32``   — GTSRB-like 32×32×3 signs (colored shapes on noise).
+
+NumPy-only so dataset generation never traces into JAX.
+"""
+
+import numpy as np
+
+SIZE = 28
+
+
+def _affine(points, rng, *, max_rot=0.25, smin=0.85, smax=1.1, jit=0.06):
+    angle = rng.uniform(-max_rot, max_rot)
+    scale = rng.uniform(smin, smax)
+    dx, dy = rng.uniform(-jit, jit, size=2)
+    c, s = np.cos(angle), np.sin(angle)
+    p = points - 0.5
+    q = np.stack(
+        [0.5 + scale * (c * p[:, 0] - s * p[:, 1]) + dx,
+         0.5 + scale * (s * p[:, 0] + c * p[:, 1]) + dy],
+        axis=1,
+    )
+    return q
+
+
+def _digit_points(cls):
+    pi = np.pi
+    t = np.linspace(0, 1, 48)
+
+    def line(a, b):
+        return np.stack([a[0] + t * (b[0] - a[0]), a[1] + t * (b[1] - a[1])], 1)
+
+    def arc(c, r, a0, a1):
+        ang = a0 + (a1 - a0) * t
+        return np.stack([c[0] + r * np.cos(ang), c[1] + r * np.sin(ang)], 1)
+
+    strokes = {
+        0: [arc((0.5, 0.5), 0.32, 0, 2 * pi)],
+        1: [line((0.5, 0.15), (0.5, 0.85)), line((0.38, 0.28), (0.5, 0.15))],
+        2: [arc((0.5, 0.32), 0.2, pi, 2.6 * pi), line((0.66, 0.45), (0.3, 0.85)),
+            line((0.3, 0.85), (0.72, 0.85))],
+        3: [arc((0.48, 0.32), 0.18, 1.1 * pi, 2.5 * pi),
+            arc((0.48, 0.67), 0.18, 1.5 * pi, 2.9 * pi)],
+        4: [line((0.62, 0.15), (0.62, 0.85)), line((0.62, 0.15), (0.3, 0.6)),
+            line((0.3, 0.6), (0.75, 0.6))],
+        5: [line((0.68, 0.15), (0.35, 0.15)), line((0.35, 0.15), (0.33, 0.45)),
+            arc((0.5, 0.63), 0.2, 1.2 * pi, 2.7 * pi)],
+        6: [arc((0.48, 0.62), 0.2, 0, 2 * pi), arc((0.56, 0.42), 0.32, 0.9 * pi, 1.5 * pi)],
+        7: [line((0.3, 0.15), (0.72, 0.15)), line((0.72, 0.15), (0.42, 0.85))],
+        8: [arc((0.5, 0.32), 0.16, 0, 2 * pi), arc((0.5, 0.66), 0.19, 0, 2 * pi)],
+        9: [arc((0.52, 0.38), 0.2, 0, 2 * pi), arc((0.44, 0.58), 0.32, 1.5 * pi, 2.1 * pi)],
+    }
+    return np.concatenate(strokes[cls % 10])
+
+
+def render_digit(cls, rng):
+    pts = _affine(_digit_points(cls), rng)
+    sigma = rng.uniform(0.045, 0.065)
+    ys, xs = np.mgrid[0:SIZE, 0:SIZE]
+    cx = (xs + 0.5) / SIZE
+    cy = (ys + 0.5) / SIZE
+    d2 = (pts[:, None, None, 0] - cx) ** 2 + (pts[:, None, None, 1] - cy) ** 2
+    img = np.exp(-d2 / (2 * sigma * sigma)).max(axis=0)
+    img += rng.uniform(0, 0.04, size=img.shape)
+    return np.clip(img, 0, 1).astype(np.float32)[None]  # [1,28,28]
+
+
+_GARMENT_POLYS = {
+    0: [(0.2, 0.25), (0.35, 0.2), (0.65, 0.2), (0.8, 0.25), (0.78, 0.4),
+        (0.68, 0.38), (0.68, 0.8), (0.32, 0.8), (0.32, 0.38), (0.22, 0.4)],
+    1: [(0.35, 0.15), (0.65, 0.15), (0.63, 0.85), (0.53, 0.85), (0.5, 0.45),
+        (0.47, 0.85), (0.37, 0.85)],
+    2: [(0.15, 0.25), (0.35, 0.18), (0.65, 0.18), (0.85, 0.25), (0.82, 0.6),
+        (0.7, 0.58), (0.7, 0.82), (0.3, 0.82), (0.3, 0.58), (0.18, 0.6)],
+    3: [(0.38, 0.15), (0.62, 0.15), (0.58, 0.4), (0.75, 0.85), (0.25, 0.85),
+        (0.42, 0.4)],
+    4: [(0.15, 0.22), (0.38, 0.15), (0.62, 0.15), (0.85, 0.22), (0.83, 0.62),
+        (0.7, 0.6), (0.7, 0.88), (0.3, 0.88), (0.3, 0.6), (0.17, 0.62)],
+    5: [(0.15, 0.6), (0.8, 0.55), (0.85, 0.68), (0.7, 0.72), (0.45, 0.7),
+        (0.18, 0.72)],
+    6: [(0.18, 0.25), (0.38, 0.18), (0.62, 0.18), (0.82, 0.25), (0.8, 0.52),
+        (0.66, 0.48), (0.66, 0.85), (0.34, 0.85), (0.34, 0.48), (0.2, 0.52)],
+    7: [(0.15, 0.55), (0.55, 0.5), (0.8, 0.58), (0.85, 0.7), (0.75, 0.75),
+        (0.2, 0.75)],
+    8: [(0.22, 0.4), (0.78, 0.4), (0.82, 0.8), (0.18, 0.8)],
+    9: [(0.3, 0.3), (0.55, 0.3), (0.55, 0.55), (0.8, 0.6), (0.82, 0.75),
+        (0.25, 0.75)],
+}
+
+
+def _point_in_poly(poly, x, y):
+    c = np.zeros_like(x, dtype=bool)
+    n = len(poly)
+    j = n - 1
+    for i in range(n):
+        xi, yi = poly[i]
+        xj, yj = poly[j]
+        cross = ((yi > y) != (yj > y)) & (
+            x < (xj - xi) * (y - yi) / (yj - yi + 1e-12) + xi
+        )
+        c ^= cross
+        j = i
+    return c
+
+
+def render_garment(cls, rng):
+    poly = np.array(_GARMENT_POLYS[cls % 10])
+    poly = _affine(poly, rng, max_rot=0.12, smin=0.9, smax=1.08, jit=0.05)
+    freq = 2.0 + (cls % 5) * 2.5
+    amp = 0.15 + 0.05 * (cls % 3)
+    phase = rng.uniform(0, 2 * np.pi)
+    ys, xs = np.mgrid[0:SIZE, 0:SIZE]
+    cx = (xs + 0.5) / SIZE
+    cy = (ys + 0.5) / SIZE
+    inside = _point_in_poly([tuple(p) for p in poly], cx, cy)
+    tex = np.sin(freq * 2 * np.pi * cx + phase) * np.cos(freq * 2 * np.pi * cy + phase)
+    img = np.where(inside, 0.75 + amp * tex, 0.0)
+    img += rng.uniform(0, 0.05, size=img.shape)
+    return np.clip(img, 0, 1).astype(np.float32)[None]
+
+
+def render_blob32(cls, rng):
+    """CIFAR-like: 2–3 colored gaussian blobs in a class-specific layout."""
+    img = rng.uniform(0, 0.25, size=(3, 32, 32)).astype(np.float32)
+    layouts = [(0.3, 0.3), (0.7, 0.3), (0.3, 0.7), (0.7, 0.7), (0.5, 0.5)]
+    base = layouts[cls % 5]
+    second = layouts[(cls // 5 + 2) % 5]
+    ys, xs = np.mgrid[0:32, 0:32] / 32.0
+    for (cx, cy), chan, r in [
+        (base, cls % 3, 0.18),
+        (second, (cls + 1) % 3, 0.12),
+    ]:
+        cx += rng.uniform(-0.06, 0.06)
+        cy += rng.uniform(-0.06, 0.06)
+        blob = np.exp(-((xs - cx) ** 2 + (ys - cy) ** 2) / (2 * r * r))
+        img[chan] += blob.astype(np.float32)
+    return np.clip(img, 0, 1)
+
+
+def render_sign32(cls, rng):
+    """GTSRB-like: a colored geometric sign (circle/triangle/square) with a
+    class-dependent inner glyph on a noisy background."""
+    img = rng.uniform(0.1, 0.4, size=(3, 32, 32)).astype(np.float32)
+    ys, xs = np.mgrid[0:32, 0:32] / 32.0
+    cx = 0.5 + rng.uniform(-0.05, 0.05)
+    cy = 0.5 + rng.uniform(-0.05, 0.05)
+    shape = cls % 3
+    r = 0.32
+    if shape == 0:
+        mask = (xs - cx) ** 2 + (ys - cy) ** 2 < r * r
+    elif shape == 1:
+        mask = (np.abs(xs - cx) + np.abs(ys - cy)) < r
+    else:
+        mask = (np.abs(xs - cx) < r * 0.8) & (np.abs(ys - cy) < r * 0.8)
+    ring_color = [(0.9, 0.1, 0.1), (0.1, 0.2, 0.9), (0.9, 0.8, 0.1)][cls % 3]
+    for c in range(3):
+        img[c] = np.where(mask, ring_color[c], img[c])
+    # Inner glyph: bar angle encodes class.
+    ang = (cls / 10.0) * np.pi
+    gx = (xs - cx) * np.cos(ang) + (ys - cy) * np.sin(ang)
+    gy = -(xs - cx) * np.sin(ang) + (ys - cy) * np.cos(ang)
+    glyph = (np.abs(gx) < 0.18) & (np.abs(gy) < 0.05)
+    for c in range(3):
+        img[c] = np.where(glyph & mask, 0.95, img[c])
+    return np.clip(img, 0, 1)
+
+
+RENDERERS = {
+    "digits": render_digit,
+    "garments": render_garment,
+    "blobs32": render_blob32,
+    "signs32": render_sign32,
+}
+
+
+def generate(task: str, n: int, seed: int = 0):
+    """Balanced dataset: returns (images [N,C,H,W] f32, labels [N] i32)."""
+    rng = np.random.default_rng(seed)
+    render = RENDERERS[task]
+    xs, ys = [], []
+    for i in range(n):
+        cls = i % 10
+        xs.append(render(cls, rng))
+        ys.append(cls)
+    return np.stack(xs), np.array(ys, dtype=np.int32)

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spots, plus the pure-jnp
+# oracle (ref.py) they are pytest-pinned to. All kernels run with
+# interpret=True: the CPU PJRT plugin cannot execute Mosaic custom-calls,
+# so interpret mode is both the correctness path and what the AOT bridge
+# lowers into the HLO the rust runtime executes (see DESIGN.md §3).
+from . import matmul, ref, routing, softmax_taylor, squash  # noqa: F401

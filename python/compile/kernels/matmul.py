@@ -1,0 +1,82 @@
+"""Blocked Pallas matmul — the conv hot-spot as an im2col contraction.
+
+TPU adaptation of the paper's PE array (DESIGN.md §Hardware-Adaptation):
+the 10×9-MAC adder-tree array becomes an MXU-tiled matmul. BlockSpec
+plays the role the paper's Index Control Module + BRAM banking plays:
+it expresses which (M, N, K) tile is resident in VMEM at each grid step.
+
+Block sizes are the largest divisors of each dim under the caps
+(MXU-aligned 128 where the dims allow), so the kernel handles the odd
+shapes CapsNet produces (M = 36 output positions, N = 56 channels)
+without padding.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(dim: int, cap: int) -> int:
+    """Largest divisor of `dim` that is ≤ cap."""
+    best = 1
+    for d in range(1, min(dim, cap) + 1):
+        if dim % d == 0:
+            best = d
+    return best
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 512):
+    """`[M,K] @ [K,N] -> [M,N]` with VMEM-tiled accumulation."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def conv2d(x, w, b=None, stride=1):
+    """Valid conv via the Pallas matmul: x [C,H,W], w [O,I,k,k]."""
+    from . import ref
+
+    o, i, k, _ = w.shape
+    _, h, ww = x.shape
+    oh = (h - k) // stride + 1
+    ow = (ww - k) // stride + 1
+    cols = ref.im2col(x, k, stride)  # [P, I*k*k]
+    wmat = w.reshape(o, i * k * k).T  # [I*k*k, O]
+    out = matmul(cols, wmat)  # [P, O]
+    if b is not None:
+        out = out + b[None, :]
+    return out.T.reshape(o, oh, ow)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (x tile + y tile + out tile) —
+    used by the §Perf analysis in EXPERIMENTS.md."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

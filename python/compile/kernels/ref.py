@@ -1,0 +1,111 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Mirrors the rust f32 reference (`rust/src/routing/mod.rs`) exactly:
+squash, softmax (standard and the paper's Eq. 2/3 Taylor form), the
+dynamic routing loop, and the im2col convolution the conv kernel
+implements. Every Pallas kernel in this package is pytest-pinned to the
+function of the same name here.
+"""
+
+import jax.numpy as jnp
+
+# Paper Eq. 2: Taylor coefficients of e^x about a = 0.5 (e^a not folded).
+EXP_COEFFS = (0.60653, 0.60659, 0.30260, 0.10347, 0.02118, 0.00833)
+E_HALF = 1.6487212707
+
+
+def exp_taylor(x):
+    """Eq. 2 exponential: 5-term Horner polynomial on the fractional part,
+    power-of-e ROM for the integer part (mul/add only — the form the
+    hardware unit evaluates)."""
+    n = jnp.floor(x)
+    f = x - n
+    c = [ci * E_HALF for ci in EXP_COEFFS]
+    poly = c[0] + f * (c[1] + f * (c[2] + f * (c[3] + f * (c[4] + f * c[5]))))
+    return poly * jnp.exp(n)  # jnp.exp of an integer == ROM lookup
+
+
+def softmax(b, axis=-1):
+    """Max-shifted softmax (standard exp/div)."""
+    m = jnp.max(b, axis=axis, keepdims=True)
+    e = jnp.exp(b - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def softmax_taylor(b, axis=-1):
+    """The paper's optimized softmax: Eq. 2 exp + Eq. 3 divider
+    (a/b = e^(log a − log b))."""
+    m = jnp.max(b, axis=axis, keepdims=True)
+    e = exp_taylor(b - m)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    # Eq. 3 with exact log (the hardware log unit's normalization is
+    # exact in the exponent and 2e-4-accurate in the mantissa).
+    return exp_taylor(jnp.log(e + 1e-9) - jnp.log(s))
+
+
+def squash(s, axis=-1):
+    """v = (‖s‖²/(1+‖s‖²)) · s/‖s‖ (safe at 0)."""
+    n2 = jnp.sum(s * s, axis=axis, keepdims=True)
+    scale = n2 / (1.0 + n2) / jnp.sqrt(n2 + 1e-9)
+    return s * scale
+
+
+def routing_iteration(u_hat, b, *, taylor=False, update_logits=True):
+    """One dynamic-routing iteration (Fig. 4 body).
+
+    u_hat: [N, J, D] prediction vectors; b: [N, J] logits.
+    Returns (v [J, D], b' [N, J], c [N, J]).
+    """
+    c = softmax_taylor(b, axis=1) if taylor else softmax(b, axis=1)
+    s = jnp.einsum("nj,njd->jd", c, u_hat)
+    v = squash(s, axis=-1)
+    if update_logits:
+        b = b + jnp.einsum("njd,jd->nj", u_hat, v)
+    return v, b, c
+
+
+def dynamic_routing(u_hat, iterations=3, *, taylor=False):
+    """Full routing loop. Returns (v [J, D], c [N, J])."""
+    n, j, _ = u_hat.shape
+    b = jnp.zeros((n, j), dtype=u_hat.dtype)
+    v = None
+    c = None
+    for it in range(iterations):
+        v, b, c = routing_iteration(
+            u_hat, b, taylor=taylor, update_logits=it + 1 < iterations
+        )
+    return v, c
+
+
+def capsule_lengths(v, axis=-1):
+    return jnp.sqrt(jnp.sum(v * v, axis=axis))
+
+
+def im2col(x, k, stride):
+    """[C,H,W] -> [OH*OW, C*k*k] patch matrix (the conv kernel's view)."""
+    c, h, w = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    patches = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = x[:, ky : ky + stride * oh : stride, kx : kx + stride * ow : stride]
+            patches.append(sl.reshape(c, oh * ow))
+    # [C, k*k, P] -> [C*k*k, P] with C-major ordering to match OIHW weights.
+    stacked = jnp.stack(patches, axis=1).reshape(c * k * k, oh * ow)
+    return stacked.T
+
+
+def conv2d(x, w, b=None, stride=1):
+    """Valid conv via im2col matmul: x [C,H,W], w [O,I,k,k] -> [O,OH,OW]."""
+    o, i, k, _ = w.shape
+    c, h, ww = x.shape
+    assert c == i, f"channel mismatch {c} vs {i}"
+    oh = (h - k) // stride + 1
+    ow = (ww - k) // stride + 1
+    cols = im2col(x, k, stride)  # [P, I*k*k]
+    wmat = w.reshape(o, i * k * k)  # [O, I*k*k]
+    out = cols @ wmat.T  # [P, O]
+    if b is not None:
+        out = out + b[None, :]
+    return out.T.reshape(o, oh, ow)

@@ -1,0 +1,111 @@
+"""Pallas dynamic-routing kernels — one routing iteration as two kernels.
+
+The iteration splits exactly where the paper's loop reorder (Code 1 →
+Code 2) splits the hardware schedule:
+
+1. [`coupling_sum`] — per capsule-block: Taylor-softmax the logits, then
+   accumulate the partial weighted sum `s[j,d] += Σ_n c[n,j]·û[n,j,d]`
+   across grid steps (the FC step; the output block is revisited by every
+   grid step, the Pallas image of the reorder that keeps `s` resident).
+2. [`agreement`] — per capsule-block: `b[n,j] += Σ_d û[n,j,d]·v[j,d]`,
+   embarrassingly parallel after the reorder (no write conflicts — each
+   grid step owns its `b` rows, unlike Code 1's `b[i][j] +=` inner loop).
+
+The squash between the two runs on the squash kernel. All shapes are
+blocked over N (capsules) so a û tile stays in VMEM per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+from .softmax_taylor import _exp_taylor
+
+
+def _coupling_sum_kernel(taylor: bool, b_ref, u_ref, c_ref, s_ref):
+    b = b_ref[...]
+    m = jnp.max(b, axis=-1, keepdims=True)
+    if taylor:
+        e = _exp_taylor(b - m)
+        s = jnp.sum(e, axis=-1, keepdims=True)
+        c = _exp_taylor(jnp.log(e + 1e-9) - jnp.log(s))
+    else:
+        e = jnp.exp(b - m)
+        c = e / jnp.sum(e, axis=-1, keepdims=True)
+    c_ref[...] = c
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s_ref[...] += jnp.einsum("nj,njd->jd", c, u_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("taylor", "block"))
+def coupling_sum(b, u_hat, *, taylor: bool = True, block: int = 128):
+    """Softmax + FC step: returns (c [N,J], s [J,D])."""
+    n, j = b.shape
+    n2, j2, d = u_hat.shape
+    assert (n, j) == (n2, j2)
+    bn = pick_block(n, block)
+    kernel = functools.partial(_coupling_sum_kernel, taylor)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, j), lambda i: (i, 0)),
+            pl.BlockSpec((bn, j, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, j), lambda i: (i, 0)),
+            pl.BlockSpec((j, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, j), b.dtype),
+            jax.ShapeDtypeStruct((j, d), b.dtype),
+        ],
+        interpret=True,
+    )(b, u_hat)
+
+
+def _agreement_kernel(b_ref, u_ref, v_ref, o_ref):
+    o_ref[...] = b_ref[...] + jnp.einsum("njd,jd->nj", u_ref[...], v_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def agreement(b, u_hat, v, *, block: int = 128):
+    """Agreement step (Code 2 order): b' = b + û·v."""
+    n, j = b.shape
+    _, _, d = u_hat.shape
+    bn = pick_block(n, block)
+    return pl.pallas_call(
+        _agreement_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, j), lambda i: (i, 0)),
+            pl.BlockSpec((bn, j, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((j, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, j), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, j), b.dtype),
+        interpret=True,
+    )(b, u_hat, v)
+
+
+def dynamic_routing(u_hat, iterations: int = 3, *, taylor: bool = True):
+    """Full routing loop on the Pallas kernels. Returns (v [J,D], c [N,J])."""
+    from .squash import squash
+
+    n, j, d = u_hat.shape
+    b = jnp.zeros((n, j), dtype=u_hat.dtype)
+    v = None
+    c = None
+    for it in range(iterations):
+        c, s = coupling_sum(b, u_hat, taylor=taylor)
+        v = squash(s)
+        if it + 1 < iterations:
+            b = agreement(b, u_hat, v)
+    return v, c

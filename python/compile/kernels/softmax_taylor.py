@@ -1,0 +1,50 @@
+"""Pallas Taylor-softmax kernel — the paper's §III-B softmax.
+
+Evaluates Eq. 2 (5-term Horner exp about a = 0.5) and Eq. 3
+(`a/b = e^(log a − log b)`) over row blocks: multiply/add only in the
+polynomial, matching the hardware unit built from the PE array. The
+integer range reduction (`e^n` ROM) appears as `jnp.exp(floor(x))`,
+which XLA folds to an exp on an integer grid — the software image of
+the 64-entry ROM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+from .ref import E_HALF, EXP_COEFFS
+
+
+def _exp_taylor(x):
+    n = jnp.floor(x)
+    f = x - n
+    c = [ci * E_HALF for ci in EXP_COEFFS]
+    poly = c[0] + f * (c[1] + f * (c[2] + f * (c[3] + f * (c[4] + f * c[5]))))
+    return poly * jnp.exp(n)
+
+
+def _softmax_taylor_kernel(b_ref, o_ref):
+    b = b_ref[...]
+    m = jnp.max(b, axis=-1, keepdims=True)
+    e = _exp_taylor(b - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    # Eq. 3 divider.
+    o_ref[...] = _exp_taylor(jnp.log(e + 1e-9) - jnp.log(s))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def softmax_taylor(b, *, block: int = 256):
+    """Row softmax of `[N, J]` logits with the Eq. 2/3 datapath."""
+    n, j = b.shape
+    bn = pick_block(n, block)
+    return pl.pallas_call(
+        _softmax_taylor_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, j), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, j), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, j), b.dtype),
+        interpret=True,
+    )(b)

@@ -1,0 +1,37 @@
+"""Pallas squash kernel: row-blocked over the capsule axis.
+
+The paper implements Squash as a dedicated unit (Fig. 11a: MAC tree,
+sqrt, divider, scale multipliers); on TPU it is a row-parallel VPU op.
+Rows are tiled so a block of capsules (and their D components) sits in
+VMEM per grid step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _squash_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    scale = n2 / (1.0 + n2) / jnp.sqrt(n2 + 1e-9)
+    o_ref[...] = x * scale
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def squash(x, *, block: int = 256):
+    """Squash rows of `[N, D]` (one capsule per row)."""
+    n, d = x.shape
+    bn = pick_block(n, block)
+    return pl.pallas_call(
+        _squash_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,153 @@
+"""L2: the CapsNet forward graph in JAX, composing the L1 Pallas kernels.
+
+Mirrors `rust/src/capsnet` (same architecture presets, same shared
+DigitCaps transform, same `.fcw` weight order) so the HLO the rust
+runtime executes and the fp32 rust reference agree. The forward is built
+once per (config, batch) by `aot.py` and never runs in production Python.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as k_matmul
+from .kernels import ref
+from .kernels import routing as k_routing
+from .kernels import squash as k_squash
+
+
+@dataclass(frozen=True)
+class CapsConfig:
+    """Architecture preset — mirrors rust `config::CapsNetConfig`."""
+
+    name: str
+    input: tuple  # (C, H, W)
+    conv1_ch: int
+    conv1_k: int
+    conv1_stride: int
+    pc_types: int
+    pc_dim: int
+    pc_k: int
+    pc_stride: int
+    num_classes: int
+    dc_dim: int
+    routing_iters: int
+
+    @staticmethod
+    def paper_full(name="capsnet-mnist"):
+        return CapsConfig(name, (1, 28, 28), 256, 9, 1, 32, 8, 9, 2, 10, 16, 3)
+
+    @staticmethod
+    def paper_pruned_mnist():
+        c = CapsConfig.paper_full("capsnet-mnist-pruned")
+        return CapsConfig(**{**c.__dict__, "name": "capsnet-mnist-pruned",
+                             "conv1_ch": 64, "pc_types": 7})
+
+    @staticmethod
+    def paper_pruned_fmnist():
+        c = CapsConfig.paper_full("capsnet-fmnist-pruned")
+        return CapsConfig(**{**c.__dict__, "name": "capsnet-fmnist-pruned",
+                             "conv1_ch": 96, "pc_types": 12})
+
+    @staticmethod
+    def small(name="capsnet-small"):
+        """Training-scale variant for the Table I pruning study."""
+        return CapsConfig(name, (1, 28, 28), 32, 9, 1, 8, 8, 9, 2, 10, 16, 3)
+
+    def conv1_out(self):
+        _, h, w = self.input
+        return ((h - self.conv1_k) // self.conv1_stride + 1,
+                (w - self.conv1_k) // self.conv1_stride + 1)
+
+    def pc_out(self):
+        h, w = self.conv1_out()
+        return ((h - self.pc_k) // self.pc_stride + 1,
+                (w - self.pc_k) // self.pc_stride + 1)
+
+    def pc_channels(self):
+        return self.pc_types * self.pc_dim
+
+    def num_primary_caps(self):
+        h, w = self.pc_out()
+        return self.pc_types * h * w
+
+    def param_shapes(self):
+        """Ordered (name, shape) list — the `.fcw` interchange order."""
+        c_in = self.input[0]
+        return [
+            ("conv1_w", (self.conv1_ch, c_in, self.conv1_k, self.conv1_k)),
+            ("conv1_b", (self.conv1_ch,)),
+            ("pc_w", (self.pc_channels(), self.conv1_ch, self.pc_k, self.pc_k)),
+            ("pc_b", (self.pc_channels(),)),
+            ("w_ij", (self.pc_types, self.num_classes, self.pc_dim, self.dc_dim)),
+        ]
+
+
+def init_params(cfg: CapsConfig, key):
+    """He-normal init matching rust `Weights::random`."""
+    ks = jax.random.split(key, 3)
+    c_in = self_in = cfg.input[0]
+    shapes = dict(cfg.param_shapes())
+    std1 = (2.0 / (self_in * cfg.conv1_k**2)) ** 0.5
+    std2 = (2.0 / (cfg.conv1_ch * cfg.pc_k**2)) ** 0.5
+    # Small transform init keeps initial capsule lengths in the sensitive
+    # region of the margin loss (all-lengths≈1 is a flat plateau).
+    std3 = 0.5 / cfg.pc_dim
+    del c_in
+    return {
+        "conv1_w": std1 * jax.random.normal(ks[0], shapes["conv1_w"]),
+        "conv1_b": jnp.zeros(shapes["conv1_b"]),
+        "pc_w": std2 * jax.random.normal(ks[1], shapes["pc_w"]),
+        "pc_b": jnp.zeros(shapes["pc_b"]),
+        "w_ij": std3 * jax.random.normal(ks[2], shapes["w_ij"]),
+    }
+
+
+def _forward_single(params, x, cfg: CapsConfig, *, taylor: bool, use_pallas: bool):
+    """One image `[C,H,W]` → (lengths [J], v [J,D])."""
+    conv = k_matmul.conv2d if use_pallas else ref.conv2d
+    a1 = jax.nn.relu(
+        conv(x, params["conv1_w"], params["conv1_b"], stride=cfg.conv1_stride)
+    )
+    pc = conv(a1, params["pc_w"], params["pc_b"], stride=cfg.pc_stride)
+    h2, w2 = cfg.pc_out()
+    # [T*D, h2, w2] -> capsules [T, h2*w2, D] -> [N, D].
+    caps = pc.reshape(cfg.pc_types, cfg.pc_dim, h2 * w2).transpose(0, 2, 1)
+    u = caps.reshape(cfg.num_primary_caps(), cfg.pc_dim)
+    u = k_squash.squash(u) if use_pallas else ref.squash(u)
+    # Shared transform per type: û[t,s,j,e] = Σ_d u[t,s,d]·W[t,j,d,e].
+    u_t = u.reshape(cfg.pc_types, h2 * w2, cfg.pc_dim)
+    u_hat = jnp.einsum("tsd,tjde->tsje", u_t, params["w_ij"])
+    u_hat = u_hat.reshape(cfg.num_primary_caps(), cfg.num_classes, cfg.dc_dim)
+    if use_pallas:
+        v, _ = k_routing.dynamic_routing(u_hat, cfg.routing_iters, taylor=taylor)
+    else:
+        v, _ = ref.dynamic_routing(u_hat, cfg.routing_iters, taylor=taylor)
+    return ref.capsule_lengths(v), v
+
+
+def forward(params, x, cfg: CapsConfig, *, taylor: bool = True,
+            use_pallas: bool = True, batch_mode: str = "vmap"):
+    """Batched forward: x `[B,C,H,W]` → (lengths [B,J], v [B,J,D]).
+
+    `batch_mode="map"` lowers the batch as `lax.map` instead of `vmap` —
+    3.8× faster for the interpret-mode Pallas path on CPU PJRT (vmap turns
+    the kernels' grid loops into batched while-loops XLA executes poorly;
+    see EXPERIMENTS.md §Perf). The AOT artifacts use "map"; training and
+    tests keep "vmap" (differentiation-friendly, fuses with the ref path).
+    """
+    f = lambda img: _forward_single(
+        params, img, cfg, taylor=taylor, use_pallas=use_pallas
+    )
+    if batch_mode == "map":
+        return jax.lax.map(f, x)
+    return jax.vmap(f)(x)
+
+
+def margin_loss(lengths, labels, num_classes=10, m_pos=0.9, m_neg=0.1, lam=0.5):
+    """CapsNet margin loss (Sabour et al. Eq. 4)."""
+    t = jax.nn.one_hot(labels, num_classes)
+    pos = t * jnp.maximum(0.0, m_pos - lengths) ** 2
+    neg = lam * (1.0 - t) * jnp.maximum(0.0, lengths - m_neg) ** 2
+    return jnp.mean(jnp.sum(pos + neg, axis=-1))

@@ -1,0 +1,190 @@
+"""The pruning study: regenerates Table I and Fig. 5.
+
+For each (model, dataset) row of Table I: train the scaled model, then
+for each sparsity × {KP, LAKP}: prune → fine-tune → measure test error.
+Fig. 5 additionally sweeps unstructured magnitude pruning on
+CapsNet/digits.
+
+Writes `artifacts/table1.json` and `artifacts/fig5.json`, which the rust
+CLI formats (`fastcaps report table1|fig5`).
+
+Usage:
+  python -m compile.prune_study [--fast] [--out-dir ../artifacts]
+
+`--fast` trims to 3 sparsities, smaller datasets and fewer epochs
+(minutes instead of ~half an hour); the JSON schema is identical.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from . import convnets, pruning, train
+from .model import CapsConfig
+
+
+def finetune_and_eval_capsnet(cfg, task, params, masks, *, epochs, n_train, n_test, seed):
+    mask_fn = pruning.capsnet_mask_fn(masks)
+    pruned = mask_fn(params)
+    tuned, err, _ = train.train_capsnet(
+        cfg, task, params=pruned, mask_fn=mask_fn, epochs=epochs,
+        n_train=n_train, n_test=n_test, seed=seed, lr=5e-4,
+        log=lambda *_: None,
+    )
+    del tuned
+    return err
+
+
+def finetune_and_eval_convnet(spec, task, params, masks, *, epochs, n_train, n_test, seed):
+    mask_fn = pruning.convnet_mask_fn(masks)
+    pruned = mask_fn(params)
+    tuned, err, _ = train.train_convnet(
+        spec, task, params=pruned, mask_fn=mask_fn, epochs=epochs,
+        n_train=n_train, n_test=n_test, seed=seed, lr=5e-4,
+        log=lambda *_: None,
+    )
+    del tuned
+    return err
+
+
+def run_table1(fast: bool, log=print):
+    sparsities = [0.75, 0.9, 0.97] if fast else [0.5, 0.75, 0.9, 0.97, 0.99]
+    n_train = 600 if fast else 1500
+    n_test = 300 if fast else 500
+    epochs = 2 if fast else 4
+    ft_epochs = 1 if fast else 2
+    rows = []
+
+    combos = [
+        ("capsnet", "digits"), ("capsnet", "garments"),
+        ("vgg", "blobs32"), ("vgg", "signs32"),
+        ("resnet", "blobs32"), ("resnet", "signs32"),
+    ]
+    for model_name, task in combos:
+        t0 = time.time()
+        log(f"== Table I row: {model_name} / {task} ==")
+        if model_name == "capsnet":
+            cfg = CapsConfig.small()
+            params, base_err, _ = train.train_capsnet(
+                cfg, task, epochs=epochs, n_train=n_train, n_test=n_test,
+                seed=1, log=log,
+            )
+            for s in sparsities:
+                row = {"model": model_name, "dataset": task,
+                       "actual_error": base_err, "sparsity": s}
+                for method in ("kp", "lakp"):
+                    masks = pruning.capsnet_masks(params, s, method)
+                    row[f"survived_{method}"] = \
+                        pruning.survived_weight_fraction_capsnet(masks, params)
+                    row[f"error_{method}"] = finetune_and_eval_capsnet(
+                        cfg, task, params, masks, epochs=ft_epochs,
+                        n_train=n_train, n_test=n_test, seed=2,
+                    )
+                log(f"  s={s:.2f}: KP {row['error_kp']:.2f}% "
+                    f"LAKP {row['error_lakp']:.2f}%")
+                rows.append(row)
+        else:
+            spec = (convnets.ConvNetSpec.vgg_small() if model_name == "vgg"
+                    else convnets.ConvNetSpec.resnet_small())
+            # Conv nets are cheap to train — give them enough epochs to
+            # leave the chance plateau even in --fast mode.
+            params, base_err, _ = train.train_convnet(
+                spec, task, epochs=max(epochs, 6), n_train=n_train,
+                n_test=n_test, seed=1, log=log,
+            )
+            for s in sparsities:
+                row = {"model": model_name, "dataset": task,
+                       "actual_error": base_err, "sparsity": s}
+                for method in ("kp", "lakp"):
+                    masks = pruning.convnet_masks(
+                        params, s, method, head_w=params["head_w"]
+                    )
+                    row[f"survived_{method}"] = \
+                        pruning.survived_weight_fraction_convnet(masks, params)
+                    row[f"error_{method}"] = finetune_and_eval_convnet(
+                        spec, task, params, masks, epochs=ft_epochs,
+                        n_train=n_train, n_test=n_test, seed=2,
+                    )
+                log(f"  s={s:.2f}: KP {row['error_kp']:.2f}% "
+                    f"LAKP {row['error_lakp']:.2f}%")
+                rows.append(row)
+        log(f"  row done in {time.time() - t0:.0f}s")
+    return {"experiment": "table1", "rows": rows}
+
+
+def run_fig5(fast: bool, log=print):
+    """Fig. 5: LAKP vs KP vs unstructured magnitude on CapsNet/digits."""
+    sparsities = [0.5, 0.9, 0.99] if fast else [0.5, 0.75, 0.9, 0.97, 0.99, 0.995]
+    n_train = 600 if fast else 1500
+    n_test = 300 if fast else 500
+    epochs = 2 if fast else 4
+    ft_epochs = 1 if fast else 2
+    cfg = CapsConfig.small()
+    log("== Fig. 5 sweep: CapsNet / digits ==")
+    params, base_err, _ = train.train_capsnet(
+        cfg, "digits", epochs=epochs, n_train=n_train, n_test=n_test,
+        seed=1, log=log,
+    )
+    points = []
+    for s in sparsities:
+        pt = {"sparsity": s}
+        for method in ("kp", "lakp"):
+            masks = pruning.capsnet_masks(params, s, method)
+            pt[f"survived_{method}"] = \
+                pruning.survived_weight_fraction_capsnet(masks, params)
+            pt[f"error_{method}"] = finetune_and_eval_capsnet(
+                cfg, "digits", params, masks, epochs=ft_epochs,
+                n_train=n_train, n_test=n_test, seed=2,
+            )
+        # Unstructured magnitude at matched *weight* sparsity.
+        import jax.numpy as jnp
+
+        m1 = pruning.unstructured_mask(np.asarray(params["conv1_w"]), s)
+        m2 = pruning.unstructured_mask(np.asarray(params["pc_w"]), s)
+        jm1, jm2 = jnp.asarray(m1), jnp.asarray(m2)
+
+        def mask_fn(p, jm1=jm1, jm2=jm2):
+            p = dict(p)
+            p["conv1_w"] = p["conv1_w"] * jm1
+            p["pc_w"] = p["pc_w"] * jm2
+            return p
+
+        tuned, err, _ = train.train_capsnet(
+            cfg, "digits", params=mask_fn(params), mask_fn=mask_fn,
+            epochs=ft_epochs, n_train=n_train, n_test=n_test, seed=2,
+            lr=5e-4, log=lambda *_: None,
+        )
+        del tuned
+        pt["survived_unstructured"] = float((m1.sum() + m2.sum()) /
+                                            (m1.size + m2.size))
+        pt["error_unstructured"] = err
+        log(f"  s={s}: KP {pt['error_kp']:.2f} LAKP {pt['error_lakp']:.2f} "
+            f"unstr {pt['error_unstructured']:.2f}")
+        points.append(pt)
+    return {"experiment": "fig5", "baseline_error": base_err, "points": points}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", choices=["table1", "fig5"], default=None)
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.only in (None, "table1"):
+        t1 = run_table1(args.fast)
+        with open(os.path.join(args.out_dir, "table1.json"), "w") as f:
+            json.dump(t1, f, indent=2, sort_keys=True)
+        print(f"wrote table1.json ({len(t1['rows'])} rows)")
+    if args.only in (None, "fig5"):
+        f5 = run_fig5(args.fast)
+        with open(os.path.join(args.out_dir, "fig5.json"), "w") as f:
+            json.dump(f5, f, indent=2, sort_keys=True)
+        print(f"wrote fig5.json ({len(f5['points'])} points)")
+
+
+if __name__ == "__main__":
+    main()

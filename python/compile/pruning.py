@@ -1,0 +1,183 @@
+"""Pruning methods — Python mirror of `rust/src/pruning` for the
+training-side study (Table I, Fig. 5).
+
+Kernel scores operate on OIHW numpy arrays:
+  KP:    score(o,i) = Σ|W[o,i]|                       (Mao et al. [14])
+  LAKP:  score(o,i) = Σ|W[o,i]| · prev[i] · next[o]   (Eq. 1 / Alg. 1)
+and unstructured magnitude prunes individual weights (Han et al. [21]).
+"""
+
+import numpy as np
+
+
+def kernel_abs_sums(w):
+    """[O,I,kh,kw] -> [O,I] per-kernel L1."""
+    return np.abs(w).sum(axis=(2, 3))
+
+
+def prev_norms_from_conv(prev_w):
+    """Producer magnitude per channel: whole filter of the previous layer."""
+    return np.abs(prev_w).sum(axis=tuple(range(1, prev_w.ndim)))
+
+
+def next_norms_from_conv(next_w):
+    """Consumer magnitude per channel: all next-layer kernels reading it."""
+    return np.abs(next_w).sum(axis=(0, 2, 3))
+
+
+def next_norms_from_digitcaps(w_ij, pc_dim):
+    """Consumers of PrimaryCaps channel k = type·pc_dim + d are the
+    DigitCaps transform slices W[t, :, d, :] (shared transform layout)."""
+    t, j, d_in, d_out = w_ij.shape
+    # [T, d_in] magnitude -> flatten to [T*d_in].
+    return np.abs(w_ij).sum(axis=(1, 3)).reshape(t * d_in)
+
+
+def next_norms_from_head(head_w, out_ch):
+    """Consumers for the last conv layer: the flatten-linear head's rows,
+    grouped back to conv channels (head input is [C·H·W] channel-major)."""
+    per_ch = head_w.shape[0] // out_ch
+    return np.abs(head_w).reshape(out_ch, per_ch, -1).sum(axis=(1, 2))
+
+
+def lakp_scores(w, prev, next_):
+    s = kernel_abs_sums(w)
+    return s * prev[None, :] * next_[:, None]
+
+
+def kp_scores(w):
+    return kernel_abs_sums(w)
+
+
+def mask_lowest(scores, sparsity):
+    """Mask (1=keep) pruning the lowest-scored fraction of kernels."""
+    flat = scores.flatten()
+    n_prune = int(np.floor(flat.size * sparsity))
+    mask = np.ones_like(flat)
+    if n_prune > 0:
+        order = np.argsort(flat, kind="stable")
+        mask[order[:n_prune]] = 0.0
+    return mask.reshape(scores.shape)
+
+
+def apply_kernel_mask(w, mask):
+    """Zero pruned kernels of an OIHW tensor."""
+    return w * mask[:, :, None, None]
+
+
+def unstructured_mask(w, sparsity):
+    flat = np.abs(w).flatten()
+    n_prune = int(np.floor(flat.size * sparsity))
+    mask = np.ones_like(flat)
+    if n_prune > 0:
+        order = np.argsort(flat, kind="stable")
+        mask[order[:n_prune]] = 0.0
+    return mask.reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# Model-level pruning plans
+# ---------------------------------------------------------------------------
+
+def capsnet_masks(params, sparsity, method):
+    """Kernel masks for CapsNet's two prunable layers ({conv1_w, pc_w})."""
+    conv1 = np.asarray(params["conv1_w"])
+    pc = np.asarray(params["pc_w"])
+    w_ij = np.asarray(params["w_ij"])
+    if method == "lakp":
+        s1 = lakp_scores(
+            conv1,
+            np.ones(conv1.shape[1], dtype=conv1.dtype),  # input has no producer
+            next_norms_from_conv(pc),
+        )
+        s2 = lakp_scores(
+            pc,
+            prev_norms_from_conv(conv1),
+            next_norms_from_digitcaps(w_ij, pc_dim=w_ij.shape[2]),
+        )
+    elif method == "kp":
+        s1, s2 = kp_scores(conv1), kp_scores(pc)
+    else:
+        raise ValueError(method)
+    return {
+        "conv1_w": mask_lowest(s1, sparsity),
+        "pc_w": mask_lowest(s2, sparsity),
+    }
+
+
+def convnet_masks(params, sparsity, method, head_w=None):
+    """Kernel masks for every conv layer of a plain/residual conv net."""
+    convs = [np.asarray(w) for w in params["convs"]]
+    masks = []
+    for i, w in enumerate(convs):
+        if method == "kp":
+            s = kp_scores(w)
+        elif method == "lakp":
+            prev = (
+                prev_norms_from_conv(convs[i - 1])
+                if i > 0
+                else np.ones(w.shape[1], dtype=w.dtype)
+            )
+            if i + 1 < len(convs):
+                nxt = next_norms_from_conv(convs[i + 1])
+            elif head_w is not None:
+                nxt = next_norms_from_head(np.asarray(head_w), w.shape[0])
+            else:
+                nxt = np.ones(w.shape[0], dtype=w.dtype)
+            s = lakp_scores(w, prev, nxt)
+        else:
+            raise ValueError(method)
+        masks.append(mask_lowest(s, sparsity))
+    return masks
+
+
+def capsnet_mask_fn(masks):
+    """Mask re-applier for fine-tuning (jax-friendly closure)."""
+    import jax.numpy as jnp
+
+    m1 = jnp.asarray(masks["conv1_w"])[:, :, None, None]
+    m2 = jnp.asarray(masks["pc_w"])[:, :, None, None]
+
+    def fn(params):
+        params = dict(params)
+        params["conv1_w"] = params["conv1_w"] * m1
+        params["pc_w"] = params["pc_w"] * m2
+        return params
+
+    return fn
+
+
+def convnet_mask_fn(masks):
+    import jax.numpy as jnp
+
+    ms = [jnp.asarray(m)[:, :, None, None] for m in masks]
+
+    def fn(params):
+        params = dict(params)
+        params["convs"] = [w * m for w, m in zip(params["convs"], ms)]
+        return params
+
+    return fn
+
+
+def survived_weight_fraction_capsnet(masks, params):
+    """Fraction of prunable (conv) weights surviving — Table I column."""
+    total = 0
+    kept = 0
+    for key in ("conv1_w", "pc_w"):
+        w = np.asarray(params[key])
+        kk = w.shape[2] * w.shape[3]
+        total += w.size
+        kept += int(masks[key].sum()) * kk
+    return kept / total
+
+
+def survived_weight_fraction_convnet(masks, params):
+    total = 0
+    kept = 0
+    for m, w in zip(masks, params["convs"]):
+        w = np.asarray(w)
+        kk = w.shape[2] * w.shape[3]
+        total += w.size
+        kept += int(m.sum()) * kk
+    return kept / total

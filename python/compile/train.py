@@ -1,0 +1,171 @@
+"""Training loops (build-time only) for the pruning study.
+
+The paper trains CapsNet / VGG-19 / ResNet-18 on Colab GPUs; this module
+trains the scaled counterparts (DESIGN.md §4) on CPU JAX. Hand-rolled
+Adam (no optax in the environment); the CapsNet path trains through the
+pure-jnp reference kernels (differentiable and ~10× faster to trace than
+interpret-mode Pallas — the Pallas path is the *inference* artifact).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import convnets, data
+from .kernels import ref
+from .model import CapsConfig, forward, init_params, margin_loss
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda x: x / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda x: x / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _batches(n, batch, rng):
+    idx = rng.permutation(n)
+    for i in range(0, n - batch + 1, batch):
+        yield idx[i : i + batch]
+
+
+def train_capsnet(
+    cfg: CapsConfig,
+    task: str,
+    *,
+    n_train=1500,
+    n_test=500,
+    epochs=4,
+    batch=32,
+    lr=2e-3,
+    seed=0,
+    mask_fn=None,
+    params=None,
+    log=print,
+):
+    """Train (or fine-tune, if `params`/`mask_fn` given) a CapsNet.
+
+    `mask_fn(params) -> params` re-applies pruning masks after each step.
+    Returns (params, test_error_percent, history)."""
+    xs, ys = data.generate(task, n_train + n_test, seed=seed)
+    xtr, ytr = jnp.asarray(xs[:n_train]), jnp.asarray(ys[:n_train])
+    xte, yte = jnp.asarray(xs[n_train:]), jnp.asarray(ys[n_train:])
+    if params is None:
+        params = init_params(cfg, jax.random.PRNGKey(seed))
+
+    def loss_fn(p, xb, yb):
+        lengths, _ = forward(p, xb, cfg, taylor=False, use_pallas=False)
+        return margin_loss(lengths, yb, cfg.num_classes)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def eval_batch(p, xb):
+        lengths, _ = forward(p, xb, cfg, taylor=False, use_pallas=False)
+        return jnp.argmax(lengths, axis=-1)
+
+    opt = adam_init(params)
+    nprng = np.random.default_rng(seed)
+    history = []
+    t0 = time.time()
+    for epoch in range(epochs):
+        losses = []
+        for idx in _batches(n_train, batch, nprng):
+            loss, grads = grad_fn(params, xtr[idx], ytr[idx])
+            params, opt = adam_step(params, grads, opt, lr=lr)
+            if mask_fn is not None:
+                params = mask_fn(params)
+            losses.append(float(loss))
+        history.append(float(np.mean(losses)))
+        log(f"  [{cfg.name}/{task}] epoch {epoch}: loss {history[-1]:.4f} "
+            f"({time.time() - t0:.0f}s)")
+    err = test_error_capsnet(params, cfg, xte, yte, eval_batch=eval_batch)
+    return params, err, history
+
+
+def test_error_capsnet(params, cfg, xte, yte, *, eval_batch=None, batch=100):
+    if eval_batch is None:
+        @jax.jit
+        def eval_batch(p, xb):
+            lengths, _ = forward(p, xb, cfg, taylor=False, use_pallas=False)
+            return jnp.argmax(lengths, axis=-1)
+
+    wrong = 0
+    n = xte.shape[0]
+    for i in range(0, n, batch):
+        pred = eval_batch(params, xte[i : i + batch])
+        wrong += int(jnp.sum(pred != yte[i : i + batch]))
+    return 100.0 * wrong / n
+
+
+def train_convnet(
+    spec: convnets.ConvNetSpec,
+    task: str,
+    *,
+    n_train=2000,
+    n_test=500,
+    epochs=4,
+    batch=64,
+    lr=2e-3,
+    seed=0,
+    mask_fn=None,
+    params=None,
+    log=print,
+):
+    """Train/fine-tune a VGG-small or ResNet-small classifier."""
+    xs, ys = data.generate(task, n_train + n_test, seed=seed)
+    xtr, ytr = jnp.asarray(xs[:n_train]), jnp.asarray(ys[:n_train])
+    xte, yte = jnp.asarray(xs[n_train:]), jnp.asarray(ys[n_train:])
+    if params is None:
+        params = convnets.init_params(spec, jax.random.PRNGKey(seed))
+
+    def loss_fn(p, xb, yb):
+        return convnets.cross_entropy(convnets.forward(p, xb, spec), yb)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def eval_batch(p, xb):
+        return jnp.argmax(convnets.forward(p, xb, spec), axis=-1)
+
+    opt = adam_init(params)
+    nprng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        losses = []
+        for idx in _batches(n_train, batch, nprng):
+            loss, grads = grad_fn(params, xtr[idx], ytr[idx])
+            params, opt = adam_step(params, grads, opt, lr=lr)
+            if mask_fn is not None:
+                params = mask_fn(params)
+            losses.append(float(loss))
+        history.append(float(np.mean(losses)))
+        log(f"  [{spec.name}/{task}] epoch {epoch}: loss {history[-1]:.4f}")
+    err = test_error_convnet(params, spec, xte, yte, eval_batch=eval_batch)
+    return params, err, history
+
+
+def test_error_convnet(params, spec, xte, yte, *, eval_batch=None, batch=100):
+    if eval_batch is None:
+        @jax.jit
+        def eval_batch(p, xb):
+            return jnp.argmax(convnets.forward(p, xb, spec), axis=-1)
+
+    wrong = 0
+    n = xte.shape[0]
+    for i in range(0, n, batch):
+        pred = eval_batch(params, xte[i : i + batch])
+        wrong += int(jnp.sum(pred != yte[i : i + batch]))
+    return 100.0 * wrong / n

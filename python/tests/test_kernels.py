@@ -1,0 +1,172 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value ranges — the CORE correctness signal
+for the compute layer the rust runtime ends up executing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, routing, softmax_taylor, squash
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale
+    )
+
+
+class TestMatmul:
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_jnp(self, m, k, n, seed):
+        x = rand((m, k), seed)
+        y = rand((k, n), seed + 1)
+        got = matmul.matmul(x, y)
+        np.testing.assert_allclose(got, x @ y, rtol=1e-4, atol=1e-4)
+
+    def test_paper_conv_shapes(self):
+        # PrimaryCaps pruned-MNIST im2col: [36, 5184] @ [5184, 56].
+        x = rand((36, 5184), 1, 0.1)
+        y = rand((5184, 56), 2, 0.1)
+        np.testing.assert_allclose(
+            matmul.matmul(x, y), x @ y, rtol=1e-3, atol=1e-3
+        )
+
+    def test_block_picking(self):
+        assert matmul.pick_block(36, 128) == 36
+        assert matmul.pick_block(400, 128) == 100
+        assert matmul.pick_block(5184, 512) == 432
+        assert matmul.pick_block(7, 4) == 1
+
+    @given(
+        c=st.integers(1, 8),
+        o=st.integers(1, 8),
+        hw=st.integers(5, 12),
+        k=st.sampled_from([3, 5]),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_conv2d_vs_ref(self, c, o, hw, k, stride, seed):
+        x = rand((c, hw, hw), seed, 0.5)
+        w = rand((o, c, k, k), seed + 1, 0.2)
+        b = rand((o,), seed + 2)
+        got = matmul.conv2d(x, w, b, stride=stride)
+        want = ref.conv2d(x, w, b, stride=stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ref_conv_vs_lax(self):
+        # Anchor the oracle itself against lax.conv.
+        from jax import lax
+
+        x = rand((4, 14, 14), 3, 0.5)
+        w = rand((6, 4, 5, 5), 4, 0.2)
+        want = lax.conv_general_dilated(
+            x[None], w, (2, 2), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )[0]
+        got = ref.conv2d(x, w, stride=2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestSquash:
+    @given(
+        n=st.integers(1, 300),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 2**31),
+        scale=st.floats(0.01, 10.0),
+    )
+    def test_matches_ref(self, n, d, seed, scale):
+        x = rand((n, d), seed, scale)
+        np.testing.assert_allclose(
+            squash.squash(x), ref.squash(x), rtol=1e-4, atol=1e-5
+        )
+
+    def test_norm_below_one(self):
+        x = rand((64, 8), 5, 20.0)
+        v = squash.squash(x)
+        norms = jnp.linalg.norm(v, axis=-1)
+        assert float(jnp.max(norms)) < 1.0
+
+    def test_zero_is_safe(self):
+        v = squash.squash(jnp.zeros((4, 8)))
+        assert bool(jnp.all(jnp.isfinite(v)))
+        np.testing.assert_allclose(v, 0.0, atol=1e-4)
+
+
+class TestSoftmaxTaylor:
+    @given(
+        n=st.integers(1, 300),
+        j=st.integers(2, 16),
+        seed=st.integers(0, 2**31),
+        scale=st.floats(0.1, 4.0),
+    )
+    def test_matches_ref_taylor(self, n, j, seed, scale):
+        b = rand((n, j), seed, scale)
+        got = softmax_taylor.softmax_taylor(b)
+        np.testing.assert_allclose(got, ref.softmax_taylor(b), rtol=1e-5, atol=1e-6)
+
+    @given(seed=st.integers(0, 2**31))
+    def test_close_to_exact_softmax(self, seed):
+        # The paper's claim: Taylor form does not change accuracy.
+        b = rand((128, 10), seed, 2.0)
+        got = softmax_taylor.softmax_taylor(b)
+        exact = ref.softmax(b)
+        np.testing.assert_allclose(got, exact, atol=2e-4)
+
+    def test_rows_sum_to_one(self):
+        b = rand((252, 10), 7, 3.0)
+        s = jnp.sum(softmax_taylor.softmax_taylor(b), axis=-1)
+        np.testing.assert_allclose(s, 1.0, atol=1e-4)
+
+    def test_taylor_exp_window(self):
+        # Eq. 2 accuracy on [0, 1]: < 0.2% relative error.
+        x = jnp.linspace(0.0, 1.0, 101)
+        rel = jnp.abs(ref.exp_taylor(x) - jnp.exp(x)) / jnp.exp(x)
+        assert float(jnp.max(rel)) < 2e-3
+
+
+class TestRouting:
+    @given(
+        n=st.integers(2, 64),
+        j=st.integers(2, 12),
+        d=st.integers(2, 16),
+        iters=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, n, j, d, iters, seed):
+        u = rand((n, j, d), seed, 0.4)
+        v_pl, c_pl = routing.dynamic_routing(u, iters, taylor=False)
+        v_ref, c_ref = ref.dynamic_routing(u, iters, taylor=False)
+        np.testing.assert_allclose(v_pl, v_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c_pl, c_ref, rtol=1e-4, atol=1e-5)
+
+    def test_taylor_matches_exact_routing(self):
+        u = rand((252, 10, 16), 11, 0.3)
+        v_t, _ = routing.dynamic_routing(u, 3, taylor=True)
+        v_e, _ = ref.dynamic_routing(u, 3, taylor=False)
+        np.testing.assert_allclose(v_t, v_e, atol=5e-4)
+
+    def test_coupling_uniform_first_iteration(self):
+        u = rand((36, 10, 16), 13, 0.4)
+        _, c = routing.dynamic_routing(u, 1, taylor=False)
+        np.testing.assert_allclose(c, 0.1, atol=1e-5)
+
+    def test_agreement_sharpens_coupling(self):
+        # Make all capsules agree on class 0.
+        n, j, d = 32, 4, 8
+        base = rand((d,), 17, 1.0)
+        u = jnp.zeros((n, j, d)).at[:, 0, :].set(base)
+        u = u + rand((n, j, d), 19, 0.05)
+        _, c1 = routing.dynamic_routing(u, 1)
+        _, c3 = routing.dynamic_routing(u, 3)
+        assert float(jnp.mean(c3[:, 0])) > float(jnp.mean(c1[:, 0])) + 0.05

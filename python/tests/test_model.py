@@ -1,0 +1,116 @@
+"""L2 model tests: shapes, pallas-vs-ref parity, config presets, loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.model import CapsConfig, forward, init_params, margin_loss
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = CapsConfig.small()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(data.generate("digits", 4, seed=3)[0])
+    return cfg, params, x
+
+
+class TestConfigs:
+    def test_paper_capsule_counts(self):
+        assert CapsConfig.paper_full().num_primary_caps() == 1152
+        assert CapsConfig.paper_pruned_mnist().num_primary_caps() == 252
+        assert CapsConfig.paper_pruned_fmnist().num_primary_caps() == 432
+
+    def test_spatial_dims(self):
+        cfg = CapsConfig.paper_full()
+        assert cfg.conv1_out() == (20, 20)
+        assert cfg.pc_out() == (6, 6)
+
+    def test_param_shapes_order_matches_fcw(self):
+        names = [n for n, _ in CapsConfig.paper_pruned_mnist().param_shapes()]
+        assert names == ["conv1_w", "conv1_b", "pc_w", "pc_b", "w_ij"]
+
+
+class TestForward:
+    def test_shapes(self, small_setup):
+        cfg, params, x = small_setup
+        lengths, v = forward(params, x, cfg, use_pallas=False)
+        assert lengths.shape == (4, 10)
+        assert v.shape == (4, 10, cfg.dc_dim)
+
+    def test_lengths_are_probability_like(self, small_setup):
+        cfg, params, x = small_setup
+        lengths, _ = forward(params, x, cfg, use_pallas=False)
+        assert bool(jnp.all(lengths >= 0))
+        assert bool(jnp.all(lengths < 1.0))
+
+    def test_pallas_matches_ref_path(self, small_setup):
+        cfg, params, x = small_setup
+        l_pl, v_pl = forward(params, x, cfg, taylor=False, use_pallas=True)
+        l_rf, v_rf = forward(params, x, cfg, taylor=False, use_pallas=False)
+        np.testing.assert_allclose(l_pl, l_rf, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(v_pl, v_rf, rtol=1e-4, atol=1e-5)
+
+    def test_taylor_does_not_change_prediction(self, small_setup):
+        # §IV-B: optimization does not reduce accuracy.
+        cfg, params, x = small_setup
+        l_t, _ = forward(params, x, cfg, taylor=True, use_pallas=False)
+        l_e, _ = forward(params, x, cfg, taylor=False, use_pallas=False)
+        assert jnp.argmax(l_t, -1).tolist() == jnp.argmax(l_e, -1).tolist()
+        np.testing.assert_allclose(l_t, l_e, atol=2e-3)
+
+    def test_batch_independence(self, small_setup):
+        cfg, params, x = small_setup
+        l_all, _ = forward(params, x, cfg, use_pallas=False)
+        l_one, _ = forward(params, x[:1], cfg, use_pallas=False)
+        np.testing.assert_allclose(l_all[:1], l_one, rtol=1e-5, atol=1e-6)
+
+
+class TestMarginLoss:
+    def test_perfect_prediction_low_loss(self):
+        lengths = jnp.asarray([[0.95, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05]])
+        labels = jnp.asarray([0])
+        assert float(margin_loss(lengths, labels)) < 1e-3
+
+    def test_wrong_prediction_high_loss(self):
+        lengths = jnp.asarray([[0.05, 0.95, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05]])
+        labels = jnp.asarray([0])
+        assert float(margin_loss(lengths, labels)) > 0.5
+
+    def test_differentiable(self):
+        cfg = CapsConfig.small()
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        x = jnp.asarray(data.generate("digits", 2, seed=5)[0])
+        y = jnp.asarray([0, 1])
+
+        def loss(p):
+            lengths, _ = forward(p, x, cfg, taylor=False, use_pallas=False)
+            return margin_loss(lengths, y)
+
+        g = jax.grad(loss)(params)
+        gnorm = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree_util.tree_leaves(g))
+        assert np.isfinite(gnorm) and gnorm > 0
+
+
+class TestData:
+    @pytest.mark.parametrize("task,shape", [
+        ("digits", (1, 28, 28)), ("garments", (1, 28, 28)),
+        ("blobs32", (3, 32, 32)), ("signs32", (3, 32, 32)),
+    ])
+    def test_shapes_and_range(self, task, shape):
+        xs, ys = data.generate(task, 20, seed=1)
+        assert xs.shape == (20, *shape)
+        assert xs.min() >= 0.0 and xs.max() <= 1.0
+        assert set(ys.tolist()) == set(range(10))
+
+    def test_deterministic(self):
+        a, _ = data.generate("digits", 5, seed=9)
+        b, _ = data.generate("digits", 5, seed=9)
+        np.testing.assert_array_equal(a, b)
+
+    def test_classes_differ(self):
+        xs, ys = data.generate("digits", 20, seed=2)
+        d01 = np.abs(xs[0] - xs[1]).sum()  # class 0 vs 1
+        assert d01 > 5.0

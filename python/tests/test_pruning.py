@@ -1,0 +1,112 @@
+"""Pruning-method tests, including the paper's Fig. 7 worked example
+(shared golden values with the rust test in rust/src/pruning/lakp.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import pruning
+
+
+def kernels_with_sums(vals, k=3):
+    """OIHW tensor whose (o,i) kernel has abs-sum vals[o][i]."""
+    vals = np.asarray(vals, dtype=np.float32)
+    o, i = vals.shape
+    w = np.ones((o, i, k, k), dtype=np.float32)
+    return w * (vals / (k * k))[:, :, None, None]
+
+
+class TestFig7Example:
+    def test_scores_match_paper(self):
+        w_prev = kernels_with_sums([[8, 9], [10, 9]])
+        w_i = kernels_with_sums([[8, 8], [9, 10]])
+        w_next = kernels_with_sums([[6, 10], [9, 10]])
+        prev = pruning.prev_norms_from_conv(w_prev)
+        nxt = pruning.next_norms_from_conv(w_next)
+        s = pruning.lakp_scores(w_i, prev, nxt)
+        # Fig. 7 (with its (0,0) typo corrected: 8·17·15 = 2040, not 2295).
+        np.testing.assert_allclose(
+            s, [[2040, 2280], [3060, 3800]], rtol=1e-5
+        )
+
+    def test_mask_matches_paper(self):
+        w_prev = kernels_with_sums([[8, 9], [10, 9]])
+        w_i = kernels_with_sums([[8, 8], [9, 10]])
+        w_next = kernels_with_sums([[6, 10], [9, 10]])
+        s = pruning.lakp_scores(
+            w_i,
+            pruning.prev_norms_from_conv(w_prev),
+            pruning.next_norms_from_conv(w_next),
+        )
+        mask = pruning.mask_lowest(s, 0.5)
+        np.testing.assert_array_equal(mask, [[0, 0], [1, 1]])
+
+
+class TestMasks:
+    @pytest.mark.parametrize("sparsity", [0.0, 0.25, 0.5, 0.9, 1.0])
+    def test_sparsity_respected(self, sparsity):
+        rng = np.random.default_rng(1)
+        w = rng.normal(size=(8, 4, 3, 3)).astype(np.float32)
+        mask = pruning.mask_lowest(pruning.kp_scores(w), sparsity)
+        expect_pruned = int(np.floor(32 * sparsity))
+        assert int(32 - mask.sum()) == expect_pruned
+
+    def test_apply_zeroes_kernels(self):
+        rng = np.random.default_rng(2)
+        w = rng.normal(size=(4, 4, 3, 3)).astype(np.float32)
+        mask = pruning.mask_lowest(pruning.kp_scores(w), 0.5)
+        wp = pruning.apply_kernel_mask(w, mask)
+        for o in range(4):
+            for i in range(4):
+                if mask[o, i] == 0:
+                    assert np.all(wp[o, i] == 0)
+                else:
+                    np.testing.assert_array_equal(wp[o, i], w[o, i])
+
+    def test_unstructured_keeps_largest(self):
+        w = np.asarray([[0.1, -0.9], [0.5, -0.05]], dtype=np.float32)
+        m = pruning.unstructured_mask(w, 0.5)
+        np.testing.assert_array_equal(m, [[0, 1], [1, 0]])
+
+
+class TestLakpVsKp:
+    def test_neutral_adjacency_reduces_to_kp(self):
+        rng = np.random.default_rng(3)
+        w = rng.normal(size=(6, 4, 3, 3)).astype(np.float32)
+        ones_prev = np.ones(4, dtype=np.float32)
+        ones_next = np.ones(6, dtype=np.float32)
+        s_lakp = pruning.lakp_scores(w, ones_prev, ones_next)
+        s_kp = pruning.kp_scores(w)
+        np.testing.assert_allclose(s_lakp, s_kp, rtol=1e-6)
+
+    def test_adjacency_changes_choice(self):
+        w = kernels_with_sums([[5], [5]])
+        nxt = np.asarray([0.1, 10.0], dtype=np.float32)
+        s = pruning.lakp_scores(w, np.ones(1, np.float32), nxt)
+        mask = pruning.mask_lowest(s, 0.5)
+        np.testing.assert_array_equal(mask, [[0], [1]])
+
+    def test_capsnet_masks_shapes(self):
+        import jax
+
+        from compile.model import CapsConfig, init_params
+
+        cfg = CapsConfig.small()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        for method in ("kp", "lakp"):
+            masks = pruning.capsnet_masks(params, 0.9, method)
+            assert masks["conv1_w"].shape == (cfg.conv1_ch, 1)
+            assert masks["pc_w"].shape == (cfg.pc_channels(), cfg.conv1_ch)
+            frac = pruning.survived_weight_fraction_capsnet(masks, params)
+            assert 0.05 < frac < 0.15  # ~10% survived
+
+    def test_convnet_masks_cover_all_layers(self):
+        import jax
+
+        from compile import convnets
+
+        spec = convnets.ConvNetSpec.vgg_small()
+        params = convnets.init_params(spec, jax.random.PRNGKey(0))
+        masks = pruning.convnet_masks(params, 0.5, "lakp", head_w=params["head_w"])
+        assert len(masks) == len(params["convs"])
+        for m, w in zip(masks, params["convs"]):
+            assert m.shape == w.shape[:2]

@@ -1,0 +1,80 @@
+//! Bench: serving-coordinator overhead. The coordinator must never be the
+//! bottleneck (DESIGN.md §Perf L3 target: ≥10k req/s of pure
+//! router/batcher overhead with a no-op backend).
+
+use fastcaps::coordinator::batcher::BatchPolicy;
+use fastcaps::coordinator::server::{Backend, Server};
+use fastcaps::tensor::Tensor;
+use fastcaps::util::bench::{report_model, Bencher};
+use std::time::Duration;
+
+/// No-op backend: isolates coordinator overhead.
+struct NullBackend;
+
+impl Backend for NullBackend {
+    fn buckets(&self) -> Vec<usize> {
+        vec![1, 8]
+    }
+    fn run(&mut self, _bucket: usize, images: &[Tensor]) -> fastcaps::Result<Vec<Vec<f32>>> {
+        Ok(images.iter().map(|_| vec![0.5; 10]).collect())
+    }
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (1, 28, 28)
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.section("batch policy decision (pure logic)");
+    let policy = BatchPolicy::new(vec![1, 8], Duration::from_millis(1));
+    b.bench("policy.decide x1000", || {
+        let mut n = 0usize;
+        for q in 0..1000 {
+            if policy.decide(q % 16, q % 3 == 0).is_some() {
+                n += 1;
+            }
+        }
+        n
+    });
+
+    b.section("end-to-end coordinator with no-op backend");
+    let n_requests = 2_000;
+    let server = Server::start(
+        || Ok(Box::new(NullBackend) as Box<dyn Backend>),
+        Duration::from_micros(200),
+    );
+    let img = Tensor::zeros(&[1, 28, 28]);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let server = &server;
+            let img = img.clone();
+            scope.spawn(move || {
+                for _ in 0..n_requests / 4 {
+                    let _ = server.classify(img.clone());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    report_model("coordinator overhead throughput", m.requests as f64 / wall, "req/s");
+    report_model("mean batch size", m.mean_batch_size(), "images");
+    report_model("p99 queue+dispatch latency", m.latency.percentile_us(99.0) as f64, "us");
+    assert!(
+        m.requests as f64 / wall > 10_000.0,
+        "coordinator became the bottleneck: {:.0} req/s",
+        m.requests as f64 / wall
+    );
+
+    b.section("single-request path");
+    let server = Server::start(
+        || Ok(Box::new(NullBackend) as Box<dyn Backend>),
+        Duration::from_micros(50),
+    );
+    b.bench("classify round-trip (1 client)", || {
+        server.classify(img.clone()).unwrap().predicted
+    });
+    drop(server);
+}

@@ -1,0 +1,40 @@
+//! Bench: Fig. 14 — resource utilization of the pruned CapsNet,
+//! non-optimized vs optimized, plus the BRAM allocation plan detail.
+
+use fastcaps::config::SystemConfig;
+use fastcaps::fpga::resources;
+use fastcaps::util::bench::{report_model, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    b.section("Fig. 14 — modeled resources (pruned MNIST)");
+    for (name, cfg) in [
+        ("non-optimized", SystemConfig::pruned("mnist")),
+        ("optimized", SystemConfig::proposed("mnist")),
+    ] {
+        let u = resources::estimate(&cfg);
+        report_model(&format!("{name} LUT"), u.luts as f64, "LUTs");
+        report_model(&format!("{name} LUTRAM"), u.lutram as f64, "LUTs");
+        report_model(&format!("{name} BRAM"), u.bram36 as f64, "BRAM36");
+        report_model(&format!("{name} DSP"), u.dsp48e as f64, "DSP48E");
+    }
+
+    b.section("BRAM plan detail (proposed MNIST)");
+    let plan = resources::bram_plan(&SystemConfig::proposed("mnist"));
+    let mut grouped: std::collections::BTreeMap<String, f32> = Default::default();
+    for buf in &plan.buffers {
+        let key = buf.name.split(".bank").next().unwrap_or(&buf.name).to_string();
+        *grouped.entry(key).or_default() += buf.blocks;
+    }
+    for (name, blocks) in grouped {
+        report_model(&format!("bram.{name}"), blocks as f64, "BRAM36");
+    }
+    report_model("bram.total", plan.total_blocks() as f64, "BRAM36");
+
+    b.section("host cost");
+    b.bench("resource estimate (both configs)", || {
+        let a = resources::estimate(&SystemConfig::pruned("mnist"));
+        let c = resources::estimate(&SystemConfig::proposed("mnist"));
+        a.luts + c.luts
+    });
+}

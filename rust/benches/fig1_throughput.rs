@@ -1,0 +1,49 @@
+//! Bench: Fig. 1 — throughput and energy across all six configurations
+//! (original / pruned / pruned+optimized × MNIST / F-MNIST).
+
+use fastcaps::config::SystemConfig;
+use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
+use fastcaps::util::bench::{report_model, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let pm = PowerModel::default();
+    b.section("Fig. 1 — modeled FPS / FPJ (paper: 5→82→1351 MNIST, 48→934 F-MNIST)");
+    for (name, cfg) in [
+        ("original-mnist", SystemConfig::original("mnist")),
+        ("pruned-mnist", SystemConfig::pruned("mnist")),
+        ("proposed-mnist", SystemConfig::proposed("mnist")),
+        ("original-fmnist", SystemConfig::original("fmnist")),
+        ("pruned-fmnist", SystemConfig::pruned("fmnist")),
+        ("proposed-fmnist", SystemConfig::proposed("fmnist")),
+    ] {
+        let model = DeployedModel::timing_stub(&cfg, 7);
+        let t = model.estimate_frame();
+        let u = resources::estimate(&cfg);
+        report_model(&format!("{name} FPS"), t.fps(), "frames/s");
+        report_model(
+            &format!("{name} FPJ"),
+            pm.fpj(t.fps(), &u, !cfg.is_pruned()),
+            "frames/J",
+        );
+    }
+
+    b.section("host cost of the full Fig. 1 sweep");
+    b.bench("all six configs, estimate + resources + power", || {
+        let mut acc = 0.0;
+        for cfg in [
+            SystemConfig::original("mnist"),
+            SystemConfig::pruned("mnist"),
+            SystemConfig::proposed("mnist"),
+            SystemConfig::original("fmnist"),
+            SystemConfig::pruned("fmnist"),
+            SystemConfig::proposed("fmnist"),
+        ] {
+            let model = DeployedModel::timing_stub(&cfg, 7);
+            let t = model.estimate_frame();
+            let u = resources::estimate(&cfg);
+            acc += pm.fpj(t.fps(), &u, !cfg.is_pruned());
+        }
+        acc
+    });
+}

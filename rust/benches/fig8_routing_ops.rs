@@ -1,0 +1,55 @@
+//! Bench: Fig. 8 — per-operation routing latency, non-optimized vs
+//! optimized, plus §III-B's unit-level claims (exp 27→14, div 49→36)
+//! and the host cost of the functional fixed-point routing.
+
+use fastcaps::config::{AcceleratorOptions, CapsNetConfig};
+use fastcaps::fixed::latency::Op;
+use fastcaps::fixed::Q12;
+use fastcaps::fpga::pe::PeArray;
+use fastcaps::fpga::routing_module::{routing_timing, RoutingGeometry, RoutingHardware};
+use fastcaps::routing::fixed::{dynamic_routing_q12, PredictionsQ12, SoftmaxMode};
+use fastcaps::routing::Predictions;
+use fastcaps::util::bench::{report_model, Bencher};
+use fastcaps::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.section("§III-B unit latencies (modeled cycles)");
+    report_model("exp baseline (CORDIC)", Op::ExpFull.cycles() as f64, "cycles");
+    report_model("exp Taylor (Eq. 2)", Op::ExpTaylor.cycles() as f64, "cycles");
+    report_model("div fixed", Op::DivFixed.cycles() as f64, "cycles");
+    report_model("div exp/log (Eq. 3)", Op::DivExpLog.cycles() as f64, "cycles");
+
+    b.section("Fig. 8 — routing-step cycles (pruned MNIST, 252 capsules)");
+    let cfg = CapsNetConfig::paper_pruned_mnist();
+    let pe = PeArray::new(&AcceleratorOptions::optimized());
+    let g = RoutingGeometry::from_config(&cfg, cfg.num_primary_caps());
+    let base = routing_timing(&g, &RoutingHardware::baseline(), &pe);
+    let opt = routing_timing(&g, &RoutingHardware::optimized(), &pe);
+    for ((name, bc), (_, oc)) in base.stages().iter().zip(opt.stages().iter()) {
+        report_model(&format!("{name} [non-opt]"), *bc as f64, "cycles");
+        report_model(&format!("{name} [opt]"), *oc as f64, "cycles");
+    }
+    report_model("total non-optimized", base.total() as f64, "cycles");
+    report_model("total optimized", opt.total() as f64, "cycles");
+
+    b.section("host cost: functional Q4.12 routing (252×10×16, 3 iters)");
+    let mut rng = Rng::new(1);
+    let u: Vec<f32> = (0..252 * 10 * 16).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+    let pred = PredictionsQ12::quantize(&Predictions::new(252, 10, 16, u));
+    b.bench("dynamic_routing_q12 baseline softmax", || {
+        dynamic_routing_q12(&pred, 3, SoftmaxMode::Baseline).counts
+    });
+    b.bench("dynamic_routing_q12 taylor softmax", || {
+        dynamic_routing_q12(&pred, 3, SoftmaxMode::Taylor).counts
+    });
+    b.bench("exp_taylor_q12 (1k evals)", || {
+        let mut acc = 0i32;
+        for i in 0..1000 {
+            let x = Q12::from_raw((i % 4096) as i16 - 2048);
+            acc += fastcaps::fixed::taylor::exp_taylor_q12(x).raw() as i32;
+        }
+        acc
+    });
+}

@@ -1,0 +1,41 @@
+//! Bench: pruning engines on the full-size CapsNet conv tensors
+//! (LAKP scoring must stay negligible next to training — the paper calls
+//! it "computationally efficient").
+
+use fastcaps::capsnet::weights::Weights;
+use fastcaps::config::CapsNetConfig;
+use fastcaps::pruning::{capsule, kp, lakp, magnitude, AdjacencyNorms};
+use fastcaps::util::bench::Bencher;
+use fastcaps::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = CapsNetConfig::paper_full("capsnet-mnist");
+    let w = Weights::random(&cfg, &mut Rng::new(5));
+    let adj = AdjacencyNorms {
+        prev: AdjacencyNorms::prev_from_conv(&w.conv1_w),
+        next: AdjacencyNorms::next_from_digitcaps(&w.w_ij, cfg.pc_types, cfg.pc_dim),
+    };
+
+    b.section("pruning the PrimaryCaps layer (65,536 kernels / 5.3M params)");
+    b.bench("LAKP score + mask @99%", || {
+        lakp::prune_layer(&w.pc_w, &adj, 0.99).mask.survived()
+    });
+    b.bench("KP score + mask @99%", || {
+        kp::prune_layer(&w.pc_w, 0.99).mask.survived()
+    });
+    b.bench("unstructured magnitude @99%", || {
+        magnitude::prune_layer(&w.pc_w, 0.99).survived()
+    });
+    b.bench("capsule-type pruning @75%", || {
+        capsule::prune_types(&w.pc_w, cfg.pc_dim, 0.75).survived()
+    });
+
+    b.section("adjacency norms (Eq. 1 inputs)");
+    b.bench("prev norms (conv1)", || {
+        AdjacencyNorms::prev_from_conv(&w.conv1_w).len()
+    });
+    b.bench("next norms (DigitCaps transform)", || {
+        AdjacencyNorms::next_from_digitcaps(&w.w_ij, cfg.pc_types, cfg.pc_dim).len()
+    });
+}

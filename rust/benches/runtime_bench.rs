@@ -1,0 +1,34 @@
+//! Bench: PJRT runtime hot path — per-batch execution cost for the b=1
+//! and b=8 buckets (the coordinator's executor step). Requires
+//! `make artifacts`; skips cleanly otherwise.
+
+use fastcaps::data::{generate, Task};
+use fastcaps::util::bench::Bencher;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping runtime bench: no artifacts/ (run `make artifacts`)");
+        return;
+    }
+    let rt = fastcaps::runtime::Runtime::open(dir).expect("open runtime");
+    let weights = dir.join("weights-mnist.fcw");
+    let e1 = rt.engine("capsnet-mnist-pruned", 1, &weights).expect("b1 engine");
+    let e8 = rt.engine("capsnet-mnist-pruned", 8, &weights).expect("b8 engine");
+
+    let mut b = Bencher::new();
+    b.section("PJRT execution (pruned MNIST model)");
+    let data = generate(Task::Digits, 8, 3);
+    let one = &data.images[..1];
+    let m1 = b.bench("run_batch b=1", || e1.run_batch(one).unwrap().len()).clone();
+    let m8 = b
+        .bench("run_batch b=8", || e8.run_batch(&data.images).unwrap().len())
+        .clone();
+    println!(
+        "per-image: b=1 {:.2} ms, b=8 {:.2} ms ({:.2}x batching win)",
+        m1.mean_ns / 1e6,
+        m8.mean_ns / 8.0 / 1e6,
+        m1.mean_ns / (m8.mean_ns / 8.0)
+    );
+}

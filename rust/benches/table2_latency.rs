@@ -1,0 +1,43 @@
+//! Bench: Table II — single-frame latency, original vs proposed (MNIST).
+//!
+//! Reports the *modeled* FPGA latency (the paper's number: 0.19 s vs
+//! 0.74 ms) and measures the *host* cost of the simulator itself (both
+//! the timing-only estimate and the full functional frame), guarding the
+//! simulator against performance regressions.
+
+use fastcaps::config::SystemConfig;
+use fastcaps::data::{generate, Task};
+use fastcaps::fpga::DeployedModel;
+use fastcaps::util::bench::{report_model, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    b.section("Table II — modeled single-frame latency");
+    for (name, cfg, paper_s) in [
+        ("original-mnist", SystemConfig::original("mnist"), 0.19),
+        ("proposed-mnist", SystemConfig::proposed("mnist"), 0.00074),
+    ] {
+        let model = DeployedModel::timing_stub(&cfg, 7);
+        let t = model.estimate_frame();
+        report_model(
+            &format!("{name} modeled latency (paper {paper_s}s)"),
+            t.latency_s(),
+            "s/frame",
+        );
+        report_model(&format!("{name} modeled throughput"), t.fps(), "FPS");
+    }
+
+    b.section("host cost of the simulator (regression guard)");
+    let proposed = DeployedModel::timing_stub(&SystemConfig::proposed("mnist"), 7);
+    b.bench("estimate_frame (timing only)", || {
+        proposed.estimate_frame().total_cycles()
+    });
+    let img = generate(Task::Digits, 1, 3).images.remove(0);
+    b.bench("run_frame proposed (functional Q-format)", || {
+        proposed.run_frame(&img).unwrap().0
+    });
+    let original = DeployedModel::timing_stub(&SystemConfig::original("mnist"), 7);
+    b.bench("run_frame original (functional, 205M MACs)", || {
+        original.run_frame(&img).unwrap().0
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench: Table III — proposed CapsNet on F-MNIST (modeled latency
+//! 1.07 ms in the paper) plus host-cost regression guard.
+
+use fastcaps::config::SystemConfig;
+use fastcaps::data::{generate, Task};
+use fastcaps::fpga::DeployedModel;
+use fastcaps::util::bench::{report_model, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    b.section("Table III — modeled F-MNIST latency");
+    for (name, cfg, paper_s) in [
+        ("pruned-fmnist", SystemConfig::pruned("fmnist"), 1.0 / 48.0),
+        ("proposed-fmnist", SystemConfig::proposed("fmnist"), 0.00107),
+    ] {
+        let model = DeployedModel::timing_stub(&cfg, 7);
+        let t = model.estimate_frame();
+        report_model(
+            &format!("{name} modeled latency (paper {paper_s:.5}s)"),
+            t.latency_s(),
+            "s/frame",
+        );
+    }
+
+    b.section("host cost");
+    let model = DeployedModel::timing_stub(&SystemConfig::proposed("fmnist"), 7);
+    let img = generate(Task::Garments, 1, 3).images.remove(0);
+    b.bench("estimate_frame fmnist", || {
+        model.estimate_frame().total_cycles()
+    });
+    b.bench("run_frame fmnist (functional)", || {
+        model.run_frame(&img).unwrap().0
+    });
+}

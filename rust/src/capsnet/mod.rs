@@ -1,0 +1,221 @@
+//! The CapsNet workload (Fig. 3): Conv1 → PrimaryCaps → DigitCaps with
+//! dynamic routing — fp32 reference forward pass, weight container with a
+//! binary interchange format (written by `python/compile/train.py`, read
+//! here), and the 16-bit quantizer used before deployment.
+//!
+//! The fp32 forward in this module is the *oracle*: the PJRT runtime
+//! (executing the JAX-lowered HLO) and the fixed-point FPGA simulator are
+//! both tested against it.
+
+pub mod weights;
+
+use crate::config::CapsNetConfig;
+use crate::routing::{dynamic_routing, Predictions, RoutingOutput};
+use crate::tensor::{conv2d, Tensor};
+use crate::util::rng::Rng;
+use crate::Result;
+use weights::Weights;
+
+/// A CapsNet model: architecture + weights.
+#[derive(Debug, Clone)]
+pub struct CapsNet {
+    pub config: CapsNetConfig,
+    pub weights: Weights,
+}
+
+/// Full forward-pass intermediates (useful for layer-wise verification).
+#[derive(Debug, Clone)]
+pub struct Activations {
+    /// Conv1 output after ReLU: `[conv1_ch, h1, w1]`.
+    pub conv1: Tensor,
+    /// PrimaryCaps conv output: `[pc_channels, h2, w2]`.
+    pub pc_conv: Tensor,
+    /// Squashed primary capsules: `[n_caps][pc_dim]` flattened.
+    pub primary_caps: Vec<f32>,
+    /// Routing result over DigitCaps.
+    pub routing: RoutingOutput,
+}
+
+impl Activations {
+    /// Class scores = DigitCaps lengths.
+    pub fn class_lengths(&self) -> Vec<f32> {
+        self.routing.lengths()
+    }
+
+    pub fn predicted_class(&self) -> usize {
+        let l = self.class_lengths();
+        l.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+impl CapsNet {
+    /// Random-initialised model (He-style std per layer).
+    pub fn random(config: CapsNetConfig, rng: &mut Rng) -> CapsNet {
+        let weights = Weights::random(&config, rng);
+        CapsNet { config, weights }
+    }
+
+    /// Forward one `[c, h, w]` image through the full network.
+    pub fn forward(&self, image: &Tensor) -> Result<Activations> {
+        let cfg = &self.config;
+        anyhow::ensure!(
+            image.shape == vec![cfg.input.0, cfg.input.1, cfg.input.2],
+            "input shape {:?} != config {:?}",
+            image.shape,
+            cfg.input
+        );
+
+        // Conv1 + ReLU.
+        let conv1 = conv2d(
+            image,
+            &self.weights.conv1_w,
+            Some(&self.weights.conv1_b),
+            cfg.conv1_stride,
+        )?
+        .relu();
+
+        // PrimaryCaps conv (linear; the capsule non-linearity is squash).
+        let pc_conv = conv2d(
+            &conv1,
+            &self.weights.pc_w,
+            Some(&self.weights.pc_b),
+            cfg.pc_stride,
+        )?;
+
+        // Regroup [types*dim, h, w] -> capsules [type, y, x][dim], squash.
+        let (h2, w2) = cfg.pc_out();
+        let n_caps = cfg.num_primary_caps();
+        let d = cfg.pc_dim;
+        let mut primary_caps = vec![0.0f32; n_caps * d];
+        for t in 0..cfg.pc_types {
+            for y in 0..h2 {
+                for x in 0..w2 {
+                    let cap = (t * h2 + y) * w2 + x;
+                    let mut s = vec![0.0f32; d];
+                    for k in 0..d {
+                        s[k] = pc_conv.at(&[t * d + k, y, x]);
+                    }
+                    let v = crate::routing::squash(&s);
+                    primary_caps[cap * d..(cap + 1) * d].copy_from_slice(&v);
+                }
+            }
+        }
+
+        // DigitCaps projections û_{j|i} = W_{t(i),j}^T u_i (transform shared
+        // across spatial positions within a type), then dynamic routing.
+        let n_out = cfg.num_classes;
+        let d_out = cfg.dc_dim;
+        let spatial = h2 * w2;
+        let mut u_hat = vec![0.0f32; n_caps * n_out * d_out];
+        // w_ij layout: [pc_types, n_out, pc_dim, dc_dim].
+        let w = &self.weights.w_ij;
+        for i in 0..n_caps {
+            let t = i / spatial;
+            let u = &primary_caps[i * d..(i + 1) * d];
+            for j in 0..n_out {
+                let base = ((t * n_out) + j) * d * d_out;
+                let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
+                for (kk, &uk) in u.iter().enumerate() {
+                    if uk == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w.data[base + kk * d_out..][..d_out];
+                    for (o, &wv) in out.iter_mut().zip(wrow) {
+                        *o += uk * wv;
+                    }
+                }
+            }
+        }
+        let pred = Predictions::new(n_caps, n_out, d_out, u_hat);
+        let routing = dynamic_routing(&pred, cfg.routing_iters);
+
+        Ok(Activations {
+            conv1,
+            pc_conv,
+            primary_caps,
+            routing,
+        })
+    }
+
+    /// Classify one image (argmax of DigitCaps lengths).
+    pub fn predict(&self, image: &Tensor) -> Result<usize> {
+        Ok(self.forward(image)?.predicted_class())
+    }
+
+    /// Accuracy over a dataset.
+    pub fn accuracy(&self, data: &crate::data::Dataset) -> Result<f64> {
+        let mut correct = 0usize;
+        for (img, &label) in data.images.iter().zip(&data.labels) {
+            if self.predict(img)? == label {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / data.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CapsNetConfig;
+
+    #[test]
+    fn forward_shapes_tiny() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(1);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let img = Tensor::randn(&[1, 20, 20], 0.5, &mut rng).map(|x| x.abs().min(1.0));
+        let acts = net.forward(&img).unwrap();
+        let (h1, w1) = cfg.conv1_out();
+        assert_eq!(acts.conv1.shape, vec![cfg.conv1_ch, h1, w1]);
+        let (h2, w2) = cfg.pc_out();
+        assert_eq!(acts.pc_conv.shape, vec![cfg.pc_channels(), h2, w2]);
+        assert_eq!(
+            acts.primary_caps.len(),
+            cfg.num_primary_caps() * cfg.pc_dim
+        );
+        assert_eq!(acts.routing.v.len(), cfg.num_classes * cfg.dc_dim);
+    }
+
+    #[test]
+    fn class_lengths_are_probability_like() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(2);
+        let net = CapsNet::random(cfg, &mut rng);
+        let img = crate::data::digits::render(3, &mut rng);
+        // tiny config takes 20x20: crop center.
+        let mut crop = Tensor::zeros(&[1, 20, 20]);
+        for y in 0..20 {
+            for x in 0..20 {
+                crop.data[y * 20 + x] = img.at(&[0, y + 4, x + 4]);
+            }
+        }
+        let acts = net.forward(&crop).unwrap();
+        for l in acts.class_lengths() {
+            assert!((0.0..1.0).contains(&l), "length {l}");
+        }
+        assert!(acts.predicted_class() < 10);
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let mut rng = Rng::new(3);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        let img = Tensor::zeros(&[1, 28, 28]);
+        assert!(net.forward(&img).is_err());
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let mut rng = Rng::new(4);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        let img = Tensor::randn(&[1, 20, 20], 0.3, &mut rng);
+        let a = net.forward(&img).unwrap();
+        let b = net.forward(&img).unwrap();
+        assert_eq!(a.routing.v, b.routing.v);
+    }
+}

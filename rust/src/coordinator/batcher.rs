@@ -1,0 +1,118 @@
+//! Dynamic batcher with bucketed batch sizes.
+//!
+//! The AOT path compiles one executable per batch size (the buckets), so
+//! the batcher's job is: collect queued requests until either the largest
+//! bucket fills or the oldest request's deadline expires, then choose the
+//! largest bucket ≤ the queue length (falling back to padding the
+//! smallest bucket when the queue is short).
+
+use std::time::Duration;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available batch sizes, ascending (from the artifact manifest).
+    pub buckets: Vec<usize>,
+    /// Max time the oldest request may wait before a partial batch ships.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> BatchPolicy {
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        buckets.sort_unstable();
+        buckets.dedup();
+        BatchPolicy { buckets, max_wait }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Decide what to ship given `queued` requests and whether the oldest
+    /// request has hit its deadline. Returns `Some((bucket, take))`:
+    /// `take` real requests padded up to `bucket`.
+    pub fn decide(&self, queued: usize, deadline_hit: bool) -> Option<(usize, usize)> {
+        if queued == 0 {
+            return None;
+        }
+        if queued >= self.max_bucket() {
+            let b = self.max_bucket();
+            return Some((b, b));
+        }
+        if !deadline_hit {
+            return None; // keep collecting
+        }
+        // Deadline: ship everything using the smallest bucket that fits.
+        let bucket = self
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= queued)
+            .unwrap_or(self.max_bucket());
+        Some((bucket, queued.min(bucket)))
+    }
+
+    /// Padding waste (fraction of bucket slots unused) for a decision.
+    pub fn waste(bucket: usize, take: usize) -> f64 {
+        (bucket - take) as f64 / bucket as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![8, 1], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn buckets_sorted_deduped() {
+        let p = BatchPolicy::new(vec![8, 1, 8], Duration::from_millis(1));
+        assert_eq!(p.buckets, vec![1, 8]);
+        assert_eq!(p.max_bucket(), 8);
+    }
+
+    #[test]
+    fn empty_queue_waits() {
+        assert_eq!(policy().decide(0, true), None);
+        assert_eq!(policy().decide(0, false), None);
+    }
+
+    #[test]
+    fn full_bucket_ships_immediately() {
+        assert_eq!(policy().decide(8, false), Some((8, 8)));
+        assert_eq!(policy().decide(20, false), Some((8, 8)));
+    }
+
+    #[test]
+    fn partial_waits_until_deadline() {
+        assert_eq!(policy().decide(3, false), None);
+        assert_eq!(policy().decide(3, true), Some((8, 3)));
+        assert_eq!(policy().decide(1, true), Some((1, 1)));
+    }
+
+    #[test]
+    fn waste_accounting() {
+        assert_eq!(BatchPolicy::waste(8, 8), 0.0);
+        assert_eq!(BatchPolicy::waste(8, 6), 0.25);
+    }
+
+    #[test]
+    fn property_decisions_are_valid() {
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1));
+        crate::testing::check(
+            "batcher picks a valid bucket",
+            200,
+            3,
+            |r| (r.below(40), r.below(2) == 0),
+            |&(q, dl)| match p.decide(q, dl) {
+                None => q == 0 || (!dl && q < 8),
+                Some((bucket, take)) => {
+                    p.buckets.contains(&bucket) && take <= bucket && take <= q && take > 0
+                }
+            },
+        );
+    }
+}

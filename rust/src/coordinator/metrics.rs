@@ -1,0 +1,192 @@
+//! Serving metrics: fixed-bucket latency histogram + counters.
+//! Allocation-free on the record path (the executor thread calls
+//! [`Metrics::record`] per response).
+
+use std::time::Instant;
+
+/// Log-spaced latency histogram from 1 µs to ~17 s.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^{i+1}) µs.
+    buckets: [u64; 25],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: [0; 25],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(24);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate percentile (upper edge of the containing bucket).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            latency: LatencyHistogram::default(),
+            requests: 0,
+            batches: 0,
+            padded_slots: 0,
+            started: Instant::now(),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency_us: u64) {
+        self.latency.record(latency_us);
+        self.requests += 1;
+    }
+
+    pub fn record_batch(&mut self, bucket: usize, take: usize) {
+        self.batches += 1;
+        self.padded_slots += (bucket - take) as u64;
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} padded={} \
+             latency(mean={:.0}us p50={}us p99={}us max={}us)",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.padded_slots,
+            self.latency.mean_us(),
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(99.0),
+            self.latency.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(99.0));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(8, 6);
+        m.record_batch(8, 8);
+        for _ in 0..14 {
+            m.record(100);
+        }
+        assert_eq!(m.padded_slots, 2);
+        assert_eq!(m.requests, 14);
+        assert!((m.mean_batch_size() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_monotone_property() {
+        crate::testing::check(
+            "histogram percentile monotone in p",
+            50,
+            17,
+            |r| {
+                let mut h = LatencyHistogram::default();
+                for _ in 0..(1 + r.below(500)) {
+                    h.record(1 + r.below(1_000_000) as u64);
+                }
+                h
+            },
+            |h| {
+                let ps = [10.0, 50.0, 90.0, 99.0];
+                ps.windows(2)
+                    .all(|w| h.percentile_us(w[0]) <= h.percentile_us(w[1]))
+            },
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Serving coordinator (S8) — the L3 event loop that keeps Python off the
+//! request path.
+//!
+//! Architecture (vLLM-router-shaped, scaled to this workload):
+//!
+//! ```text
+//!  clients ──► Router ──► Batcher ──► Executor (PJRT engine / FPGA sim)
+//!                 │           │             │
+//!                 ▼           ▼             ▼
+//!               admission   batch-size    response
+//!               + metrics   buckets       dispatch
+//! ```
+//!
+//! * [`batcher`] — dynamic batching: collect requests up to the largest
+//!   available bucket or a deadline, then pick the best bucket
+//!   (vLLM-style bucketed batching; the AOT artifacts provide b=1 and
+//!   b=8 executables, padding fills the remainder).
+//! * [`server`] — thread topology: N client handlers feed an MPSC queue;
+//!   one batcher thread; one executor thread owning the PJRT engines
+//!   (PJRT executables are single-owner by design here); responses fan
+//!   back out through per-request channels.
+//! * [`metrics`] — latency histogram + throughput counters.
+//!
+//! Everything is std-only (threads + channels); the vendored crate set
+//! has no tokio, and the workload (sub-ms model steps) doesn't need
+//! async I/O.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+use crate::tensor::Tensor;
+use std::time::Instant;
+
+/// A classification request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor,
+    pub enqueued: Instant,
+}
+
+/// A classification response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// DigitCaps lengths (class scores).
+    pub lengths: Vec<f32>,
+    pub predicted: usize,
+    /// End-to-end latency in microseconds.
+    pub latency_us: u64,
+    /// Batch size the request was served in.
+    pub batch: usize,
+}
+
+impl Response {
+    pub fn from_lengths(
+        id: u64,
+        lengths: Vec<f32>,
+        enqueued: Instant,
+        batch: usize,
+    ) -> Response {
+        let predicted = lengths
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Response {
+            id,
+            lengths,
+            predicted,
+            latency_us: enqueued.elapsed().as_micros() as u64,
+            batch,
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Server thread topology: clients → MPSC queue → service thread
+//! (batcher + executor) → per-request response channels.
+//!
+//! The PJRT executable wraps raw PJRT pointers, so the service thread
+//! *creates* its backend via a factory closure and owns it for its whole
+//! life — nothing PJRT ever crosses a thread boundary.
+
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::{Request, Response};
+use crate::tensor::Tensor;
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// What actually runs a batch: the PJRT engine set or the FPGA simulator.
+pub trait Backend {
+    /// Batch sizes this backend has engines for (ascending).
+    fn buckets(&self) -> Vec<usize>;
+    /// Run exactly `bucket` images (padded by the caller) and return
+    /// lengths for each.
+    fn run(&mut self, bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>>;
+    /// Input shape (C, H, W) for padding blanks.
+    fn input_shape(&self) -> (usize, usize, usize);
+}
+
+type Job = (Request, mpsc::Sender<Response>);
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<Result<()>>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start the service thread. `make_backend` runs *on* that thread.
+    pub fn start<F>(make_backend: F, max_wait: std::time::Duration) -> Server
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let m2 = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("fastcaps-executor".into())
+            .spawn(move || service_loop(rx, make_backend, m2, max_wait))
+            .expect("spawning executor thread");
+        Server {
+            tx: Some(tx),
+            handle: Some(handle),
+            metrics,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Submit an image; returns the response channel.
+    pub fn submit(&self, image: Tensor) -> mpsc::Receiver<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            enqueued: Instant::now(),
+        };
+        if let Some(tx) = &self.tx {
+            // A send error means the service thread died; the receiver
+            // will simply report disconnection to the caller.
+            let _ = tx.send((req, rtx));
+        }
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn classify(&self, image: Tensor) -> Result<Response> {
+        self.submit(image)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server shut down before responding"))
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Drain and stop. Returns final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.tx.take(); // close the queue
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn service_loop<F>(
+    rx: mpsc::Receiver<Job>,
+    make_backend: F,
+    metrics: Arc<Mutex<Metrics>>,
+    max_wait: std::time::Duration,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Box<dyn Backend>>,
+{
+    let mut backend = make_backend()?;
+    let policy = BatchPolicy::new(backend.buckets(), max_wait);
+    let (c, h, w) = backend.input_shape();
+    let blank = Tensor::zeros(&[c, h, w]);
+    let mut queue: Vec<Job> = Vec::new();
+
+    loop {
+        // Fill the queue: blocking when empty, polling while collecting.
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(job) => queue.push(job),
+                Err(_) => return Ok(()), // all senders gone, drained
+            }
+        }
+        // Drain everything already sitting in the channel — under backlog
+        // the batcher must see the whole queue, or it degenerates to b=1.
+        while let Ok(job) = rx.try_recv() {
+            queue.push(job);
+        }
+        // Collect more until the policy ships or the deadline passes.
+        loop {
+            let deadline_hit = queue
+                .first()
+                .map(|(r, _)| r.enqueued.elapsed() >= max_wait)
+                .unwrap_or(false);
+            if let Some((bucket, take)) = policy.decide(queue.len(), deadline_hit) {
+                let jobs: Vec<Job> = queue.drain(..take).collect();
+                run_and_reply(&mut *backend, bucket, jobs, &blank, &metrics)?;
+                break;
+            }
+            // Wait for one more request (bounded by the oldest deadline).
+            let budget = max_wait
+                .checked_sub(queue[0].0.enqueued.elapsed())
+                .unwrap_or_default();
+            match rx.recv_timeout(budget) {
+                Ok(job) => queue.push(job),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Drain what's left, then exit.
+                    while !queue.is_empty() {
+                        let deadline = true;
+                        if let Some((bucket, take)) =
+                            policy.decide(queue.len(), deadline)
+                        {
+                            let jobs: Vec<Job> = queue.drain(..take).collect();
+                            run_and_reply(&mut *backend, bucket, jobs, &blank, &metrics)?;
+                        }
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+fn run_and_reply(
+    backend: &mut dyn Backend,
+    bucket: usize,
+    jobs: Vec<Job>,
+    blank: &Tensor,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let take = jobs.len();
+    let mut images: Vec<Tensor> = jobs.iter().map(|(r, _)| r.image.clone()).collect();
+    while images.len() < bucket {
+        images.push(blank.clone());
+    }
+    let lengths = backend.run(bucket, &images)?;
+    let mut m = metrics.lock().unwrap();
+    m.record_batch(bucket, take);
+    for ((req, rtx), lens) in jobs.into_iter().zip(lengths) {
+        let resp = Response::from_lengths(req.id, lens, req.enqueued, bucket);
+        m.record(resp.latency_us);
+        let _ = rtx.send(resp); // receiver may have gone away; fine
+    }
+    Ok(())
+}
+
+/// A backend that serves through the FPGA simulator's functional path —
+/// used by tests and by `fastcaps serve --backend sim`.
+pub struct SimBackend {
+    pub model: crate::fpga::DeployedModel,
+}
+
+impl Backend for SimBackend {
+    fn buckets(&self) -> Vec<usize> {
+        vec![1, 8]
+    }
+
+    fn run(&mut self, _bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        images
+            .iter()
+            .map(|img| self.model.run_frame(img).map(|(_, l, _)| l))
+            .collect()
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.model.config.model.input
+    }
+}
+
+/// A backend over loaded PJRT engines (one per bucket).
+pub struct PjrtBackend {
+    pub engines: Vec<crate::runtime::Engine>,
+    pub shape: (usize, usize, usize),
+}
+
+impl PjrtBackend {
+    pub fn new(engines: Vec<crate::runtime::Engine>) -> Result<PjrtBackend> {
+        anyhow::ensure!(!engines.is_empty(), "need at least one engine");
+        let s = &engines[0].entry.input_shape;
+        anyhow::ensure!(s.len() == 4, "expected NCHW input shape");
+        Ok(PjrtBackend {
+            shape: (s[1], s[2], s[3]),
+            engines,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.engines.iter().map(|e| e.batch_size()).collect();
+        b.sort_unstable();
+        b
+    }
+
+    fn run(&mut self, bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let engine = self
+            .engines
+            .iter()
+            .find(|e| e.batch_size() == bucket)
+            .ok_or_else(|| anyhow::anyhow!("no engine for bucket {bucket}"))?;
+        engine.run_batch(images)
+    }
+
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Deterministic toy backend: "lengths" encode the image's mean.
+    struct ToyBackend {
+        calls: usize,
+    }
+
+    impl Backend for ToyBackend {
+        fn buckets(&self) -> Vec<usize> {
+            vec![1, 4]
+        }
+
+        fn run(&mut self, _bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            self.calls += 1;
+            Ok(images
+                .iter()
+                .map(|img| {
+                    let m = img.sum() / img.len() as f32;
+                    let mut l = vec![0.1f32; 10];
+                    l[(m * 10.0) as usize % 10] = 0.9;
+                    l
+                })
+                .collect())
+        }
+
+        fn input_shape(&self) -> (usize, usize, usize) {
+            (1, 4, 4)
+        }
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = Server::start(
+            || Ok(Box::new(ToyBackend { calls: 0 }) as Box<dyn Backend>),
+            Duration::from_millis(1),
+        );
+        let resp = server.classify(Tensor::full(&[1, 4, 4], 0.35)).unwrap();
+        assert_eq!(resp.predicted, 3);
+        assert!(resp.latency_us > 0);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = Server::start(
+            || Ok(Box::new(ToyBackend { calls: 0 }) as Box<dyn Backend>),
+            Duration::from_millis(20),
+        );
+        let rxs: Vec<_> = (0..8)
+            .map(|i| server.submit(Tensor::full(&[1, 4, 4], 0.1 * i as f32 % 1.0)))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, 8);
+        // 8 requests over buckets {1,4}: at most 8 batches, at least 2.
+        assert!(m.batches >= 2 && m.batches <= 8, "batches {}", m.batches);
+        assert!(m.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn drains_on_shutdown() {
+        let server = Server::start(
+            || Ok(Box::new(ToyBackend { calls: 0 }) as Box<dyn Backend>),
+            Duration::from_millis(50),
+        );
+        let rx = server.submit(Tensor::full(&[1, 4, 4], 0.2));
+        let m = server.shutdown(); // must flush the pending request
+        assert_eq!(m.requests, 1);
+        assert!(rx.recv().is_ok());
+    }
+
+    #[test]
+    fn failed_backend_reports() {
+        let server = Server::start(
+            || anyhow::bail!("backend init failed"),
+            Duration::from_millis(1),
+        );
+        let resp = server.classify(Tensor::zeros(&[1, 4, 4]));
+        assert!(resp.is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! MNIST-like procedural digit renderer.
+//!
+//! Each digit class is defined as a set of strokes (line segments and arcs)
+//! on a 28×28 canvas; rendering applies a random affine jitter (translate,
+//! scale, rotate), draws the strokes with a soft round brush, and adds a
+//! touch of pixel noise. This preserves what MNIST gives the pruning study:
+//! smooth, centered, stroke-structured shapes whose classes differ in
+//! global topology — the regime where CapsNet's pose-aware capsules work.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+const SIZE: usize = 28;
+
+/// A stroke in normalized [0,1]² canvas coordinates.
+enum Stroke {
+    /// Line from a to b.
+    Line([f32; 2], [f32; 2]),
+    /// Circular arc: center, radius, start/end angle (radians, CCW).
+    Arc([f32; 2], f32, f32, f32),
+}
+
+fn digit_strokes(class: usize) -> Vec<Stroke> {
+    use Stroke::*;
+    let pi = std::f32::consts::PI;
+    match class {
+        0 => vec![Arc([0.5, 0.5], 0.32, 0.0, 2.0 * pi)],
+        1 => vec![
+            Line([0.5, 0.15], [0.5, 0.85]),
+            Line([0.38, 0.28], [0.5, 0.15]),
+        ],
+        2 => vec![
+            Arc([0.5, 0.32], 0.2, pi, 2.6 * pi),
+            Line([0.66, 0.45], [0.3, 0.85]),
+            Line([0.3, 0.85], [0.72, 0.85]),
+        ],
+        3 => vec![
+            Arc([0.48, 0.32], 0.18, 1.1 * pi, 2.5 * pi),
+            Arc([0.48, 0.67], 0.18, 1.5 * pi, 2.9 * pi),
+        ],
+        4 => vec![
+            Line([0.62, 0.15], [0.62, 0.85]),
+            Line([0.62, 0.15], [0.3, 0.6]),
+            Line([0.3, 0.6], [0.75, 0.6]),
+        ],
+        5 => vec![
+            Line([0.68, 0.15], [0.35, 0.15]),
+            Line([0.35, 0.15], [0.33, 0.45]),
+            Arc([0.5, 0.63], 0.2, 1.2 * pi, 2.7 * pi),
+        ],
+        6 => vec![
+            Arc([0.48, 0.62], 0.2, 0.0, 2.0 * pi),
+            Arc([0.56, 0.42], 0.32, 0.9 * pi, 1.5 * pi),
+        ],
+        7 => vec![
+            Line([0.3, 0.15], [0.72, 0.15]),
+            Line([0.72, 0.15], [0.42, 0.85]),
+        ],
+        8 => vec![
+            Arc([0.5, 0.32], 0.16, 0.0, 2.0 * pi),
+            Arc([0.5, 0.66], 0.19, 0.0, 2.0 * pi),
+        ],
+        _ => vec![
+            Arc([0.52, 0.38], 0.2, 0.0, 2.0 * pi),
+            Arc([0.44, 0.58], 0.32, 1.5 * pi, 2.1 * pi),
+        ],
+    }
+}
+
+/// Render one digit of `class` with randomized pose.
+pub fn render(class: usize, rng: &mut Rng) -> Tensor {
+    let strokes = digit_strokes(class % 10);
+    // Random affine jitter: the pose variation CapsNet is built to model.
+    let angle = rng.range_f32(-0.25, 0.25);
+    let scale = rng.range_f32(0.85, 1.1);
+    let dx = rng.range_f32(-0.06, 0.06);
+    let dy = rng.range_f32(-0.06, 0.06);
+    let brush = rng.range_f32(0.045, 0.065);
+    let (sin, cos) = angle.sin_cos();
+
+    let tf = |p: [f32; 2]| -> [f32; 2] {
+        // Rotate/scale about canvas center, then translate.
+        let (x, y) = (p[0] - 0.5, p[1] - 0.5);
+        [
+            0.5 + scale * (cos * x - sin * y) + dx,
+            0.5 + scale * (sin * x + cos * y) + dy,
+        ]
+    };
+
+    // Collect polyline points for every stroke.
+    let mut points: Vec<[f32; 2]> = Vec::new();
+    for s in &strokes {
+        match *s {
+            Stroke::Line(a, b) => {
+                let steps = 24;
+                for i in 0..=steps {
+                    let t = i as f32 / steps as f32;
+                    points.push(tf([
+                        a[0] + t * (b[0] - a[0]),
+                        a[1] + t * (b[1] - a[1]),
+                    ]));
+                }
+            }
+            Stroke::Arc(c, r, a0, a1) => {
+                let steps = 48;
+                for i in 0..=steps {
+                    let t = a0 + (a1 - a0) * i as f32 / steps as f32;
+                    points.push(tf([c[0] + r * t.cos(), c[1] + r * t.sin()]));
+                }
+            }
+        }
+    }
+
+    let mut img = Tensor::zeros(&[1, SIZE, SIZE]);
+    // Soft round brush: intensity = exp(-d²/2σ²) accumulated with max().
+    let sigma = brush;
+    for py in 0..SIZE {
+        for px in 0..SIZE {
+            let cx = (px as f32 + 0.5) / SIZE as f32;
+            let cy = (py as f32 + 0.5) / SIZE as f32;
+            let mut best = 0.0f32;
+            for p in &points {
+                let d2 = (p[0] - cx) * (p[0] - cx) + (p[1] - cy) * (p[1] - cy);
+                if d2 < 9.0 * sigma * sigma {
+                    let v = (-d2 / (2.0 * sigma * sigma)).exp();
+                    if v > best {
+                        best = v;
+                    }
+                }
+            }
+            // Light sensor noise.
+            let noise = rng.range_f32(0.0, 0.04);
+            img.data[py * SIZE + px] = (best + noise).clamp(0.0, 1.0);
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nonempty_strokes() {
+        let mut rng = Rng::new(1);
+        for class in 0..10 {
+            let img = render(class, &mut rng);
+            let ink: f32 = img.data.iter().sum();
+            assert!(ink > 10.0, "class {class} too faint (ink {ink})");
+            assert!(ink < 500.0, "class {class} saturated (ink {ink})");
+        }
+    }
+
+    #[test]
+    fn pose_jitter_varies_instances() {
+        let mut rng = Rng::new(2);
+        let a = render(3, &mut rng);
+        let b = render(3, &mut rng);
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn intra_class_closer_than_inter_class() {
+        // Average L2 distance between same-class pairs should be smaller
+        // than between class 0 (ring) and class 1 (stroke).
+        let mut rng = Rng::new(3);
+        let dist = |a: &Tensor, b: &Tensor| -> f32 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let n = 8;
+        for _ in 0..n {
+            let a0 = render(0, &mut rng);
+            let b0 = render(0, &mut rng);
+            let a1 = render(1, &mut rng);
+            intra += dist(&a0, &b0);
+            inter += dist(&a0, &a1);
+        }
+        assert!(
+            intra < inter,
+            "intra {intra} should be < inter {inter}"
+        );
+    }
+}

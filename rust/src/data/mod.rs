@@ -1,0 +1,178 @@
+//! Synthetic dataset generators.
+//!
+//! The build environment has no network access, so the paper's datasets
+//! (MNIST, Fashion-MNIST, CIFAR-10, GTSRB) are replaced by procedural
+//! generators that produce 10-class image tasks at the same input shapes
+//! (see DESIGN.md §4 for why this preserves the experiments' shape):
+//!
+//! * [`digits`] — MNIST-like 28×28 grayscale stroke-rendered digits with
+//!   random affine jitter.
+//! * [`garments`] — F-MNIST-like 28×28 grayscale texture/silhouette
+//!   classes (harder than digits, mirroring F-MNIST vs MNIST).
+//!
+//! The same procedural definitions are mirrored in
+//! `python/compile/data.py` for the training-side experiments.
+
+pub mod digits;
+pub mod garments;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A labeled dataset of CHW images.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<Tensor>,
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Split into (train, test) at `train_frac`.
+    pub fn split(mut self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.images.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let mut train = Dataset {
+            images: Vec::with_capacity(n_train),
+            labels: Vec::with_capacity(n_train),
+            num_classes: self.num_classes,
+        };
+        let mut test = Dataset {
+            images: Vec::with_capacity(n - n_train),
+            labels: Vec::with_capacity(n - n_train),
+            num_classes: self.num_classes,
+        };
+        // Drain in index order to avoid cloning tensors.
+        let mut taken: Vec<Option<Tensor>> =
+            self.images.drain(..).map(Some).collect();
+        for (rank, &i) in idx.iter().enumerate() {
+            let img = taken[i].take().unwrap();
+            let lab = self.labels[i];
+            if rank < n_train {
+                train.images.push(img);
+                train.labels.push(lab);
+            } else {
+                test.images.push(img);
+                test.labels.push(lab);
+            }
+        }
+        (train, test)
+    }
+}
+
+/// Which synthetic task to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// MNIST-like stroke digits.
+    Digits,
+    /// F-MNIST-like garment silhouettes.
+    Garments,
+}
+
+impl Task {
+    pub fn parse(name: &str) -> Option<Task> {
+        match name {
+            "mnist" | "digits" => Some(Task::Digits),
+            "fmnist" | "garments" => Some(Task::Garments),
+            _ => None,
+        }
+    }
+}
+
+/// Generate `n` samples of the task, classes balanced round-robin.
+pub fn generate(task: Task, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        let img = match task {
+            Task::Digits => digits::render(class, &mut rng),
+            Task::Garments => garments::render(class, &mut rng),
+        };
+        images.push(img);
+        labels.push(class);
+    }
+    Dataset {
+        images,
+        labels,
+        num_classes: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_balanced_classes() {
+        let d = generate(Task::Digits, 100, 1);
+        assert_eq!(d.len(), 100);
+        for c in 0..10 {
+            assert_eq!(d.labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn images_are_28x28_normalized() {
+        for task in [Task::Digits, Task::Garments] {
+            let d = generate(task, 20, 2);
+            for img in &d.images {
+                assert_eq!(img.shape, vec![1, 28, 28]);
+                for &v in &img.data {
+                    assert!((0.0..=1.0).contains(&v), "pixel {v} out of range");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(Task::Digits, 10, 7);
+        let b = generate(Task::Digits, 10, 7);
+        for (x, y) in a.images.iter().zip(&b.images) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn different_classes_look_different() {
+        let mut rng = Rng::new(3);
+        let a = digits::render(1, &mut rng);
+        let mut rng2 = Rng::new(3);
+        let b = digits::render(8, &mut rng2);
+        let diff: f32 = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 5.0, "classes 1 and 8 nearly identical (diff {diff})");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = generate(Task::Garments, 50, 4);
+        let mut rng = Rng::new(5);
+        let (tr, te) = d.split(0.8, &mut rng);
+        assert_eq!(tr.len(), 40);
+        assert_eq!(te.len(), 10);
+    }
+
+    #[test]
+    fn task_parsing() {
+        assert_eq!(Task::parse("mnist"), Some(Task::Digits));
+        assert_eq!(Task::parse("fmnist"), Some(Task::Garments));
+        assert_eq!(Task::parse("imagenet"), None);
+    }
+}

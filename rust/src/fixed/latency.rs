@@ -1,0 +1,144 @@
+//! Clock-cycle cost of every datapath operation, for the baseline
+//! (Vivado HLS default) and optimized (§III-B) implementations.
+//!
+//! The paper's numbers (100 MHz target on the Zynq-7020):
+//!
+//! | op            | baseline | optimized | paper source                   |
+//! |---------------|----------|-----------|--------------------------------|
+//! | `exp`         | 27       | 14        | §III-B: "27 cycles to 14"      |
+//! | fixed `div`   | 49       | 36        | §III-B: "49 cycles to 36"      |
+//! | `log`         | —        | 11        | component of Eq. 3 (2·11+14=36)|
+//! | 16-bit mul    | 3        | 3         | DSP48E pipelined multiply      |
+//! | add/sub       | 1        | 1         | fabric adder                   |
+//! | `sqrt`        | 16       | 16        | 16-iteration non-restoring     |
+//! | BRAM rd/wr    | 1        | 1         | dual-port, 1 access/port/cycle |
+//!
+//! The div rewrite (Eq. 3) is `2·log + exp = 2·11 + 14 = 36` — the
+//! subtraction fuses into the exp pipeline's first stage, which is how the
+//! paper reaches exactly 36.
+
+/// A datapath operation with a modeled cycle cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Add,
+    Mul,
+    /// One pipelined multiply-accumulate slot (II=1 once the pipe is full).
+    Mac,
+    /// Baseline CORDIC-style exponential.
+    ExpFull,
+    /// Eq. 2 Taylor exponential (5 mul + 5 add + ROM, pipelined).
+    ExpTaylor,
+    /// Baseline fixed-point divider.
+    DivFixed,
+    /// Eq. 3 divider: exp(log a − log b).
+    DivExpLog,
+    /// Normalization + Taylor log (component of DivExpLog).
+    Log,
+    /// Non-restoring square root (Squash unit).
+    Sqrt,
+    BramRead,
+    BramWrite,
+}
+
+impl Op {
+    /// Latency in clock cycles of a single (unpipelined) evaluation.
+    pub fn cycles(self) -> u64 {
+        match self {
+            Op::Add => 1,
+            Op::Mul => 3,
+            Op::Mac => 1,
+            Op::ExpFull => 27,
+            Op::ExpTaylor => 14,
+            Op::DivFixed => 49,
+            Op::DivExpLog => 36,
+            Op::Log => 11,
+            Op::Sqrt => 16,
+            Op::BramRead => 1,
+            Op::BramWrite => 1,
+        }
+    }
+
+    /// Initiation interval when the op is instantiated as a pipelined unit
+    /// (how often a new input can be issued). Iterative units (divider,
+    /// sqrt, baseline exp) do not pipeline in the paper's design.
+    pub fn initiation_interval(self) -> u64 {
+        match self {
+            Op::Add | Op::Mul | Op::Mac | Op::BramRead | Op::BramWrite => 1,
+            Op::ExpTaylor => 1, // PE-array polynomial: fully pipelined
+            Op::Log => 1,
+            Op::DivExpLog => 1, // composed of pipelined log/exp stages
+            Op::ExpFull => Op::ExpFull.cycles(),
+            Op::DivFixed => Op::DivFixed.cycles(),
+            Op::Sqrt => Op::Sqrt.cycles(),
+        }
+    }
+
+    /// DSP48E slices one instance of the unit consumes (resource model).
+    pub fn dsp_cost(self) -> u32 {
+        match self {
+            Op::Mul | Op::Mac => 1,
+            Op::ExpTaylor => 5, // 5 Horner multiplies mapped to DSPs
+            Op::ExpFull => 4,
+            Op::DivFixed => 0, // LUT-based iterative divider
+            Op::DivExpLog => 7, // 2 log units (1 DSP each) + exp (5)
+            Op::Log => 1,
+            Op::Sqrt => 0,
+            _ => 0,
+        }
+    }
+}
+
+/// Cycles to stream `n` independent evaluations through one unit
+/// (pipeline fill + II-spaced issues).
+pub fn pipelined_cycles(op: Op, n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    op.cycles() + (n - 1) * op.initiation_interval()
+}
+
+/// Cycles for `n` evaluations spread across `units` parallel instances.
+pub fn parallel_cycles(op: Op, n: u64, units: u64) -> u64 {
+    if n == 0 || units == 0 {
+        return 0;
+    }
+    let per_unit = n.div_ceil(units);
+    pipelined_cycles(op, per_unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_latencies() {
+        assert_eq!(Op::ExpFull.cycles(), 27);
+        assert_eq!(Op::ExpTaylor.cycles(), 14);
+        assert_eq!(Op::DivFixed.cycles(), 49);
+        assert_eq!(Op::DivExpLog.cycles(), 36);
+        // Eq. 3 composition: 2·log + exp = 36.
+        assert_eq!(2 * Op::Log.cycles() + Op::ExpTaylor.cycles(), 36);
+    }
+
+    #[test]
+    fn pipelining_amortizes() {
+        // 100 Taylor exps through one pipelined unit: 14 + 99 ≈ 1.13 c/op.
+        assert_eq!(pipelined_cycles(Op::ExpTaylor, 100), 113);
+        // Baseline exp cannot pipeline: 100 * 27.
+        assert_eq!(pipelined_cycles(Op::ExpFull, 100), 27 * 100);
+    }
+
+    #[test]
+    fn parallel_splits_work() {
+        assert_eq!(parallel_cycles(Op::Mac, 1000, 10), 1 + 99);
+        assert_eq!(parallel_cycles(Op::Mac, 0, 10), 0);
+        assert_eq!(parallel_cycles(Op::Mac, 5, 10), 1);
+    }
+
+    #[test]
+    fn optimized_always_at_least_as_fast() {
+        assert!(Op::ExpTaylor.cycles() < Op::ExpFull.cycles());
+        assert!(Op::DivExpLog.cycles() < Op::DivFixed.cycles());
+        assert!(Op::ExpTaylor.initiation_interval() <= Op::ExpFull.initiation_interval());
+    }
+}

@@ -1,0 +1,208 @@
+//! 16-bit fixed-point arithmetic — the accelerator's numeric substrate.
+//!
+//! The paper quantizes all CapsNet parameters to 16 bits (§IV-B) and
+//! executes the datapath on DSP48E slices. We model that with saturating
+//! Q-format arithmetic:
+//!
+//! * `Fx<8>`  (Q8.8)  — convolution weights/activations (range ±128).
+//! * `Fx<12>` (Q4.12) — capsule vectors, routing logits and coupling
+//!   coefficients (range ±8, resolution 2.4e-4; capsule lengths are ≤ 1 by
+//!   construction so the extra fractional bits buy softmax head-room).
+//!
+//! The non-linear units the paper optimizes (`exp`, `div`, `log`, `sqrt`)
+//! live in [`taylor`]; per-op clock-cycle costs in [`latency`]. Keeping
+//! value computation and cycle cost in one module family guarantees the
+//! simulator's timing and numerics can never diverge.
+
+pub mod latency;
+pub mod taylor;
+
+/// Saturating 16-bit fixed-point number with `F` fractional bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fx<const F: u32>(pub i16);
+
+/// Main conv datapath format (Q8.8).
+pub type Q8 = Fx<8>;
+/// Capsule / routing datapath format (Q4.12).
+pub type Q12 = Fx<12>;
+
+fn sat16(v: i32) -> i16 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+impl<const F: u32> Fx<F> {
+    pub const FRAC: u32 = F;
+    pub const ONE: Fx<F> = Fx(1 << F);
+    pub const ZERO: Fx<F> = Fx(0);
+
+    /// Quantize an f32 (round-to-nearest, saturate).
+    pub fn from_f32(v: f32) -> Fx<F> {
+        let scaled = (v * (1i32 << F) as f32).round();
+        if scaled >= i16::MAX as f32 {
+            Fx(i16::MAX)
+        } else if scaled <= i16::MIN as f32 {
+            Fx(i16::MIN)
+        } else {
+            Fx(scaled as i16)
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / (1i32 << F) as f32
+    }
+
+    pub fn raw(self) -> i16 {
+        self.0
+    }
+
+    pub fn from_raw(raw: i16) -> Fx<F> {
+        Fx(raw)
+    }
+
+    /// Saturating addition.
+    pub fn add(self, rhs: Fx<F>) -> Fx<F> {
+        Fx(sat16(self.0 as i32 + rhs.0 as i32))
+    }
+
+    /// Saturating subtraction.
+    pub fn sub(self, rhs: Fx<F>) -> Fx<F> {
+        Fx(sat16(self.0 as i32 - rhs.0 as i32))
+    }
+
+    /// Saturating multiplication (i32 intermediate, round-to-nearest —
+    /// matches a DSP48E multiply + rounding shift).
+    pub fn mul(self, rhs: Fx<F>) -> Fx<F> {
+        let prod = self.0 as i32 * rhs.0 as i32;
+        let rounded = (prod + (1 << (F - 1))) >> F;
+        Fx(sat16(rounded))
+    }
+
+    /// Multiply–accumulate into a wide accumulator (raw Q2F product).
+    /// Hardware keeps the accumulator in the DSP's 48-bit register; we use
+    /// i64 to preserve that "never overflows mid-sum" property.
+    pub fn mac(self, rhs: Fx<F>, acc: i64) -> i64 {
+        acc + (self.0 as i64) * (rhs.0 as i64)
+    }
+
+    /// Collapse a wide accumulator back to Q-format (round + saturate).
+    pub fn from_acc(acc: i64) -> Fx<F> {
+        let rounded = (acc + (1 << (F - 1))) >> F;
+        Fx(sat16(rounded.clamp(i32::MIN as i64, i32::MAX as i64) as i32))
+    }
+
+    pub fn neg(self) -> Fx<F> {
+        Fx(sat16(-(self.0 as i32)))
+    }
+
+    pub fn abs(self) -> Fx<F> {
+        Fx(sat16((self.0 as i32).abs()))
+    }
+
+    pub fn max(self, rhs: Fx<F>) -> Fx<F> {
+        if self.0 >= rhs.0 {
+            self
+        } else {
+            rhs
+        }
+    }
+
+    /// Convert between Q-formats (shift with rounding, saturate).
+    pub fn convert<const G: u32>(self) -> Fx<G> {
+        let v = self.0 as i32;
+        let out = if G >= F {
+            v << (G - F)
+        } else {
+            let sh = F - G;
+            (v + (1 << (sh - 1))) >> sh
+        };
+        Fx::<G>(sat16(out))
+    }
+}
+
+/// Quantize an f32 slice into Q-format raw values.
+pub fn quantize_slice<const F: u32>(xs: &[f32]) -> Vec<Fx<F>> {
+    xs.iter().map(|&x| Fx::<F>::from_f32(x)).collect()
+}
+
+/// Worst-case absolute quantization error of the format.
+pub fn quantization_step<const F: u32>() -> f32 {
+    1.0 / (1i32 << F) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_small_values() {
+        for v in [-3.5f32, -0.25, 0.0, 0.004, 1.0, 7.96875] {
+            let q = Q12::from_f32(v);
+            assert!(
+                (q.to_f32() - v).abs() <= quantization_step::<12>(),
+                "v={v} got {}",
+                q.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Q8::from_f32(1000.0).raw(), i16::MAX);
+        assert_eq!(Q8::from_f32(-1000.0).raw(), i16::MIN);
+        let big = Q8::from_f32(127.0);
+        assert_eq!(big.add(big).raw(), i16::MAX);
+        assert_eq!(big.neg().add(big.neg()).raw(), i16::MIN);
+    }
+
+    #[test]
+    fn mul_known_values() {
+        let a = Q8::from_f32(2.5);
+        let b = Q8::from_f32(-4.0);
+        assert_eq!(a.mul(b).to_f32(), -10.0);
+        let one = Q8::ONE;
+        assert_eq!(one.mul(one), one);
+    }
+
+    #[test]
+    fn mul_rounds_to_nearest() {
+        // 0.5 * (1/256) = 1/512 rounds to 1/256 (ties toward +inf after shift).
+        let a = Q8::from_f32(0.5);
+        let eps = Q8::from_raw(1);
+        assert_eq!(a.mul(eps).raw(), 1);
+    }
+
+    #[test]
+    fn mac_accumulates_wide() {
+        let a = Q12::from_f32(7.9);
+        let mut acc = 0i64;
+        for _ in 0..1000 {
+            acc = a.mac(a, acc); // 1000 * 62.4 ≈ 62410 — overflows Q4.12
+        }
+        // Accumulator holds it; collapse saturates.
+        assert_eq!(Q12::from_acc(acc).raw(), i16::MAX);
+        // A short sum stays exact.
+        let b = Q12::from_f32(0.5);
+        let acc2 = b.mac(b, b.mac(b, 0));
+        assert_eq!(Q12::from_acc(acc2).to_f32(), 0.5);
+    }
+
+    #[test]
+    fn format_conversion() {
+        let a = Q8::from_f32(1.5);
+        let b: Q12 = a.convert();
+        assert_eq!(b.to_f32(), 1.5);
+        let c = Q12::from_f32(7.999);
+        let d: Q8 = c.convert();
+        assert!((d.to_f32() - 7.999).abs() <= quantization_step::<8>());
+        // Saturating down-range conversion: Q8 127 exceeds Q12's ±8.
+        let big = Q8::from_f32(100.0);
+        let e: Q12 = big.convert();
+        assert_eq!(e.raw(), i16::MAX);
+    }
+
+    #[test]
+    fn quantize_slice_len() {
+        let v = quantize_slice::<8>(&[0.1, 0.2, 0.3]);
+        assert_eq!(v.len(), 3);
+    }
+}

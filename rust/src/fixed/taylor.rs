@@ -1,0 +1,317 @@
+//! The paper's hardware-friendly non-linear functions (§III-B).
+//!
+//! * `exp` — Eq. 2: a 5-term Taylor expansion of `e^x` around `a = 0.5`,
+//!   evaluated in Horner form (5 multiplies + 5 adds). The `e^a` factor is
+//!   folded into the coefficients "prior", exactly as the paper describes.
+//!   Valid on `x ∈ [0, 1]`; a power-of-e range-reduction LUT extends it to
+//!   the full softmax input range (the hardware unit pairs the polynomial
+//!   with a small ROM).
+//! * `div` — Eq. 3: `a / b = e^(log a − log b)`, turning the 49-cycle fixed
+//!   point divider into log + log + sub + exp (36 cycles).
+//! * `log` — binary normalization (`x = m·2^k`, `m ∈ [1,2)`) plus a Taylor
+//!   polynomial of `ln` around 1.5 — mul/add only, matching the unit the
+//!   div rewrite requires.
+//! * `sqrt` — non-restoring integer square root (used by the Squash unit,
+//!   which the paper keeps off the PE array).
+//!
+//! Each function exists twice: an `f32` form (used by the fp32 reference
+//! model and as the oracle in tests) and a `Q4.12` fixed-point form (used
+//! by the cycle-level simulator datapath).
+
+use super::Q12;
+
+/// Paper Eq. 2 coefficients (Taylor of e^x about a=0.5, e^a **not** yet
+/// folded in). `e^x ≈ e^a · (c0 + x(c1 + x(c2 + x(c3 + x(c4 + c5·x)))))`.
+pub const EXP_COEFFS: [f32; 6] = [0.60653, 0.60659, 0.30260, 0.10347, 0.02118, 0.00833];
+
+/// e^0.5 — multiplied "prior" into the coefficients by the hardware unit.
+pub const E_HALF: f32 = 1.648_721_3;
+
+/// Coefficients with e^a pre-multiplied: the form the PE array evaluates.
+pub fn exp_coeffs_folded() -> [f32; 6] {
+    let mut c = EXP_COEFFS;
+    for v in &mut c {
+        *v *= E_HALF;
+    }
+    c
+}
+
+/// Eq. 2 polynomial on the primary interval x ∈ [0, 1]: 5 mul + 5 add.
+pub fn exp_poly_f32(x: f32) -> f32 {
+    let c = exp_coeffs_folded();
+    c[0] + x * (c[1] + x * (c[2] + x * (c[3] + x * (c[4] + x * c[5]))))
+}
+
+/// Range-reduced Taylor exponential: `e^x = e^n · P(f)` with `n = ⌊x⌋`,
+/// `f = x − n ∈ [0,1)`. `e^n` comes from a 64-entry ROM (n ∈ [−32, 31]).
+pub fn exp_taylor_f32(x: f32) -> f32 {
+    let n = x.floor();
+    let f = x - n;
+    let n = (n as i32).clamp(-32, 31);
+    exp_poly_f32(f) * exp2i(n)
+}
+
+/// e^n for integer n from the modeled ROM.
+fn exp2i(n: i32) -> f32 {
+    // Hardware: 64-entry 16-bit ROM; here computed once per call — values
+    // are exact powers of e to f32 precision, as a ROM would store.
+    std::f32::consts::E.powi(n)
+}
+
+/// Taylor `ln` about 1.5 on the normalized mantissa m ∈ [1, 2):
+/// `ln x = k·ln2 + ln(1.5) + Σ (−1)^{i+1} t^i / (i·1.5^i)`, t = m − 1.5.
+pub fn ln_f32(x: f32) -> f32 {
+    assert!(x > 0.0, "ln of non-positive value");
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32 - 127;
+    let m = f32::from_bits((bits & 0x007F_FFFF) | 0x3F80_0000); // m in [1,2)
+    let t = m - 1.5;
+    // 5-term Taylor about 1.5 (|t| <= 0.5 -> |t/1.5| <= 1/3, err ~ 2e-4).
+    const L15: f32 = 0.405_465_1; // ln 1.5
+    let t1 = t / 1.5;
+    let poly = t1 * (1.0 + t1 * (-0.5 + t1 * (1.0 / 3.0 + t1 * (-0.25 + t1 * 0.2))));
+    exp as f32 * std::f32::consts::LN_2 + L15 + poly
+}
+
+/// Eq. 3: `a / b = e^(ln a − ln b)`. Requires a, b > 0 (softmax operands
+/// and capsule norms are positive by construction).
+pub fn div_explog_f32(a: f32, b: f32) -> f32 {
+    if a == 0.0 {
+        return 0.0;
+    }
+    exp_taylor_f32(ln_f32(a) - ln_f32(b))
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-point (Q4.12) forms — the simulator datapath.
+// ---------------------------------------------------------------------------
+
+/// Folded Eq. 2 coefficients quantized to Q4.12 (what the ROM holds).
+pub fn exp_coeffs_q12() -> [Q12; 6] {
+    let c = exp_coeffs_folded();
+    [
+        Q12::from_f32(c[0]),
+        Q12::from_f32(c[1]),
+        Q12::from_f32(c[2]),
+        Q12::from_f32(c[3]),
+        Q12::from_f32(c[4]),
+        Q12::from_f32(c[5]),
+    ]
+}
+
+/// Q4.12 Eq. 2 polynomial on [0, 1): 5 mul + 5 add on the PE array.
+pub fn exp_poly_q12(x: Q12) -> Q12 {
+    let c = exp_coeffs_q12();
+    let mut acc = c[5];
+    for i in (0..5).rev() {
+        acc = c[i].add(x.mul(acc));
+    }
+    acc
+}
+
+/// Q4.12 range-reduced exponential. Output saturates at the format max
+/// (≈ 8) — softmax numerators are pre-shifted by the max logit, so inputs
+/// are ≤ 0 and outputs ≤ 1 in the real datapath.
+pub fn exp_taylor_q12(x: Q12) -> Q12 {
+    let xf = x.to_f32();
+    let n = xf.floor() as i32;
+    let f = Q12::from_f32(xf - n as f32);
+    let poly = exp_poly_q12(f);
+    // ROM holds e^n in Q4.12 for n in [-8, 2]; outside, saturate/flush
+    // (e^-9 is below the format's resolution step of 2^-12).
+    if n >= 3 {
+        return Q12::from_raw(i16::MAX);
+    }
+    if n <= -9 {
+        return Q12::ZERO;
+    }
+    let rom = Q12::from_f32(std::f32::consts::E.powi(n));
+    poly.mul(rom)
+}
+
+/// Q4.12 `ln` (operand must be positive). Returns Q4.12 (range ±8 covers
+/// ln of the representable positive range: ln(8)≈2.08, ln(2^-12)≈−8.3
+/// clamps to the format min).
+pub fn ln_q12(x: Q12) -> Q12 {
+    debug_assert!(x.raw() > 0, "ln_q12 of non-positive");
+    let v = ln_f32(x.to_f32()); // normalization is exact in hardware
+    Q12::from_f32(v)
+}
+
+/// Q4.12 Eq. 3 division.
+pub fn div_explog_q12(a: Q12, b: Q12) -> Q12 {
+    if a.raw() <= 0 {
+        return Q12::ZERO;
+    }
+    exp_taylor_q12(ln_q12(a).sub(ln_q12(b)))
+}
+
+/// `ln` of a wide accumulator holding a Q4.12-scaled sum (e.g. a softmax
+/// denominator Σe^x, which can exceed the Q4.12 range). The hardware log
+/// unit normalizes mantissa+exponent from the accumulator register
+/// directly, so width costs nothing extra.
+pub fn ln_acc_q12(acc: i64) -> Q12 {
+    debug_assert!(acc > 0, "ln_acc_q12 of non-positive");
+    Q12::from_f32(ln_f32(acc as f32 / 4096.0))
+}
+
+/// Exact division of a Q4.12 value by a wide Q4.12-scaled accumulator
+/// (the baseline divider with the denominator taken from the accumulator
+/// register).
+pub fn div_exact_acc_q12(a: Q12, acc: i64) -> Q12 {
+    if acc <= 0 {
+        return Q12::from_raw(i16::MAX);
+    }
+    let q = ((a.raw() as i64) << 12) / acc;
+    Q12::from_raw(q.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+}
+
+/// Eq. 3 division with a wide-accumulator denominator:
+/// `a / Σ = e^(ln a − ln Σ)`.
+pub fn div_explog_acc_q12(a: Q12, acc: i64) -> Q12 {
+    if a.raw() <= 0 {
+        return Q12::ZERO;
+    }
+    exp_taylor_q12(ln_q12(a).sub(ln_acc_q12(acc)))
+}
+
+/// Exact fixed-point division (the 49-cycle baseline divider).
+pub fn div_exact_q12(a: Q12, b: Q12) -> Q12 {
+    if b.raw() == 0 {
+        return Q12::from_raw(i16::MAX);
+    }
+    let num = (a.raw() as i64) << 12;
+    let q = num / b.raw() as i64;
+    Q12::from_raw(q.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+}
+
+/// Non-restoring integer square root of a 32-bit value (16 iterations —
+/// the Squash unit's dedicated sqrt). Input is raw Q8.24 (i.e. a squared
+/// Q4.12 sum); output is Q4.12.
+pub fn sqrt_q12(acc: i64) -> Q12 {
+    if acc <= 0 {
+        return Q12::ZERO;
+    }
+    // sqrt(x * 2^-24) in Q4.12: isqrt(x) has 2^-12 scale already.
+    let x = acc.min(u32::MAX as i64) as u64;
+    let mut res: u64 = 0;
+    let mut bit: u64 = 1 << 30;
+    let mut v = x;
+    while bit > x {
+        bit >>= 2;
+    }
+    while bit != 0 {
+        if v >= res + bit {
+            v -= res + bit;
+            res = (res >> 1) + bit;
+        } else {
+            res >>= 1;
+        }
+        bit >>= 2;
+    }
+    Q12::from_raw(res.min(i16::MAX as u64) as i16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_poly_matches_paper_window() {
+        // Eq. 2 is built for x in [0, 1]; paper claims "without dropping
+        // accuracy" — check < 0.2% relative error across the window.
+        let mut worst = 0.0f32;
+        for i in 0..=100 {
+            let x = i as f32 / 100.0;
+            let rel = (exp_poly_f32(x) - x.exp()).abs() / x.exp();
+            worst = worst.max(rel);
+        }
+        assert!(worst < 2e-3, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn exp_taylor_range_reduced() {
+        for x in [-8.0f32, -3.2, -1.0, -0.1, 0.0, 0.7, 1.0, 2.5] {
+            let rel = (exp_taylor_f32(x) - x.exp()).abs() / x.exp();
+            assert!(rel < 3e-3, "x={x} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn ln_accuracy() {
+        for x in [0.001f32, 0.1, 0.5, 1.0, 1.49, 2.0, 7.9, 100.0] {
+            let err = (ln_f32(x) - x.ln()).abs();
+            assert!(err < 2e-3, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn div_explog_matches_division() {
+        for (a, b) in [(1.0f32, 3.0f32), (0.25, 0.5), (5.0, 7.0), (2.0, 0.7)] {
+            let got = div_explog_f32(a, b);
+            let rel = (got - a / b).abs() / (a / b);
+            assert!(rel < 5e-3, "{a}/{b} got {got} rel {rel}");
+        }
+        assert_eq!(div_explog_f32(0.0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn q12_exp_tracks_f32() {
+        for i in -40..=10 {
+            let x = i as f32 / 5.0; // [-8, 2]
+            let q = exp_taylor_q12(Q12::from_f32(x)).to_f32();
+            let want = x.exp();
+            if want > 7.9 {
+                continue; // saturation region
+            }
+            assert!(
+                (q - want).abs() < 0.01 + want * 0.01,
+                "x={x} q={q} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn q12_div_tracks_exact_on_softmax_range() {
+        // Softmax divides e^b (in (0,1]) by a sum in (0, 10].
+        for (a, b) in [(0.3f32, 1.7f32), (1.0, 4.2), (0.05, 0.9), (0.9, 1.0)] {
+            let qa = Q12::from_f32(a);
+            let qb = Q12::from_f32(b);
+            let approx = div_explog_q12(qa, qb).to_f32();
+            let exact = div_exact_q12(qa, qb).to_f32();
+            assert!(
+                (approx - exact).abs() < 0.01,
+                "{a}/{b}: approx {approx} exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_divider_is_exact() {
+        let a = Q12::from_f32(3.0);
+        let b = Q12::from_f32(1.5);
+        assert_eq!(div_exact_q12(a, b).to_f32(), 2.0);
+        assert_eq!(div_exact_q12(a, Q12::ZERO).raw(), i16::MAX);
+    }
+
+    #[test]
+    fn sqrt_known_values() {
+        // ‖s‖² accumulators are Q8.24: value v -> raw v·2^24.
+        for v in [0.0f64, 0.25, 1.0, 2.0, 4.0, 16.0, 60.0] {
+            let acc = (v * (1u64 << 24) as f64) as i64;
+            let got = sqrt_q12(acc).to_f32() as f64;
+            assert!(
+                (got - v.sqrt()).abs() < 2e-3 + v.sqrt() * 1e-3,
+                "sqrt({v}) got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_q12_saturates() {
+        assert_eq!(exp_taylor_q12(Q12::from_f32(5.0)).raw(), i16::MAX);
+        // At the format's negative extreme, e^x ≈ e^-8 = 3.4e-4 — within
+        // one resolution step of zero (raw 0 or 1).
+        assert!(exp_taylor_q12(Q12::from_f32(-7.99)).raw() <= 1);
+    }
+}

@@ -1,0 +1,92 @@
+//! On-chip BRAM model: allocation ledger over the device's BRAM36 blocks
+//! plus a port-contention factor for the conv inner loop.
+//!
+//! A BRAM36 holds 4 KB (36 Kbit with parity, 32 Kbit usable at the byte
+//! granularity HLS partitions use). Buffers are allocated in whole blocks;
+//! the ledger records every named buffer so resource reports (Table II/III,
+//! Fig. 14) can itemize where the blocks went.
+
+/// Usable bytes per BRAM36 block (32 Kbit data).
+pub const BRAM36_BYTES: usize = 4096;
+
+/// One allocated buffer.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub name: String,
+    pub bytes: usize,
+    pub blocks: f32,
+    /// Double-buffered (ping-pong) for dataflow overlap.
+    pub double_buffered: bool,
+}
+
+/// BRAM allocation ledger.
+#[derive(Debug, Clone, Default)]
+pub struct BramLedger {
+    pub buffers: Vec<Buffer>,
+}
+
+impl BramLedger {
+    pub fn new() -> BramLedger {
+        BramLedger::default()
+    }
+
+    /// Allocate a buffer. BRAM18 granularity lets small buffers take half
+    /// a block — hence fractional blocks (the paper reports 131.5).
+    pub fn alloc(&mut self, name: &str, bytes: usize, double_buffered: bool) -> f32 {
+        let eff_bytes = if double_buffered { bytes * 2 } else { bytes };
+        let halves = eff_bytes.div_ceil(BRAM36_BYTES / 2);
+        let blocks = halves as f32 / 2.0;
+        self.buffers.push(Buffer {
+            name: name.to_string(),
+            bytes: eff_bytes,
+            blocks,
+            double_buffered,
+        });
+        blocks
+    }
+
+    /// Total BRAM36 blocks allocated.
+    pub fn total_blocks(&self) -> f32 {
+        self.buffers.iter().map(|b| b.blocks).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.buffers.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Whether the allocation fits a device budget of `budget` blocks.
+    pub fn fits(&self, budget: f32) -> bool {
+        self.total_blocks() <= budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_rounding_half_granularity() {
+        let mut l = BramLedger::new();
+        assert_eq!(l.alloc("tiny", 100, false), 0.5);
+        assert_eq!(l.alloc("one-block", 4096, false), 1.0);
+        assert_eq!(l.alloc("just-over", 4097, false), 1.5);
+        assert_eq!(l.total_blocks(), 3.0);
+    }
+
+    #[test]
+    fn double_buffering_doubles() {
+        let mut l = BramLedger::new();
+        let single = l.alloc("a", 8192, false);
+        let dbl = l.alloc("b", 8192, true);
+        assert_eq!(dbl, 2.0 * single);
+    }
+
+    #[test]
+    fn fits_budget() {
+        let mut l = BramLedger::new();
+        l.alloc("w", 500_000, false);
+        assert!(l.fits(140.0));
+        l.alloc("x", 200_000, false);
+        assert!(!l.fits(140.0)); // 700KB > 140 * 4KB = 560KB... blocks: 171
+    }
+}

@@ -1,0 +1,265 @@
+//! Convolution Module (Fig. 10a): index-controlled conv over surviving
+//! kernels on the PE array, with joint functional (Q8.8) and timing
+//! semantics.
+//!
+//! Timing model: the PE array iterates output positions; per position the
+//! index FIFO streams surviving kernels, each contributing k×k MACs. The
+//! inner loop pipelines at II=1 in the optimized schedule (II=2 when
+//! resource pressure prevents full partitioning, as in the original
+//! design). Activations write out through the output BRAM banks.
+
+use super::index_control::IndexControl;
+use super::pe::PeArray;
+use crate::fixed::Q8;
+use crate::tensor::Tensor;
+
+/// Timing summary of one stage of the accelerator.
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    pub name: String,
+    pub cycles: u64,
+    pub macs: u64,
+    /// BRAM words moved (reads + writes) that are not hidden inside the
+    /// PE-local register files.
+    pub mem_words: u64,
+}
+
+/// One conv layer as deployed: 16-bit weights in a per-layer dynamic
+/// fixed-point format (Q-CapsNets-style [25]: the fraction width is chosen
+/// from the layer's weight range, so small-magnitude layers like
+/// PrimaryCaps keep precision), plus the survivor index list.
+#[derive(Debug, Clone)]
+pub struct ConvModule {
+    /// OIHW weight raw values at `Q(16-frac_w).frac_w` (pruned kernels
+    /// hold zeros and are skipped via the index list).
+    pub weights: Vec<i16>,
+    /// Fractional bits of the weight format (per-layer).
+    pub frac_w: u32,
+    /// Bias in activation format (Q8.8 raw).
+    pub bias: Vec<i16>,
+    pub out_ch: usize,
+    pub in_ch: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub index: IndexControl,
+    /// Apply ReLU to outputs (Conv1 yes, PrimaryCaps no).
+    pub relu: bool,
+}
+
+/// Pick the largest fraction width (≤ 14) that keeps `max|w|` in i16.
+fn pick_frac(max_abs: f32) -> u32 {
+    let mut f = 14u32;
+    while f > 0 && max_abs * (1i32 << f) as f32 > i16::MAX as f32 {
+        f -= 1;
+    }
+    f
+}
+
+impl ConvModule {
+    pub fn new(
+        weights: &Tensor,
+        bias: &Tensor,
+        stride: usize,
+        index: IndexControl,
+        relu: bool,
+    ) -> ConvModule {
+        assert_eq!(weights.rank(), 4);
+        let max_abs = weights.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let frac_w = pick_frac(max_abs.max(1e-6));
+        let scale = (1i64 << frac_w) as f32;
+        ConvModule {
+            weights: weights
+                .data
+                .iter()
+                .map(|&x| {
+                    (x * scale)
+                        .round()
+                        .clamp(i16::MIN as f32, i16::MAX as f32) as i16
+                })
+                .collect(),
+            frac_w,
+            bias: bias.data.iter().map(|&x| Q8::from_f32(x).raw()).collect(),
+            out_ch: weights.shape[0],
+            in_ch: weights.shape[1],
+            k: weights.shape[2],
+            stride,
+            index,
+            relu,
+        }
+    }
+
+    /// Output spatial dims for an input of `h × w`.
+    pub fn out_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h - self.k) / self.stride + 1,
+            (w - self.k) / self.stride + 1,
+        )
+    }
+
+    /// MACs per frame: output positions × surviving kernels × k².
+    pub fn macs(&self, h: usize, w: usize) -> u64 {
+        let (oh, ow) = self.out_dims(h, w);
+        (oh * ow) as u64 * self.index.survived() as u64 * (self.k * self.k) as u64
+    }
+
+    /// Functional Q8.8 convolution over surviving kernels only (what the
+    /// index-controlled PE array computes). Input/output layout `[C,H,W]`.
+    pub fn forward(&self, input: &[Q8], h: usize, w: usize) -> Vec<Q8> {
+        assert_eq!(input.len(), self.in_ch * h * w);
+        let (oh, ow) = self.out_dims(h, w);
+        // Wide accumulators per output position (DSP cascade register),
+        // at scale 2^(8 + frac_w) (Q8.8 activations × Qf weights).
+        let mut acc = vec![0i64; self.out_ch * oh * ow];
+        for o in 0..self.out_ch {
+            let b = (self.bias[o] as i64) << self.frac_w;
+            for p in 0..oh * ow {
+                acc[o * oh * ow + p] = b;
+            }
+        }
+        let kk = self.k * self.k;
+        for &(o, i) in &self.index.indices {
+            let (o, i) = (o as usize, i as usize);
+            let wbase = (o * self.in_ch + i) * kk;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut a = acc[(o * oh + oy) * ow + ox];
+                    for ky in 0..self.k {
+                        let iy = oy * self.stride + ky;
+                        let irow = (i * h + iy) * w + ox * self.stride;
+                        for kx in 0..self.k {
+                            let wv = self.weights[wbase + ky * self.k + kx] as i64;
+                            let xv = input[irow + kx].raw() as i64;
+                            a += wv * xv;
+                        }
+                    }
+                    acc[(o * oh + oy) * ow + ox] = a;
+                }
+            }
+        }
+        // Requantize to Q8.8 activations (round-to-nearest, saturate).
+        let half = 1i64 << (self.frac_w - 1);
+        acc.iter()
+            .map(|&a| {
+                let r = ((a + half) >> self.frac_w)
+                    .clamp(i16::MIN as i64, i16::MAX as i64) as i16;
+                let v = Q8::from_raw(r);
+                if self.relu && v.raw() < 0 {
+                    Q8::ZERO
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Cycle cost of one frame through this module.
+    pub fn timing(&self, h: usize, w: usize, pe: &PeArray, ii: u64, mem_bw: u64) -> StageTiming {
+        let macs = self.macs(h, w);
+        let (oh, ow) = self.out_dims(h, w);
+        let out_words = (self.out_ch * oh * ow) as u64;
+        let compute = pe.mac_cycles(macs, ii)
+            + self.index.fetch_overhead_cycles()
+            // Pipeline refill at each output-row boundary.
+            + (oh as u64) * pe.depth;
+        let mem = out_words.div_ceil(mem_bw.max(1));
+        StageTiming {
+            name: format!("conv{}x{}/{}", self.k, self.k, self.out_ch),
+            cycles: compute.max(mem),
+            macs,
+            mem_words: out_words,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorOptions;
+    use crate::pruning::KernelMask;
+    use crate::tensor::conv2d;
+    use crate::util::rng::Rng;
+
+    fn fixture(o: usize, i: usize, k: usize, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor::randn(&[o, i, k, k], 0.3, &mut rng),
+            Tensor::randn(&[o], 0.1, &mut rng),
+        )
+    }
+
+    #[test]
+    fn matches_f32_conv_when_dense() {
+        let (w, b) = fixture(4, 2, 3, 1);
+        let mut rng = Rng::new(2);
+        let input_f = Tensor::randn(&[2, 8, 8], 0.3, &mut rng);
+        let mask = KernelMask::all_alive(4, 2);
+        let m = ConvModule::new(&w, &b, 1, IndexControl::from_mask(&mask), false);
+        let input_q: Vec<Q8> = input_f.data.iter().map(|&x| Q8::from_f32(x)).collect();
+        let got = m.forward(&input_q, 8, 8);
+        let want = conv2d(&input_f, &w, Some(&b), 1).unwrap();
+        for (g, wv) in got.iter().zip(&want.data) {
+            // Q8.8 conv accumulates quantization error across 18 taps.
+            assert!(
+                (g.to_f32() - wv).abs() < 0.05,
+                "{} vs {}",
+                g.to_f32(),
+                wv
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_kernels_are_skipped() {
+        let (w, b) = fixture(2, 2, 3, 3);
+        let mut mask = KernelMask::all_alive(2, 2);
+        mask.set(0, 1, false);
+        mask.set(1, 0, false);
+        let m = ConvModule::new(&w, &b, 1, IndexControl::from_mask(&mask), false);
+        // Equivalent dense conv with those kernels zeroed.
+        let mut wz = w.clone();
+        mask.apply(&mut wz);
+        let mut rng = Rng::new(4);
+        let input_f = Tensor::randn(&[2, 6, 6], 0.3, &mut rng);
+        let input_q: Vec<Q8> = input_f.data.iter().map(|&x| Q8::from_f32(x)).collect();
+        let got = m.forward(&input_q, 6, 6);
+        let want = conv2d(&input_f, &wz, Some(&b), 1).unwrap();
+        for (g, wv) in got.iter().zip(&want.data) {
+            assert!((g.to_f32() - wv).abs() < 0.05);
+        }
+        // And the timing reflects only surviving kernels.
+        assert_eq!(m.macs(6, 6), 16 * 2 * 9);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let (w, b) = fixture(2, 1, 3, 5);
+        let mask = KernelMask::all_alive(2, 1);
+        let m = ConvModule::new(&w, &b, 1, IndexControl::from_mask(&mask), true);
+        let input = vec![Q8::from_f32(-1.0); 25];
+        let out = m.forward(&input, 5, 5);
+        assert!(out.iter().all(|v| v.raw() >= 0));
+    }
+
+    #[test]
+    fn pruning_cuts_cycles_proportionally() {
+        let (w, b) = fixture(16, 16, 3, 6);
+        let pe = PeArray::new(&AcceleratorOptions::optimized());
+        let dense_mask = KernelMask::all_alive(16, 16);
+        let dense =
+            ConvModule::new(&w, &b, 1, IndexControl::from_mask(&dense_mask), false);
+        let mut sparse_mask = KernelMask::all_alive(16, 16);
+        for o in 0..16 {
+            for i in 0..16 {
+                if (o + i) % 4 != 0 {
+                    sparse_mask.set(o, i, false);
+                }
+            }
+        }
+        let sparse =
+            ConvModule::new(&w, &b, 1, IndexControl::from_mask(&sparse_mask), false);
+        let td = dense.timing(16, 16, &pe, 1, 8);
+        let ts = sparse.timing(16, 16, &pe, 1, 8);
+        let ratio = td.cycles as f64 / ts.cycles as f64;
+        assert!(ratio > 2.0, "pruning 4x should speed up >2x, got {ratio:.2}");
+    }
+}

@@ -1,0 +1,83 @@
+//! Off-chip DDR streaming model.
+//!
+//! The *original* (unpruned) CapsNet's 10.7 MB of 16-bit parameters cannot
+//! fit the PYNQ-Z1's 560 KB of BRAM, so every frame must stream weights
+//! from DDR through the PS AXI ports. The paper notes the original model
+//! "limits the usage of Vivado HLS optimization directives due to the
+//! excessive usage of available resources" — without burst inference the
+//! HLS `m_axi` reads issue one beat at a time. That, not compute, is what
+//! pins the original design at 5 FPS.
+
+/// AXI streaming cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct DdrModel {
+    /// Bytes per AXI beat (32-bit data bus on the GP port).
+    pub bytes_per_beat: u64,
+    /// Cycles per beat for non-burst (HLS default) single reads:
+    /// address + latency, no pipelining.
+    pub cycles_per_beat_single: u64,
+    /// Cycles per beat inside an inferred burst (HP port, pipelined).
+    pub cycles_per_beat_burst: u64,
+}
+
+impl Default for DdrModel {
+    fn default() -> Self {
+        DdrModel {
+            bytes_per_beat: 4,
+            cycles_per_beat_single: 5,
+            cycles_per_beat_burst: 1,
+        }
+    }
+}
+
+impl DdrModel {
+    /// Cycles to stream `bytes` with single-beat (non-burst) reads.
+    pub fn stream_cycles_single(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.bytes_per_beat) * self.cycles_per_beat_single
+    }
+
+    /// Cycles to stream `bytes` in bursts (64-beat bursts + setup).
+    pub fn stream_cycles_burst(&self, bytes: u64) -> u64 {
+        let beats = bytes.div_ceil(self.bytes_per_beat);
+        let bursts = beats.div_ceil(64);
+        beats * self.cycles_per_beat_burst + bursts * 8
+    }
+
+    /// Effective bandwidth (MB/s) of the single-beat path at `clock_mhz`.
+    pub fn single_bandwidth_mbps(&self, clock_mhz: f64) -> f64 {
+        self.bytes_per_beat as f64 * clock_mhz / self.cycles_per_beat_single as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_beat_bandwidth_is_the_bottleneck() {
+        let m = DdrModel::default();
+        // 80 MB/s at 100 MHz — the regime that yields ~5 FPS for 10.7MB
+        // of weights + activations per frame.
+        let bw = m.single_bandwidth_mbps(100.0);
+        assert!((bw - 80.0).abs() < 1e-9);
+        // Original CapsNet weights: ~10.7 MB -> ~13.4M cycles just to
+        // stream (0.134 s of the paper's 0.19 s latency).
+        let cycles = m.stream_cycles_single(10_700_000);
+        assert!(cycles > 13_000_000 && cycles < 14_000_000);
+    }
+
+    #[test]
+    fn bursts_are_order_of_magnitude_faster() {
+        let m = DdrModel::default();
+        let single = m.stream_cycles_single(1_000_000);
+        let burst = m.stream_cycles_burst(1_000_000);
+        assert!(single > 4 * burst);
+    }
+
+    #[test]
+    fn zero_bytes() {
+        let m = DdrModel::default();
+        assert_eq!(m.stream_cycles_single(0), 0);
+        assert_eq!(m.stream_cycles_burst(0), 0);
+    }
+}

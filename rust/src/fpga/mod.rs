@@ -1,0 +1,457 @@
+//! Cycle-level simulator of the FastCaps accelerator (Fig. 9) on the
+//! PYNQ-Z1 budget — the evaluation platform substituting for the paper's
+//! board (DESIGN.md §4).
+//!
+//! The simulator is *jointly functional and timed*: the same quantized
+//! datapath that computes values (Q8.8 conv, Q4.12 routing, Taylor
+//! non-linear units) is priced by the cycle model, so numerics and
+//! timing cannot diverge. For benches that only need cycles,
+//! [`DeployedModel::estimate_frame`] prices a frame without computing it;
+//! a test pins both paths to identical cycle counts.
+
+pub mod bram;
+pub mod conv_module;
+pub mod ddr;
+pub mod index_control;
+pub mod pe;
+pub mod power;
+pub mod resources;
+pub mod routing_module;
+
+use crate::capsnet::weights::Weights;
+use crate::config::{SparsityPlan, SystemConfig};
+use crate::fixed::{Q12, Q8};
+use crate::pruning::KernelMask;
+use crate::routing::fixed::{dynamic_routing_q12, PredictionsQ12, SoftmaxMode};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::Result;
+use conv_module::{ConvModule, StageTiming};
+use ddr::DdrModel;
+use index_control::IndexControl;
+use pe::PeArray;
+use routing_module::{routing_timing, RoutingGeometry, RoutingHardware, RoutingTiming};
+
+/// Timing report for one frame.
+#[derive(Debug, Clone)]
+pub struct FrameTiming {
+    pub stages: Vec<StageTiming>,
+    pub routing: RoutingTiming,
+    /// DDR weight-streaming cycles (original design only; overlapped with
+    /// compute, so the frame takes max(compute, stream)).
+    pub ddr_cycles: u64,
+    pub clock_mhz: f64,
+}
+
+impl FrameTiming {
+    pub fn compute_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.cycles).sum()
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles().max(self.ddr_cycles)
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.total_cycles() as f64 / (self.clock_mhz * 1e6)
+    }
+
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s()
+    }
+}
+
+/// A deployed model: quantized weights + kernel survivor indices.
+#[derive(Debug, Clone)]
+pub struct DeployedModel {
+    pub config: SystemConfig,
+    pub conv1: ConvModule,
+    pub pc: ConvModule,
+    /// DigitCaps transform in Q4.12: `[pc_types][n_classes][d_in][d_out]`.
+    pub w_ij: Vec<Q12>,
+}
+
+impl DeployedModel {
+    /// Deploy trained weights with explicit pruning masks.
+    pub fn new(
+        cfg: SystemConfig,
+        weights: &Weights,
+        conv1_mask: &KernelMask,
+        pc_mask: &KernelMask,
+    ) -> Result<DeployedModel> {
+        weights.validate(&cfg.model)?;
+        anyhow::ensure!(
+            conv1_mask.out_ch == cfg.model.conv1_ch
+                && conv1_mask.in_ch == cfg.model.input.0,
+            "conv1 mask shape mismatch"
+        );
+        anyhow::ensure!(
+            pc_mask.out_ch == cfg.model.pc_channels()
+                && pc_mask.in_ch == cfg.model.conv1_ch,
+            "pc mask shape mismatch"
+        );
+        let conv1 = ConvModule::new(
+            &weights.conv1_w,
+            &weights.conv1_b,
+            cfg.model.conv1_stride,
+            IndexControl::from_mask(conv1_mask),
+            true,
+        );
+        let pc = ConvModule::new(
+            &weights.pc_w,
+            &weights.pc_b,
+            cfg.model.pc_stride,
+            IndexControl::from_mask(pc_mask),
+            false,
+        );
+        let w_ij = weights.w_ij.data.iter().map(|&x| Q12::from_f32(x)).collect();
+        Ok(DeployedModel {
+            config: cfg,
+            conv1,
+            pc,
+            w_ij,
+        })
+    }
+
+    /// Synthetic deployment matching a config's sparsity plan — random
+    /// weights, masks with the plan's survivor counts. Used by functional
+    /// tests/examples where values must be plausible.
+    pub fn synthetic(cfg: &SystemConfig, seed: u64) -> DeployedModel {
+        let mut rng = Rng::new(seed);
+        let weights = Weights::random(&cfg.model, &mut rng);
+        let (conv1_mask, pc_mask) = synthetic_masks(&cfg.model, &cfg.sparsity, &mut rng);
+        DeployedModel::new(cfg.clone(), &weights, &conv1_mask, &pc_mask)
+            .expect("synthetic deployment is always consistent")
+    }
+
+    /// Timing-only deployment: zero weights, plan-accurate masks. ~50×
+    /// cheaper to build than [`DeployedModel::synthetic`] (no 5M-element
+    /// random init); `estimate_frame`/resource reports depend only on the
+    /// survivor geometry. §Perf L3 optimization for the report/bench path.
+    pub fn timing_stub(cfg: &SystemConfig, seed: u64) -> DeployedModel {
+        let mut rng = Rng::new(seed);
+        let m = &cfg.model;
+        let (c_in, _, _) = m.input;
+        let weights = Weights {
+            conv1_w: crate::tensor::Tensor::zeros(&[m.conv1_ch, c_in, m.conv1_k, m.conv1_k]),
+            conv1_b: crate::tensor::Tensor::zeros(&[m.conv1_ch]),
+            pc_w: crate::tensor::Tensor::zeros(&[m.pc_channels(), m.conv1_ch, m.pc_k, m.pc_k]),
+            pc_b: crate::tensor::Tensor::zeros(&[m.pc_channels()]),
+            w_ij: crate::tensor::Tensor::zeros(&[m.pc_types, m.num_classes, m.pc_dim, m.dc_dim]),
+        };
+        let (conv1_mask, pc_mask) = synthetic_masks(m, &cfg.sparsity, &mut rng);
+        DeployedModel::new(cfg.clone(), &weights, &conv1_mask, &pc_mask)
+            .expect("timing stub is always consistent")
+    }
+
+    fn pe(&self) -> PeArray {
+        PeArray::new(&self.config.options)
+    }
+
+    fn routing_hw(&self) -> RoutingHardware {
+        if self.config.options.optimized_routing {
+            RoutingHardware::optimized()
+        } else {
+            RoutingHardware::baseline()
+        }
+    }
+
+    fn softmax_mode(&self) -> SoftmaxMode {
+        if self.config.options.optimized_routing {
+            SoftmaxMode::Taylor
+        } else {
+            SoftmaxMode::Baseline
+        }
+    }
+
+    /// Bytes streamed over DDR per frame (original design only): all
+    /// weights once, plus the û tensor spilled off-chip — at 1152 capsules
+    /// û (369 KB) cannot stay in BRAM next to the activations, so it is
+    /// written once and re-read by every FC and Agreement pass.
+    fn ddr_bytes(&self) -> u64 {
+        if self.config.is_pruned() {
+            return 0;
+        }
+        let m = &self.config.model;
+        let (conv1, pc, dc) = m.param_counts();
+        let weights = (conv1 + pc + dc) * 2;
+        let u_bytes =
+            (m.num_primary_caps() * m.num_classes * m.dc_dim) as u64 * 2;
+        let r = m.routing_iters as u64;
+        // 1 write + R FC reads + (R−1) agreement reads.
+        weights + u_bytes * (1 + r + (r - 1))
+    }
+
+    /// Timing-only estimate of one frame (no values computed).
+    pub fn estimate_frame(&self) -> FrameTiming {
+        let m = &self.config.model;
+        let pe = self.pe();
+        let hw = self.routing_hw();
+        let (_, ih, iw) = m.input;
+        let (h1, w1) = m.conv1_out();
+        // The original design is resource-starved (II=2 conv schedule).
+        let conv_ii = if self.config.is_pruned() { 1 } else { 2 };
+        let mem_bw = hw.mem_bw;
+
+        let t1 = self.conv1.timing(ih, iw, &pe, conv_ii, mem_bw);
+        let t2 = self.pc.timing(h1, w1, &pe, conv_ii, mem_bw);
+        let n_caps = self.config.sparsity.num_primary_caps(m);
+        let g = RoutingGeometry::from_config(m, n_caps);
+        let rt = routing_timing(&g, &hw, &pe);
+        // Primary-capsule squash stage (before routing): n_caps squashes
+        // through the dedicated Squash unit.
+        use crate::fixed::latency::Op;
+        let per_squash = (m.pc_dim as u64).div_ceil(pe.macs_per_pe as u64)
+            + Op::Sqrt.cycles()
+            + Op::DivFixed.cycles()
+            + 2;
+        let squash_cycles = if self.config.options.optimized_routing {
+            // Capsules pipeline through the unit at the sqrt/div II bound.
+            per_squash
+                + (n_caps as u64 - 1)
+                    * Op::Sqrt.initiation_interval().max(Op::DivFixed.initiation_interval())
+        } else {
+            n_caps as u64 * per_squash
+        };
+        let squash_stage = StageTiming {
+            name: "primary-squash".into(),
+            cycles: squash_cycles,
+            macs: (n_caps * m.pc_dim) as u64,
+            mem_words: (n_caps * m.pc_dim) as u64 * 2,
+        };
+        let routing_stage = routing_module::as_stage(&g, &hw, &pe);
+        let ddr = if self.ddr_bytes() > 0 {
+            DdrModel::default().stream_cycles_single(self.ddr_bytes())
+        } else {
+            0
+        };
+        FrameTiming {
+            stages: vec![t1, t2, squash_stage, routing_stage],
+            routing: rt,
+            ddr_cycles: ddr,
+            clock_mhz: self.config.budget.clock_mhz,
+        }
+    }
+
+    /// Run one frame functionally (quantized datapath) and return the
+    /// predicted class, DigitCaps lengths, and the frame timing.
+    pub fn run_frame(&self, image: &Tensor) -> Result<(usize, Vec<f32>, FrameTiming)> {
+        let m = &self.config.model;
+        let (c_in, ih, iw) = m.input;
+        anyhow::ensure!(
+            image.shape == vec![c_in, ih, iw],
+            "input shape {:?} != {:?}",
+            image.shape,
+            (c_in, ih, iw)
+        );
+        // Conv stages in Q8.8.
+        let input_q: Vec<Q8> = image.data.iter().map(|&x| Q8::from_f32(x)).collect();
+        let conv1_out = self.conv1.forward(&input_q, ih, iw);
+        let (h1, w1) = m.conv1_out();
+        let pc_out = self.pc.forward(&conv1_out, h1, w1);
+        let (h2, w2) = m.pc_out();
+
+        // Regroup into capsules and squash (Q4.12 from here on).
+        let n_caps = self.config.sparsity.num_primary_caps(m);
+        let types = self.config.sparsity.pc_types.min(m.pc_types);
+        let d = m.pc_dim;
+        let spatial = h2 * w2;
+        let mut counts = crate::routing::fixed::OpCounts::default();
+        let mut primary = vec![Q12::ZERO; n_caps * d];
+        for t in 0..types {
+            for p in 0..spatial {
+                let cap = t * spatial + p;
+                // pc activations are already Q8.8 — feed the Squash unit's
+                // wide-input port directly.
+                let s_raw: Vec<i16> = (0..d)
+                    .map(|k| pc_out[(t * d + k) * spatial + p].raw())
+                    .collect();
+                let v = crate::routing::fixed::squash_q88(&s_raw, &mut counts);
+                primary[cap * d..(cap + 1) * d].copy_from_slice(&v);
+            }
+        }
+
+        // û projection on the PE array (shared transform per type).
+        let n_out = m.num_classes;
+        let d_out = m.dc_dim;
+        let mut u_hat = vec![Q12::ZERO; n_caps * n_out * d_out];
+        for cap in 0..n_caps {
+            let t = cap / spatial;
+            let u = &primary[cap * d..(cap + 1) * d];
+            for j in 0..n_out {
+                for k_out in 0..d_out {
+                    // Column k_out of W[t][j] (stride d_out).
+                    let base = ((t * n_out) + j) * d * d_out + k_out;
+                    let mut acc = 0i64;
+                    for (kk, &uk) in u.iter().enumerate() {
+                        acc = uk.mac(self.w_ij[base + kk * d_out], acc);
+                    }
+                    u_hat[(cap * n_out + j) * d_out + k_out] = Q12::from_acc(acc);
+                }
+            }
+        }
+        let pred = PredictionsQ12 {
+            n_in: n_caps,
+            n_out,
+            d_out,
+            u_hat,
+        };
+        let out = dynamic_routing_q12(&pred, m.routing_iters, self.softmax_mode());
+        let lengths = out.lengths_f32();
+        let class = lengths
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok((class, lengths, self.estimate_frame()))
+    }
+}
+
+/// Build synthetic kernel masks matching a sparsity plan: survivors spread
+/// round-robin over output channels so every capsule type stays alive.
+pub fn synthetic_masks(
+    model: &crate::config::CapsNetConfig,
+    plan: &SparsityPlan,
+    rng: &mut Rng,
+) -> (KernelMask, KernelMask) {
+    let c_in = model.input.0;
+    let mut conv1 = KernelMask::all_alive(model.conv1_ch, c_in);
+    let total1 = model.conv1_ch * c_in;
+    let keep1 = plan.conv1_kernels.min(total1);
+    let mut order: Vec<usize> = (0..total1).collect();
+    rng.shuffle(&mut order);
+    for &n in order.iter().skip(keep1) {
+        conv1.set(n / c_in, n % c_in, false);
+    }
+
+    let pc_ch = model.pc_channels();
+    let mut pc = KernelMask::all_alive(pc_ch, model.conv1_ch);
+    let total2 = pc_ch * model.conv1_ch;
+    let keep2 = plan.pc_kernels.min(total2);
+    if keep2 < total2 {
+        // Round-robin over output channels (keeps every capsule type
+        // alive), shuffled input channels within each row.
+        let mut per_row = vec![0usize; pc_ch];
+        for n in 0..keep2 {
+            per_row[n % pc_ch] += 1;
+        }
+        let mut cols: Vec<usize> = (0..model.conv1_ch).collect();
+        for (oc, &keep_row) in per_row.iter().enumerate() {
+            rng.shuffle(&mut cols);
+            for &ic in cols.iter().skip(keep_row) {
+                pc.set(oc, ic, false);
+            }
+        }
+    }
+    (conv1, pc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn synthetic_masks_match_plan() {
+        let cfg = SystemConfig::proposed("mnist");
+        let mut rng = Rng::new(1);
+        let (c1, pc) = synthetic_masks(&cfg.model, &cfg.sparsity, &mut rng);
+        assert_eq!(c1.survived(), cfg.sparsity.conv1_kernels);
+        assert_eq!(pc.survived(), cfg.sparsity.pc_kernels);
+        // Every capsule type alive.
+        assert_eq!(
+            crate::pruning::surviving_capsule_types(&pc, cfg.model.pc_dim),
+            cfg.model.pc_types
+        );
+    }
+
+    #[test]
+    fn paper_throughput_shape() {
+        // Fig. 1 / Table II anchors: 5 → 82 → 1351 FPS (MNIST) and
+        // 48 → 934 (F-MNIST). The simulator must land in the right decade
+        // and preserve every ordering/ratio.
+        let fps =
+            |cfg: &SystemConfig| DeployedModel::synthetic(cfg, 7).estimate_frame().fps();
+        let orig = fps(&SystemConfig::original("mnist"));
+        let pruned = fps(&SystemConfig::pruned("mnist"));
+        let prop = fps(&SystemConfig::proposed("mnist"));
+        let pruned_f = fps(&SystemConfig::pruned("fmnist"));
+        let prop_f = fps(&SystemConfig::proposed("fmnist"));
+
+        assert!((3.0..8.0).contains(&orig), "original {orig:.1} FPS (paper 5)");
+        assert!((55.0..120.0).contains(&pruned), "pruned {pruned:.0} (paper 82)");
+        assert!((900.0..2000.0).contains(&prop), "proposed {prop:.0} (paper 1351)");
+        assert!((32.0..70.0).contains(&pruned_f), "pruned-f {pruned_f:.0} (paper 48)");
+        assert!((600.0..1400.0).contains(&prop_f), "proposed-f {prop_f:.0} (paper 934)");
+        // Orderings.
+        assert!(orig < pruned && pruned < prop);
+        assert!(pruned_f < pruned, "F-MNIST slower (more capsules)");
+        assert!(prop_f < prop);
+        // Headline speedup (paper: 270×).
+        let speedup = prop / orig;
+        assert!(
+            (150.0..450.0).contains(&speedup),
+            "speedup {speedup:.0}x (paper 270x)"
+        );
+    }
+
+    #[test]
+    fn original_is_ddr_bound() {
+        let d = DeployedModel::synthetic(&SystemConfig::original("mnist"), 3);
+        let t = d.estimate_frame();
+        assert!(t.ddr_cycles > t.compute_cycles(), "streaming dominates");
+        // Latency ~0.19 s (Table II).
+        assert!(
+            (0.1..0.3).contains(&t.latency_s()),
+            "latency {}",
+            t.latency_s()
+        );
+    }
+
+    #[test]
+    fn proposed_latency_sub_millisecond_scale() {
+        // Table II: 0.74 ms.
+        let d = DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 3);
+        let t = d.estimate_frame();
+        assert!(t.latency_s() < 0.0015, "latency {}", t.latency_s());
+        assert_eq!(t.ddr_cycles, 0, "everything on-chip");
+    }
+
+    #[test]
+    fn functional_run_agrees_with_estimate() {
+        // run_frame's timing is estimate_frame — one code path.
+        let cfg = SystemConfig::proposed("mnist");
+        let d = DeployedModel::synthetic(&cfg, 5);
+        let mut rng = Rng::new(9);
+        let img = crate::data::digits::render(3, &mut rng);
+        let (class, lengths, t) = d.run_frame(&img).unwrap();
+        assert!(class < 10);
+        assert_eq!(lengths.len(), 10);
+        assert!(lengths.iter().all(|&l| (0.0..1.05).contains(&l)));
+        assert_eq!(t.total_cycles(), d.estimate_frame().total_cycles());
+    }
+
+    #[test]
+    fn taylor_mode_preserves_prediction() {
+        // §IV-B "did not lead to a reduction in accuracy": baseline and
+        // optimized datapaths agree on the argmax for real inputs.
+        let mut rng = Rng::new(11);
+        let base_cfg = SystemConfig::pruned("mnist");
+        let opt_cfg = SystemConfig::proposed("mnist");
+        // Same weights/masks for both (same seed).
+        let d_base = DeployedModel::synthetic(&base_cfg, 21);
+        let d_opt = DeployedModel::synthetic(&opt_cfg, 21);
+        let mut agree = 0;
+        let n = 6;
+        for c in 0..n {
+            let img = crate::data::digits::render(c, &mut rng);
+            let (a, _, _) = d_base.run_frame(&img).unwrap();
+            let (b, _, _) = d_opt.run_frame(&img).unwrap();
+            if a == b {
+                agree += 1;
+            }
+        }
+        assert!(agree >= n - 1, "only {agree}/{n} predictions agree");
+    }
+}

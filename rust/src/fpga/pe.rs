@@ -1,0 +1,110 @@
+//! Processing-element array (Fig. 9/10): `num_pes` PEs, each performing
+//! `macs_per_pe` element-wise 16-bit multiplies feeding an adder tree
+//! (paper: 10 PEs × 9 multipliers). Fully pipelined at II = 1 when the
+//! optimized schedule applies; loop-carried dependencies raise the II.
+
+use crate::config::AcceleratorOptions;
+use crate::fixed::Q12;
+
+/// Timing + functional model of the PE array.
+#[derive(Debug, Clone, Copy)]
+pub struct PeArray {
+    pub num_pes: usize,
+    pub macs_per_pe: usize,
+    /// Pipeline depth of one PE (multiplier 3 + ceil(log2(9)) adder-tree
+    /// stages + 1 writeback).
+    pub depth: u64,
+}
+
+impl PeArray {
+    pub fn new(opts: &AcceleratorOptions) -> PeArray {
+        let depth = 3 + (opts.macs_per_pe as f64).log2().ceil() as u64 + 1;
+        PeArray {
+            num_pes: opts.num_pes,
+            macs_per_pe: opts.macs_per_pe,
+            depth,
+        }
+    }
+
+    /// Peak MACs per cycle with every PE busy.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        (self.num_pes * self.macs_per_pe) as u64
+    }
+
+    /// Cycles to execute `macs` multiply-accumulates spread over the
+    /// array with initiation interval `ii` (II > 1 models loop-carried
+    /// dependencies / write conflicts, as in the non-reordered Code 1).
+    pub fn mac_cycles(&self, macs: u64, ii: u64) -> u64 {
+        if macs == 0 {
+            return 0;
+        }
+        let issues = macs.div_ceil(self.peak_macs_per_cycle());
+        self.depth + (issues.max(1) - 1) * ii.max(1) + 1
+    }
+
+    /// Cycles when only a single scalar MAC lane is available (the
+    /// non-optimized routing datapath: §III-B parallelizes the Agreement
+    /// and FC steps onto the PE array — before that they run on the
+    /// scalar datapath HLS infers).
+    pub fn scalar_mac_cycles(macs: u64, ii: u64) -> u64 {
+        macs * ii.max(1)
+    }
+
+    /// Functional: one PE dot-product step — `Σ_k a[k]·b[k]` into a wide
+    /// accumulator, exactly what the adder tree produces.
+    pub fn dot(a: &[Q12], b: &[Q12]) -> i64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0i64;
+        for (&x, &y) in a.iter().zip(b) {
+            acc = x.mac(y, acc);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn array() -> PeArray {
+        PeArray::new(&AcceleratorOptions::optimized())
+    }
+
+    #[test]
+    fn paper_geometry() {
+        let pe = array();
+        assert_eq!(pe.peak_macs_per_cycle(), 90);
+        assert_eq!(pe.depth, 3 + 4 + 1);
+    }
+
+    #[test]
+    fn pipelined_throughput_approaches_peak() {
+        let pe = array();
+        let macs = 9_000_000u64;
+        let cycles = pe.mac_cycles(macs, 1);
+        let per_cycle = macs as f64 / cycles as f64;
+        assert!(per_cycle > 89.9, "throughput {per_cycle}");
+    }
+
+    #[test]
+    fn ii_scales_cycles() {
+        let pe = array();
+        let c1 = pe.mac_cycles(90_000, 1);
+        let c3 = pe.mac_cycles(90_000, 3);
+        assert!(c3 > 2 * c1 && c3 < 4 * c1);
+    }
+
+    #[test]
+    fn zero_work_costs_nothing() {
+        assert_eq!(array().mac_cycles(0, 1), 0);
+        assert_eq!(PeArray::scalar_mac_cycles(0, 1), 0);
+    }
+
+    #[test]
+    fn dot_matches_scalar() {
+        let a: Vec<Q12> = [0.5f32, -1.0, 2.0].iter().map(|&x| Q12::from_f32(x)).collect();
+        let b: Vec<Q12> = [1.0f32, 0.25, 0.5].iter().map(|&x| Q12::from_f32(x)).collect();
+        let acc = PeArray::dot(&a, &b);
+        assert!((Q12::from_acc(acc).to_f32() - 1.25).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,97 @@
+//! Power and energy model (Fig. 1).
+//!
+//! `P = P_static + Σ resource·toggle + P_ddr·(streaming)` — the standard
+//! Zynq decomposition: PS + fabric static power, per-resource dynamic
+//! power at 100 MHz, and the DDR controller/PHY term that only the
+//! weight-streaming original design pays. Coefficients calibrated so the
+//! paper's energy-efficiency anchors reproduce:
+//! original-MNIST ≈ 1.8 FPJ at 5 FPS, pruned ≈ 41.8 FPJ at 82 FPS,
+//! pruned-F-MNIST ≈ 24.5 FPJ at 48 FPS (all implying ~2–2.8 W boards).
+
+use super::resources::Utilization;
+
+/// Power model coefficients (watts).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    pub static_w: f64,
+    pub per_dsp_w: f64,
+    pub per_bram_w: f64,
+    pub per_lut_w: f64,
+    pub ddr_stream_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            static_w: 1.0,       // PS idle + fabric static
+            per_dsp_w: 0.0015,   // 16-bit multiply at 100 MHz
+            per_bram_w: 0.003,   // active dual-port block
+            per_lut_w: 1.0e-5,   // logic toggle
+            ddr_stream_w: 0.6,   // DDR controller + PHY while streaming
+        }
+    }
+}
+
+impl PowerModel {
+    /// Board power (W) for a build with the given utilization.
+    pub fn watts(&self, u: &Utilization, ddr_streaming: bool) -> f64 {
+        self.static_w
+            + self.per_dsp_w * u.dsp48e as f64
+            + self.per_bram_w * u.bram36 as f64
+            + self.per_lut_w * u.luts as f64
+            + if ddr_streaming { self.ddr_stream_w } else { 0.0 }
+    }
+
+    /// Frames per joule at a given throughput.
+    pub fn fpj(&self, fps: f64, u: &Utilization, ddr_streaming: bool) -> f64 {
+        fps / self.watts(u, ddr_streaming)
+    }
+
+    /// Energy per frame (mJ).
+    pub fn mj_per_frame(&self, fps: f64, u: &Utilization, ddr_streaming: bool) -> f64 {
+        1000.0 * self.watts(u, ddr_streaming) / fps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::fpga::resources::estimate;
+
+    #[test]
+    fn board_power_in_pynq_range() {
+        let pm = PowerModel::default();
+        let orig = estimate(&SystemConfig::original("mnist"));
+        let prop = estimate(&SystemConfig::proposed("mnist"));
+        let p_orig = pm.watts(&orig, true);
+        let p_prop = pm.watts(&prop, false);
+        assert!((2.0..3.2).contains(&p_orig), "original {p_orig} W");
+        assert!((1.5..2.5).contains(&p_prop), "proposed {p_prop} W");
+        assert!(p_orig > p_prop, "DDR streaming costs power");
+    }
+
+    #[test]
+    fn paper_fpj_anchors() {
+        // Fig. 1 anchors at the paper's measured FPS points.
+        let pm = PowerModel::default();
+        let orig = estimate(&SystemConfig::original("mnist"));
+        let fpj_orig = pm.fpj(5.0, &orig, true);
+        assert!((fpj_orig - 1.8).abs() < 0.5, "original {fpj_orig} FPJ");
+
+        let pruned = estimate(&SystemConfig::pruned("mnist"));
+        let fpj_pruned = pm.fpj(82.0, &pruned, false);
+        assert!((fpj_pruned - 41.8).abs() < 6.0, "pruned {fpj_pruned} FPJ");
+
+        let pruned_f = estimate(&SystemConfig::pruned("fmnist"));
+        let fpj_f = pm.fpj(48.0, &pruned_f, false);
+        assert!((fpj_f - 24.5).abs() < 4.0, "pruned fmnist {fpj_f} FPJ");
+    }
+
+    #[test]
+    fn energy_per_frame_monotone_in_fps() {
+        let pm = PowerModel::default();
+        let u = estimate(&SystemConfig::proposed("mnist"));
+        assert!(pm.mj_per_frame(100.0, &u, false) > pm.mj_per_frame(1000.0, &u, false));
+    }
+}

@@ -1,0 +1,288 @@
+//! Post-synthesis resource model (Table II / Table III / Fig. 14).
+//!
+//! Additive area model: every hardware unit the accelerator instantiates
+//! contributes LUTs / LUT-RAM / DSP48E slices; BRAM comes from the
+//! allocation ledger ([`super::bram`]) including HLS partitioning waste.
+//! Per-unit constants are calibrated against the paper's Vivado reports
+//! for the Zynq-7020 (each constant is annotated); the *structure* —
+//! which units exist in which configuration — follows the architecture
+//! directly, so config-to-config deltas are mechanistic, not fitted.
+
+use super::bram::BramLedger;
+use crate::config::SystemConfig;
+
+/// Resource utilization of one accelerator build.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub luts: u32,
+    pub lutram: u32,
+    pub bram36: f32,
+    pub dsp48e: u32,
+}
+
+impl Utilization {
+    pub fn percent_of(&self, budget: &crate::config::FpgaBudget) -> [f64; 4] {
+        [
+            100.0 * self.luts as f64 / budget.luts as f64,
+            100.0 * self.lutram as f64 / budget.lutram as f64,
+            100.0 * self.bram36 as f64 / budget.bram36 as f64,
+            100.0 * self.dsp48e as f64 / budget.dsp48e as f64,
+        ]
+    }
+}
+
+/// LUT/LUTRAM/DSP contribution of each unit (calibrated constants).
+mod unit {
+    /// Platform: AXI-lite control, interrupt, clocking, PS interface.
+    pub const PLATFORM_LUT: u32 = 9000;
+    pub const PLATFORM_LUTRAM: u32 = 1500;
+    pub const PLATFORM_DSP: u32 = 46;
+
+    /// DDR weight-streaming datapath (original design only): m_axi FSMs,
+    /// alignment, prefetch FIFOs.
+    pub const DDR_STREAM_LUT: u32 = 5200;
+    pub const DDR_STREAM_LUTRAM: u32 = 3400;
+
+    /// PE array, per PE (9 multipliers + adder tree + local regs).
+    pub const PE_LUT: u32 = 650;
+    pub const PE_DSP: u32 = 9;
+
+    /// Conv address generation / line buffers (per conv module).
+    pub const CONV_CTRL_LUT: u32 = 2000;
+    pub const CONV_ADDR_DSP: u32 = 6;
+
+    /// Index Control Module (pruned deployments): FIFO + remap tables.
+    pub const INDEX_LUT: u32 = 300;
+    /// Per 100 surviving kernels (deeper remap tables).
+    pub const INDEX_LUT_PER_100K: u32 = 120;
+    pub const INDEX_LUTRAM: u32 = 280;
+
+    /// Baseline non-linear units.
+    pub const EXP_CORDIC_LUT: u32 = 1100;
+    pub const EXP_CORDIC_DSP: u32 = 4;
+    pub const DIV_ITERATIVE_LUT: u32 = 1900; // LUT-based restoring divider
+    /// Scalar routing datapath (baseline: MAC lanes + muxes).
+    pub const SCALAR_ROUTING_LUT: u32 = 2600;
+    pub const SCALAR_ROUTING_DSP: u32 = 33;
+
+    /// Optimized non-linear units (§III-B).
+    pub const EXP_TAYLOR_LUT: u32 = 800; // Horner control; muls on PE array
+    pub const DIV_EXPLOG_LUT: u32 = 700; // per instance
+    pub const DIV_EXPLOG_DSP: u32 = 7; // 2 log (1 DSP) + exp poly (5)
+    pub const SOFTMAX_TREE_DSP: u32 = 4;
+    pub const REQUANT_DSP: u32 = 30; // output requantization lanes
+
+    /// Squash unit (both designs): sqrt + scale.
+    pub const SQUASH_LUT: u32 = 600;
+    pub const SQUASH_DSP: u32 = 2;
+
+    /// Routing sequencer: grows with capsule count (state machines index
+    /// N capsules; comparators, counters, bank muxes).
+    pub const ROUTING_CTRL_LUT_BASE: u32 = 1500;
+    pub const ROUTING_CTRL_LUT_PER_CAP: f64 = 6.0;
+    /// Routing-state FIFOs in LUTRAM, per capsule.
+    pub const ROUTING_LUTRAM_PER_CAP: f64 = 10.8;
+}
+
+/// BRAM allocation for a configuration, itemized.
+pub fn bram_plan(cfg: &SystemConfig) -> BramLedger {
+    let m = &cfg.model;
+    let s = &cfg.sparsity;
+    let mut ledger = BramLedger::new();
+    let (c_in, ih, iw) = m.input;
+    let (h1, w1) = m.conv1_out();
+    let (h2, w2) = m.pc_out();
+    let n_caps = s.num_primary_caps(m);
+
+    // 16-bit weights. The original design streams weights from DDR and
+    // only holds stream buffers; pruned designs hold everything on-chip.
+    if cfg.is_pruned() {
+        let conv_w = s.survived_conv_params(m) as usize * 2;
+        ledger.alloc("weights.conv(+idx)", conv_w + (s.conv1_kernels + s.pc_kernels) * 4, false);
+        let wij = s.pc_types * m.num_classes * m.pc_dim * m.dc_dim * 2;
+        ledger.alloc("weights.w_ij", wij, false);
+    } else {
+        // Double-buffered stream tiles for weights (64 KB ping-pong).
+        ledger.alloc("weights.stream_tiles", 64 * 1024, true);
+    }
+
+    // Activations (dataflow: input & conv1 double-buffered). HLS cyclic
+    // partitioning spreads hot arrays over banks; each bank rounds up to
+    // BRAM18 granularity — modeled by allocating per-bank slices.
+    ledger.alloc("act.input", c_in * ih * iw * 2, true);
+    let conv1_act = m.conv1_ch.min(if cfg.is_pruned() { s.conv1_channels } else { m.conv1_ch });
+    // Partition conv1 activations over k taps (9 banks).
+    let conv1_bytes = conv1_act * h1 * w1 * 2;
+    for b in 0..9 {
+        ledger.alloc(&format!("act.conv1.bank{b}"), conv1_bytes.div_ceil(9), true);
+    }
+    ledger.alloc("act.pc", s.pc_types * m.pc_dim * h2 * w2 * 2, false);
+
+    // û storage, partitioned over 16 banks for the PE array.
+    let u_bytes = n_caps * m.num_classes * m.dc_dim * 2;
+    for b in 0..16 {
+        ledger.alloc(&format!("routing.u_hat.bank{b}"), u_bytes.div_ceil(16), false);
+    }
+    // Routing state: logits + couplings (4 banks).
+    let bc_bytes = n_caps * m.num_classes * 2 * 2;
+    for b in 0..4 {
+        ledger.alloc(&format!("routing.state.bank{b}"), bc_bytes.div_ceil(4), false);
+    }
+    ledger.alloc("routing.v", m.num_classes * m.dc_dim * 2, false);
+    ledger.alloc("rom.exp_coeffs", 256, false);
+    ledger.alloc("io.dma", 2 * 8 * 1024, true);
+    ledger
+}
+
+/// Full resource estimate for a configuration.
+pub fn estimate(cfg: &SystemConfig) -> Utilization {
+    use unit::*;
+    let m = &cfg.model;
+    let s = &cfg.sparsity;
+    let n_caps = s.num_primary_caps(m) as f64;
+    let survived_kernels = (s.conv1_kernels + s.pc_kernels) as u32;
+
+    let mut lut = PLATFORM_LUT;
+    let mut lutram = PLATFORM_LUTRAM;
+    let mut dsp = PLATFORM_DSP;
+
+    // PE array + two conv modules.
+    lut += cfg.options.num_pes as u32 * PE_LUT;
+    dsp += cfg.options.num_pes as u32 * PE_DSP;
+    lut += 2 * CONV_CTRL_LUT;
+    dsp += 2 * CONV_ADDR_DSP;
+
+    // Squash unit.
+    lut += SQUASH_LUT;
+    dsp += SQUASH_DSP;
+
+    // Routing sequencer. Pruned designs keep per-capsule index/state FIFOs
+    // in LUTRAM (they scale with capsule count); the original design has no
+    // resources left for that — its routing state sits in BRAM behind a
+    // fixed-size sequencer.
+    if cfg.is_pruned() {
+        lut += ROUTING_CTRL_LUT_BASE + (ROUTING_CTRL_LUT_PER_CAP * n_caps) as u32;
+        lutram += (ROUTING_LUTRAM_PER_CAP * n_caps) as u32;
+        lut += INDEX_LUT + INDEX_LUT_PER_100K * survived_kernels.div_ceil(100);
+        lutram += INDEX_LUTRAM;
+    } else {
+        lut += ROUTING_CTRL_LUT_BASE + 1200;
+        lutram += 1800;
+        lut += DDR_STREAM_LUT;
+        lutram += DDR_STREAM_LUTRAM;
+    }
+
+    if cfg.options.optimized_routing {
+        lut += EXP_TAYLOR_LUT + 2 * DIV_EXPLOG_LUT;
+        dsp += 2 * DIV_EXPLOG_DSP + SOFTMAX_TREE_DSP + REQUANT_DSP;
+    } else {
+        lut += EXP_CORDIC_LUT + DIV_ITERATIVE_LUT + SCALAR_ROUTING_LUT;
+        dsp += EXP_CORDIC_DSP + SCALAR_ROUTING_DSP;
+    }
+
+    // BRAM from the ledger, clamped at the device budget (the original
+    // design saturates it: Table II reports 140/140).
+    let bram = bram_plan(cfg)
+        .total_blocks()
+        .min(cfg.budget.bram36);
+
+    Utilization {
+        luts: lut,
+        lutram,
+        bram36: bram,
+        dsp48e: dsp,
+    }
+}
+
+/// Paper-reported values for comparison in reports/tests.
+pub fn paper_reported(config_name: &str) -> Option<Utilization> {
+    match config_name {
+        "original-mnist" => Some(Utilization {
+            luts: 33_232,
+            lutram: 6_751,
+            bram36: 140.0,
+            dsp48e: 187,
+        }),
+        "proposed-mnist" => Some(Utilization {
+            luts: 25_559,
+            lutram: 4_221,
+            bram36: 131.5,
+            dsp48e: 198,
+        }),
+        "proposed-fmnist" => Some(Utilization {
+            luts: 28_247,
+            lutram: 6_268,
+            bram36: 131.5,
+            dsp48e: 198,
+        }),
+        _ => None,
+    }
+}
+
+/// Helper: relative error (%) between model and paper.
+pub fn relative_error(model: f64, paper: f64) -> f64 {
+    100.0 * (model - paper).abs() / paper
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn original_mnist_tracks_table2() {
+        let u = estimate(&SystemConfig::original("mnist"));
+        let p = paper_reported("original-mnist").unwrap();
+        assert!(relative_error(u.dsp48e as f64, p.dsp48e as f64) < 8.0, "dsp {u:?}");
+        assert!(relative_error(u.luts as f64, p.luts as f64) < 15.0, "lut {u:?}");
+        assert_eq!(u.bram36, 140.0, "original saturates BRAM");
+    }
+
+    #[test]
+    fn proposed_mnist_tracks_table2() {
+        let u = estimate(&SystemConfig::proposed("mnist"));
+        let p = paper_reported("proposed-mnist").unwrap();
+        assert!(relative_error(u.dsp48e as f64, p.dsp48e as f64) < 8.0, "dsp {u:?}");
+        assert!(relative_error(u.luts as f64, p.luts as f64) < 15.0, "lut {u:?}");
+        assert!(relative_error(u.lutram as f64, p.lutram as f64) < 15.0, "lutram {u:?}");
+        assert!(u.bram36 < 140.0, "pruned fits under budget: {u:?}");
+    }
+
+    #[test]
+    fn fmnist_larger_than_mnist() {
+        // Table III vs Table II col 2: F-MNIST variant uses more LUT and
+        // LUTRAM (432 vs 252 capsules), same DSP.
+        let m = estimate(&SystemConfig::proposed("mnist"));
+        let f = estimate(&SystemConfig::proposed("fmnist"));
+        assert!(f.luts > m.luts);
+        assert!(f.lutram > m.lutram);
+        assert_eq!(f.dsp48e, m.dsp48e);
+    }
+
+    #[test]
+    fn optimization_shifts_div_from_lut_to_dsp() {
+        // Fig. 14's signature: optimized design trades the LUT-hungry
+        // iterative divider for DSP-based Taylor units.
+        let base = estimate(&SystemConfig::pruned("mnist"));
+        let opt = estimate(&SystemConfig::proposed("mnist"));
+        assert!(opt.luts < base.luts, "{} vs {}", opt.luts, base.luts);
+        assert!(opt.dsp48e > base.dsp48e);
+    }
+
+    #[test]
+    fn everything_fits_the_device() {
+        for cfg in [
+            SystemConfig::original("mnist"),
+            SystemConfig::pruned("mnist"),
+            SystemConfig::proposed("mnist"),
+            SystemConfig::proposed("fmnist"),
+        ] {
+            let u = estimate(&cfg);
+            let b = &cfg.budget;
+            assert!(u.luts <= b.luts, "{} luts", u.luts);
+            assert!(u.lutram <= b.lutram);
+            assert!(u.bram36 <= b.bram36);
+            assert!(u.dsp48e <= b.dsp48e, "{} dsp", u.dsp48e);
+        }
+    }
+}

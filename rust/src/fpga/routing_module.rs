@@ -1,0 +1,270 @@
+//! Dynamic Routing Module (Fig. 10b): cycle model for every step of the
+//! routing algorithm, in the baseline and §III-B-optimized schedules.
+//!
+//! Baseline (Code 1, before optimization):
+//! * û projection, FC and Agreement run on the scalar datapath HLS infers
+//!   (1 MAC/cycle — §III-B parallelizes them onto the PE array, so before
+//!   that they are not on it).
+//! * softmax uses the serial 27-cycle `exp` and 49-cycle divider, one
+//!   evaluation at a time (the iterative units cannot pipeline).
+//!
+//! Optimized (Code 2 + Eq. 2/3):
+//! * û projection, FC and Agreement pipeline on the PE array at II=1
+//!   (loop reorder removes the `b[i][j]` write conflict).
+//! * softmax evaluates Eq. 2 on a 10-lane exp array (II=1) and divides
+//!   through 2 exp/log divider instances (II=1) — rows pipeline.
+//! * Squash is unchanged in both (dedicated unit: MAC tree, sqrt 16,
+//!   exact div 49 — the paper excludes Squash from the PE array).
+//!
+//! The *functional* values come from `routing::fixed`; this module only
+//! prices the schedule, so numbers and timing stay in lockstep via
+//! [`OpCounts`].
+
+use super::conv_module::StageTiming;
+use super::pe::PeArray;
+use crate::fixed::latency::{parallel_cycles, pipelined_cycles, Op};
+
+/// Routing problem geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutingGeometry {
+    pub n_caps: usize,
+    pub n_classes: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub iterations: usize,
+}
+
+impl RoutingGeometry {
+    pub fn from_config(cfg: &crate::config::CapsNetConfig, n_caps: usize) -> Self {
+        RoutingGeometry {
+            n_caps,
+            n_classes: cfg.num_classes,
+            d_in: cfg.pc_dim,
+            d_out: cfg.dc_dim,
+            iterations: cfg.routing_iters,
+        }
+    }
+}
+
+/// Per-step cycle breakdown — the rows of Fig. 8.
+#[derive(Debug, Clone)]
+pub struct RoutingTiming {
+    pub u_hat: u64,
+    pub softmax: u64,
+    pub fc: u64,
+    pub agreement: u64,
+    pub squash: u64,
+    pub logit_update: u64,
+}
+
+impl RoutingTiming {
+    pub fn total(&self) -> u64 {
+        self.u_hat + self.softmax + self.fc + self.agreement + self.squash + self.logit_update
+    }
+
+    pub fn stages(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("u_hat (FC projection)", self.u_hat),
+            ("softmax", self.softmax),
+            ("FC (weighted sum)", self.fc),
+            ("agreement", self.agreement),
+            ("squash", self.squash),
+            ("logit update", self.logit_update),
+        ]
+    }
+}
+
+/// Hardware knobs of the routing module.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutingHardware {
+    pub optimized: bool,
+    /// Exp lanes in the optimized softmax (paper: array of 10 PEs).
+    pub exp_lanes: u64,
+    /// Eq. 3 divider instances.
+    pub div_units: u64,
+    /// Routing-state BRAM bandwidth, words/cycle (banks × ports).
+    pub mem_bw: u64,
+}
+
+impl RoutingHardware {
+    pub fn baseline() -> Self {
+        RoutingHardware {
+            optimized: false,
+            exp_lanes: 1,
+            div_units: 1,
+            mem_bw: 2,
+        }
+    }
+
+    pub fn optimized() -> Self {
+        RoutingHardware {
+            optimized: true,
+            exp_lanes: 10,
+            div_units: 2,
+            // û partitioned over 16 dual-port banks (see
+            // `resources::bram_plan`), read one word per port per cycle.
+            mem_bw: 16,
+        }
+    }
+}
+
+/// Cycle model for the full routing stage of one frame.
+pub fn routing_timing(g: &RoutingGeometry, hw: &RoutingHardware, pe: &PeArray) -> RoutingTiming {
+    let n = g.n_caps as u64;
+    let j = g.n_classes as u64;
+    let r = g.iterations as u64;
+    let d_in = g.d_in as u64;
+    let d_out = g.d_out as u64;
+
+    // û projection: N·J·d_in·d_out MACs, once per frame.
+    let u_hat_macs = n * j * d_in * d_out;
+    // FC weighted sum: N·J·d_out MACs per iteration.
+    let fc_macs = n * j * d_out;
+    // Agreement: N·J·d_out MACs, iterations−1 times.
+    let agree_macs = n * j * d_out;
+    // Memory: û is written once and read every FC + agreement pass.
+    let u_words = n * j * d_out;
+
+    if hw.optimized {
+        // PE array, II=1; rows pipeline through the softmax units.
+        let mem = |words: u64| words.div_ceil(hw.mem_bw);
+        let u_hat = pe.mac_cycles(u_hat_macs, 1).max(mem(u_words * 2));
+        // Softmax per iteration: N rows; per row J exps over `exp_lanes`
+        // then J divisions over `div_units`; rows pipeline at
+        // II = max(J/lanes, J/divs).
+        let row_ii = (j.div_ceil(hw.exp_lanes)).max(j.div_ceil(hw.div_units));
+        let fill = Op::ExpTaylor.cycles() + Op::DivExpLog.cycles() + 4;
+        let softmax = r * (fill + (n - 1).max(0) * row_ii + n * j / hw.mem_bw);
+        let fc = r * pe.mac_cycles(fc_macs, 1).max(mem(u_words));
+        let agreement = (r - 1) * pe.mac_cycles(agree_macs, 1).max(mem(u_words));
+        // Squash: J capsules per iteration through the dedicated unit.
+        let per_squash = d_out.div_ceil(pe.macs_per_pe as u64)
+            + Op::Sqrt.cycles()
+            + Op::DivFixed.cycles()
+            + d_out.div_ceil(pe.macs_per_pe as u64)
+            + 2;
+        let squash = r * j * per_squash;
+        // Logit update: N·J adds, pipelined.
+        let logit_update = (r - 1) * pipelined_cycles(Op::Add, n * j);
+        RoutingTiming {
+            u_hat,
+            softmax,
+            fc,
+            agreement,
+            squash,
+            logit_update,
+        }
+    } else {
+        // Scalar MACs; serial non-pipelined exp/div.
+        let u_hat = PeArray::scalar_mac_cycles(u_hat_macs, 1);
+        let per_row = parallel_cycles(Op::ExpFull, j, 1)
+            + j * Op::DivFixed.cycles()
+            + j * Op::Add.cycles();
+        let softmax = r * n * per_row;
+        let fc = r * PeArray::scalar_mac_cycles(fc_macs, 1);
+        let agreement = (r - 1) * PeArray::scalar_mac_cycles(agree_macs, 1);
+        let per_squash = d_out * Op::Mac.cycles()
+            + Op::Sqrt.cycles()
+            + Op::DivFixed.cycles()
+            + d_out * Op::Mul.cycles()
+            + 2;
+        let squash = r * j * per_squash;
+        let logit_update = (r - 1) * n * j * Op::Add.cycles();
+        RoutingTiming {
+            u_hat,
+            softmax,
+            fc,
+            agreement,
+            squash,
+            logit_update,
+        }
+    }
+}
+
+/// Collapse to a stage timing for the frame report.
+pub fn as_stage(g: &RoutingGeometry, hw: &RoutingHardware, pe: &PeArray) -> StageTiming {
+    let t = routing_timing(g, hw, pe);
+    let n = g.n_caps as u64;
+    let j = g.n_classes as u64;
+    StageTiming {
+        name: "dynamic-routing".into(),
+        cycles: t.total(),
+        macs: n * j * (g.d_in as u64) * (g.d_out as u64)
+            + (g.iterations as u64) * n * j * (g.d_out as u64) * 2,
+        mem_words: n * j * (g.d_out as u64) * (1 + 2 * g.iterations as u64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AcceleratorOptions, CapsNetConfig};
+
+    fn pe() -> PeArray {
+        PeArray::new(&AcceleratorOptions::optimized())
+    }
+
+    fn mnist_pruned_geometry() -> RoutingGeometry {
+        let cfg = CapsNetConfig::paper_pruned_mnist();
+        RoutingGeometry::from_config(&cfg, cfg.num_primary_caps())
+    }
+
+    #[test]
+    fn optimized_routing_is_order_of_magnitude_faster() {
+        let g = mnist_pruned_geometry();
+        let base = routing_timing(&g, &RoutingHardware::baseline(), &pe());
+        let opt = routing_timing(&g, &RoutingHardware::optimized(), &pe());
+        let speedup = base.total() as f64 / opt.total() as f64;
+        assert!(
+            speedup > 10.0 && speedup < 100.0,
+            "routing speedup {speedup:.1}"
+        );
+    }
+
+    #[test]
+    fn softmax_dominates_baseline() {
+        // The premise of §III-B: exp/div serialization is the bottleneck.
+        let g = mnist_pruned_geometry();
+        let t = routing_timing(&g, &RoutingHardware::baseline(), &pe());
+        assert!(t.softmax > t.fc + t.agreement + t.squash);
+        assert!(t.softmax as f64 > 0.4 * t.total() as f64);
+    }
+
+    #[test]
+    fn softmax_latency_reduced_85_percent() {
+        // §III-C: "The latency of softmax() operation is reduced by 85%".
+        let g = mnist_pruned_geometry();
+        let base = routing_timing(&g, &RoutingHardware::baseline(), &pe());
+        let opt = routing_timing(&g, &RoutingHardware::optimized(), &pe());
+        let reduction = 1.0 - opt.softmax as f64 / base.softmax as f64;
+        assert!(
+            reduction > 0.85,
+            "softmax reduction {:.1}%",
+            reduction * 100.0
+        );
+    }
+
+    #[test]
+    fn squash_unchanged_by_optimization() {
+        let g = mnist_pruned_geometry();
+        let base = routing_timing(&g, &RoutingHardware::baseline(), &pe());
+        let opt = routing_timing(&g, &RoutingHardware::optimized(), &pe());
+        // Same unit, same serial schedule — within the MAC-tree difference.
+        let ratio = base.squash as f64 / opt.squash as f64;
+        assert!((0.5..=2.5).contains(&ratio), "squash ratio {ratio}");
+    }
+
+    #[test]
+    fn scales_with_capsule_count() {
+        let m = mnist_pruned_geometry();
+        let cfg_f = CapsNetConfig::paper_pruned_fmnist();
+        let f = RoutingGeometry::from_config(&cfg_f, cfg_f.num_primary_caps());
+        for hw in [RoutingHardware::baseline(), RoutingHardware::optimized()] {
+            let tm = routing_timing(&m, &hw, &pe()).total();
+            let tf = routing_timing(&f, &hw, &pe()).total();
+            let ratio = tf as f64 / tm as f64;
+            // 432/252 ≈ 1.71 capsules.
+            assert!((1.3..=2.0).contains(&ratio), "ratio {ratio}");
+        }
+    }
+}

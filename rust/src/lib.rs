@@ -1,0 +1,37 @@
+//! # FastCaps
+//!
+//! Reproduction of *"FastCaps: A Design Methodology for Accelerating Capsule
+//! Network on FPGAs"* (Rahoof, Chaturvedi, Shafique) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the deployment side: the Look-Ahead Kernel
+//!   Pruning (LAKP) engine and its baselines, a cycle-level simulator of the
+//!   paper's PYNQ-Z1 accelerator (PE array, BRAM banks, index control,
+//!   conv + dynamic-routing modules, Taylor-approximated non-linear units),
+//!   a PJRT runtime that executes the AOT-lowered JAX model, and a serving
+//!   coordinator (router → batcher → executor) that keeps Python off the
+//!   request path.
+//! * **L2 (python/compile/model.py)** — the CapsNet forward graph in JAX,
+//!   lowered once to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the routing
+//!   hot-spots, validated against a pure-jnp oracle.
+//!
+//! The public API is organised by subsystem; see `DESIGN.md` for the
+//! paper-to-module map and `EXPERIMENTS.md` for reproduced numbers.
+
+pub mod capsnet;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod fpga;
+pub mod pruning;
+pub mod report;
+pub mod routing;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based; the only external error dep).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,279 @@
+//! `fastcaps` — CLI for the FastCaps reproduction.
+//!
+//! ```text
+//! fastcaps report <table1|table2|table3|fig1|fig5|fig8|fig14|all>
+//! fastcaps simulate [--dataset mnist|fmnist] [--config original|pruned|proposed] [--frames N]
+//! fastcaps serve    [--backend pjrt|sim] [--model capsnet-mnist-pruned]
+//!                   [--requests N] [--clients K] [--artifacts DIR]
+//! fastcaps prune    [--weights FILE.fcw] [--method lakp|kp] [--sparsity S]
+//! fastcaps selftest
+//! ```
+
+use fastcaps::config::SystemConfig;
+use fastcaps::coordinator::server::{Backend, PjrtBackend, Server, SimBackend};
+use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
+use fastcaps::util::cli::Args;
+use fastcaps::Result;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "report" => cmd_report(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "prune" => cmd_prune(&args),
+        "selftest" => cmd_selftest(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fastcaps — FastCaps (LAKP + routing-optimized CapsNet accelerator) reproduction\n\n\
+         subcommands:\n\
+         \x20 report <exp>   regenerate a paper table/figure\n\
+         \x20                exps: table1 table2 table3 fig1 fig5 fig8 fig14 all\n\
+         \x20 simulate       run frames through the cycle-level accelerator simulator\n\
+         \x20 serve          start the serving coordinator and drive a workload\n\
+         \x20 prune          LAKP/KP-prune a .fcw weight file, print compression\n\
+         \x20 selftest       quick end-to-end sanity checks\n"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let dir = artifacts_dir(args);
+    match which {
+        "fig1" => print!("{}", fastcaps::report::fig1()),
+        "table2" => print!("{}", fastcaps::report::table2()),
+        "table3" => print!("{}", fastcaps::report::table3()),
+        "fig8" => print!("{}", fastcaps::report::fig8()),
+        "fig14" => print!("{}", fastcaps::report::fig14()),
+        "ablation" => print!("{}", fastcaps::report::ablation()),
+        "table1" => print!("{}", fastcaps::report::table1(&dir)?),
+        "fig5" => print!("{}", fastcaps::report::fig5(&dir)?),
+        "all" => {
+            print!("{}", fastcaps::report::all_simulated());
+            match fastcaps::report::table1(&dir) {
+                Ok(s) => print!("\n{s}"),
+                Err(e) => println!("\n[table1 skipped: {e}]"),
+            }
+            match fastcaps::report::fig5(&dir) {
+                Ok(s) => print!("\n{s}"),
+                Err(e) => println!("[fig5 skipped: {e}]"),
+            }
+        }
+        other => anyhow::bail!("unknown report '{other}'"),
+    }
+    Ok(())
+}
+
+fn system_config(args: &Args) -> SystemConfig {
+    let dataset = args.get_or("dataset", "mnist");
+    match args.get_or("config", "proposed") {
+        "original" => SystemConfig::original(dataset),
+        "pruned" => SystemConfig::pruned(dataset),
+        _ => SystemConfig::proposed(dataset),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = system_config(args);
+    let frames = args.get_usize("frames", 4);
+    let seed = args.get_u64("seed", 7);
+    let task = fastcaps::data::Task::parse(args.get_or("dataset", "mnist"))
+        .unwrap_or(fastcaps::data::Task::Digits);
+    println!(
+        "simulating {} frames on {} ({})",
+        frames,
+        cfg.model.name,
+        if cfg.options.optimized_routing {
+            "optimized routing"
+        } else {
+            "baseline routing"
+        }
+    );
+    let model = DeployedModel::synthetic(&cfg, seed);
+    let data = fastcaps::data::generate(task, frames, seed);
+    let pm = PowerModel::default();
+    let u = resources::estimate(&cfg);
+    for (i, img) in data.images.iter().enumerate() {
+        let (class, lengths, t) = model.run_frame(img)?;
+        println!(
+            "frame {i}: label={} predicted={class} top-length={:.3} cycles={} ({:.2} ms)",
+            data.labels[i],
+            lengths.iter().cloned().fold(0.0f32, f32::max),
+            fastcaps::util::fmt_thousands(t.total_cycles()),
+            t.latency_s() * 1e3,
+        );
+    }
+    let t = model.estimate_frame();
+    println!(
+        "\nsteady-state: {:.1} FPS, {:.1} FPJ, {:.3} ms/frame  (weights are random — \
+         predictions are not meaningful, timing is)",
+        t.fps(),
+        pm.fpj(t.fps(), &u, !cfg.is_pruned()),
+        t.latency_s() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let backend_kind = args.get_or("backend", "pjrt").to_string();
+    let model_name = args.get_or("model", "capsnet-mnist-pruned").to_string();
+    let n_requests = args.get_usize("requests", 64);
+    let n_clients = args.get_usize("clients", 4).max(1);
+    let dir = artifacts_dir(args);
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
+
+    let server = if backend_kind == "sim" {
+        let cfg = system_config(args);
+        Server::start(
+            move || {
+                Ok(Box::new(SimBackend {
+                    model: DeployedModel::synthetic(&cfg, 7),
+                }) as Box<dyn Backend>)
+            },
+            max_wait,
+        )
+    } else {
+        let weights = dir.join(if model_name.contains("fmnist") {
+            "weights-fmnist.fcw"
+        } else {
+            "weights-mnist.fcw"
+        });
+        let dir2 = dir.clone();
+        let model2 = model_name.clone();
+        Server::start(
+            move || {
+                let rt = fastcaps::runtime::Runtime::open(&dir2)?;
+                let mut engines = Vec::new();
+                for b in rt.batch_buckets(&model2) {
+                    engines.push(rt.engine(&model2, b, &weights)?);
+                }
+                anyhow::ensure!(!engines.is_empty(), "no artifacts for {model2}");
+                Ok(Box::new(PjrtBackend::new(engines)?) as Box<dyn Backend>)
+            },
+            max_wait,
+        )
+    };
+
+    println!(
+        "serving {n_requests} requests from {n_clients} client threads \
+         (backend={backend_kind}, model={model_name})"
+    );
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let server = &server;
+            scope.spawn(move || {
+                let data = fastcaps::data::generate(
+                    fastcaps::data::Task::Digits,
+                    n_requests / n_clients,
+                    c as u64,
+                );
+                for img in data.images {
+                    let _ = server.classify(img);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!("{}", m.summary());
+    println!(
+        "wall: {:.2}s  end-to-end throughput: {:.1} req/s",
+        wall.as_secs_f64(),
+        m.requests as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    use fastcaps::pruning::{kp, lakp, AdjacencyNorms};
+
+    let cfg = fastcaps::config::CapsNetConfig::paper_full("capsnet-mnist");
+    let sparsity = args.get_f64("sparsity", 0.9);
+    let method = args.get_or("method", "lakp").to_string();
+    let weights = match args.get("weights") {
+        Some(p) => fastcaps::capsnet::weights::Weights::load(Path::new(p))?,
+        None => {
+            println!("(no --weights given; using random weights for the demo)");
+            let mut rng = fastcaps::util::rng::Rng::new(1);
+            fastcaps::capsnet::weights::Weights::random(&cfg, &mut rng)
+        }
+    };
+    let adj_pc = AdjacencyNorms {
+        prev: AdjacencyNorms::prev_from_conv(&weights.conv1_w),
+        next: AdjacencyNorms::next_from_digitcaps(&weights.w_ij, cfg.pc_types, cfg.pc_dim),
+    };
+    let result = match method.as_str() {
+        "kp" => kp::prune_layer(&weights.pc_w, sparsity),
+        _ => lakp::prune_layer(&weights.pc_w, &adj_pc, sparsity),
+    };
+    let types = fastcaps::pruning::surviving_capsule_types(&result.mask, cfg.pc_dim);
+    let (h2, w2) = cfg.pc_out();
+    println!(
+        "{method} @ sparsity {sparsity}: {} / {} kernels survive \
+         ({} capsule types → {} primary capsules; index memory {} B)",
+        result.mask.survived(),
+        result.mask.total(),
+        types,
+        types * h2 * w2,
+        result.mask.index_bytes(),
+    );
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    // 1. Simulator throughput shape.
+    let orig = DeployedModel::synthetic(&SystemConfig::original("mnist"), 7)
+        .estimate_frame()
+        .fps();
+    let prop = DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 7)
+        .estimate_frame()
+        .fps();
+    println!("[1/3] simulator: original {orig:.1} FPS, proposed {prop:.1} FPS");
+    anyhow::ensure!(prop > 100.0 * orig, "speedup shape broken");
+
+    // 2. Fixed-point units.
+    use fastcaps::fixed::{taylor, Q12};
+    let x = Q12::from_f32(0.7);
+    let e = taylor::exp_taylor_q12(x).to_f32();
+    anyhow::ensure!((e - 0.7f32.exp()).abs() < 0.01, "taylor exp off: {e}");
+    println!(
+        "[2/3] fixed-point Taylor exp(0.7) = {e:.4} (want {:.4})",
+        0.7f32.exp()
+    );
+
+    // 3. PJRT runtime if artifacts exist.
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = fastcaps::runtime::Runtime::open(dir)?;
+        let engine = rt.engine("capsnet-mnist-pruned", 1, &dir.join("weights-mnist.fcw"))?;
+        let img = fastcaps::data::generate(fastcaps::data::Task::Digits, 1, 3)
+            .images
+            .remove(0);
+        let lengths = engine.run_batch(&[img])?;
+        println!("[3/3] PJRT lengths: {:?}", lengths[0]);
+        anyhow::ensure!(lengths[0].len() == 10);
+    } else {
+        println!("[3/3] skipped PJRT (no artifacts/ — run `make artifacts`)");
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Capsule pruning — the PrunedCaps [24] comparison point (§II-B): prune
+//! whole PrimaryCaps *types* (all `pc_dim` output channels of the
+//! PrimaryCaps conv at once), scored by the type's total weight magnitude.
+//! Coarser than LAKP's kernel granularity, so compression saturates
+//! earlier — which is exactly the comparison the paper draws (LAKP removes
+//! >99.26% of FLOPs vs PrunedCaps' 95.36%).
+
+use super::KernelMask;
+use crate::tensor::Tensor;
+
+/// Score each capsule type: L1 magnitude of all its channels' kernels.
+pub fn type_scores(pc_w: &Tensor, pc_dim: usize) -> Vec<f32> {
+    let o = pc_w.shape[0];
+    assert_eq!(o % pc_dim, 0, "pc channels not divisible by capsule dim");
+    let types = o / pc_dim;
+    let per_ch = pc_w.len() / o;
+    (0..types)
+        .map(|t| {
+            (0..pc_dim)
+                .map(|k| {
+                    let ch = t * pc_dim + k;
+                    pc_w.data[ch * per_ch..(ch + 1) * per_ch]
+                        .iter()
+                        .map(|x| x.abs())
+                        .sum::<f32>()
+                })
+                .sum()
+        })
+        .collect()
+}
+
+/// Prune the lowest-scored `sparsity` fraction of capsule types, returning
+/// a kernel mask over the PrimaryCaps conv (whole channels zeroed).
+pub fn prune_types(pc_w: &Tensor, pc_dim: usize, sparsity: f64) -> KernelMask {
+    let (o, i) = (pc_w.shape[0], pc_w.shape[1]);
+    let scores = type_scores(pc_w, pc_dim);
+    let types = scores.len();
+    let n_prune = ((types as f64) * sparsity.clamp(0.0, 1.0)).floor() as usize;
+    let mut order: Vec<usize> = (0..types).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = KernelMask::all_alive(o, i);
+    for &t in order.iter().take(n_prune) {
+        for k in 0..pc_dim {
+            for ic in 0..i {
+                mask.set(t * pc_dim + k, ic, false);
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::surviving_capsule_types;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prunes_weakest_type() {
+        // 3 types × 2 dims; make type 1 weakest.
+        let mut rng = Rng::new(1);
+        let mut w = Tensor::randn(&[6, 4, 3, 3], 1.0, &mut rng);
+        let per_ch = w.len() / 6;
+        for ch in [2, 3] {
+            for v in &mut w.data[ch * per_ch..(ch + 1) * per_ch] {
+                *v *= 0.01;
+            }
+        }
+        let mask = prune_types(&w, 2, 0.34);
+        assert_eq!(surviving_capsule_types(&mask, 2), 2);
+        assert!(!mask.get(2, 0));
+        assert!(!mask.get(3, 3));
+        assert!(mask.get(0, 0));
+    }
+
+    #[test]
+    fn granularity_coarser_than_kernel_pruning() {
+        // At 50% sparsity, capsule pruning kills exactly half the types;
+        // kernel pruning at the same parameter budget keeps every type
+        // alive (spread sparsity) — LAKP's granularity advantage.
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[8, 4, 3, 3], 1.0, &mut rng);
+        let cap_mask = prune_types(&w, 2, 0.5);
+        assert_eq!(surviving_capsule_types(&cap_mask, 2), 2);
+        let kp_mask = super::super::kp::prune_layer(&w, 0.5).mask;
+        assert!(surviving_capsule_types(&kp_mask, 2) >= 3);
+        // Identical survived parameter budget.
+        assert_eq!(cap_mask.survived(), kp_mask.survived());
+    }
+}

@@ -1,0 +1,87 @@
+//! Magnitude-based kernel pruning (KP) — the state-of-the-art baseline
+//! the paper compares against (Mao et al. [14]). Kernel score is the L1
+//! magnitude of its own parameters; no adjacency information.
+
+use super::{KernelMask, LayerPruneResult};
+use crate::tensor::Tensor;
+
+/// Per-kernel magnitude scores for an OIHW tensor.
+pub fn kernel_scores(w: &Tensor) -> Vec<f32> {
+    let (o, i) = (w.shape[0], w.shape[1]);
+    let kk = w.shape[2] * w.shape[3];
+    let mut scores = Vec::with_capacity(o * i);
+    for n in 0..o * i {
+        let base = n * kk;
+        scores.push(w.data[base..base + kk].iter().map(|x| x.abs()).sum());
+    }
+    scores
+}
+
+/// Build a mask pruning the lowest-scored `sparsity` fraction. Shared by
+/// KP and LAKP (they differ only in the score).
+pub fn mask_from_scores(
+    scores: &[f32],
+    out_ch: usize,
+    in_ch: usize,
+    sparsity: f64,
+) -> KernelMask {
+    assert_eq!(scores.len(), out_ch * in_ch);
+    let total = scores.len();
+    let n_prune = ((total as f64) * sparsity.clamp(0.0, 1.0)).floor() as usize;
+    let mut order: Vec<usize> = (0..total).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b)) // deterministic tie-break
+    });
+    let mut mask = KernelMask::all_alive(out_ch, in_ch);
+    for &n in order.iter().take(n_prune) {
+        mask.set(n / in_ch, n % in_ch, false);
+    }
+    mask
+}
+
+/// Magnitude kernel pruning of one layer.
+pub fn prune_layer(w: &Tensor, sparsity: f64) -> LayerPruneResult {
+    let scores = kernel_scores(w);
+    let mask = mask_from_scores(&scores, w.shape[0], w.shape[1], sparsity);
+    LayerPruneResult { mask, scores }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::tests::tensor_with_kernel_sums;
+
+    #[test]
+    fn prunes_smallest_kernels() {
+        let w = tensor_with_kernel_sums(&[&[1.0, 4.0], &[3.0, 2.0]], 3, 3);
+        let res = prune_layer(&w, 0.5);
+        assert!(!res.mask.get(0, 0)); // score 1 pruned
+        assert!(!res.mask.get(1, 1)); // score 2 pruned
+        assert!(res.mask.get(1, 0));
+        assert!(res.mask.get(0, 1));
+    }
+
+    #[test]
+    fn zero_sparsity_keeps_all() {
+        let w = tensor_with_kernel_sums(&[&[1.0, 2.0]], 3, 3);
+        assert_eq!(prune_layer(&w, 0.0).mask.survived(), 2);
+    }
+
+    #[test]
+    fn full_sparsity_prunes_all() {
+        let w = tensor_with_kernel_sums(&[&[1.0, 2.0]], 3, 3);
+        assert_eq!(prune_layer(&w, 1.0).mask.survived(), 0);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let w = tensor_with_kernel_sums(&[&[2.0, 2.0], &[2.0, 2.0]], 3, 3);
+        let a = prune_layer(&w, 0.5).mask;
+        let b = prune_layer(&w, 0.5).mask;
+        assert_eq!(a, b);
+        assert_eq!(a.survived(), 2);
+    }
+}

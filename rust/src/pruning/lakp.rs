@@ -1,0 +1,131 @@
+//! Look-Ahead Kernel Pruning — Algorithm 1, the paper's contribution.
+//!
+//! Per-parameter look-ahead score (Eq. 1):
+//! `L_i(w) = |w| · ‖W_{i−1}[j,:]‖ · ‖W_{i+1}[:,k]‖`, where `w` sits in the
+//! kernel connecting input channel `j` to output channel `k`. Because the
+//! adjacency factors are constant over a kernel, the kernel score
+//! factorizes:
+//!
+//! `LK(o,i) = abs_sum(W_i[o,i]) · prev[i] · next[o]`
+//!
+//! Layer-wise sparsity (`s_i`): the lowest-scored `s_i` fraction of
+//! kernels is masked (the paper prunes layer-wise "due to the unequal
+//! redundancy of network parameters in each layer" [25]).
+
+use super::{AdjacencyNorms, LayerPruneResult};
+use crate::tensor::Tensor;
+
+/// Per-kernel look-ahead scores for an OIHW tensor.
+pub fn kernel_scores(w: &Tensor, adj: &AdjacencyNorms) -> Vec<f32> {
+    let (o, i) = (w.shape[0], w.shape[1]);
+    assert_eq!(adj.prev.len(), i, "prev norms must cover input channels");
+    assert_eq!(adj.next.len(), o, "next norms must cover output channels");
+    let kk = w.shape[2] * w.shape[3];
+    let mut scores = Vec::with_capacity(o * i);
+    for oc in 0..o {
+        for ic in 0..i {
+            let base = (oc * i + ic) * kk;
+            let s: f32 = w.data[base..base + kk].iter().map(|x| x.abs()).sum();
+            scores.push(s * adj.prev[ic] * adj.next[oc]);
+        }
+    }
+    scores
+}
+
+/// Prune the lowest-scored `sparsity` fraction of kernels (Algorithm 1
+/// lines 5–10 for one layer).
+pub fn prune_layer(w: &Tensor, adj: &AdjacencyNorms, sparsity: f64) -> LayerPruneResult {
+    let scores = kernel_scores(w, adj);
+    let mask = super::kp::mask_from_scores(&scores, w.shape[0], w.shape[1], sparsity);
+    LayerPruneResult { mask, scores }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::tests::tensor_with_kernel_sums;
+
+    /// The paper's Fig. 7 worked example: W_i, W_{i−1}, W_{i+1} all
+    /// (2,2,3,3); kernel abs-sums as printed in the figure.
+    ///
+    /// Note: Fig. 7 prints the score of kernel (0,0) as 2295, but its own
+    /// formula gives 8·(8+9)·(6+9) = 2040 — a typo in the paper. The
+    /// remaining three scores (2280, 3060, 3800) and the resulting mask
+    /// match exactly.
+    #[test]
+    fn fig7_worked_example() {
+        let w_prev = tensor_with_kernel_sums(&[&[8.0, 9.0], &[10.0, 9.0]], 3, 3);
+        let w_i = tensor_with_kernel_sums(&[&[8.0, 8.0], &[9.0, 10.0]], 3, 3);
+        let w_next = tensor_with_kernel_sums(&[&[6.0, 10.0], &[9.0, 10.0]], 3, 3);
+
+        let adj = AdjacencyNorms {
+            prev: AdjacencyNorms::prev_from_conv(&w_prev),
+            next: AdjacencyNorms::next_from_conv(&w_next),
+        };
+        let scores = kernel_scores(&w_i, &adj);
+        // (o,i) order: (0,0), (0,1), (1,0), (1,1).
+        assert!((scores[0] - 2040.0).abs() < 0.5, "got {}", scores[0]);
+        assert!((scores[1] - 2280.0).abs() < 0.5, "got {}", scores[1]);
+        assert!((scores[2] - 3060.0).abs() < 0.5, "got {}", scores[2]);
+        assert!((scores[3] - 3800.0).abs() < 0.5, "got {}", scores[3]);
+
+        // 50% sparsity → kernels (0,0) and (0,1) pruned: mask [[0,0],[1,1]].
+        let res = prune_layer(&w_i, &adj, 0.5);
+        assert!(!res.mask.get(0, 0));
+        assert!(!res.mask.get(0, 1));
+        assert!(res.mask.get(1, 0));
+        assert!(res.mask.get(1, 1));
+    }
+
+    #[test]
+    fn neutral_adjacency_reduces_to_kp() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let w = Tensor::randn(&[6, 4, 3, 3], 1.0, &mut rng);
+        let adj = AdjacencyNorms::neutral(4, 6);
+        let lakp = prune_layer(&w, &adj, 0.5);
+        let kp = super::super::kp::prune_layer(&w, 0.5);
+        assert_eq!(lakp.mask, kp.mask);
+    }
+
+    #[test]
+    fn adjacency_changes_the_choice() {
+        // Two kernels with equal magnitude; adjacency should break the tie
+        // toward the one feeding the strong consumer.
+        let w = tensor_with_kernel_sums(&[&[5.0], &[5.0]], 3, 3);
+        let adj = AdjacencyNorms {
+            prev: vec![1.0],
+            next: vec![0.1, 10.0], // consumer of ch 1 is much stronger
+        };
+        let res = prune_layer(&w, &adj, 0.5);
+        assert!(!res.mask.get(0, 0), "weakly-consumed kernel pruned");
+        assert!(res.mask.get(1, 0), "strongly-consumed kernel kept");
+    }
+
+    #[test]
+    fn property_sparsity_respected() {
+        crate::testing::check_msg(
+            "LAKP prunes exactly the requested fraction",
+            20,
+            11,
+            |r| {
+                let o = 2 + r.below(8);
+                let i = 1 + r.below(8);
+                let w = Tensor::randn(&[o, i, 3, 3], 1.0, r);
+                let s = [0.0, 0.25, 0.5, 0.75, 0.9][r.below(5)];
+                (w, s)
+            },
+            |(w, s)| {
+                let adj = AdjacencyNorms::neutral(w.shape[1], w.shape[0]);
+                let res = prune_layer(w, &adj, *s);
+                let total = w.shape[0] * w.shape[1];
+                let want_pruned = ((total as f64) * s).floor() as usize;
+                let got = total - res.mask.survived();
+                if got == want_pruned {
+                    Ok(())
+                } else {
+                    Err(format!("pruned {got}, wanted {want_pruned}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Unstructured magnitude pruning (Han et al. [21]) — the red line in
+//! Fig. 5. Prunes individual weights by |w|, achieving high compression
+//! but an irregular sparsity pattern that needs per-weight indices on
+//! hardware (§III-C).
+
+use super::WeightMask;
+use crate::tensor::Tensor;
+
+/// Prune the smallest-|w| `sparsity` fraction of individual weights.
+pub fn prune_layer(w: &Tensor, sparsity: f64) -> WeightMask {
+    let n = w.len();
+    let n_prune = ((n as f64) * sparsity.clamp(0.0, 1.0)).floor() as usize;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        w.data[a]
+            .abs()
+            .partial_cmp(&w.data[b].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut bits = vec![true; n];
+    for &i in order.iter().take(n_prune) {
+        bits[i] = false;
+    }
+    WeightMask { bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prunes_smallest_weights() {
+        let w = Tensor::from_vec(&[4], vec![0.1, -0.9, 0.5, -0.05]).unwrap();
+        let m = prune_layer(&w, 0.5);
+        assert_eq!(m.bits, vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn unstructured_keeps_more_signal_than_structured_at_same_rate() {
+        // At equal survived-parameter budget, unstructured pruning retains
+        // more total magnitude than kernel pruning — the Fig. 5 trade-off
+        // (its weakness is the hardware index cost, not the signal).
+        let mut rng = Rng::new(9);
+        let w = Tensor::randn(&[8, 8, 3, 3], 1.0, &mut rng);
+        let sparsity = 0.75;
+        let um = prune_layer(&w, sparsity);
+        let mut wu = w.clone();
+        um.apply(&mut wu);
+        let kp = super::super::kp::prune_layer(&w, sparsity);
+        let mut wk = w.clone();
+        kp.mask.apply(&mut wk);
+        assert!(wu.abs_sum() > wk.abs_sum());
+    }
+
+    #[test]
+    fn property_survived_rate_matches() {
+        crate::testing::check_msg(
+            "unstructured sparsity respected",
+            20,
+            13,
+            |r| {
+                let n = 32 + r.below(200);
+                let w = Tensor::randn(&[n], 1.0, r);
+                let s = r.f64() * 0.95;
+                (w, s)
+            },
+            |(w, s)| {
+                let m = prune_layer(w, *s);
+                let want = w.len() - ((w.len() as f64) * s).floor() as usize;
+                if m.survived() == want {
+                    Ok(())
+                } else {
+                    Err(format!("survived {} want {want}", m.survived()))
+                }
+            },
+        );
+    }
+}

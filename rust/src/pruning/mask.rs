@@ -1,0 +1,170 @@
+//! Pruning masks: kernel-granular (structured) and weight-granular
+//! (unstructured), plus the index encoding the accelerator stores
+//! on-chip (§III-C).
+
+use crate::tensor::Tensor;
+
+/// Structured mask over the `out_ch × in_ch` kernel grid of an OIHW conv
+/// tensor. `true` = kernel survives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelMask {
+    pub out_ch: usize,
+    pub in_ch: usize,
+    bits: Vec<bool>,
+}
+
+impl KernelMask {
+    pub fn all_alive(out_ch: usize, in_ch: usize) -> KernelMask {
+        KernelMask {
+            out_ch,
+            in_ch,
+            bits: vec![true; out_ch * in_ch],
+        }
+    }
+
+    pub fn get(&self, o: usize, i: usize) -> bool {
+        self.bits[o * self.in_ch + i]
+    }
+
+    pub fn set(&mut self, o: usize, i: usize, alive: bool) {
+        self.bits[o * self.in_ch + i] = alive;
+    }
+
+    pub fn survived(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    pub fn total(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn survived_rate(&self) -> f64 {
+        self.survived() as f64 / self.total().max(1) as f64
+    }
+
+    /// Zero the pruned kernels of an OIHW tensor in place.
+    pub fn apply(&self, w: &mut Tensor) {
+        assert_eq!(w.shape[0], self.out_ch);
+        assert_eq!(w.shape[1], self.in_ch);
+        let kk = w.shape[2] * w.shape[3];
+        for o in 0..self.out_ch {
+            for i in 0..self.in_ch {
+                if !self.get(o, i) {
+                    let base = (o * self.in_ch + i) * kk;
+                    w.data[base..base + kk].fill(0.0);
+                }
+            }
+        }
+    }
+
+    /// The kernel-index list the accelerator keeps on-chip: one (o, i)
+    /// pair per surviving kernel. §III-C: with structured pruning this is
+    /// tiny (vs one index per weight for unstructured pruning).
+    pub fn survivor_indices(&self) -> Vec<(u16, u16)> {
+        let mut out = Vec::with_capacity(self.survived());
+        for o in 0..self.out_ch {
+            for i in 0..self.in_ch {
+                if self.get(o, i) {
+                    out.push((o as u16, i as u16));
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes of on-chip index memory: 2 × u16 per surviving kernel.
+    pub fn index_bytes(&self) -> usize {
+        self.survived() * 4
+    }
+}
+
+/// Unstructured per-weight mask (for the magnitude-pruning baseline).
+#[derive(Debug, Clone)]
+pub struct WeightMask {
+    pub bits: Vec<bool>,
+}
+
+impl WeightMask {
+    pub fn survived(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    pub fn survived_rate(&self) -> f64 {
+        self.survived() as f64 / self.bits.len().max(1) as f64
+    }
+
+    pub fn apply(&self, w: &mut Tensor) {
+        assert_eq!(w.len(), self.bits.len());
+        for (v, &b) in w.data.iter_mut().zip(&self.bits) {
+            if !b {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Unstructured pruning needs one index per surviving *weight*
+    /// (u32 flat offset) — the §III-C comparison that motivates
+    /// structured pruning on FPGA.
+    pub fn index_bytes(&self) -> usize {
+        self.survived() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_mask_apply_zeroes_kernels() {
+        let mut w = Tensor::full(&[2, 2, 2, 2], 1.0);
+        let mut m = KernelMask::all_alive(2, 2);
+        m.set(0, 1, false);
+        m.apply(&mut w);
+        assert_eq!(w.at(&[0, 1, 0, 0]), 0.0);
+        assert_eq!(w.at(&[0, 1, 1, 1]), 0.0);
+        assert_eq!(w.at(&[0, 0, 0, 0]), 1.0);
+        assert_eq!(w.at(&[1, 1, 1, 1]), 1.0);
+        assert_eq!(m.survived(), 3);
+        assert!((m.survived_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn survivor_indices_enumerate_alive() {
+        let mut m = KernelMask::all_alive(2, 2);
+        m.set(1, 0, false);
+        assert_eq!(m.survivor_indices(), vec![(0, 0), (0, 1), (1, 1)]);
+        assert_eq!(m.index_bytes(), 12);
+    }
+
+    #[test]
+    fn structured_index_memory_beats_unstructured() {
+        // Same survived parameter count; kernel indices are ~k² smaller.
+        let (o, i, k) = (16, 16, 9);
+        let mut km = KernelMask::all_alive(o, i);
+        for oc in 0..o {
+            for ic in 0..i {
+                if (oc + ic) % 4 != 0 {
+                    km.set(oc, ic, false);
+                }
+            }
+        }
+        let surviving_weights = km.survived() * k * k;
+        let wm = WeightMask {
+            bits: (0..o * i * k * k)
+                .map(|n| n % (o * i * k * k / surviving_weights) == 0)
+                .collect(),
+        };
+        assert!(km.index_bytes() * 20 < wm.index_bytes());
+    }
+
+    #[test]
+    fn weight_mask_apply() {
+        let mut w = Tensor::full(&[4], 2.0);
+        let m = WeightMask {
+            bits: vec![true, false, true, false],
+        };
+        m.apply(&mut w);
+        assert_eq!(w.data, vec![2.0, 0.0, 2.0, 0.0]);
+        assert_eq!(m.survived(), 2);
+    }
+}

@@ -1,0 +1,360 @@
+//! Experiment report formatters: regenerate every table and figure of the
+//! paper's evaluation as paper-vs-measured text tables (and JSON for
+//! machine consumption). Invoked by `fastcaps report <exp>`.
+
+use crate::config::SystemConfig;
+use crate::fpga::power::PowerModel;
+use crate::fpga::resources::{self, Utilization};
+use crate::fpga::DeployedModel;
+use crate::util::json::Json;
+use crate::Result;
+use std::path::Path;
+
+fn hline(w: usize) -> String {
+    "-".repeat(w)
+}
+
+/// Fig. 1: throughput and energy across original / pruned / proposed.
+pub fn fig1() -> String {
+    let pm = PowerModel::default();
+    let mut out = String::new();
+    out.push_str("Fig. 1 — Throughput (FPS) and energy efficiency (FPJ)\n");
+    out.push_str(&format!(
+        "{:<22} {:>10} {:>12} {:>8} {:>8}   {}\n",
+        "config", "FPS", "paper FPS", "FPJ", "paper", "note"
+    ));
+    out.push_str(&hline(78));
+    out.push('\n');
+    let rows: [(&str, SystemConfig, f64, Option<f64>); 6] = [
+        ("original-mnist", SystemConfig::original("mnist"), 5.0, Some(1.8)),
+        ("pruned-mnist", SystemConfig::pruned("mnist"), 82.0, Some(41.8)),
+        ("proposed-mnist", SystemConfig::proposed("mnist"), 1351.0, None),
+        ("original-fmnist", SystemConfig::original("fmnist"), 5.0, Some(1.8)),
+        ("pruned-fmnist", SystemConfig::pruned("fmnist"), 48.0, Some(24.5)),
+        ("proposed-fmnist", SystemConfig::proposed("fmnist"), 934.0, None),
+    ];
+    for (name, cfg, paper_fps, paper_fpj) in rows {
+        let t = DeployedModel::timing_stub(&cfg, 7).estimate_frame();
+        let u = resources::estimate(&cfg);
+        let fpj = pm.fpj(t.fps(), &u, !cfg.is_pruned());
+        out.push_str(&format!(
+            "{:<22} {:>10.1} {:>12.1} {:>8.1} {:>8}   {}\n",
+            name,
+            t.fps(),
+            paper_fps,
+            fpj,
+            paper_fpj.map(|v| format!("{v:.1}")).unwrap_or_else(|| "—".into()),
+            if cfg.is_pruned() { "on-chip" } else { "DDR-streaming" },
+        ));
+    }
+    out
+}
+
+fn utilization_rows(name: &str, cfg: &SystemConfig, u: &Utilization, paper: Option<Utilization>) -> String {
+    let pct = u.percent_of(&cfg.budget);
+    let mut s = String::new();
+    let paper_cell = |v: Option<f64>| -> String {
+        v.map(|x| format!("{x:>10.1}")).unwrap_or_else(|| format!("{:>10}", "—"))
+    };
+    s.push_str(&format!(
+        "{name}\n  {:<16} {:>10} {:>8} {:>10}\n",
+        "resource", "model", "%", "paper"
+    ));
+    for (label, val, pc, pv) in [
+        ("Slice LUTs", u.luts as f64, pct[0], paper.map(|p| p.luts as f64)),
+        ("LUTs (memory)", u.lutram as f64, pct[1], paper.map(|p| p.lutram as f64)),
+        ("BRAM36", u.bram36 as f64, pct[2], paper.map(|p| p.bram36 as f64)),
+        ("DSP48E", u.dsp48e as f64, pct[3], paper.map(|p| p.dsp48e as f64)),
+    ] {
+        s.push_str(&format!(
+            "  {:<16} {:>10.1} {:>7.1}% {}\n",
+            label,
+            val,
+            pc,
+            paper_cell(pv)
+        ));
+    }
+    s
+}
+
+/// Table II: original vs proposed (MNIST) resources + latency.
+pub fn table2() -> String {
+    let mut out = String::new();
+    out.push_str("Table II — Resource utilization + latency (MNIST)\n");
+    out.push_str(&hline(56));
+    out.push('\n');
+    for (name, cfg, paper_key, paper_lat) in [
+        ("Original CapsNet [4]", SystemConfig::original("mnist"), "original-mnist", 0.19),
+        ("Proposed CapsNet", SystemConfig::proposed("mnist"), "proposed-mnist", 0.00074),
+    ] {
+        let u = resources::estimate(&cfg);
+        out.push_str(&utilization_rows(name, &cfg, &u, resources::paper_reported(paper_key)));
+        let t = DeployedModel::timing_stub(&cfg, 7).estimate_frame();
+        out.push_str(&format!(
+            "  {:<16} {:>10.5}s {:>8} {:>9.5}s\n\n",
+            "Latency(1 sample)",
+            t.latency_s(),
+            "",
+            paper_lat
+        ));
+    }
+    out
+}
+
+/// Table III: proposed CapsNet on F-MNIST.
+pub fn table3() -> String {
+    let mut out = String::new();
+    out.push_str("Table III — Proposed CapsNet (F-MNIST)\n");
+    out.push_str(&hline(56));
+    out.push('\n');
+    let cfg = SystemConfig::proposed("fmnist");
+    let u = resources::estimate(&cfg);
+    out.push_str(&utilization_rows(
+        "Proposed CapsNet (F-MNIST)",
+        &cfg,
+        &u,
+        resources::paper_reported("proposed-fmnist"),
+    ));
+    let t = DeployedModel::timing_stub(&cfg, 7).estimate_frame();
+    out.push_str(&format!(
+        "  {:<16} {:>10.5}s {:>8} {:>9.5}s\n",
+        "Latency(1 sample)",
+        t.latency_s(),
+        "",
+        0.00107
+    ));
+    out
+}
+
+/// Fig. 8: per-operation routing cycles, non-optimized vs optimized.
+pub fn fig8() -> String {
+    use crate::fpga::pe::PeArray;
+    use crate::fpga::routing_module::{routing_timing, RoutingGeometry, RoutingHardware};
+
+    let cfg = SystemConfig::proposed("mnist");
+    let pe = PeArray::new(&cfg.options);
+    let g = RoutingGeometry::from_config(&cfg.model, cfg.sparsity.num_primary_caps(&cfg.model));
+    let base = routing_timing(&g, &RoutingHardware::baseline(), &pe);
+    let opt = routing_timing(&g, &RoutingHardware::optimized(), &pe);
+    let mut out = String::new();
+    out.push_str("Fig. 8 — Dynamic-routing op latency, pruned MNIST model (cycles)\n");
+    out.push_str(&format!(
+        "{:<26} {:>14} {:>12} {:>9}\n",
+        "operation", "non-optimized", "optimized", "speedup"
+    ));
+    out.push_str(&hline(66));
+    out.push('\n');
+    for ((name, b), (_, o)) in base.stages().iter().zip(opt.stages().iter()) {
+        let speedup = if *o == 0 { 0.0 } else { *b as f64 / *o as f64 };
+        out.push_str(&format!(
+            "{:<26} {:>14} {:>12} {:>8.1}x\n",
+            name,
+            crate::util::fmt_thousands(*b),
+            crate::util::fmt_thousands(*o),
+            speedup
+        ));
+    }
+    out.push_str(&hline(66));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:<26} {:>14} {:>12} {:>8.1}x\n",
+        "total",
+        crate::util::fmt_thousands(base.total()),
+        crate::util::fmt_thousands(opt.total()),
+        base.total() as f64 / opt.total() as f64
+    ));
+    out.push_str("\nUnit latencies (§III-B): exp 27→14 cycles, div 49→36 cycles\n");
+    out
+}
+
+/// Fig. 14: non-optimized vs optimized pruned CapsNet resources.
+pub fn fig14() -> String {
+    let base = SystemConfig::pruned("mnist");
+    let opt = SystemConfig::proposed("mnist");
+    let ub = resources::estimate(&base);
+    let uo = resources::estimate(&opt);
+    let mut out = String::new();
+    out.push_str("Fig. 14 — Pruned CapsNet resources, non-optimized vs optimized (MNIST)\n");
+    out.push_str(&format!(
+        "{:<16} {:>14} {:>12}\n",
+        "resource", "non-optimized", "optimized"
+    ));
+    out.push_str(&hline(46));
+    out.push('\n');
+    for (label, a, b) in [
+        ("Slice LUTs", ub.luts as f64, uo.luts as f64),
+        ("LUTs (memory)", ub.lutram as f64, uo.lutram as f64),
+        ("BRAM36", ub.bram36 as f64, uo.bram36 as f64),
+        ("DSP48E", ub.dsp48e as f64, uo.dsp48e as f64),
+    ] {
+        out.push_str(&format!("{label:<16} {a:>14.1} {b:>12.1}\n"));
+    }
+    out.push_str("\n(the optimization trades the LUT-hungry iterative divider\n for DSP-based Taylor units: LUT down, DSP up — Fig. 14's signature)\n");
+    out
+}
+
+/// Table I from artifacts/table1.json (produced by `make table1`).
+pub fn table1(artifacts: &Path) -> Result<String> {
+    let path = artifacts.join("table1.json");
+    let text = std::fs::read_to_string(&path).map_err(|_| {
+        anyhow::anyhow!(
+            "{} not found — run `make table1` (python -m compile.prune_study)",
+            path.display()
+        )
+    })?;
+    let j = Json::parse(&text)?;
+    let rows = j
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("table1.json missing rows"))?;
+    let mut out = String::new();
+    out.push_str("Table I — Test error (%), KP vs proposed LAKP\n");
+    out.push_str(&format!(
+        "{:<10} {:<10} {:>8} {:>10} {:>8} {:>8} {:>9}\n",
+        "model", "dataset", "base", "survived", "KP", "LAKP", "gain"
+    ));
+    out.push_str(&hline(70));
+    out.push('\n');
+    for r in rows {
+        let f = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let s = |k: &str| r.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+        let kp = f("error_kp");
+        let lakp = f("error_lakp");
+        let gain = if kp > 0.0 { 100.0 * (kp - lakp) / kp } else { 0.0 };
+        out.push_str(&format!(
+            "{:<10} {:<10} {:>7.2}% {:>9.2}% {:>7.2}% {:>7.2}% {:>8.1}%\n",
+            s("model"),
+            s("dataset"),
+            f("actual_error"),
+            100.0 * f("survived_lakp"),
+            kp,
+            lakp,
+            gain
+        ));
+    }
+    out.push_str("\n('gain' = relative error reduction of LAKP vs KP;\n paper reports gains up to 96.4% at extreme sparsity)\n");
+    Ok(out)
+}
+
+/// Fig. 5 from artifacts/fig5.json.
+pub fn fig5(artifacts: &Path) -> Result<String> {
+    let path = artifacts.join("fig5.json");
+    let text = std::fs::read_to_string(&path).map_err(|_| {
+        anyhow::anyhow!(
+            "{} not found — run `make fig5` (python -m compile.prune_study --only fig5)",
+            path.display()
+        )
+    })?;
+    let j = Json::parse(&text)?;
+    let pts = j
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("fig5.json missing points"))?;
+    let base = j.get("baseline_error").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Fig. 5 — Pruning-method comparison on CapsNet (baseline err {base:.2}%)\n"
+    ));
+    out.push_str(&format!(
+        "{:>10} {:>12} {:>10} {:>14}\n",
+        "survived", "KP err", "LAKP err", "unstructured"
+    ));
+    out.push_str(&hline(50));
+    out.push('\n');
+    for p in pts {
+        let f = |k: &str| p.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "{:>9.2}% {:>11.2}% {:>9.2}% {:>13.2}%\n",
+            100.0 * f("survived_lakp"),
+            f("error_kp"),
+            f("error_lakp"),
+            f("error_unstructured"),
+        ));
+    }
+    Ok(out)
+}
+
+/// All simulator-derived reports (no training artifacts needed).
+pub fn all_simulated() -> String {
+    format!("{}\n{}\n{}\n{}\n{}", fig1(), table2(), table3(), fig8(), fig14())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_reports_render() {
+        let s = all_simulated();
+        assert!(s.contains("Fig. 1"));
+        assert!(s.contains("Table II"));
+        assert!(s.contains("Table III"));
+        assert!(s.contains("Fig. 8"));
+        assert!(s.contains("Fig. 14"));
+        // Spot-check figures contain paper anchors.
+        assert!(s.contains("1351"));
+        assert!(s.contains("27"));
+    }
+
+    #[test]
+    fn table1_formatter_parses_sample() {
+        let dir = std::env::temp_dir().join("fastcaps-report-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("table1.json"),
+            r#"{"rows": [{"model": "capsnet", "dataset": "digits",
+                "actual_error": 1.0, "sparsity": 0.9,
+                "survived_kp": 0.1, "survived_lakp": 0.1,
+                "error_kp": 5.0, "error_lakp": 3.0}]}"#,
+        )
+        .unwrap();
+        let s = table1(&dir).unwrap();
+        assert!(s.contains("capsnet"));
+        assert!(s.contains("40.0%")); // gain = (5-3)/5
+        std::fs::remove_file(dir.join("table1.json")).ok();
+    }
+
+    #[test]
+    fn table1_missing_file_is_helpful() {
+        let err = table1(Path::new("/nonexistent")).unwrap_err().to_string();
+        assert!(err.contains("make table1"));
+    }
+}
+
+/// Ablation: PE-array size and exp-lane count vs throughput — the design
+/// choices §III-B motivates ("an array of 10 PEs ... improved the
+/// throughput of the CapsNet model trained on MNIST by 615 FPS").
+pub fn ablation() -> String {
+    use crate::config::AcceleratorOptions;
+
+    let mut out = String::new();
+    out.push_str("Ablation — PE array size (proposed MNIST config)\n");
+    out.push_str(&format!(
+        "{:>8} {:>12} {:>14}\n",
+        "PEs", "FPS", "Δ vs 1 PE"
+    ));
+    out.push_str(&"-".repeat(38));
+    out.push('\n');
+    let mut base_fps = 0.0;
+    for pes in [1usize, 2, 5, 10, 20] {
+        let mut cfg = SystemConfig::proposed("mnist");
+        cfg.options = AcceleratorOptions {
+            num_pes: pes,
+            ..AcceleratorOptions::optimized()
+        };
+        let fps = DeployedModel::timing_stub(&cfg, 7).estimate_frame().fps();
+        if pes == 1 {
+            base_fps = fps;
+        }
+        out.push_str(&format!(
+            "{:>8} {:>12.1} {:>+13.1}\n",
+            pes,
+            fps,
+            fps - base_fps
+        ));
+    }
+    out.push_str(
+        "\n(paper: the 10-PE exp array buys +615 FPS on MNIST; diminishing\n returns past 10 PEs as routing-state memory bandwidth saturates)\n",
+    );
+    out
+}

@@ -1,0 +1,414 @@
+//! Q4.12 fixed-point dynamic routing — the accelerator datapath.
+//!
+//! Two variants, selected by [`SoftmaxMode`]:
+//!
+//! * `Baseline` — softmax with the iterative CORDIC-style `exp` (27 cy)
+//!   and the exact fixed-point divider (49 cy). This is what Vivado HLS
+//!   synthesizes from the naive routing code.
+//! * `Taylor` — the paper's §III-B rewrite: Eq. 2 polynomial `exp`
+//!   (14 cy, pipelineable) and Eq. 3 `exp(log a − log b)` divider (36 cy,
+//!   pipelineable). Values differ from `Baseline` only by approximation
+//!   error, which the tests bound against the f32 reference.
+//!
+//! Both variants compute identical *schedules* of arithmetic; the cycle
+//! difference is modeled in `fpga::routing_module`, which replays the op
+//! counts exposed by [`OpCounts`] against `fixed::latency`.
+
+use crate::fixed::taylor;
+use crate::fixed::Q12;
+
+/// Which softmax/divider hardware the datapath uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SoftmaxMode {
+    Baseline,
+    Taylor,
+}
+
+/// Count of each non-linear/datapath op executed — the contract between
+/// the functional code here and the cycle model in `fpga`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub macs: u64,
+    pub muls: u64,
+    pub adds: u64,
+    pub exps: u64,
+    pub divs: u64,
+    pub sqrts: u64,
+}
+
+impl OpCounts {
+    pub fn merge(&mut self, other: &OpCounts) {
+        self.macs += other.macs;
+        self.muls += other.muls;
+        self.adds += other.adds;
+        self.exps += other.exps;
+        self.divs += other.divs;
+        self.sqrts += other.sqrts;
+    }
+}
+
+/// Integer square root of a u64 (non-restoring, 32 iterations — the
+/// Squash unit's sqrt for wide norm² accumulators).
+fn isqrt_u64(x: u64) -> u64 {
+    if x == 0 {
+        return 0;
+    }
+    let mut res: u64 = 0;
+    let mut bit: u64 = 1 << 62;
+    let mut v = x;
+    while bit > x {
+        bit >>= 2;
+    }
+    while bit != 0 {
+        if v >= res + bit {
+            v -= res + bit;
+            res = (res >> 1) + bit;
+        } else {
+            res >>= 1;
+        }
+        bit >>= 2;
+    }
+    res
+}
+
+/// Squash on Q8.8 inputs — the production datapath form. The FC step's
+/// weighted sums can reach ±30 (well past Q4.12's ±8), so the Squash unit
+/// takes its input in the activation format (Q8.8, range ±128) and keeps
+/// norm² in the wide accumulator. Output capsules have norm < 1 and are
+/// returned in Q4.12.
+pub fn squash_q88(s_raw: &[i16], counts: &mut OpCounts) -> Vec<Q12> {
+    // norm² in Q16.16 (sum of squared Q8.8 raws).
+    let mut acc: i64 = 0;
+    for &x in s_raw {
+        acc += (x as i64) * (x as i64);
+    }
+    counts.macs += s_raw.len() as u64;
+    if acc == 0 {
+        return vec![Q12::ZERO; s_raw.len()];
+    }
+    // ‖s‖ in Q8.8 = isqrt of the Q16.16 accumulator.
+    let norm_q88 = isqrt_u64(acc as u64) as i64;
+    counts.sqrts += 1;
+    // scale = ‖s‖ / (1 + ‖s‖²) in Q4.12:
+    // (Q8.8 << 20) / Q16.16 -> Q12 raw.
+    let denom = (1i64 << 16) + acc;
+    counts.adds += 1;
+    let scale_q12 = ((norm_q88 << 20) / denom).clamp(0, i16::MAX as i64);
+    counts.divs += 1;
+    counts.muls += s_raw.len() as u64;
+    s_raw
+        .iter()
+        .map(|&x| {
+            // Q8.8 × Q4.12 -> shift 8 -> Q4.12 (|v| < 1, no saturation).
+            let p = (x as i64) * scale_q12;
+            let r = (p + (1 << 7)) >> 8;
+            Q12::from_raw(r.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+        })
+        .collect()
+}
+
+/// Q4.12 squash on the dedicated Squash unit (Fig. 11a): norm² via MAC
+/// adder tree, non-restoring sqrt, and scale `‖s‖ / (1 + ‖s‖²)` — computed
+/// with the exact divider in both modes (the paper keeps Squash off the
+/// PE array and unchanged by the optimization). Valid for inputs within
+/// Q4.12 range (primary capsules); the FC step uses [`squash_q88`].
+pub fn squash_q12(s: &[Q12], counts: &mut OpCounts) -> Vec<Q12> {
+    // norm² accumulates in the wide (Q8.24) register.
+    let mut acc: i64 = 0;
+    for &x in s {
+        acc = x.mac(x, acc);
+    }
+    counts.macs += s.len() as u64;
+    if acc == 0 {
+        return vec![Q12::ZERO; s.len()];
+    }
+    let norm = taylor::sqrt_q12(acc); // Q4.12
+    counts.sqrts += 1;
+    // scale = norm / (1 + norm²) with the denominator kept in the wide
+    // Q8.24 accumulator (1 + ‖s‖² can reach d·64, far past Q4.12's range;
+    // the divider reads the accumulator register directly).
+    let denom_acc = (1i64 << 24) + acc;
+    counts.adds += 1;
+    let scale_raw = ((norm.raw() as i64) << 24) / denom_acc;
+    let scale = Q12::from_raw(scale_raw.clamp(0, i16::MAX as i64) as i16);
+    counts.divs += 1;
+    counts.muls += s.len() as u64;
+    s.iter().map(|&x| x.mul(scale)).collect()
+}
+
+/// Q4.12 softmax over a logit row (Fig. 11b).
+///
+/// Baseline: `exp` per element + exact division per element.
+/// Taylor: max-shift, Eq. 2 exp per element, Eq. 3 division per element.
+pub fn softmax_q12(b: &[Q12], mode: SoftmaxMode, counts: &mut OpCounts) -> Vec<Q12> {
+    // Max-shift for range safety (a comparator tree in hardware; counted
+    // as adds).
+    let max = b.iter().fold(Q12::from_raw(i16::MIN), |m, &x| m.max(x));
+    counts.adds += b.len() as u64;
+    let exps: Vec<Q12> = b
+        .iter()
+        .map(|&x| taylor::exp_taylor_q12(x.sub(max)))
+        .collect();
+    counts.exps += b.len() as u64;
+    // Σ e^x in the wide accumulator (the denominator can exceed the
+    // Q4.12 range — the divider/log unit reads the accumulator register).
+    let mut acc: i64 = 0;
+    for &e in &exps {
+        acc += e.raw() as i64;
+    }
+    acc = acc.max(1);
+    counts.adds += b.len() as u64;
+    counts.divs += b.len() as u64;
+    match mode {
+        SoftmaxMode::Baseline => exps
+            .iter()
+            .map(|&e| taylor::div_exact_acc_q12(e, acc))
+            .collect(),
+        SoftmaxMode::Taylor => exps
+            .iter()
+            .map(|&e| taylor::div_explog_acc_q12(e, acc))
+            .collect(),
+    }
+}
+
+/// Fixed-point predictions `û_{j|i}` in Q4.12, `[n_in][n_out][d_out]`.
+#[derive(Debug, Clone)]
+pub struct PredictionsQ12 {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub d_out: usize,
+    pub u_hat: Vec<Q12>,
+}
+
+impl PredictionsQ12 {
+    /// Quantize f32 predictions.
+    pub fn quantize(pred: &super::Predictions) -> PredictionsQ12 {
+        PredictionsQ12 {
+            n_in: pred.n_in,
+            n_out: pred.n_out,
+            d_out: pred.d_out,
+            u_hat: pred.u_hat.iter().map(|&x| Q12::from_f32(x)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> &[Q12] {
+        let off = (i * self.n_out + j) * self.d_out;
+        &self.u_hat[off..off + self.d_out]
+    }
+}
+
+/// Q4.12 routing result.
+#[derive(Debug, Clone)]
+pub struct RoutingOutputQ12 {
+    pub v: Vec<Q12>,
+    pub coupling: Vec<Q12>,
+    pub n_out: usize,
+    pub d_out: usize,
+    pub counts: OpCounts,
+}
+
+impl RoutingOutputQ12 {
+    pub fn lengths_f32(&self) -> Vec<f32> {
+        (0..self.n_out)
+            .map(|j| {
+                self.v[j * self.d_out..(j + 1) * self.d_out]
+                    .iter()
+                    .map(|x| {
+                        let f = x.to_f32();
+                        f * f
+                    })
+                    .sum::<f32>()
+                    .sqrt()
+            })
+            .collect()
+    }
+}
+
+/// Fixed-point dynamic routing. Functionally identical for both loop
+/// orders (Code 1 vs Code 2 reorder only changes write patterns/timing),
+/// so one implementation serves both; `mode` selects the non-linear units.
+pub fn dynamic_routing_q12(
+    pred: &PredictionsQ12,
+    iterations: usize,
+    mode: SoftmaxMode,
+) -> RoutingOutputQ12 {
+    let (n_in, n_out, d) = (pred.n_in, pred.n_out, pred.d_out);
+    let mut counts = OpCounts::default();
+    let mut b = vec![Q12::ZERO; n_in * n_out];
+    let mut c = vec![Q12::ZERO; n_in * n_out];
+    let mut v = vec![Q12::ZERO; n_out * d];
+
+    for it in 0..iterations {
+        for i in 0..n_in {
+            let row = softmax_q12(&b[i * n_out..(i + 1) * n_out], mode, &mut counts);
+            c[i * n_out..(i + 1) * n_out].copy_from_slice(&row);
+        }
+        for j in 0..n_out {
+            // s_j accumulates per-dimension in wide registers (Q8.24).
+            let mut acc = vec![0i64; d];
+            for i in 0..n_in {
+                let cij = c[i * n_out + j];
+                let u = pred.at(i, j);
+                for (a, &uk) in acc.iter_mut().zip(u) {
+                    *a = cij.mac(uk, *a);
+                }
+            }
+            counts.macs += (n_in * d) as u64;
+            // Stage s in Q8.8 (range ±128 — weighted sums exceed Q4.12)
+            // and squash on the wide-input unit.
+            let s_raw: Vec<i16> = acc
+                .iter()
+                .map(|&a| {
+                    ((a + (1 << 15)) >> 16).clamp(i16::MIN as i64, i16::MAX as i64)
+                        as i16
+                })
+                .collect();
+            let sq = squash_q88(&s_raw, &mut counts);
+            v[j * d..(j + 1) * d].copy_from_slice(&sq);
+        }
+        if it + 1 < iterations {
+            for i in 0..n_in {
+                for j in 0..n_out {
+                    let u = pred.at(i, j);
+                    let vj = &v[j * d..(j + 1) * d];
+                    let mut acc = 0i64;
+                    for (&uk, &vk) in u.iter().zip(vj) {
+                        acc = uk.mac(vk, acc);
+                    }
+                    counts.macs += d as u64;
+                    b[i * n_out + j] = b[i * n_out + j].add(Q12::from_acc(acc));
+                    counts.adds += 1;
+                }
+            }
+        }
+    }
+    RoutingOutputQ12 {
+        v,
+        coupling: c,
+        n_out,
+        d_out: d,
+        counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{dynamic_routing, Predictions};
+    use crate::util::rng::Rng;
+
+    fn random_predictions(n_in: usize, n_out: usize, d: usize, seed: u64) -> Predictions {
+        let mut rng = Rng::new(seed);
+        Predictions::new(
+            n_in,
+            n_out,
+            d,
+            (0..n_in * n_out * d)
+                .map(|_| rng.normal_f32(0.0, 0.5))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn q12_routing_tracks_f32_reference() {
+        let pred = random_predictions(24, 10, 8, 1);
+        let f32_out = dynamic_routing(&pred, 3);
+        let q = PredictionsQ12::quantize(&pred);
+        for mode in [SoftmaxMode::Baseline, SoftmaxMode::Taylor] {
+            let q_out = dynamic_routing_q12(&q, 3, mode);
+            let ql = q_out.lengths_f32();
+            let fl = f32_out.lengths();
+            for (a, b) in ql.iter().zip(&fl) {
+                assert!(
+                    (a - b).abs() < 0.05,
+                    "{mode:?}: length {a} vs f32 {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn taylor_and_baseline_agree() {
+        // §IV-B: "the proposed optimization approach did not lead to a
+        // reduction in the accuracy" — argmax must match, values close.
+        let pred = random_predictions(36, 10, 8, 2);
+        let q = PredictionsQ12::quantize(&pred);
+        let base = dynamic_routing_q12(&q, 3, SoftmaxMode::Baseline);
+        let tay = dynamic_routing_q12(&q, 3, SoftmaxMode::Taylor);
+        let bl = base.lengths_f32();
+        let tl = tay.lengths_f32();
+        let argmax = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmax(&bl), argmax(&tl));
+        for (a, b) in bl.iter().zip(&tl) {
+            assert!((a - b).abs() < 0.03, "taylor {a} vs baseline {b}");
+        }
+    }
+
+    #[test]
+    fn softmax_q12_sums_to_one() {
+        let mut counts = OpCounts::default();
+        let b: Vec<Q12> = [0.5f32, -0.2, 1.1, 0.0]
+            .iter()
+            .map(|&x| Q12::from_f32(x))
+            .collect();
+        for mode in [SoftmaxMode::Baseline, SoftmaxMode::Taylor] {
+            let c = softmax_q12(&b, mode, &mut counts);
+            let sum: f32 = c.iter().map(|x| x.to_f32()).sum();
+            assert!((sum - 1.0).abs() < 0.02, "{mode:?} sum {sum}");
+        }
+    }
+
+    #[test]
+    fn squash_q12_tracks_f32() {
+        let mut counts = OpCounts::default();
+        let s_f32 = [0.8f32, -0.3, 0.5, 0.1];
+        let s: Vec<Q12> = s_f32.iter().map(|&x| Q12::from_f32(x)).collect();
+        let got = squash_q12(&s, &mut counts);
+        let want = crate::routing::squash(&s_f32);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.to_f32() - w).abs() < 0.01, "{} vs {}", g.to_f32(), w);
+        }
+        assert_eq!(counts.sqrts, 1);
+        assert_eq!(counts.divs, 1);
+    }
+
+    #[test]
+    fn op_counts_scale_with_problem() {
+        let pred = random_predictions(12, 4, 8, 3);
+        let q = PredictionsQ12::quantize(&pred);
+        let out1 = dynamic_routing_q12(&q, 1, SoftmaxMode::Taylor);
+        let out3 = dynamic_routing_q12(&q, 3, SoftmaxMode::Taylor);
+        // 3 iterations do ~3x the softmax work of 1.
+        assert_eq!(out3.counts.exps, 3 * out1.counts.exps);
+        // exps = iterations × n_in × n_out.
+        assert_eq!(out1.counts.exps, 12 * 4);
+        // divs = softmax divs + squash divs.
+        assert_eq!(out1.counts.divs, 12 * 4 + 4);
+    }
+
+    #[test]
+    fn property_q12_lengths_bounded() {
+        crate::testing::check(
+            "q12 capsule lengths in [0,1)",
+            25,
+            7,
+            |r| {
+                let n_in = 4 + r.below(12);
+                let n_out = 2 + r.below(6);
+                random_predictions(n_in, n_out, 8, r.next_u64())
+            },
+            |pred| {
+                let q = PredictionsQ12::quantize(pred);
+                let out = dynamic_routing_q12(&q, 3, SoftmaxMode::Taylor);
+                out.lengths_f32().iter().all(|&l| (0.0..1.05).contains(&l))
+            },
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! Dynamic routing between capsules (Sabour et al., Fig. 4 of the paper).
+//!
+//! This module holds the *functional* implementations:
+//!
+//! * f32 reference (this file) — the correctness oracle for everything
+//!   else (Python's `ref.py` mirrors it; the Pallas kernels and the
+//!   fixed-point datapath are tested against it).
+//! * [`fixed`] — the Q4.12 datapath in both the baseline form (exact
+//!   divider softmax, Code-1 loop order) and the paper's optimized form
+//!   (Eq. 2 Taylor exp + Eq. 3 exp/log divider, Code-2 loop order).
+//!
+//! Cycle accounting for both forms lives in `fpga::routing_module`, which
+//! wraps these functions so values and timing come from the same code.
+
+pub mod fixed;
+
+/// Squash non-linearity: `v = (‖s‖² / (1 + ‖s‖²)) · s / ‖s‖`.
+pub fn squash(s: &[f32]) -> Vec<f32> {
+    let norm2: f32 = s.iter().map(|x| x * x).sum();
+    if norm2 == 0.0 {
+        return vec![0.0; s.len()];
+    }
+    let norm = norm2.sqrt();
+    let scale = norm2 / (1.0 + norm2) / norm;
+    s.iter().map(|&x| x * scale).collect()
+}
+
+/// Row softmax: `c_j = e^{b_j} / Σ_k e^{b_k}` (max-shifted for stability).
+pub fn softmax(b: &[f32]) -> Vec<f32> {
+    let max = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = b.iter().map(|&x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Prediction vectors `û_{j|i}` laid out as `[n_in][n_out][d_out]` flat.
+#[derive(Debug, Clone)]
+pub struct Predictions {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub d_out: usize,
+    pub u_hat: Vec<f32>,
+}
+
+impl Predictions {
+    pub fn new(n_in: usize, n_out: usize, d_out: usize, u_hat: Vec<f32>) -> Self {
+        assert_eq!(u_hat.len(), n_in * n_out * d_out);
+        Predictions {
+            n_in,
+            n_out,
+            d_out,
+            u_hat,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> &[f32] {
+        let off = (i * self.n_out + j) * self.d_out;
+        &self.u_hat[off..off + self.d_out]
+    }
+}
+
+/// Routing output: final capsule vectors `v_j` (`[n_out][d_out]`) and the
+/// final coupling coefficients (`[n_in][n_out]`, useful for tests).
+#[derive(Debug, Clone)]
+pub struct RoutingOutput {
+    pub v: Vec<f32>,
+    pub coupling: Vec<f32>,
+    pub n_out: usize,
+    pub d_out: usize,
+}
+
+impl RoutingOutput {
+    pub fn capsule(&self, j: usize) -> &[f32] {
+        &self.v[j * self.d_out..(j + 1) * self.d_out]
+    }
+
+    /// Capsule lengths — class probabilities in CapsNet.
+    pub fn lengths(&self) -> Vec<f32> {
+        (0..self.n_out)
+            .map(|j| {
+                self.capsule(j)
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    .sqrt()
+            })
+            .collect()
+    }
+}
+
+/// The dynamic routing algorithm (Fig. 4), f32 reference.
+///
+/// ```text
+/// b ← 0
+/// for r iterations:
+///   c_i ← softmax(b_i)                       (over output capsules)
+///   s_j ← Σ_i c_ij · û_{j|i}                 (fully-connected step)
+///   v_j ← squash(s_j)
+///   b_ij ← b_ij + û_{j|i} · v_j              (agreement step)
+/// ```
+pub fn dynamic_routing(pred: &Predictions, iterations: usize) -> RoutingOutput {
+    let (n_in, n_out, d) = (pred.n_in, pred.n_out, pred.d_out);
+    let mut b = vec![0.0f32; n_in * n_out];
+    let mut c = vec![0.0f32; n_in * n_out];
+    let mut v = vec![0.0f32; n_out * d];
+
+    for it in 0..iterations {
+        // Softmax over each input capsule's row of logits.
+        for i in 0..n_in {
+            let row = softmax(&b[i * n_out..(i + 1) * n_out]);
+            c[i * n_out..(i + 1) * n_out].copy_from_slice(&row);
+        }
+        // Weighted sum and squash per output capsule.
+        for j in 0..n_out {
+            let mut s = vec![0.0f32; d];
+            for i in 0..n_in {
+                let cij = c[i * n_out + j];
+                let u = pred.at(i, j);
+                for (sk, &uk) in s.iter_mut().zip(u) {
+                    *sk += cij * uk;
+                }
+            }
+            v[j * d..(j + 1) * d].copy_from_slice(&squash(&s));
+        }
+        // Agreement update (skipped after the last iteration — the logits
+        // would never be read again).
+        if it + 1 < iterations {
+            for i in 0..n_in {
+                for j in 0..n_out {
+                    let u = pred.at(i, j);
+                    let vj = &v[j * d..(j + 1) * d];
+                    let agree: f32 =
+                        u.iter().zip(vj).map(|(a, b)| a * b).sum();
+                    b[i * n_out + j] += agree;
+                }
+            }
+        }
+    }
+    RoutingOutput {
+        v,
+        coupling: c,
+        n_out,
+        d_out: d,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn squash_limits() {
+        // Tiny vectors shrink quadratically; long vectors approach unit norm.
+        let small = squash(&[1e-4, 0.0]);
+        assert!(small[0] < 1e-6);
+        let large = squash(&[100.0, 0.0]);
+        assert!((large[0] - 1.0).abs() < 1e-3);
+        // Norm is always < 1.
+        let v = squash(&[0.3, -0.4, 1.2]);
+        let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(n < 1.0);
+        // Direction preserved.
+        assert!(v[0] > 0.0 && v[1] < 0.0 && v[2] > 0.0);
+        // Zero maps to zero.
+        assert_eq!(squash(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_properties() {
+        let c = softmax(&[1.0, 2.0, 3.0]);
+        let sum: f32 = c.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(c[2] > c[1] && c[1] > c[0]);
+        // Shift invariance.
+        let c2 = softmax(&[101.0, 102.0, 103.0]);
+        assert_allclose(&c, &c2, 1e-6, 0.0, "softmax shift invariance");
+        // Uniform logits -> uniform coupling (routing iteration 0).
+        let u = softmax(&[0.0; 10]);
+        for &x in &u {
+            assert!((x - 0.1).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn routing_uniform_on_first_iteration() {
+        // With one iteration, coupling stays uniform: s_j is the mean of
+        // predictions.
+        let mut rng = Rng::new(1);
+        let (n_in, n_out, d) = (5, 3, 4);
+        let u: Vec<f32> = (0..n_in * n_out * d)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let pred = Predictions::new(n_in, n_out, d, u);
+        let out = dynamic_routing(&pred, 1);
+        for &c in &out.coupling {
+            assert!((c - 1.0 / n_out as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn routing_converges_to_agreeing_capsule() {
+        // All input capsules predict the same vector for output 0 and
+        // random noise for output 1 → routing should couple to 0.
+        let mut rng = Rng::new(2);
+        let (n_in, n_out, d) = (8, 2, 4);
+        let target = [0.9f32, -0.5, 0.3, 0.7];
+        let mut u = vec![0.0f32; n_in * n_out * d];
+        for i in 0..n_in {
+            for k in 0..d {
+                u[(i * n_out) * d + k] = target[k];
+                u[(i * n_out + 1) * d + k] = rng.normal_f32(0.0, 0.5);
+            }
+        }
+        let pred = Predictions::new(n_in, n_out, d, u);
+        let out = dynamic_routing(&pred, 3);
+        let lens = out.lengths();
+        assert!(
+            lens[0] > lens[1] + 0.1,
+            "agreeing capsule should win: {lens:?}"
+        );
+        // Coupling to capsule 0 grew beyond uniform.
+        let mean_c0: f32 = (0..n_in)
+            .map(|i| out.coupling[i * n_out])
+            .sum::<f32>()
+            / n_in as f32;
+        assert!(mean_c0 > 0.5, "coupling {mean_c0}");
+    }
+
+    #[test]
+    fn routing_iterations_refine() {
+        // More iterations → sharper coupling (monotone for this workload).
+        let mut rng = Rng::new(3);
+        let (n_in, n_out, d) = (16, 4, 8);
+        let mut u = vec![0.0f32; n_in * n_out * d];
+        for i in 0..n_in {
+            for j in 0..n_out {
+                for k in 0..d {
+                    let signal = if j == 0 { 0.8 } else { 0.0 };
+                    u[(i * n_out + j) * d + k] =
+                        signal + rng.normal_f32(0.0, 0.3);
+                }
+            }
+        }
+        let pred = Predictions::new(n_in, n_out, d, u);
+        let c1 = dynamic_routing(&pred, 1);
+        let c3 = dynamic_routing(&pred, 3);
+        let sharp = |o: &RoutingOutput| -> f32 {
+            (0..n_in).map(|i| o.coupling[i * n_out]).sum::<f32>()
+        };
+        assert!(sharp(&c3) > sharp(&c1));
+    }
+
+    #[test]
+    fn capsule_lengths_below_one() {
+        let mut rng = Rng::new(4);
+        let pred = Predictions::new(
+            20,
+            10,
+            16,
+            (0..20 * 10 * 16).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let out = dynamic_routing(&pred, 3);
+        for l in out.lengths() {
+            assert!((0.0..1.0).contains(&l), "length {l}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! and the rust runtime (model names, batch buckets, parameter order and
+//! shapes).
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::Context;
+
+/// One weight parameter of an artifact (ordered).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered artifact (model × batch bucket).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub model: String,
+    pub file: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+fn usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("manifest entry missing '{key}'"))?
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .map(|v| v as usize)
+        .collect())
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("manifest entry missing '{key}'"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'entries'")?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let params = e
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("entry missing 'params'")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: str_field(p, "name")?,
+                        shape: usize_arr(p, "shape")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            out.push(ManifestEntry {
+                name: str_field(e, "name")?,
+                model: str_field(e, "model")?,
+                file: str_field(e, "file")?,
+                batch: e
+                    .get("batch")
+                    .and_then(Json::as_f64)
+                    .context("entry missing 'batch'")? as usize,
+                input_shape: usize_arr(e, "input_shape")?,
+                num_classes: e
+                    .get("num_classes")
+                    .and_then(Json::as_f64)
+                    .context("entry missing 'num_classes'")?
+                    as usize,
+                params,
+            });
+        }
+        Ok(Manifest { entries: out })
+    }
+
+    pub fn find(&self, model: &str, batch: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.model == model && e.batch == batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {
+          "name": "capsnet-mnist-pruned.b1",
+          "model": "capsnet-mnist-pruned",
+          "file": "capsnet-mnist-pruned.b1.hlo.txt",
+          "batch": 1,
+          "input_shape": [1, 1, 28, 28],
+          "num_classes": 10,
+          "dc_dim": 16,
+          "params": [
+            {"name": "conv1_w", "shape": [64, 1, 9, 9]},
+            {"name": "conv1_b", "shape": [64]}
+          ],
+          "outputs": ["lengths", "digit_caps"]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.model, "capsnet-mnist-pruned");
+        assert_eq!(e.batch, 1);
+        assert_eq!(e.input_shape, vec![1, 1, 28, 28]);
+        assert_eq!(e.params[0].shape, vec![64, 1, 9, 9]);
+        assert!(m.find("capsnet-mnist-pruned", 1).is_some());
+        assert!(m.find("capsnet-mnist-pruned", 8).is_none());
+        assert!(m.find("nope", 1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"entries": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! Dense f32 tensor with the small op set the CapsNet reference model and
+//! the pruning engines need: shaped storage, indexing, matmul, 2-D
+//! convolution (NCHW · OIHW), reductions and element-wise maps.
+//!
+//! This is the *functional* (fp32) substrate; the quantized, cycle-counted
+//! datapath lives in [`crate::fixed`] and [`crate::fpga`].
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// He-normal initialisation (for the fp32 reference model / tests).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i], "index {idx:?} out of {:?}", self.shape);
+            off = off * self.shape[i] + ix;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        })
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// `[m,k] x [k,n] -> [m,n]` matrix multiply.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || other.rank() != 2 || self.shape[1] != other.shape[0] {
+            bail!(
+                "matmul shape mismatch {:?} x {:?}",
+                self.shape,
+                other.shape
+            );
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let n = other.shape[1];
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+}
+
+/// 2-D convolution: input `[C_in, H, W]`, weight `[C_out, C_in, KH, KW]`,
+/// bias `[C_out]`, valid padding, square stride. Output `[C_out, H', W']`.
+pub fn conv2d(input: &Tensor, weight: &Tensor, bias: Option<&Tensor>, stride: usize) -> Result<Tensor> {
+    if input.rank() != 3 || weight.rank() != 4 {
+        bail!(
+            "conv2d wants [C,H,W] x [O,I,KH,KW], got {:?} x {:?}",
+            input.shape,
+            weight.shape
+        );
+    }
+    let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (c_out, c_in_w, kh, kw) =
+        (weight.shape[0], weight.shape[1], weight.shape[2], weight.shape[3]);
+    if c_in != c_in_w {
+        bail!("conv2d channel mismatch {} vs {}", c_in, c_in_w);
+    }
+    if h < kh || w < kw {
+        bail!("conv2d kernel larger than input");
+    }
+    let oh = (h - kh) / stride + 1;
+    let ow = (w - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[c_out, oh, ow]);
+    for o in 0..c_out {
+        let b = bias.map(|t| t.data[o]).unwrap_or(0.0);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = b;
+                for i in 0..c_in {
+                    for ky in 0..kh {
+                        let iy = oy * stride + ky;
+                        let in_row =
+                            &input.data[(i * h + iy) * w + ox * stride..];
+                        let w_row = &weight.data
+                            [((o * c_in + i) * kh + ky) * kw..][..kw];
+                        for (kx, &wv) in w_row.iter().enumerate() {
+                            acc += in_row[kx] * wv;
+                        }
+                    }
+                }
+                out.data[(o * oh + oy) * ow + ox] = acc;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Number of multiply–accumulate operations a conv layer performs.
+pub fn conv2d_macs(c_in: usize, c_out: usize, oh: usize, ow: usize, kh: usize, kw: usize) -> u64 {
+    (c_out * oh * ow) as u64 * (c_in * kh * kw) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.5);
+        assert_eq!(t.at(&[1, 2, 3]), 7.5);
+        assert_eq!(t.offset(&[1, 2, 3]), 1 * 12 + 2 * 4 + 3);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let id = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(a.matmul(&id).unwrap(), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn conv2d_known_values() {
+        // 1x3x3 input, 1x1x2x2 kernel of ones, stride 1 -> 2x2 sums.
+        let input =
+            Tensor::from_vec(&[1, 3, 3], (1..=9).map(|x| x as f32).collect()).unwrap();
+        let w = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let out = conv2d(&input, &w, None, 1).unwrap();
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert_eq!(out.data, vec![12.0, 16.0, 24.0, 28.0]);
+    }
+
+    #[test]
+    fn conv2d_stride_and_bias() {
+        let input = Tensor::full(&[2, 5, 5], 1.0);
+        let w = Tensor::full(&[3, 2, 3, 3], 0.5);
+        let bias = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let out = conv2d(&input, &w, Some(&bias), 2).unwrap();
+        assert_eq!(out.shape, vec![3, 2, 2]);
+        // Each output: 2*3*3 taps * 0.5 + bias = 9 + bias.
+        assert_eq!(out.at(&[0, 0, 0]), 10.0);
+        assert_eq!(out.at(&[1, 1, 1]), 11.0);
+        assert_eq!(out.at(&[2, 0, 1]), 12.0);
+    }
+
+    #[test]
+    fn conv2d_rejects_mismatch() {
+        let input = Tensor::zeros(&[2, 5, 5]);
+        let w = Tensor::zeros(&[3, 4, 3, 3]);
+        assert!(conv2d(&input, &w, None, 1).is_err());
+    }
+
+    #[test]
+    fn macs_formula() {
+        // Conv1 of CapsNet-MNIST: 1->256 ch, 9x9 kernel, 20x20 out.
+        assert_eq!(conv2d_macs(1, 256, 20, 20, 9, 9), 8_294_400);
+    }
+
+    #[test]
+    fn randn_distribution() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(&[64, 64], 0.1, &mut rng);
+        let m = t.sum() / t.len() as f32;
+        assert!(m.abs() < 0.01);
+    }
+
+    #[test]
+    fn reshape_checks_size() {
+        let t = Tensor::zeros(&[4, 4]);
+        assert!(t.clone().reshape(&[2, 8]).is_ok());
+        assert!(t.reshape(&[3, 5]).is_err());
+    }
+}

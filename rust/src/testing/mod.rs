@@ -1,0 +1,86 @@
+//! Property-based testing helpers (proptest is not in the vendored crate
+//! set). [`check`] runs a property over `n` generated cases from a seeded
+//! [`Rng`], reporting the failing case index and seed on failure so runs
+//! are reproducible.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn from `gen`. Panics with the seed
+/// and case index on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\ninput = {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{ctx}: element {i} differs: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 100, 1, |r| (r.f32(), r.f32()), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics() {
+        check("always-false", 10, 2, |r| r.f32(), |_| false);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert_allclose(&[1.0, 2.0], &[1.0001, 2.0], 1e-3, 0.0, "ok");
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1 differs")]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 3.0], 1e-3, 0.0, "bad");
+    }
+}

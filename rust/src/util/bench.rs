@@ -1,0 +1,150 @@
+//! Micro-benchmark harness used by `cargo bench` (all bench targets are
+//! `harness = false`). Criterion is not in the vendored crate set, so this
+//! provides the same core loop: warm-up, timed iterations until a minimum
+//! measurement window, then mean / stddev / p50 / p99 reporting.
+//!
+//! Benches print both the *host wall-time* of the simulator (regression
+//! guard for the simulator itself) and, where relevant, the *modeled FPGA
+//! cycles* the simulator reports (the paper-facing number).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with fixed warm-up and measurement windows.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub window: Duration,
+    pub max_samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Keep benches snappy: the suite covers every paper table/figure, so
+        // per-case budget is modest. Override via FASTCAPS_BENCH_WINDOW_MS.
+        let window_ms: u64 = std::env::var("FASTCAPS_BENCH_WINDOW_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(300);
+        Bencher {
+            warmup: Duration::from_millis(window_ms / 3),
+            window: Duration::from_millis(window_ms),
+            max_samples: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Benchmark `f`, which returns a value that is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warm-up.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.window && samples_ns.len() < self.max_samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        if samples_ns.is_empty() {
+            samples_ns.push(0.0);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: crate::util::mean(&samples_ns),
+            stddev_ns: crate::util::stddev(&samples_ns),
+            p50_ns: crate::util::percentile(&samples_ns, 50.0),
+            p99_ns: crate::util::percentile(&samples_ns, 99.0),
+        };
+        println!(
+            "{:<44} {:>12}/iter  (p50 {:>10}, p99 {:>10}, n={})",
+            m.name,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.p50_ns),
+            fmt_ns(m.p99_ns),
+            m.iters
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Report a modeled (simulated-hardware) quantity alongside host timings.
+pub fn report_model(name: &str, value: f64, unit: &str) {
+    println!("{name:<44} {value:>14.3} {unit}   [modeled]");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            window: Duration::from_millis(20),
+            max_samples: 1000,
+            results: Vec::new(),
+        };
+        let m = b.bench("noop-ish", || (0..100u64).sum::<u64>()).clone();
+        assert!(m.iters > 0);
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.p99_ns >= m.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+}

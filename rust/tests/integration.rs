@@ -1,0 +1,229 @@
+//! Cross-layer integration tests: fp32 reference ↔ fixed-point simulator ↔
+//! PJRT runtime ↔ serving coordinator. PJRT cases skip gracefully when
+//! `artifacts/` is absent (run `make artifacts` to enable them).
+
+use fastcaps::capsnet::CapsNet;
+use fastcaps::config::{CapsNetConfig, SparsityPlan, SystemConfig};
+use fastcaps::data::{generate, Task};
+use fastcaps::fpga::DeployedModel;
+use fastcaps::pruning::KernelMask;
+use fastcaps::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+/// The quantized accelerator datapath must agree with the fp32 reference
+/// model on most predictions (16-bit quantization, §IV-B: "did not lead
+/// to a reduction in the accuracy").
+#[test]
+fn simulator_agrees_with_fp32_reference() {
+    let cfg = CapsNetConfig::paper_pruned_mnist();
+    let mut rng = Rng::new(33);
+    let net = CapsNet::random(cfg.clone(), &mut rng);
+
+    // Deploy the same weights densely (no pruning masks) on the simulator.
+    let sys = SystemConfig {
+        sparsity: SparsityPlan::dense(&cfg),
+        model: cfg.clone(),
+        budget: fastcaps::config::FpgaBudget::pynq_z1(),
+        options: fastcaps::config::AcceleratorOptions::optimized(),
+    };
+    let conv1_mask = KernelMask::all_alive(cfg.conv1_ch, cfg.input.0);
+    let pc_mask = KernelMask::all_alive(cfg.pc_channels(), cfg.conv1_ch);
+    let deployed =
+        DeployedModel::new(sys, &net.weights, &conv1_mask, &pc_mask).unwrap();
+
+    // With random weights the class margins are ~1e-3 (untrained), so
+    // argmax is noise; the correctness criterion is that the quantized
+    // datapath reproduces the capsule *lengths*. (On trained weights the
+    // margins are ~0.5 and predictions match — the paper's "no accuracy
+    // drop"; see python/tests and the trained-weight flow.)
+    let data = generate(Task::Digits, 8, 44);
+    for img in &data.images {
+        let fp32 = net.forward(img).unwrap().class_lengths();
+        let (_, q12, _) = deployed.run_frame(img).unwrap();
+        for (a, b) in fp32.iter().zip(&q12) {
+            assert!(
+                (a - b).abs() < 0.02,
+                "16-bit datapath off: {a} vs {b} (full: {fp32:?} vs {q12:?})"
+            );
+        }
+    }
+}
+
+/// PJRT engine (JAX-lowered HLO) vs the rust fp32 reference: same weights,
+/// same image → same capsule lengths within fp tolerance. This pins all
+/// three implementations of the model to each other.
+#[test]
+fn pjrt_matches_rust_reference() {
+    let Some(dir) = artifacts() else { return };
+    let rt = fastcaps::runtime::Runtime::open(dir).unwrap();
+    let weights_path = dir.join("weights-mnist.fcw");
+    let engine = rt.engine("capsnet-mnist-pruned", 1, &weights_path).unwrap();
+
+    let cfg = CapsNetConfig::paper_pruned_mnist();
+    let weights = fastcaps::capsnet::weights::Weights::load(&weights_path).unwrap();
+    let net = CapsNet {
+        config: cfg,
+        weights,
+    };
+
+    let data = generate(Task::Digits, 3, 55);
+    for img in &data.images {
+        let pjrt = engine.run_batch(std::slice::from_ref(img)).unwrap();
+        let rust = net.forward(img).unwrap().class_lengths();
+        for (a, b) in pjrt[0].iter().zip(&rust) {
+            assert!(
+                (a - b).abs() < 5e-3,
+                "pjrt {a} vs rust {b} (lengths {:?} vs {:?})",
+                pjrt[0],
+                rust
+            );
+        }
+    }
+}
+
+/// Batch-8 engine must agree with batch-1 engine per image (padding path).
+#[test]
+fn pjrt_batch_buckets_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let rt = fastcaps::runtime::Runtime::open(dir).unwrap();
+    let weights = dir.join("weights-mnist.fcw");
+    let e1 = rt.engine("capsnet-mnist-pruned", 1, &weights).unwrap();
+    let e8 = rt.engine("capsnet-mnist-pruned", 8, &weights).unwrap();
+
+    let data = generate(Task::Digits, 8, 66);
+    let batched = e8.run_batch(&data.images).unwrap();
+    for (i, img) in data.images.iter().enumerate() {
+        let single = e1.run_batch(std::slice::from_ref(img)).unwrap();
+        for (a, b) in batched[i].iter().zip(&single[0]) {
+            assert!((a - b).abs() < 1e-4, "batch vs single mismatch at {i}");
+        }
+    }
+}
+
+/// Serving through the coordinator with the simulator backend: results
+/// identical to calling the simulator directly.
+#[test]
+fn coordinator_serves_simulator_backend() {
+    use fastcaps::coordinator::server::{Backend, Server, SimBackend};
+
+    let cfg = SystemConfig::proposed("mnist");
+    let direct = DeployedModel::synthetic(&cfg, 9);
+    let cfg2 = cfg.clone();
+    let server = Server::start(
+        move || {
+            Ok(Box::new(SimBackend {
+                model: DeployedModel::synthetic(&cfg2, 9),
+            }) as Box<dyn Backend>)
+        },
+        std::time::Duration::from_millis(2),
+    );
+    let data = generate(Task::Digits, 6, 77);
+    for img in &data.images {
+        let (want, _, _) = direct.run_frame(img).unwrap();
+        let resp = server.classify(img.clone()).unwrap();
+        assert_eq!(resp.predicted, want, "served vs direct prediction");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, 6);
+}
+
+/// End-to-end through PJRT behind the coordinator, concurrent clients.
+#[test]
+fn coordinator_serves_pjrt_backend() {
+    use fastcaps::coordinator::server::{Backend, PjrtBackend, Server};
+
+    let Some(dir) = artifacts() else { return };
+    let dir = dir.to_path_buf();
+    let server = Server::start(
+        move || {
+            let rt = fastcaps::runtime::Runtime::open(&dir)?;
+            let weights = dir.join("weights-mnist.fcw");
+            let mut engines = Vec::new();
+            for b in rt.batch_buckets("capsnet-mnist-pruned") {
+                engines.push(rt.engine("capsnet-mnist-pruned", b, &weights)?);
+            }
+            Ok(Box::new(PjrtBackend::new(engines)?) as Box<dyn Backend>)
+        },
+        std::time::Duration::from_millis(4),
+    );
+    std::thread::scope(|scope| {
+        for c in 0..3 {
+            let server = &server;
+            scope.spawn(move || {
+                let data = generate(Task::Digits, 8, 200 + c);
+                for img in data.images {
+                    let resp = server.classify(img).unwrap();
+                    assert_eq!(resp.lengths.len(), 10);
+                }
+            });
+        }
+    });
+    let m = server.shutdown();
+    assert_eq!(m.requests, 24);
+    assert!(m.batches <= 24);
+}
+
+/// `.fcw` interchange: weights written by Python load into the rust model
+/// and validate against the pruned architecture.
+#[test]
+fn python_weights_load_and_validate() {
+    let Some(dir) = artifacts() else { return };
+    let w = fastcaps::capsnet::weights::Weights::load(&dir.join("weights-mnist.fcw")).unwrap();
+    w.validate(&CapsNetConfig::paper_pruned_mnist()).unwrap();
+    let wf =
+        fastcaps::capsnet::weights::Weights::load(&dir.join("weights-fmnist.fcw")).unwrap();
+    wf.validate(&CapsNetConfig::paper_pruned_fmnist()).unwrap();
+    // Quantization to 16-bit stays within format resolution.
+    let (_, worst) = w.quantize16::<12>();
+    assert!(worst <= 0.5 / 4096.0 + 1e-6);
+}
+
+/// Pruning → deployment flow: prune random full-size weights with LAKP,
+/// compact nothing (keep masks), deploy, and check the simulator skips
+/// the pruned work.
+#[test]
+fn lakp_prune_then_deploy_cuts_cycles() {
+    use fastcaps::pruning::{lakp, AdjacencyNorms};
+
+    let cfg = CapsNetConfig::paper_full("capsnet-mnist");
+    let mut rng = Rng::new(91);
+    let weights = fastcaps::capsnet::weights::Weights::random(&cfg, &mut rng);
+    let adj = AdjacencyNorms {
+        prev: AdjacencyNorms::prev_from_conv(&weights.conv1_w),
+        next: AdjacencyNorms::next_from_digitcaps(&weights.w_ij, cfg.pc_types, cfg.pc_dim),
+    };
+    let pruned = lakp::prune_layer(&weights.pc_w, &adj, 0.95);
+    let conv1_mask = KernelMask::all_alive(cfg.conv1_ch, cfg.input.0);
+    let dense_pc = KernelMask::all_alive(cfg.pc_channels(), cfg.conv1_ch);
+
+    let mk = |pc_mask: &KernelMask| {
+        let sys = SystemConfig {
+            sparsity: SparsityPlan {
+                conv1_kernels: cfg.conv1_ch,
+                pc_kernels: pc_mask.survived(),
+                conv1_channels: cfg.conv1_ch,
+                pc_types: fastcaps::pruning::surviving_capsule_types(pc_mask, cfg.pc_dim),
+            },
+            model: cfg.clone(),
+            budget: fastcaps::config::FpgaBudget::pynq_z1(),
+            options: fastcaps::config::AcceleratorOptions::optimized(),
+        };
+        DeployedModel::new(sys, &weights, &conv1_mask, pc_mask).unwrap()
+    };
+    let dense_cycles = mk(&dense_pc).estimate_frame().total_cycles();
+    let pruned_cycles = mk(&pruned.mask).estimate_frame().total_cycles();
+    assert!(
+        (pruned_cycles as f64) < 0.4 * dense_cycles as f64,
+        "pruning 95% of PC kernels should cut frame cycles: {pruned_cycles} vs {dense_cycles}"
+    );
+}

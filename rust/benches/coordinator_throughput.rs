@@ -1,26 +1,80 @@
-//! Bench: serving-coordinator overhead. The coordinator must never be the
-//! bottleneck (DESIGN.md §Perf L3 target: ≥10k req/s of pure
-//! router/batcher overhead with a no-op backend).
+//! Bench: serving-coordinator overhead and executor-pool scaling. The
+//! coordinator must never be the bottleneck (DESIGN.md §Perf L3 target:
+//! ≥10k req/s of pure router/batcher overhead with a no-op backend),
+//! and a compute-bound backend must scale with `replicas(N)` — the
+//! host-side analogue of CapsAcc's PE-array parallelism.
 
+use fastcaps::backend::{BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
 use fastcaps::coordinator::batcher::BatchPolicy;
-use fastcaps::coordinator::server::{Backend, Server};
+use fastcaps::coordinator::server::Server;
 use fastcaps::tensor::Tensor;
 use fastcaps::util::bench::{report_model, Bencher};
 use std::time::Duration;
 
-/// No-op backend: isolates coordinator overhead.
-struct NullBackend;
+fn spec(kind: &str) -> BackendSpec {
+    BackendSpec {
+        kind: kind.into(),
+        model: "null".into(),
+        input_shape: (1, 28, 28),
+        batch_buckets: vec![1, 8],
+        reports_timing: false,
+        max_replicas: None,
+    }
+}
 
-impl Backend for NullBackend {
-    fn buckets(&self) -> Vec<usize> {
-        vec![1, 8]
+/// No-op backend: isolates coordinator overhead.
+struct NullBackend(BackendSpec);
+
+impl InferenceBackend for NullBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.0
     }
-    fn run(&mut self, _bucket: usize, images: &[Tensor]) -> fastcaps::Result<Vec<Vec<f32>>> {
-        Ok(images.iter().map(|_| vec![0.5; 10]).collect())
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        Ok(InferOutput {
+            lengths: req.images.iter().map(|_| vec![0.5; 10]).collect(),
+            frame_latency_s: None,
+        })
     }
-    fn input_shape(&self) -> (usize, usize, usize) {
-        (1, 28, 28)
+}
+
+/// Fixed-cost backend: busy-spins ~`cost` per *batch*, so throughput is
+/// executor-bound and replica scaling is directly observable.
+struct FixedCostBackend {
+    spec: BackendSpec,
+    cost: Duration,
+}
+
+impl InferenceBackend for FixedCostBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
     }
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < self.cost {
+            std::hint::spin_loop();
+        }
+        Ok(InferOutput {
+            lengths: req.images.iter().map(|_| vec![0.5; 10]).collect(),
+            frame_latency_s: None,
+        })
+    }
+}
+
+/// Drive `n_requests` from 4 client threads; returns req/s.
+fn drive(server: &Server, n_requests: usize) -> f64 {
+    let img = Tensor::zeros(&[1, 28, 28]);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let img = img.clone();
+            scope.spawn(move || {
+                for _ in 0..n_requests / 4 {
+                    server.classify(img.clone()).unwrap();
+                }
+            });
+        }
+    });
+    n_requests as f64 / t0.elapsed().as_secs_f64()
 }
 
 fn main() {
@@ -39,40 +93,76 @@ fn main() {
     });
 
     b.section("end-to-end coordinator with no-op backend");
-    let n_requests = 2_000;
-    let server = Server::start(
-        || Ok(Box::new(NullBackend) as Box<dyn Backend>),
-        Duration::from_micros(200),
-    );
-    let img = Tensor::zeros(&[1, 28, 28]);
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|scope| {
-        for _ in 0..4 {
-            let server = &server;
-            let img = img.clone();
-            scope.spawn(move || {
-                for _ in 0..n_requests / 4 {
-                    let _ = server.classify(img.clone());
-                }
-            });
-        }
-    });
-    let wall = t0.elapsed().as_secs_f64();
+    let server = Server::builder(|| {
+        Ok(Box::new(NullBackend(spec("null"))) as Box<dyn InferenceBackend>)
+    })
+    .max_wait(Duration::from_micros(200))
+    .start();
+    let rps = drive(&server, 2_000);
     let m = server.shutdown();
-    report_model("coordinator overhead throughput", m.requests as f64 / wall, "req/s");
+    report_model("coordinator overhead throughput", rps, "req/s");
     report_model("mean batch size", m.mean_batch_size(), "images");
-    report_model("p99 queue+dispatch latency", m.latency.percentile_us(99.0) as f64, "us");
+    report_model(
+        "p99 queue+dispatch latency",
+        m.latency.percentile_us(99.0) as f64,
+        "us",
+    );
     assert!(
-        m.requests as f64 / wall > 10_000.0,
-        "coordinator became the bottleneck: {:.0} req/s",
-        m.requests as f64 / wall
+        rps > 10_000.0,
+        "coordinator became the bottleneck: {rps:.0} req/s"
     );
 
+    b.section("executor pool scaling (fixed 1ms/batch backend)");
+    let mut scaling = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let server = Server::builder(|| {
+            Ok(Box::new(FixedCostBackend {
+                spec: spec("fixed-cost"),
+                cost: Duration::from_millis(1),
+            }) as Box<dyn InferenceBackend>)
+        })
+        .replicas(replicas)
+        .max_wait(Duration::from_micros(200))
+        .max_queue_depth(4096)
+        .start();
+        // Open-loop burst: keep the queue deep so every replica always
+        // has a full bucket to pull — the speedup is then bounded only
+        // by batch cost and core count, not client round-trips.
+        let n = 400usize;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.submit(Tensor::zeros(&[1, 28, 28])).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let rps = n as f64 / t0.elapsed().as_secs_f64();
+        server.shutdown();
+        report_model(&format!("replicas={replicas}"), rps, "req/s");
+        scaling.push((replicas, rps));
+    }
+    let r1 = scaling[0].1;
+    let r2 = scaling[1].1;
+    report_model("pool speedup 2 vs 1 replicas", r2 / r1, "x");
+    // Two busy-spinning replicas can only beat one when there are at
+    // least two cores to run them on.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 2 {
+        assert!(
+            r2 > r1 * 1.2,
+            "executor pool failed to scale: {r1:.0} req/s @1 vs {r2:.0} req/s @2"
+        );
+    } else {
+        println!("(single-core host: skipping the pool-scaling assertion)");
+    }
+
     b.section("single-request path");
-    let server = Server::start(
-        || Ok(Box::new(NullBackend) as Box<dyn Backend>),
-        Duration::from_micros(50),
-    );
+    let server = Server::builder(|| {
+        Ok(Box::new(NullBackend(spec("null"))) as Box<dyn InferenceBackend>)
+    })
+    .max_wait(Duration::from_micros(50))
+    .start();
+    let img = Tensor::zeros(&[1, 28, 28]);
     b.bench("classify round-trip (1 client)", || {
         server.classify(img.clone()).unwrap().predicted
     });

@@ -12,7 +12,14 @@ fn main() {
         println!("skipping runtime bench: no artifacts/ (run `make artifacts`)");
         return;
     }
-    let rt = fastcaps::runtime::Runtime::open(dir).expect("open runtime");
+    let rt = match fastcaps::runtime::Runtime::open(dir) {
+        Ok(rt) => rt,
+        // Built without the `pjrt` feature.
+        Err(e) => {
+            println!("skipping runtime bench: {e}");
+            return;
+        }
+    };
     let weights = dir.join("weights-mnist.fcw");
     let e1 = rt.engine("capsnet-mnist-pruned", 1, &weights).expect("b1 engine");
     let e8 = rt.engine("capsnet-mnist-pruned", 8, &weights).expect("b8 engine");

@@ -19,17 +19,20 @@ fn main() -> fastcaps::Result<()> {
     // --- Functional path: the JAX-lowered HLO on the PJRT CPU client.
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
-        let rt = fastcaps::runtime::Runtime::open(dir)?;
-        let engine = rt.engine("capsnet-mnist-pruned", 1, &dir.join("weights-mnist.fcw"))?;
-        let lengths = engine.run_batch(std::slice::from_ref(img))?;
-        let pred = lengths[0]
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        println!("PJRT  : predicted {pred} (capsule lengths {:?})", &lengths[0]);
-        println!("        (weights are random-init; train with `make table1` for meaning)");
+        match fastcaps::runtime::Runtime::open(dir) {
+            Ok(rt) => {
+                let engine =
+                    rt.engine("capsnet-mnist-pruned", 1, &dir.join("weights-mnist.fcw"))?;
+                let lengths = engine.run_batch(std::slice::from_ref(img))?;
+                let pred = fastcaps::util::argmax(&lengths[0]);
+                println!("PJRT  : predicted {pred} (capsule lengths {:?})", &lengths[0]);
+                println!(
+                    "        (weights are random-init; train with `make table1` for meaning)"
+                );
+            }
+            // Built without the `pjrt` feature: keep the simulator demo.
+            Err(e) => println!("PJRT  : skipped — {e}"),
+        }
     } else {
         println!("PJRT  : skipped — run `make artifacts` first");
     }

@@ -1,21 +1,25 @@
 //! End-to-end serving driver (deliverable (b)/(e) of DESIGN.md):
 //! the coordinator serves batched classification requests from concurrent
-//! clients through the PJRT runtime, while the FPGA simulator produces the
+//! clients through any registered [`fastcaps::backend`] — PJRT runtime,
+//! FPGA simulator, or the fp32 oracle — while the simulator produces the
 //! modeled on-device timing/energy ledger for the same workload.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_images -- \
-//!     --requests 256 --clients 8
+//!     --requests 256 --clients 8 --backend pjrt
+//! cargo run --release --example serve_images -- \
+//!     --backend sim --replicas 4        # executor pool across cores
 //! ```
-//! Falls back to the simulator backend when artifacts are missing
-//! (`--backend sim`).
+//! Falls back to the simulator backend when PJRT artifacts are missing.
 
+use fastcaps::backend::{BackendConfig, BackendRegistry};
 use fastcaps::config::SystemConfig;
-use fastcaps::coordinator::server::{Backend, PjrtBackend, Server, SimBackend};
+use fastcaps::coordinator::server::Server;
 use fastcaps::data::{generate, Task};
 use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
 use fastcaps::util::cli::Args;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> fastcaps::Result<()> {
@@ -23,39 +27,40 @@ fn main() -> fastcaps::Result<()> {
     let n_requests = args.get_usize("requests", 128);
     let n_clients = args.get_usize("clients", 4).max(1);
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let use_pjrt =
-        args.get_or("backend", "pjrt") == "pjrt" && dir.join("manifest.json").exists();
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
+    let replicas = args.get_usize("replicas", 1);
+    let max_queue = args.get_usize("max-queue", 1024);
 
-    let server = if use_pjrt {
-        let dir2 = dir.clone();
-        Server::start(
-            move || {
-                let rt = fastcaps::runtime::Runtime::open(&dir2)?;
-                let weights = dir2.join("weights-mnist.fcw");
-                let mut engines = Vec::new();
-                for b in rt.batch_buckets("capsnet-mnist-pruned") {
-                    engines.push(rt.engine("capsnet-mnist-pruned", b, &weights)?);
-                }
-                Ok(Box::new(PjrtBackend::new(engines)?) as Box<dyn Backend>)
-            },
-            max_wait,
-        )
-    } else {
-        println!("(artifacts missing or --backend sim: using simulator backend)");
-        Server::start(
-            move || {
-                Ok(Box::new(SimBackend {
-                    model: DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 7),
-                }) as Box<dyn Backend>)
-            },
-            max_wait,
-        )
+    let mut backend_kind = args.get_or("backend", "pjrt").to_string();
+    if backend_kind == "pjrt" {
+        if !cfg!(feature = "pjrt") {
+            println!("(built without the pjrt feature: using the simulator backend)");
+            backend_kind = "sim".to_string();
+        } else if !dir.join("manifest.json").exists() {
+            println!("(artifacts missing: falling back to the simulator backend)");
+            backend_kind = "sim".to_string();
+        }
+    }
+
+    let registry = Arc::new(BackendRegistry::with_defaults());
+    let bcfg = BackendConfig {
+        artifacts: dir,
+        ..BackendConfig::default()
     };
+    let kind = backend_kind.clone();
+    let server = Server::builder(move || registry.build(&kind, &bcfg))
+        .replicas(replicas)
+        .max_wait(max_wait)
+        .max_queue_depth(max_queue)
+        .start();
+    if let Some(e) = server.init_error() {
+        anyhow::bail!("starting backend '{backend_kind}': {e}");
+    }
 
     println!(
-        "end-to-end: {n_requests} requests, {n_clients} clients, backend={}",
-        if use_pjrt { "pjrt" } else { "sim" }
+        "end-to-end: {n_requests} requests, {n_clients} clients, \
+         backend={backend_kind}, replicas={}",
+        server.pool_size()
     );
     let t0 = std::time::Instant::now();
     let mut agreement = 0usize;
@@ -63,8 +68,9 @@ fn main() -> fastcaps::Result<()> {
         let mut handles = Vec::new();
         for c in 0..n_clients {
             let server = &server;
+            let share = n_requests / n_clients + usize::from(c < n_requests % n_clients);
             handles.push(scope.spawn(move || {
-                let data = generate(Task::Digits, n_requests / n_clients, 100 + c as u64);
+                let data = generate(Task::Digits, share, 100 + c as u64);
                 let mut hits = 0usize;
                 for (img, &label) in data.images.into_iter().zip(&data.labels) {
                     if let Ok(resp) = server.classify(img) {

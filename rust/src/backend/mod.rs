@@ -1,0 +1,392 @@
+//! The unified execution API (S9): every way of running the CapsNet —
+//! the fp32 oracle, the fixed-point FPGA simulator, and the PJRT
+//! runtime — is served through one batch-first [`InferenceBackend`]
+//! trait, described by a [`BackendSpec`] and constructed uniformly from
+//! a string-keyed [`BackendRegistry`].
+//!
+//! ```text
+//!             BackendRegistry ("oracle" | "sim" | "pjrt")
+//!                     │ build(name, &BackendConfig)
+//!                     ▼
+//!              Box<dyn InferenceBackend>
+//!              ┌───────┼─────────────┐
+//!              ▼       ▼             ▼
+//!        OracleBackend SimBackend PjrtBackend
+//!        (capsnet fp32) (fpga Q-path) (runtime HLO)
+//! ```
+//!
+//! The coordinator ([`crate::coordinator::server`]) schedules batches
+//! onto a pool of backend *replicas*; [`BackendSpec::max_replicas`]
+//! tells it how many instances may run concurrently (PJRT executables
+//! are single-owner here, so [`PjrtBackend`] pins it to 1).
+//!
+//! Errors at this boundary are the typed [`BackendError`] enum, not
+//! `anyhow`, so callers can distinguish overload from malformed input
+//! from engine failure.
+
+pub mod oracle;
+pub mod pjrt;
+pub mod sim;
+
+pub use oracle::OracleBackend;
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Typed error at the execution-API boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendError {
+    /// Backend construction failed (missing artifacts, bad config, ...).
+    Init(String),
+    /// The request is malformed (wrong image shape, unknown bucket, ...).
+    InvalidRequest(String),
+    /// The engine failed while executing a well-formed request.
+    Execution(String),
+    /// The server rejected the request at admission (queue at capacity).
+    QueueFull { depth: usize },
+    /// The server is shut down (or never came up) and accepts no work.
+    Unavailable(String),
+    /// The capability is not compiled in or not supported by this build.
+    Unsupported(String),
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::Init(m) => write!(f, "backend init failed: {m}"),
+            BackendError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            BackendError::Execution(m) => write!(f, "backend execution failed: {m}"),
+            BackendError::QueueFull { depth } => {
+                write!(f, "request rejected: queue full (max depth {depth})")
+            }
+            BackendError::Unavailable(m) => write!(f, "server unavailable: {m}"),
+            BackendError::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// A batch of CHW images to classify. The batch size must be one of the
+/// backend's [`BackendSpec::batch_buckets`]; schedulers pad short
+/// batches up to a bucket before calling [`InferenceBackend::infer`].
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub images: Vec<Tensor>,
+}
+
+impl InferRequest {
+    pub fn new(images: Vec<Tensor>) -> InferRequest {
+        InferRequest { images }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.images.len()
+    }
+}
+
+/// Batched inference result.
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    /// DigitCaps lengths (class scores) per image: `[batch][num_classes]`.
+    pub lengths: Vec<Vec<f32>>,
+    /// Modeled on-device latency per frame in seconds, when the backend
+    /// reports timing ([`BackendSpec::reports_timing`]); `None` otherwise.
+    pub frame_latency_s: Option<f64>,
+}
+
+impl InferOutput {
+    /// Argmax class per image (NaN-safe total order).
+    pub fn predicted(&self) -> Vec<usize> {
+        self.lengths.iter().map(|l| crate::util::argmax(l)).collect()
+    }
+}
+
+/// Static description of one backend instance's capabilities. The
+/// coordinator derives its batch policy, padding shape, and replica
+/// count from this — backends never see scheduling concerns.
+#[derive(Debug, Clone)]
+pub struct BackendSpec {
+    /// Registry key this backend answers to (`"oracle"`, `"sim"`, ...).
+    pub kind: String,
+    /// Model the backend executes (e.g. `capsnet-mnist-pruned`).
+    pub model: String,
+    /// Input image shape (C, H, W); the scheduler pads blanks with it.
+    pub input_shape: (usize, usize, usize),
+    /// Batch sizes the backend accepts, ascending and deduplicated.
+    pub batch_buckets: Vec<usize>,
+    /// Whether [`InferOutput::frame_latency_s`] is populated.
+    pub reports_timing: bool,
+    /// Maximum concurrently running instances (`None` = unbounded).
+    /// PJRT executables are single-owner, so that backend pins 1.
+    pub max_replicas: Option<usize>,
+}
+
+impl BackendSpec {
+    /// Normalize buckets (sorted, deduplicated, non-empty is asserted by
+    /// constructors).
+    pub fn normalize(mut self) -> BackendSpec {
+        self.batch_buckets.sort_unstable();
+        self.batch_buckets.dedup();
+        self
+    }
+}
+
+/// The single execution API: run one padded batch, synchronously.
+///
+/// Implementations own their engine state (`&mut self`) — concurrency
+/// comes from the coordinator running N independent replicas, not from
+/// sharing one instance across threads.
+pub trait InferenceBackend: Send {
+    fn spec(&self) -> &BackendSpec;
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError>;
+
+    /// Validate a request against the spec (shared by implementations).
+    fn validate(&self, req: &InferRequest) -> Result<(), BackendError> {
+        let spec = self.spec();
+        if !spec.batch_buckets.contains(&req.batch()) {
+            return Err(BackendError::InvalidRequest(format!(
+                "batch {} not in buckets {:?}",
+                req.batch(),
+                spec.batch_buckets
+            )));
+        }
+        let (c, h, w) = spec.input_shape;
+        for img in &req.images {
+            if img.shape != [c, h, w] {
+                return Err(BackendError::InvalidRequest(format!(
+                    "image shape {:?} != backend input {:?}",
+                    img.shape,
+                    (c, h, w)
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything a factory may need to construct a backend. One struct for
+/// all kinds so `serve`, benches, and examples configure uniformly.
+#[derive(Debug, Clone)]
+pub struct BackendConfig {
+    /// Dataset the traffic comes from (`"mnist"` or `"fmnist"`).
+    pub dataset: String,
+    /// Model name for artifact lookup (PJRT) and reporting.
+    pub model: String,
+    /// Accelerator config variant for the simulator
+    /// (`"original" | "pruned" | "proposed"`).
+    pub variant: String,
+    /// Artifact directory (PJRT manifest + `.fcw` weights).
+    pub artifacts: PathBuf,
+    /// Optional explicit `.fcw` weights path; derived from `dataset`
+    /// inside `artifacts` when `None`.
+    pub weights: Option<PathBuf>,
+    /// Seed for synthetic weights where no trained weights exist.
+    pub seed: u64,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig {
+            dataset: "mnist".into(),
+            model: "capsnet-mnist-pruned".into(),
+            variant: "proposed".into(),
+            artifacts: PathBuf::from("artifacts"),
+            weights: None,
+            seed: 7,
+        }
+    }
+}
+
+impl BackendConfig {
+    /// Whether the dataset is the F-MNIST-like task (accepts both the
+    /// `fmnist` name and its `garments` task alias).
+    pub fn is_fmnist(&self) -> bool {
+        self.dataset.contains("fmnist") || self.dataset.contains("garments")
+    }
+
+    /// The `.fcw` weights path: explicit override or the conventional
+    /// per-dataset file in the artifact directory.
+    pub fn weights_path(&self) -> PathBuf {
+        match &self.weights {
+            Some(p) => p.clone(),
+            None => self.artifacts.join(if self.is_fmnist() {
+                "weights-fmnist.fcw"
+            } else {
+                "weights-mnist.fcw"
+            }),
+        }
+    }
+
+    /// The simulator/oracle system config for this dataset + variant
+    /// (dataset canonicalized so task aliases pick the right model).
+    pub fn system_config(&self) -> crate::config::SystemConfig {
+        use crate::config::SystemConfig;
+        let dataset = if self.is_fmnist() { "fmnist" } else { "mnist" };
+        match self.variant.as_str() {
+            "original" => SystemConfig::original(dataset),
+            "pruned" => SystemConfig::pruned(dataset),
+            _ => SystemConfig::proposed(dataset),
+        }
+    }
+}
+
+/// Factory signature: build one backend replica from a config.
+pub type BackendFactory =
+    Box<dyn Fn(&BackendConfig) -> Result<Box<dyn InferenceBackend>, BackendError> + Send + Sync>;
+
+/// String-keyed registry of backend factories. `serve`, benches, and
+/// examples all construct backends through here, so a new execution
+/// path is one `register` call away from being servable.
+pub struct BackendRegistry {
+    factories: BTreeMap<String, BackendFactory>,
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        BackendRegistry::with_defaults()
+    }
+}
+
+impl BackendRegistry {
+    /// An empty registry (tests register their own fakes).
+    pub fn new() -> BackendRegistry {
+        BackendRegistry {
+            factories: BTreeMap::new(),
+        }
+    }
+
+    /// The three built-in execution paths: `"oracle"`, `"sim"`, `"pjrt"`.
+    pub fn with_defaults() -> BackendRegistry {
+        let mut r = BackendRegistry::new();
+        r.register("oracle", |cfg| {
+            Ok(Box::new(OracleBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
+        });
+        r.register("sim", |cfg| {
+            Ok(Box::new(SimBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
+        });
+        r.register("pjrt", |cfg| {
+            Ok(Box::new(PjrtBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
+        });
+        r
+    }
+
+    pub fn register<F>(&mut self, name: &str, factory: F)
+    where
+        F: Fn(&BackendConfig) -> Result<Box<dyn InferenceBackend>, BackendError>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.factories.insert(name.to_string(), Box::new(factory));
+    }
+
+    /// Construct a backend by registry key.
+    pub fn build(
+        &self,
+        name: &str,
+        cfg: &BackendConfig,
+    ) -> Result<Box<dyn InferenceBackend>, BackendError> {
+        match self.factories.get(name) {
+            Some(f) => f(cfg),
+            None => Err(BackendError::Init(format!(
+                "unknown backend '{name}' (available: {})",
+                self.names().join(", ")
+            ))),
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_three_paths() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["oracle", "pjrt", "sim"]);
+    }
+
+    #[test]
+    fn unknown_backend_is_typed_init_error() {
+        let r = BackendRegistry::with_defaults();
+        match r.build("tpu", &BackendConfig::default()) {
+            Err(BackendError::Init(m)) => assert!(m.contains("tpu"), "{m}"),
+            other => panic!("expected Init error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sim_and_oracle_build_and_infer_one_bucket() {
+        let r = BackendRegistry::with_defaults();
+        let cfg = BackendConfig::default();
+        for kind in ["sim", "oracle"] {
+            let mut b = r.build(kind, &cfg).unwrap();
+            let spec = b.spec().clone();
+            assert_eq!(spec.kind, kind);
+            assert!(!spec.batch_buckets.is_empty());
+            let (c, h, w) = spec.input_shape;
+            let bucket = spec.batch_buckets[0];
+            let req = InferRequest::new(vec![Tensor::zeros(&[c, h, w]); bucket]);
+            let out = b.infer(&req).unwrap();
+            assert_eq!(out.lengths.len(), bucket);
+            assert!(out.lengths.iter().all(|l| l.len() == 10));
+            assert_eq!(out.frame_latency_s.is_some(), spec.reports_timing);
+        }
+    }
+
+    #[test]
+    fn invalid_batch_rejected_with_typed_error() {
+        let r = BackendRegistry::with_defaults();
+        let mut b = r.build("sim", &BackendConfig::default()).unwrap();
+        let (c, h, w) = b.spec().input_shape;
+        let bogus = 1 + b.spec().batch_buckets.last().unwrap();
+        let req = InferRequest::new(vec![Tensor::zeros(&[c, h, w]); bogus]);
+        assert!(matches!(
+            b.infer(&req),
+            Err(BackendError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let r = BackendRegistry::with_defaults();
+        let mut b = r.build("sim", &BackendConfig::default()).unwrap();
+        let req = InferRequest::new(vec![Tensor::zeros(&[1, 2, 2])]);
+        assert!(matches!(
+            b.infer(&req),
+            Err(BackendError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn pjrt_without_artifacts_is_typed_error() {
+        let cfg = BackendConfig {
+            artifacts: PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        };
+        let r = BackendRegistry::with_defaults();
+        let e = r.build("pjrt", &cfg).unwrap_err();
+        assert!(
+            matches!(e, BackendError::Init(_) | BackendError::Unsupported(_)),
+            "{e:?}"
+        );
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = BackendError::QueueFull { depth: 64 };
+        assert!(e.to_string().contains("64"));
+        let e = BackendError::InvalidRequest("batch 3".into());
+        assert!(e.to_string().contains("batch 3"));
+    }
+}

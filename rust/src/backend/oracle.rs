@@ -1,0 +1,115 @@
+//! Batch adapter over the fp32 reference model ([`crate::capsnet`]) —
+//! the oracle every other execution path is validated against, now
+//! servable through the same [`InferenceBackend`] API. There is no
+//! batched kernel underneath (the reference forward is per-image), so
+//! the adapter loops the batch; it still exposes several buckets so the
+//! coordinator's batching amortizes queue/dispatch overhead, and the
+//! small buckets keep padding waste low (padding costs a full forward
+//! here, unlike the AOT paths).
+
+use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use crate::capsnet::{weights::Weights, CapsNet};
+use crate::config::CapsNetConfig;
+use crate::util::rng::Rng;
+
+pub struct OracleBackend {
+    net: CapsNet,
+    spec: BackendSpec,
+}
+
+impl OracleBackend {
+    /// Wrap an existing model.
+    pub fn new(net: CapsNet) -> OracleBackend {
+        let spec = BackendSpec {
+            kind: "oracle".into(),
+            model: net.config.name.clone(),
+            input_shape: net.config.input,
+            batch_buckets: vec![1, 2, 4, 8],
+            reports_timing: false,
+            max_replicas: None,
+        }
+        .normalize();
+        OracleBackend { net, spec }
+    }
+
+    /// Registry factory: the pruned paper architecture for the dataset,
+    /// with trained `.fcw` weights when present and seeded random
+    /// weights otherwise (predictions are then noise, but the serving
+    /// path is exercised end to end).
+    pub fn from_config(cfg: &BackendConfig) -> Result<OracleBackend, BackendError> {
+        let arch = if cfg.is_fmnist() {
+            CapsNetConfig::paper_pruned_fmnist()
+        } else {
+            CapsNetConfig::paper_pruned_mnist()
+        };
+        let weights_path = cfg.weights_path();
+        let weights = if weights_path.exists() {
+            let w = Weights::load(&weights_path)
+                .map_err(|e| BackendError::Init(format!("loading {weights_path:?}: {e:#}")))?;
+            w.validate(&arch)
+                .map_err(|e| BackendError::Init(format!("weights mismatch: {e:#}")))?;
+            w
+        } else {
+            Weights::random(&arch, &mut Rng::new(cfg.seed))
+        };
+        Ok(OracleBackend::new(CapsNet {
+            config: arch,
+            weights,
+        }))
+    }
+}
+
+impl InferenceBackend for OracleBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        let mut lengths = Vec::with_capacity(req.batch());
+        for img in &req.images {
+            let acts = self
+                .net
+                .forward(img)
+                .map_err(|e| BackendError::Execution(format!("oracle forward: {e:#}")))?;
+            lengths.push(acts.class_lengths());
+        }
+        Ok(InferOutput {
+            lengths,
+            frame_latency_s: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tiny_oracle() -> OracleBackend {
+        let mut rng = Rng::new(5);
+        OracleBackend::new(CapsNet::random(CapsNetConfig::tiny(), &mut rng))
+    }
+
+    #[test]
+    fn spec_mirrors_model() {
+        let b = tiny_oracle();
+        assert_eq!(b.spec().input_shape, (1, 20, 20));
+        assert_eq!(b.spec().batch_buckets, vec![1, 2, 4, 8]);
+        assert!(b.spec().max_replicas.is_none());
+    }
+
+    #[test]
+    fn batched_infer_matches_per_image_forward() {
+        let mut b = tiny_oracle();
+        let mut rng = Rng::new(6);
+        let images: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0)))
+            .collect();
+        let out = b.infer(&InferRequest::new(images.clone())).unwrap();
+        for (img, got) in images.iter().zip(&out.lengths) {
+            let want = b.net.forward(img).unwrap().class_lengths();
+            assert_eq!(got, &want);
+        }
+    }
+}

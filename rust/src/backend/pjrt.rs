@@ -1,0 +1,102 @@
+//! The PJRT runtime (AOT-lowered HLO) behind the unified API.
+//!
+//! PJRT executables wrap raw pointers and are single-owner by design in
+//! this crate, so [`BackendSpec::max_replicas`] is pinned to 1 — the
+//! coordinator keeps the one replica on its own thread and never clones
+//! or shares engines. Each batch bucket is its own compiled executable;
+//! the spec's buckets are exactly the engines loaded from the manifest.
+//!
+//! Built without the `pjrt` cargo feature, [`crate::runtime`] is a stub
+//! whose `Runtime::open` fails, so [`PjrtBackend::from_config`] surfaces
+//! a typed [`BackendError::Unsupported`]/[`BackendError::Init`] instead
+//! of ever constructing a dead backend.
+
+use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use crate::runtime::{Engine, Runtime};
+
+pub struct PjrtBackend {
+    engines: Vec<Engine>,
+    spec: BackendSpec,
+}
+
+impl PjrtBackend {
+    /// Wrap loaded engines (one per batch bucket, same model).
+    pub fn new(engines: Vec<Engine>) -> Result<PjrtBackend, BackendError> {
+        if engines.is_empty() {
+            return Err(BackendError::Init("need at least one engine".into()));
+        }
+        let entry = &engines[0].entry;
+        if entry.input_shape.len() != 4 {
+            return Err(BackendError::Init(format!(
+                "expected NCHW input shape, got {:?}",
+                entry.input_shape
+            )));
+        }
+        let spec = BackendSpec {
+            kind: "pjrt".into(),
+            model: entry.model.clone(),
+            input_shape: (
+                entry.input_shape[1],
+                entry.input_shape[2],
+                entry.input_shape[3],
+            ),
+            batch_buckets: engines.iter().map(|e| e.batch_size()).collect(),
+            reports_timing: false,
+            max_replicas: Some(1),
+        }
+        .normalize();
+        Ok(PjrtBackend { engines, spec })
+    }
+
+    /// Registry factory: open the artifact directory and load one engine
+    /// per manifest bucket for the configured model.
+    pub fn from_config(cfg: &BackendConfig) -> Result<PjrtBackend, BackendError> {
+        let rt = Runtime::open(&cfg.artifacts).map_err(|e| {
+            if cfg!(feature = "pjrt") {
+                BackendError::Init(format!("{e:#}"))
+            } else {
+                // The stub runtime: PJRT support is not compiled in.
+                BackendError::Unsupported(format!("{e:#}"))
+            }
+        })?;
+        let weights = cfg.weights_path();
+        let mut engines = Vec::new();
+        for b in rt.batch_buckets(&cfg.model) {
+            engines.push(rt.engine(&cfg.model, b, &weights).map_err(|e| {
+                BackendError::Init(format!("loading {} (batch {b}): {e:#}", cfg.model))
+            })?);
+        }
+        if engines.is_empty() {
+            return Err(BackendError::Init(format!(
+                "no artifacts for model '{}' in {}",
+                cfg.model,
+                cfg.artifacts.display()
+            )));
+        }
+        PjrtBackend::new(engines)
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        let engine = self
+            .engines
+            .iter()
+            .find(|e| e.batch_size() == req.batch())
+            .ok_or_else(|| {
+                BackendError::InvalidRequest(format!("no engine for bucket {}", req.batch()))
+            })?;
+        let lengths = engine
+            .run_batch(&req.images)
+            .map_err(|e| BackendError::Execution(format!("pjrt batch: {e:#}")))?;
+        Ok(InferOutput {
+            lengths,
+            frame_latency_s: None,
+        })
+    }
+}

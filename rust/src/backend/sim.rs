@@ -1,0 +1,92 @@
+//! The fixed-point FPGA accelerator simulator behind the unified API.
+//! Functional Q8.8/Q4.12 datapath per frame, plus the modeled on-device
+//! frame latency ([`BackendSpec::reports_timing`] = true) so serving
+//! metrics can be cross-checked against the cycle model.
+
+use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use crate::fpga::DeployedModel;
+
+pub struct SimBackend {
+    model: DeployedModel,
+    spec: BackendSpec,
+}
+
+impl SimBackend {
+    /// Wrap a deployed (quantized + masked) model.
+    pub fn new(model: DeployedModel) -> SimBackend {
+        let spec = BackendSpec {
+            kind: "sim".into(),
+            model: model.config.model.name.clone(),
+            input_shape: model.config.model.input,
+            batch_buckets: vec![1, 2, 4, 8],
+            reports_timing: true,
+            max_replicas: None,
+        }
+        .normalize();
+        SimBackend { model, spec }
+    }
+
+    /// Registry factory: synthetic deployment of the configured variant
+    /// (`original`/`pruned`/`proposed`) for the dataset.
+    pub fn from_config(cfg: &BackendConfig) -> Result<SimBackend, BackendError> {
+        let sys = cfg.system_config();
+        Ok(SimBackend::new(DeployedModel::synthetic(&sys, cfg.seed)))
+    }
+
+    pub fn model(&self) -> &DeployedModel {
+        &self.model
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        let mut lengths = Vec::with_capacity(req.batch());
+        let mut latency = None;
+        for img in &req.images {
+            let (_, lens, timing) = self
+                .model
+                .run_frame(img)
+                .map_err(|e| BackendError::Execution(format!("sim frame: {e:#}")))?;
+            latency = Some(timing.latency_s());
+            lengths.push(lens);
+        }
+        Ok(InferOutput {
+            lengths,
+            frame_latency_s: latency,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::data::{generate, Task};
+
+    #[test]
+    fn served_lengths_match_direct_run_frame() {
+        let cfg = SystemConfig::proposed("mnist");
+        let direct = DeployedModel::synthetic(&cfg, 9);
+        let mut b = SimBackend::new(DeployedModel::synthetic(&cfg, 9));
+        let data = generate(Task::Digits, 2, 77);
+        let out = b.infer(&InferRequest::new(data.images.clone())).unwrap();
+        for (img, got) in data.images.iter().zip(&out.lengths) {
+            let (_, want, _) = direct.run_frame(img).unwrap();
+            assert_eq!(got, &want);
+        }
+        assert!(out.frame_latency_s.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn spec_reports_timing_and_unbounded_replicas() {
+        let b = SimBackend::from_config(&BackendConfig::default()).unwrap();
+        assert!(b.spec().reports_timing);
+        assert!(b.spec().max_replicas.is_none());
+        assert_eq!(b.spec().input_shape, (1, 28, 28));
+    }
+}

@@ -43,12 +43,9 @@ impl Activations {
     }
 
     pub fn predicted_class(&self) -> usize {
-        let l = self.class_lengths();
-        l.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        // NaN-safe: a corrupt length must not panic callers (argmax
+        // ignores NaN entries instead).
+        crate::util::argmax(&self.class_lengths())
     }
 }
 

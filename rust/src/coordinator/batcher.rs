@@ -100,6 +100,48 @@ mod tests {
     }
 
     #[test]
+    fn queue_larger_than_biggest_bucket_ships_full_max_bucket() {
+        // Backlog deeper than every bucket: ship a full max bucket now
+        // (never a partial one, never more than the bucket holds).
+        let p = BatchPolicy::new(vec![4, 8], Duration::from_millis(1));
+        assert_eq!(p.decide(9, false), Some((8, 8)));
+        assert_eq!(p.decide(9, true), Some((8, 8)));
+        assert_eq!(p.decide(1000, false), Some((8, 8)));
+    }
+
+    #[test]
+    fn deadline_with_queue_smaller_than_smallest_bucket_pads() {
+        // Smallest bucket is 4: two deadline-hit requests ship padded
+        // into it rather than waiting forever for a full batch.
+        let p = BatchPolicy::new(vec![4, 8], Duration::from_millis(1));
+        assert_eq!(p.decide(2, false), None);
+        assert_eq!(p.decide(2, true), Some((4, 2)));
+        assert_eq!(p.decide(3, true), Some((4, 3)));
+    }
+
+    #[test]
+    fn shutdown_drain_always_terminates() {
+        // The executor's drain path calls decide(queued, true) until the
+        // queue empties; a None for a non-empty queue would loop forever.
+        for buckets in [vec![1, 8], vec![4, 8], vec![3], vec![2, 5, 16]] {
+            let p = BatchPolicy::new(buckets.clone(), Duration::from_millis(1));
+            for start in 1..40usize {
+                let mut queued = start;
+                let mut steps = 0;
+                while queued > 0 {
+                    let (bucket, take) = p
+                        .decide(queued, true)
+                        .unwrap_or_else(|| panic!("drain stuck at {queued} ({buckets:?})"));
+                    assert!(take > 0 && take <= bucket && take <= queued);
+                    queued -= take;
+                    steps += 1;
+                    assert!(steps <= start, "drain not making progress");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn property_decisions_are_valid() {
         let p = BatchPolicy::new(vec![1, 4, 8], Duration::from_millis(1));
         crate::testing::check(

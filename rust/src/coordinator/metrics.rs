@@ -74,6 +74,10 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
+    /// Requests refused at admission (queue at max depth).
+    pub rejected: u64,
+    /// Requests dropped because a backend batch failed.
+    pub backend_errors: u64,
     pub started: Instant,
 }
 
@@ -84,6 +88,8 @@ impl Default for Metrics {
             requests: 0,
             batches: 0,
             padded_slots: 0,
+            rejected: 0,
+            backend_errors: 0,
             started: Instant::now(),
         }
     }
@@ -98,6 +104,14 @@ impl Metrics {
     pub fn record_batch(&mut self, bucket: usize, take: usize) {
         self.batches += 1;
         self.padded_slots += (bucket - take) as u64;
+    }
+
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn record_backend_errors(&mut self, n: u64) {
+        self.backend_errors += n;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -119,9 +133,11 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.2} padded={} \
+            "requests={} rejected={} errors={} batches={} mean_batch={:.2} padded={} \
              latency(mean={:.0}us p50={}us p99={}us max={}us)",
             self.requests,
+            self.rejected,
+            self.backend_errors,
             self.batches,
             self.mean_batch_size(),
             self.padded_slots,

@@ -4,25 +4,30 @@
 //! Architecture (vLLM-router-shaped, scaled to this workload):
 //!
 //! ```text
-//!  clients ──► Router ──► Batcher ──► Executor (PJRT engine / FPGA sim)
-//!                 │           │             │
-//!                 ▼           ▼             ▼
-//!               admission   batch-size    response
-//!               + metrics   buckets       dispatch
+//!  clients ──► admission ──► shared queue ──► executor pool (N replicas)
+//!                 │          (bounded)          │  each owns one
+//!                 ▼                             │  InferenceBackend
+//!             QueueFull                         ▼
+//!             rejection                  batch → infer → responses
 //! ```
 //!
+//! * [`server`] — [`server::ServerBuilder`] configures max queue depth
+//!   (admission rejection with a typed
+//!   [`crate::backend::BackendError::QueueFull`]), the batch policy, and
+//!   an executor pool of N backend replicas fed from one shared work
+//!   queue. Replicas are built *on* their own threads via a factory, so
+//!   single-owner engines (PJRT) never cross threads; the backend's
+//!   [`crate::backend::BackendSpec::max_replicas`] clamps the pool
+//!   (`sim`/`oracle` scale across cores, `pjrt` pins 1).
 //! * [`batcher`] — dynamic batching: collect requests up to the largest
 //!   available bucket or a deadline, then pick the best bucket
 //!   (vLLM-style bucketed batching; the AOT artifacts provide b=1 and
 //!   b=8 executables, padding fills the remainder).
-//! * [`server`] — thread topology: N client handlers feed an MPSC queue;
-//!   one batcher thread; one executor thread owning the PJRT engines
-//!   (PJRT executables are single-owner by design here); responses fan
-//!   back out through per-request channels.
-//! * [`metrics`] — latency histogram + throughput counters.
+//! * [`metrics`] — latency histogram + throughput, rejection, and error
+//!   counters shared across the pool.
 //!
-//! Everything is std-only (threads + channels); the vendored crate set
-//! has no tokio, and the workload (sub-ms model steps) doesn't need
+//! Everything is std-only (threads + condvar queue); the vendored crate
+//! set has no tokio, and the workload (sub-ms model steps) doesn't need
 //! async I/O.
 
 pub mod batcher;
@@ -60,12 +65,9 @@ impl Response {
         enqueued: Instant,
         batch: usize,
     ) -> Response {
-        let predicted = lengths
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        // NaN-safe: a NaN length must not panic the executor thread
+        // (argmax ignores NaN entries instead).
+        let predicted = crate::util::argmax(&lengths);
         Response {
             id,
             lengths,

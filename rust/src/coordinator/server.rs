@@ -1,276 +1,501 @@
-//! Server thread topology: clients → MPSC queue → service thread
-//! (batcher + executor) → per-request response channels.
+//! Server topology: clients → bounded shared work queue → executor pool
+//! of N backend replicas → per-request response channels.
 //!
-//! The PJRT executable wraps raw PJRT pointers, so the service thread
-//! *creates* its backend via a factory closure and owns it for its whole
-//! life — nothing PJRT ever crosses a thread boundary.
+//! Each replica thread *creates* its own backend via the factory and
+//! owns it for its whole life — nothing engine-related ever crosses a
+//! thread boundary (PJRT executables wrap raw pointers and additionally
+//! pin the pool to one replica via [`BackendSpec::max_replicas`]).
+//!
+//! Admission control is at the queue: when `max_queue_depth` requests
+//! are already waiting, [`Server::submit`] rejects with
+//! [`BackendError::QueueFull`] instead of growing the backlog — the
+//! caller sheds load instead of the tail latency exploding.
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::{Request, Response};
+use crate::backend::{BackendError, BackendSpec, InferRequest, InferenceBackend};
 use crate::tensor::Tensor;
-use crate::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
-
-/// What actually runs a batch: the PJRT engine set or the FPGA simulator.
-pub trait Backend {
-    /// Batch sizes this backend has engines for (ascending).
-    fn buckets(&self) -> Vec<usize>;
-    /// Run exactly `bucket` images (padded by the caller) and return
-    /// lengths for each.
-    fn run(&mut self, bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>>;
-    /// Input shape (C, H, W) for padding blanks.
-    fn input_shape(&self) -> (usize, usize, usize);
-}
+use std::time::{Duration, Instant};
 
 type Job = (Request, mpsc::Sender<Response>);
 
-/// Handle to a running server.
+/// Builds one backend replica. Called once per replica, *on* the
+/// replica's own thread.
+pub type ReplicaFactory =
+    Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>, BackendError> + Send + Sync>;
+
+/// State shared between submitters and the executor pool.
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    metrics: Mutex<Metrics>,
+    max_depth: usize,
+    max_wait: Duration,
+    /// Replicas that finished init and are serving.
+    live: AtomicUsize,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    open: bool,
+}
+
+/// Configures and starts a [`Server`]. Replaces the old
+/// `Server::start(closure, max_wait)` signature.
+pub struct ServerBuilder {
+    factory: ReplicaFactory,
+    replicas: usize,
+    max_wait: Duration,
+    max_queue_depth: usize,
+    max_batch: Option<usize>,
+}
+
+impl ServerBuilder {
+    pub fn new<F>(factory: F) -> ServerBuilder
+    where
+        F: Fn() -> Result<Box<dyn InferenceBackend>, BackendError> + Send + Sync + 'static,
+    {
+        ServerBuilder {
+            factory: Arc::new(factory),
+            replicas: 1,
+            max_wait: Duration::from_millis(5),
+            max_queue_depth: 1024,
+            max_batch: None,
+        }
+    }
+
+    /// Desired executor replicas; clamped to the backend's
+    /// [`BackendSpec::max_replicas`] capability at start.
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n.max(1);
+        self
+    }
+
+    /// Batch policy: max time the oldest request waits before a partial
+    /// batch ships.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    /// Admission limit: queued (not yet executing) requests beyond this
+    /// are rejected with [`BackendError::QueueFull`].
+    pub fn max_queue_depth(mut self, n: usize) -> Self {
+        self.max_queue_depth = n.max(1);
+        self
+    }
+
+    /// Batch policy: ignore backend buckets above this size.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = Some(n.max(1));
+        self
+    }
+
+    /// Spawn the pool. Blocks until the first replica's backend is
+    /// built, so the returned server either has a known [`BackendSpec`]
+    /// or is already marked unavailable (init failure).
+    pub fn start(self) -> Server {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                open: true,
+            }),
+            cv: Condvar::new(),
+            metrics: Mutex::new(Metrics::default()),
+            max_depth: self.max_queue_depth,
+            max_wait: self.max_wait,
+            live: AtomicUsize::new(0),
+        });
+
+        let (spec_tx, spec_rx) = mpsc::channel::<Result<BackendSpec, BackendError>>();
+        let mut handles = Vec::with_capacity(self.replicas);
+        handles.push(spawn_replica(
+            0,
+            shared.clone(),
+            self.factory.clone(),
+            self.max_batch,
+            Some(spec_tx),
+        ));
+
+        let first = spec_rx
+            .recv()
+            .unwrap_or_else(|_| Err(BackendError::Init("replica 0 vanished".into())));
+        let (spec, init_error) = match first {
+            Ok(spec) => (Some(spec), None),
+            Err(e) => {
+                // No executor will ever serve; close the queue so
+                // submitters fail fast instead of hanging.
+                shared.state.lock().unwrap().open = false;
+                (None, Some(e))
+            }
+        };
+
+        if let Some(spec) = &spec {
+            let cap = spec.max_replicas.unwrap_or(usize::MAX);
+            for idx in 1..self.replicas.min(cap) {
+                handles.push(spawn_replica(
+                    idx,
+                    shared.clone(),
+                    self.factory.clone(),
+                    self.max_batch,
+                    None,
+                ));
+            }
+        }
+
+        Server {
+            shared,
+            handles,
+            spec,
+            init_error,
+            next_id: AtomicU64::new(1),
+        }
+    }
+}
+
+/// Handle to a running executor pool.
 pub struct Server {
-    tx: Option<mpsc::Sender<Job>>,
-    handle: Option<JoinHandle<Result<()>>>,
-    metrics: Arc<Mutex<Metrics>>,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<Result<(), BackendError>>>,
+    spec: Option<BackendSpec>,
+    init_error: Option<BackendError>,
     next_id: AtomicU64,
 }
 
 impl Server {
-    /// Start the service thread. `make_backend` runs *on* that thread.
-    pub fn start<F>(make_backend: F, max_wait: std::time::Duration) -> Server
+    /// Start building a server around a replica factory.
+    pub fn builder<F>(factory: F) -> ServerBuilder
     where
-        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn InferenceBackend>, BackendError> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let m2 = metrics.clone();
-        let handle = std::thread::Builder::new()
-            .name("fastcaps-executor".into())
-            .spawn(move || service_loop(rx, make_backend, m2, max_wait))
-            .expect("spawning executor thread");
-        Server {
-            tx: Some(tx),
-            handle: Some(handle),
-            metrics,
-            next_id: AtomicU64::new(1),
-        }
+        ServerBuilder::new(factory)
     }
 
-    /// Submit an image; returns the response channel.
-    pub fn submit(&self, image: Tensor) -> mpsc::Receiver<Response> {
+    /// The spec of the backend the pool runs (None if init failed).
+    pub fn spec(&self) -> Option<&BackendSpec> {
+        self.spec.as_ref()
+    }
+
+    /// Why the server is unavailable, if replica 0 failed to build.
+    pub fn init_error(&self) -> Option<&BackendError> {
+        self.init_error.as_ref()
+    }
+
+    /// Replicas currently serving. Replicas beyond the first build
+    /// asynchronously, so right after start this may still be below
+    /// [`Server::pool_size`].
+    pub fn live_replicas(&self) -> usize {
+        self.shared.live.load(Ordering::Relaxed)
+    }
+
+    /// Executor threads spawned for this pool (after clamping to the
+    /// backend's `max_replicas` capability).
+    pub fn pool_size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit an image; returns the response channel, or a typed
+    /// rejection when the server is down or the queue is at capacity.
+    pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<Response>, BackendError> {
         let (rtx, rrx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             enqueued: Instant::now(),
         };
-        if let Some(tx) = &self.tx {
-            // A send error means the service thread died; the receiver
-            // will simply report disconnection to the caller.
-            let _ = tx.send((req, rtx));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.open {
+                return Err(BackendError::Unavailable(match &self.init_error {
+                    Some(e) => format!("backend never started: {e}"),
+                    None => "server is shut down".into(),
+                }));
+            }
+            if st.jobs.len() >= self.shared.max_depth {
+                drop(st);
+                self.shared.metrics.lock().unwrap().record_rejected();
+                return Err(BackendError::QueueFull {
+                    depth: self.shared.max_depth,
+                });
+            }
+            st.jobs.push_back((req, rtx));
         }
-        rrx
+        self.shared.cv.notify_one();
+        Ok(rrx)
     }
 
-    /// Submit and wait.
-    pub fn classify(&self, image: Tensor) -> Result<Response> {
-        self.submit(image)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server shut down before responding"))
+    /// Submit and wait for the response.
+    pub fn classify(&self, image: Tensor) -> Result<Response, BackendError> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| {
+            BackendError::Unavailable(
+                "executor dropped the request (backend failure or shutdown)".into(),
+            )
+        })
     }
 
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.shared.metrics.lock().unwrap().clone()
     }
 
-    /// Drain and stop. Returns final metrics.
+    /// Drain and stop the pool. Returns final metrics.
     pub fn shutdown(mut self) -> Metrics {
-        self.tx.take(); // close the queue
-        if let Some(h) = self.handle.take() {
+        self.close_and_join();
+        let m = self.shared.metrics.lock().unwrap().clone();
+        m
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.state.lock().unwrap().open = false;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        self.metrics.lock().unwrap().clone()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        self.close_and_join();
+    }
+}
+
+/// Decrements the live count when a replica exits — by return, error,
+/// or *panic* (unwind runs Drop) — and fails pending work fast once the
+/// last replica is gone, instead of leaving `classify` callers hanging
+/// on a queue nobody serves.
+struct ReplicaGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for ReplicaGuard {
+    fn drop(&mut self) {
+        if self.shared.live.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            st.open = false;
+            st.jobs.clear(); // dropped senders disconnect the callers
+            self.shared.cv.notify_all();
         }
     }
 }
 
-fn service_loop<F>(
-    rx: mpsc::Receiver<Job>,
-    make_backend: F,
-    metrics: Arc<Mutex<Metrics>>,
-    max_wait: std::time::Duration,
-) -> Result<()>
-where
-    F: FnOnce() -> Result<Box<dyn Backend>>,
-{
-    let mut backend = make_backend()?;
-    let policy = BatchPolicy::new(backend.buckets(), max_wait);
-    let (c, h, w) = backend.input_shape();
-    let blank = Tensor::zeros(&[c, h, w]);
-    let mut queue: Vec<Job> = Vec::new();
-
-    loop {
-        // Fill the queue: blocking when empty, polling while collecting.
-        if queue.is_empty() {
-            match rx.recv() {
-                Ok(job) => queue.push(job),
-                Err(_) => return Ok(()), // all senders gone, drained
-            }
-        }
-        // Drain everything already sitting in the channel — under backlog
-        // the batcher must see the whole queue, or it degenerates to b=1.
-        while let Ok(job) = rx.try_recv() {
-            queue.push(job);
-        }
-        // Collect more until the policy ships or the deadline passes.
-        loop {
-            let deadline_hit = queue
-                .first()
-                .map(|(r, _)| r.enqueued.elapsed() >= max_wait)
-                .unwrap_or(false);
-            if let Some((bucket, take)) = policy.decide(queue.len(), deadline_hit) {
-                let jobs: Vec<Job> = queue.drain(..take).collect();
-                run_and_reply(&mut *backend, bucket, jobs, &blank, &metrics)?;
-                break;
-            }
-            // Wait for one more request (bounded by the oldest deadline).
-            let budget = max_wait
-                .checked_sub(queue[0].0.enqueued.elapsed())
-                .unwrap_or_default();
-            match rx.recv_timeout(budget) {
-                Ok(job) => queue.push(job),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    // Drain what's left, then exit.
-                    while !queue.is_empty() {
-                        let deadline = true;
-                        if let Some((bucket, take)) =
-                            policy.decide(queue.len(), deadline)
-                        {
-                            let jobs: Vec<Job> = queue.drain(..take).collect();
-                            run_and_reply(&mut *backend, bucket, jobs, &blank, &metrics)?;
+fn spawn_replica(
+    idx: usize,
+    shared: Arc<Shared>,
+    factory: ReplicaFactory,
+    max_batch: Option<usize>,
+    spec_tx: Option<mpsc::Sender<Result<BackendSpec, BackendError>>>,
+) -> JoinHandle<Result<(), BackendError>> {
+    std::thread::Builder::new()
+        .name(format!("fastcaps-executor-{idx}"))
+        .spawn(move || {
+            let init = factory()
+                .and_then(|b| effective_buckets(b.spec(), max_batch).map(|bk| (b, bk)));
+            let (mut backend, buckets) = match init {
+                Ok(ok) => ok,
+                Err(e) => {
+                    if let Some(tx) = spec_tx {
+                        let _ = tx.send(Err(e.clone()));
+                    } else {
+                        // A degraded pool is easy to miss; say so.
+                        eprintln!("[coordinator] replica {idx} failed to init: {e}");
+                        if shared.live.load(Ordering::SeqCst) == 0 {
+                            // Pool never came up at all: fail pending work.
+                            let mut st = shared.state.lock().unwrap();
+                            st.open = false;
+                            st.jobs.clear();
+                            shared.cv.notify_all();
                         }
                     }
-                    return Ok(());
+                    return Err(e);
                 }
+            };
+            shared.live.fetch_add(1, Ordering::SeqCst);
+            let _guard = ReplicaGuard {
+                shared: shared.clone(),
+            };
+            if let Some(tx) = spec_tx {
+                let _ = tx.send(Ok(backend.spec().clone()));
             }
+            replica_loop(&shared, &mut *backend, buckets)
+        })
+        .expect("spawning executor thread")
+}
+
+/// Batch buckets the policy may use: the backend's, optionally capped by
+/// [`ServerBuilder::max_batch`]. A cap below the smallest bucket is a
+/// configuration error — silently exceeding it would break whatever
+/// (memory, latency) motivated the cap.
+fn effective_buckets(
+    spec: &BackendSpec,
+    max_batch: Option<usize>,
+) -> Result<Vec<usize>, BackendError> {
+    let mut buckets = spec.batch_buckets.clone();
+    if buckets.is_empty() {
+        // validate() would reject every batch against an empty bucket
+        // list — surface the misconfiguration at start, not per request.
+        return Err(BackendError::Init(
+            "backend declares no batch buckets".into(),
+        ));
+    }
+    if let Some(cap) = max_batch {
+        let smallest = *buckets.iter().min().expect("non-empty");
+        buckets.retain(|&b| b <= cap);
+        if buckets.is_empty() {
+            return Err(BackendError::Init(format!(
+                "max_batch({cap}) is below the smallest backend bucket ({smallest})"
+            )));
         }
+    }
+    Ok(buckets)
+}
+
+fn replica_loop(
+    shared: &Shared,
+    backend: &mut dyn InferenceBackend,
+    buckets: Vec<usize>,
+) -> Result<(), BackendError> {
+    let spec = backend.spec().clone();
+    let policy = BatchPolicy::new(buckets, shared.max_wait);
+    let (c, h, w) = spec.input_shape;
+    let blank = Tensor::zeros(&[c, h, w]);
+
+    loop {
+        // Phase 1: take a batch decision under the queue lock.
+        let (bucket, jobs) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.jobs.is_empty() {
+                    if !st.open {
+                        return Ok(());
+                    }
+                    st = shared.cv.wait(st).unwrap();
+                    continue;
+                }
+                let draining = !st.open;
+                let deadline_hit = draining
+                    || st
+                        .jobs
+                        .front()
+                        .map(|(r, _)| r.enqueued.elapsed() >= shared.max_wait)
+                        .unwrap_or(false);
+                if let Some((bucket, take)) = policy.decide(st.jobs.len(), deadline_hit) {
+                    let jobs: Vec<Job> = st.jobs.drain(..take).collect();
+                    break (bucket, jobs);
+                }
+                if draining {
+                    // Defensive: `decide` refused a non-empty queue during
+                    // drain. Force the smallest bucket so shutdown always
+                    // terminates instead of looping on `None`.
+                    let bucket = policy.buckets[0];
+                    let take = st.jobs.len().min(bucket);
+                    let jobs: Vec<Job> = st.jobs.drain(..take).collect();
+                    break (bucket, jobs);
+                }
+                // Policy wants to collect more; sleep until the oldest
+                // request's deadline (new arrivals notify the condvar).
+                let oldest = st
+                    .jobs
+                    .front()
+                    .map(|(r, _)| r.enqueued.elapsed())
+                    .unwrap_or_default();
+                let budget = shared.max_wait.saturating_sub(oldest);
+                let (guard, _) = shared.cv.wait_timeout(st, budget).unwrap();
+                st = guard;
+            }
+        };
+
+        // Phase 2: run the batch with the lock released — this is where
+        // N replicas overlap and the pool scales across cores.
+        run_and_reply(backend, bucket, jobs, &blank, &shared.metrics);
+        // We may have consumed the only pending wakeup; pass it on if
+        // more work is queued.
+        shared.cv.notify_one();
     }
 }
 
 fn run_and_reply(
-    backend: &mut dyn Backend,
+    backend: &mut dyn InferenceBackend,
     bucket: usize,
     jobs: Vec<Job>,
     blank: &Tensor,
-    metrics: &Arc<Mutex<Metrics>>,
-) -> Result<()> {
+    metrics: &Mutex<Metrics>,
+) {
     let take = jobs.len();
     let mut images: Vec<Tensor> = jobs.iter().map(|(r, _)| r.image.clone()).collect();
-    while images.len() < bucket {
-        images.push(blank.clone());
-    }
-    let lengths = backend.run(bucket, &images)?;
-    let mut m = metrics.lock().unwrap();
-    m.record_batch(bucket, take);
-    for ((req, rtx), lens) in jobs.into_iter().zip(lengths) {
-        let resp = Response::from_lengths(req.id, lens, req.enqueued, bucket);
-        m.record(resp.latency_us);
-        let _ = rtx.send(resp); // receiver may have gone away; fine
-    }
-    Ok(())
-}
-
-/// A backend that serves through the FPGA simulator's functional path —
-/// used by tests and by `fastcaps serve --backend sim`.
-pub struct SimBackend {
-    pub model: crate::fpga::DeployedModel,
-}
-
-impl Backend for SimBackend {
-    fn buckets(&self) -> Vec<usize> {
-        vec![1, 8]
-    }
-
-    fn run(&mut self, _bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        images
-            .iter()
-            .map(|img| self.model.run_frame(img).map(|(_, l, _)| l))
-            .collect()
-    }
-
-    fn input_shape(&self) -> (usize, usize, usize) {
-        self.model.config.model.input
-    }
-}
-
-/// A backend over loaded PJRT engines (one per bucket).
-pub struct PjrtBackend {
-    pub engines: Vec<crate::runtime::Engine>,
-    pub shape: (usize, usize, usize),
-}
-
-impl PjrtBackend {
-    pub fn new(engines: Vec<crate::runtime::Engine>) -> Result<PjrtBackend> {
-        anyhow::ensure!(!engines.is_empty(), "need at least one engine");
-        let s = &engines[0].entry.input_shape;
-        anyhow::ensure!(s.len() == 4, "expected NCHW input shape");
-        Ok(PjrtBackend {
-            shape: (s[1], s[2], s[3]),
-            engines,
-        })
-    }
-}
-
-impl Backend for PjrtBackend {
-    fn buckets(&self) -> Vec<usize> {
-        let mut b: Vec<usize> = self.engines.iter().map(|e| e.batch_size()).collect();
-        b.sort_unstable();
-        b
-    }
-
-    fn run(&mut self, bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let engine = self
-            .engines
-            .iter()
-            .find(|e| e.batch_size() == bucket)
-            .ok_or_else(|| anyhow::anyhow!("no engine for bucket {bucket}"))?;
-        engine.run_batch(images)
-    }
-
-    fn input_shape(&self) -> (usize, usize, usize) {
-        self.shape
+    images.resize(bucket, blank.clone());
+    match backend.infer(&InferRequest::new(images)) {
+        Ok(out) => {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(bucket, take);
+            for ((req, rtx), lens) in jobs.into_iter().zip(out.lengths) {
+                let resp = Response::from_lengths(req.id, lens, req.enqueued, bucket);
+                m.record(resp.latency_us);
+                let _ = rtx.send(resp); // receiver may have gone away; fine
+            }
+        }
+        Err(e) => {
+            // Dropping the senders disconnects the per-request channels,
+            // so each caller observes a typed Unavailable error from
+            // `classify` — one bad batch does not kill the replica.
+            metrics.lock().unwrap().record_backend_errors(take as u64);
+            eprintln!("[coordinator] backend error on batch of {take}: {e}");
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+    use crate::backend::InferOutput;
+    use std::sync::atomic::AtomicUsize;
 
     /// Deterministic toy backend: "lengths" encode the image's mean.
     struct ToyBackend {
-        calls: usize,
+        spec: BackendSpec,
+        delay: Duration,
+        calls: Arc<AtomicUsize>,
     }
 
-    impl Backend for ToyBackend {
-        fn buckets(&self) -> Vec<usize> {
-            vec![1, 4]
+    impl ToyBackend {
+        fn new(delay: Duration, calls: Arc<AtomicUsize>) -> ToyBackend {
+            ToyBackend {
+                spec: BackendSpec {
+                    kind: "toy".into(),
+                    model: "toy".into(),
+                    input_shape: (1, 4, 4),
+                    batch_buckets: vec![1, 4],
+                    reports_timing: false,
+                    max_replicas: None,
+                },
+                delay,
+                calls,
+            }
+        }
+    }
+
+    impl InferenceBackend for ToyBackend {
+        fn spec(&self) -> &BackendSpec {
+            &self.spec
         }
 
-        fn run(&mut self, _bucket: usize, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-            self.calls += 1;
-            Ok(images
+        fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+            self.validate(req)?;
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            let lengths = req
+                .images
                 .iter()
                 .map(|img| {
                     let m = img.sum() / img.len() as f32;
@@ -278,20 +503,27 @@ mod tests {
                     l[(m * 10.0) as usize % 10] = 0.9;
                     l
                 })
-                .collect())
+                .collect();
+            Ok(InferOutput {
+                lengths,
+                frame_latency_s: None,
+            })
         }
+    }
 
-        fn input_shape(&self) -> (usize, usize, usize) {
-            (1, 4, 4)
-        }
+    fn toy_server(delay: Duration, calls: Arc<AtomicUsize>) -> ServerBuilder {
+        Server::builder(move || {
+            Ok(Box::new(ToyBackend::new(delay, calls.clone())) as Box<dyn InferenceBackend>)
+        })
     }
 
     #[test]
     fn serves_single_request() {
-        let server = Server::start(
-            || Ok(Box::new(ToyBackend { calls: 0 }) as Box<dyn Backend>),
-            Duration::from_millis(1),
-        );
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::ZERO, calls)
+            .max_wait(Duration::from_millis(1))
+            .start();
+        assert_eq!(server.spec().unwrap().kind, "toy");
         let resp = server.classify(Tensor::full(&[1, 4, 4], 0.35)).unwrap();
         assert_eq!(resp.predicted, 3);
         assert!(resp.latency_us > 0);
@@ -301,12 +533,16 @@ mod tests {
 
     #[test]
     fn batches_concurrent_requests() {
-        let server = Server::start(
-            || Ok(Box::new(ToyBackend { calls: 0 }) as Box<dyn Backend>),
-            Duration::from_millis(20),
-        );
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::ZERO, calls)
+            .max_wait(Duration::from_millis(20))
+            .start();
         let rxs: Vec<_> = (0..8)
-            .map(|i| server.submit(Tensor::full(&[1, 4, 4], 0.1 * i as f32 % 1.0)))
+            .map(|i| {
+                server
+                    .submit(Tensor::full(&[1, 4, 4], 0.1 * i as f32 % 1.0))
+                    .unwrap()
+            })
             .collect();
         for rx in rxs {
             rx.recv().unwrap();
@@ -320,23 +556,181 @@ mod tests {
 
     #[test]
     fn drains_on_shutdown() {
-        let server = Server::start(
-            || Ok(Box::new(ToyBackend { calls: 0 }) as Box<dyn Backend>),
-            Duration::from_millis(50),
-        );
-        let rx = server.submit(Tensor::full(&[1, 4, 4], 0.2));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::ZERO, calls)
+            .max_wait(Duration::from_millis(50))
+            .start();
+        let rx = server.submit(Tensor::full(&[1, 4, 4], 0.2)).unwrap();
         let m = server.shutdown(); // must flush the pending request
         assert_eq!(m.requests, 1);
         assert!(rx.recv().is_ok());
     }
 
     #[test]
-    fn failed_backend_reports() {
-        let server = Server::start(
-            || anyhow::bail!("backend init failed"),
-            Duration::from_millis(1),
-        );
-        let resp = server.classify(Tensor::zeros(&[1, 4, 4]));
-        assert!(resp.is_err());
+    fn failed_backend_reports_typed_error() {
+        let server =
+            Server::builder(|| Err(BackendError::Init("backend init failed".into()))).start();
+        assert!(server.spec().is_none());
+        assert!(matches!(
+            server.init_error(),
+            Some(BackendError::Init(_))
+        ));
+        match server.classify(Tensor::zeros(&[1, 4, 4])) {
+            Err(BackendError::Unavailable(m)) => assert!(m.contains("init failed"), "{m}"),
+            other => panic!("expected Unavailable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_rejection_fires_at_configured_depth() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::from_millis(40), calls)
+            .max_wait(Duration::from_micros(100))
+            .max_queue_depth(2)
+            .replicas(1)
+            .start();
+        // Burst faster than one slow replica can drain: queue holds at
+        // most 2, so of 8 rapid submits at least 8 - (2 queued + a few
+        // in flight) must be rejected with QueueFull{depth: 2}.
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..8 {
+            match server.submit(Tensor::full(&[1, 4, 4], 0.1 * i as f32)) {
+                Ok(rx) => accepted.push(rx),
+                Err(BackendError::QueueFull { depth }) => {
+                    assert_eq!(depth, 2);
+                    rejected += 1;
+                }
+                Err(other) => panic!("unexpected error {other:?}"),
+            }
+        }
+        assert!(rejected >= 1, "no admission rejection fired");
+        for rx in accepted {
+            rx.recv().unwrap(); // accepted work still completes
+        }
+        let m = server.shutdown();
+        assert_eq!(m.rejected, rejected as u64);
+        assert_eq!(m.requests + m.rejected, 8);
+    }
+
+    #[test]
+    fn replica_pool_serves_all_requests() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::from_millis(1), calls.clone())
+            .max_wait(Duration::from_micros(200))
+            .replicas(4)
+            .start();
+        assert!(server.live_replicas() >= 1);
+        let rxs: Vec<_> = (0..32)
+            .map(|_| server.submit(Tensor::full(&[1, 4, 4], 0.5)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests, 32);
+        assert!(calls.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn max_batch_below_smallest_bucket_is_init_error() {
+        struct BigBuckets(BackendSpec);
+        impl InferenceBackend for BigBuckets {
+            fn spec(&self) -> &BackendSpec {
+                &self.0
+            }
+            fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+                Ok(InferOutput {
+                    lengths: vec![vec![0.5; 10]; req.batch()],
+                    frame_latency_s: None,
+                })
+            }
+        }
+        let server = Server::builder(|| {
+            Ok(Box::new(BigBuckets(BackendSpec {
+                kind: "big".into(),
+                model: "big".into(),
+                input_shape: (1, 4, 4),
+                batch_buckets: vec![4, 8],
+                reports_timing: false,
+                max_replicas: None,
+            })) as Box<dyn InferenceBackend>)
+        })
+        .max_batch(2)
+        .start();
+        match server.init_error() {
+            Some(BackendError::Init(m)) => assert!(m.contains("max_batch"), "{m}"),
+            other => panic!("expected Init error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn panicking_backend_fails_fast_instead_of_hanging() {
+        struct PanicBackend(BackendSpec);
+        impl InferenceBackend for PanicBackend {
+            fn spec(&self) -> &BackendSpec {
+                &self.0
+            }
+            fn infer(&mut self, _req: &InferRequest) -> Result<InferOutput, BackendError> {
+                panic!("backend bug");
+            }
+        }
+        let server = Server::builder(|| {
+            Ok(Box::new(PanicBackend(BackendSpec {
+                kind: "panic".into(),
+                model: "panic".into(),
+                input_shape: (1, 4, 4),
+                batch_buckets: vec![1],
+                reports_timing: false,
+                max_replicas: None,
+            })) as Box<dyn InferenceBackend>)
+        })
+        .max_wait(Duration::from_millis(1))
+        .start();
+        // The in-flight request must error out (its sender unwinds with
+        // the replica), not block forever.
+        assert!(matches!(
+            server.classify(Tensor::zeros(&[1, 4, 4])),
+            Err(BackendError::Unavailable(_))
+        ));
+        // The dead pool closes the queue, so later submits fail fast too.
+        let later = server.classify(Tensor::zeros(&[1, 4, 4]));
+        assert!(matches!(later, Err(BackendError::Unavailable(_))));
+        server.shutdown();
+    }
+
+    #[test]
+    fn replicas_clamped_by_backend_capability() {
+        struct OneReplica(BackendSpec);
+        impl InferenceBackend for OneReplica {
+            fn spec(&self) -> &BackendSpec {
+                &self.0
+            }
+            fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+                Ok(InferOutput {
+                    lengths: vec![vec![0.5; 10]; req.batch()],
+                    frame_latency_s: None,
+                })
+            }
+        }
+        let built = Arc::new(AtomicUsize::new(0));
+        let built2 = built.clone();
+        let server = Server::builder(move || {
+            built2.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(OneReplica(BackendSpec {
+                kind: "single".into(),
+                model: "single".into(),
+                input_shape: (1, 4, 4),
+                batch_buckets: vec![1],
+                reports_timing: false,
+                max_replicas: Some(1),
+            })) as Box<dyn InferenceBackend>)
+        })
+        .replicas(8)
+        .start();
+        // Give stragglers (if the clamp were broken) a moment to build.
+        let _ = server.classify(Tensor::zeros(&[1, 4, 4])).unwrap();
+        assert_eq!(built.load(Ordering::SeqCst), 1, "pool ignored max_replicas(1)");
+        server.shutdown();
     }
 }

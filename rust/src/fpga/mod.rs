@@ -298,12 +298,7 @@ impl DeployedModel {
         };
         let out = dynamic_routing_q12(&pred, m.routing_iters, self.softmax_mode());
         let lengths = out.lengths_f32();
-        let class = lengths
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        let class = crate::util::argmax(&lengths);
         Ok((class, lengths, self.estimate_frame()))
     }
 }

@@ -8,17 +8,21 @@
 //!   Pruning (LAKP) engine and its baselines, a cycle-level simulator of the
 //!   paper's PYNQ-Z1 accelerator (PE array, BRAM banks, index control,
 //!   conv + dynamic-routing modules, Taylor-approximated non-linear units),
-//!   a PJRT runtime that executes the AOT-lowered JAX model, and a serving
-//!   coordinator (router → batcher → executor) that keeps Python off the
-//!   request path.
+//!   a PJRT runtime that executes the AOT-lowered JAX model, a unified
+//!   [`backend`] execution API over all three model implementations, and
+//!   a serving coordinator (admission → shared queue → executor pool of
+//!   backend replicas) that keeps Python off the request path.
 //! * **L2 (python/compile/model.py)** — the CapsNet forward graph in JAX,
 //!   lowered once to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the routing
 //!   hot-spots, validated against a pure-jnp oracle.
 //!
-//! The public API is organised by subsystem; see `DESIGN.md` for the
-//! paper-to-module map and `EXPERIMENTS.md` for reproduced numbers.
+//! The public API is organised by subsystem; see `DESIGN.md` (repo root)
+//! for the paper-to-module map and the backend-subsystem diagram, and
+//! the paper-anchored assertions in `rust/tests/` and `rust/benches/`
+//! for the reproduced numbers.
 
+pub mod backend;
 pub mod capsnet;
 pub mod config;
 pub mod coordinator;

@@ -9,184 +9,259 @@
 //! One [`Engine`] holds one compiled executable (one model × batch-size
 //! bucket) plus its resident weight literals; [`Runtime`] manages the
 //! manifest and a bucket registry the coordinator picks from.
+//!
+//! The xla crate is not part of the offline vendored set, so the real
+//! implementation is gated behind the `pjrt` cargo feature. Without it
+//! this module keeps the same API surface and [`Runtime::open`] reports
+//! that PJRT support is not compiled in — callers (the backend registry,
+//! `fastcaps serve`, the integration tests) treat that exactly like
+//! missing artifacts and fall back or skip.
 
 pub mod manifest;
 
-use crate::tensor::Tensor;
-use crate::util::json::Json;
-use crate::Result;
-use anyhow::Context;
-use manifest::{Manifest, ManifestEntry};
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+pub use real::{literal_from_tensor, Engine, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, Runtime};
 
-/// One compiled model executable with resident weights.
-///
-/// Weights are transferred to device buffers once at load time
-/// (§Perf L3: the per-batch path only moves the input image batch, not
-/// the 1.2 MB of parameters).
-pub struct Engine {
-    pub entry: ManifestEntry,
-    exe: xla::PjRtLoadedExecutable,
-    weights: Vec<xla::PjRtBuffer>,
-    /// Host-side weight literals backing the device buffers. The CPU PJRT
-    /// client may create zero-copy buffers that alias host memory, so the
-    /// literals must live as long as the buffers.
-    _weight_literals: Vec<xla::Literal>,
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::manifest::{Manifest, ManifestEntry};
+    use crate::tensor::Tensor;
+    use crate::util::json::Json;
+    use crate::Result;
+    use anyhow::Context;
+    use std::path::{Path, PathBuf};
 
-impl Engine {
-    /// Compile an artifact on a PJRT client and load its weights from a
-    /// `.fcw` file (ordered per the manifest's param list).
-    pub fn load(
-        client: &xla::PjRtClient,
-        dir: &Path,
-        entry: &ManifestEntry,
-        weights_path: &Path,
-    ) -> Result<Engine> {
-        let hlo_path = dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", entry.name))?;
+    /// One compiled model executable with resident weights.
+    ///
+    /// Weights are transferred to device buffers once at load time
+    /// (§Perf L3: the per-batch path only moves the input image batch, not
+    /// the 1.2 MB of parameters).
+    pub struct Engine {
+        pub entry: ManifestEntry,
+        exe: xla::PjRtLoadedExecutable,
+        weights: Vec<xla::PjRtBuffer>,
+        /// Host-side weight literals backing the device buffers. The CPU
+        /// PJRT client may create zero-copy buffers that alias host memory,
+        /// so the literals must live as long as the buffers.
+        _weight_literals: Vec<xla::Literal>,
+        client: xla::PjRtClient,
+    }
 
-        let mut tensors = crate::capsnet::weights::parse_fcw(
-            &std::fs::read(weights_path)
-                .with_context(|| format!("reading {}", weights_path.display()))?,
-        )?;
-        let mut weights = Vec::with_capacity(entry.params.len());
-        for p in &entry.params {
-            let t = tensors
-                .remove(&p.name)
-                .ok_or_else(|| anyhow::anyhow!("weights missing tensor '{}'", p.name))?;
-            anyhow::ensure!(
-                t.shape == p.shape,
-                "tensor '{}' shape {:?} != manifest {:?}",
-                p.name,
-                t.shape,
-                p.shape
-            );
-            weights.push(literal_from_tensor(&t)?);
-        }
-        let buffers = weights
-            .iter()
-            .map(|lit| {
-                client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(|e| anyhow::anyhow!("uploading weights: {e}"))
+    impl Engine {
+        /// Compile an artifact on a PJRT client and load its weights from a
+        /// `.fcw` file (ordered per the manifest's param list).
+        pub fn load(
+            client: &xla::PjRtClient,
+            dir: &Path,
+            entry: &ManifestEntry,
+            weights_path: &Path,
+        ) -> Result<Engine> {
+            let hlo_path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", entry.name))?;
+
+            let mut tensors = crate::capsnet::weights::parse_fcw(
+                &std::fs::read(weights_path)
+                    .with_context(|| format!("reading {}", weights_path.display()))?,
+            )?;
+            let mut weights = Vec::with_capacity(entry.params.len());
+            for p in &entry.params {
+                let t = tensors
+                    .remove(&p.name)
+                    .ok_or_else(|| anyhow::anyhow!("weights missing tensor '{}'", p.name))?;
+                anyhow::ensure!(
+                    t.shape == p.shape,
+                    "tensor '{}' shape {:?} != manifest {:?}",
+                    p.name,
+                    t.shape,
+                    p.shape
+                );
+                weights.push(literal_from_tensor(&t)?);
+            }
+            let buffers = weights
+                .iter()
+                .map(|lit| {
+                    client
+                        .buffer_from_host_literal(None, lit)
+                        .map_err(|e| anyhow::anyhow!("uploading weights: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Engine {
+                entry: entry.clone(),
+                exe,
+                weights: buffers,
+                _weight_literals: weights,
+                client: client.clone(),
             })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Engine {
-            entry: entry.clone(),
-            exe,
-            weights: buffers,
-            _weight_literals: weights,
-            client: client.clone(),
-        })
-    }
-
-    pub fn batch_size(&self) -> usize {
-        self.entry.batch
-    }
-
-    /// Run one batch. `images` must contain exactly `batch` CHW tensors of
-    /// the model's input shape. Returns per-image capsule lengths
-    /// (`[num_classes]` each).
-    pub fn run_batch(&self, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let b = self.entry.batch;
-        anyhow::ensure!(
-            images.len() == b,
-            "engine {} wants batch {b}, got {}",
-            self.entry.name,
-            images.len()
-        );
-        let per = self.entry.input_shape[1..].iter().product::<usize>();
-        let mut flat = Vec::with_capacity(b * per);
-        for img in images {
-            anyhow::ensure!(img.len() == per, "image size {} != {per}", img.len());
-            flat.extend_from_slice(&img.data);
         }
-        let x = self
-            .client
-            .buffer_from_host_buffer(&flat, &self.entry.input_shape, None)
-            .map_err(|e| anyhow::anyhow!("uploading input: {e}"))?;
 
-        // Weights first, input last — the order aot.py lowered them in.
-        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
-        args.push(&x);
-        let result = self
-            .exe
-            .execute_b(&args)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.entry.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
-        // aot.py lowers with return_tuple=True: (lengths [B,J], v [B,J,D]).
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result: {e}"))?;
-        anyhow::ensure!(!parts.is_empty(), "empty result tuple");
-        let lengths_flat: Vec<f32> = parts[0]
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("reading lengths: {e}"))?;
-        let j = self.entry.num_classes;
-        anyhow::ensure!(lengths_flat.len() == b * j, "lengths size mismatch");
-        Ok(lengths_flat.chunks(j).map(|c| c.to_vec()).collect())
+        pub fn batch_size(&self) -> usize {
+            self.entry.batch
+        }
+
+        /// Run one batch. `images` must contain exactly `batch` CHW tensors
+        /// of the model's input shape. Returns per-image capsule lengths
+        /// (`[num_classes]` each).
+        pub fn run_batch(&self, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            let b = self.entry.batch;
+            anyhow::ensure!(
+                images.len() == b,
+                "engine {} wants batch {b}, got {}",
+                self.entry.name,
+                images.len()
+            );
+            let per = self.entry.input_shape[1..].iter().product::<usize>();
+            let mut flat = Vec::with_capacity(b * per);
+            for img in images {
+                anyhow::ensure!(img.len() == per, "image size {} != {per}", img.len());
+                flat.extend_from_slice(&img.data);
+            }
+            let x = self
+                .client
+                .buffer_from_host_buffer(&flat, &self.entry.input_shape, None)
+                .map_err(|e| anyhow::anyhow!("uploading input: {e}"))?;
+
+            // Weights first, input last — the order aot.py lowered them in.
+            let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+            args.push(&x);
+            let result = self
+                .exe
+                .execute_b(&args)
+                .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.entry.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+            // aot.py lowers with return_tuple=True: (lengths [B,J], v [B,J,D]).
+            let parts = result
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untupling result: {e}"))?;
+            anyhow::ensure!(!parts.is_empty(), "empty result tuple");
+            let lengths_flat: Vec<f32> = parts[0]
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("reading lengths: {e}"))?;
+            let j = self.entry.num_classes;
+            anyhow::ensure!(lengths_flat.len() == b * j, "lengths size mismatch");
+            Ok(lengths_flat.chunks(j).map(|c| c.to_vec()).collect())
+        }
+    }
+
+    /// Convert a dense f32 tensor into an XLA literal.
+    pub fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+    }
+
+    /// The artifact registry: manifest + PJRT client; engines load on
+    /// demand.
+    pub struct Runtime {
+        pub dir: PathBuf,
+        pub manifest: Manifest,
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// Open an artifact directory (expects `manifest.json`).
+        pub fn open(dir: &Path) -> Result<Runtime> {
+            let text = std::fs::read_to_string(dir.join("manifest.json"))
+                .with_context(|| format!("reading manifest in {}", dir.display()))?;
+            let manifest = Manifest::parse(&Json::parse(&text)?)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+            Ok(Runtime {
+                dir: dir.to_path_buf(),
+                manifest,
+                client,
+            })
+        }
+
+        /// Load the engine for a (model, batch) pair with the given weights.
+        pub fn engine(&self, model: &str, batch: usize, weights: &Path) -> Result<Engine> {
+            let entry = self
+                .manifest
+                .find(model, batch)
+                .ok_or_else(|| anyhow::anyhow!("no artifact for {model} batch {batch}"))?;
+            Engine::load(&self.client, &self.dir, entry, weights)
+        }
+
+        /// All batch sizes available for a model (the coordinator's
+        /// buckets).
+        pub fn batch_buckets(&self, model: &str) -> Vec<usize> {
+            let mut v: Vec<usize> = self
+                .manifest
+                .entries
+                .iter()
+                .filter(|e| e.model == model)
+                .map(|e| e.batch)
+                .collect();
+            v.sort_unstable();
+            v
+        }
     }
 }
 
-/// Convert a dense f32 tensor into an XLA literal.
-pub fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(&t.data)
-        .reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::manifest::{Manifest, ManifestEntry};
+    use crate::tensor::Tensor;
+    use crate::Result;
+    use std::path::{Path, PathBuf};
 
-/// The artifact registry: manifest + PJRT client; engines load on demand.
-pub struct Runtime {
-    pub dir: PathBuf,
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Open an artifact directory (expects `manifest.json`).
-    pub fn open(dir: &Path) -> Result<Runtime> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let manifest = Manifest::parse(&Json::parse(&text)?)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
-        Ok(Runtime {
-            dir: dir.to_path_buf(),
-            manifest,
-            client,
-        })
+    /// Stub engine: same shape as the real one, but unconstructible —
+    /// [`Runtime::open`] always fails without the `pjrt` feature.
+    pub struct Engine {
+        pub entry: ManifestEntry,
     }
 
-    /// Load the engine for a (model, batch) pair with the given weights.
-    pub fn engine(&self, model: &str, batch: usize, weights: &Path) -> Result<Engine> {
-        let entry = self
-            .manifest
-            .find(model, batch)
-            .ok_or_else(|| anyhow::anyhow!("no artifact for {model} batch {batch}"))?;
-        Engine::load(&self.client, &self.dir, entry, weights)
+    impl Engine {
+        pub fn batch_size(&self) -> usize {
+            self.entry.batch
+        }
+
+        pub fn run_batch(&self, _images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!("fastcaps was built without the `pjrt` feature")
+        }
     }
 
-    /// All batch sizes available for a model (the coordinator's buckets).
-    pub fn batch_buckets(&self, model: &str) -> Vec<usize> {
-        let mut v: Vec<usize> = self
-            .manifest
-            .entries
-            .iter()
-            .filter(|e| e.model == model)
-            .map(|e| e.batch)
-            .collect();
-        v.sort_unstable();
-        v
+    /// Stub runtime: keeps call sites compiling; `open` reports the
+    /// missing feature so callers fall back (serve) or skip (tests).
+    pub struct Runtime {
+        pub dir: PathBuf,
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn open(dir: &Path) -> Result<Runtime> {
+            anyhow::bail!(
+                "fastcaps was built without the `pjrt` feature; cannot open \
+                 PJRT artifacts in {} (rebuild with --features pjrt and the \
+                 xla crate available)",
+                dir.display()
+            )
+        }
+
+        pub fn engine(&self, model: &str, batch: usize, _weights: &Path) -> Result<Engine> {
+            anyhow::bail!(
+                "fastcaps was built without the `pjrt` feature; cannot load \
+                 engine {model} (batch {batch})"
+            )
+        }
+
+        pub fn batch_buckets(&self, model: &str) -> Vec<usize> {
+            self.manifest
+                .entries
+                .iter()
+                .filter(|e| e.model == model)
+                .map(|e| e.batch)
+                .collect()
+        }
     }
 }

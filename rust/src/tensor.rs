@@ -142,12 +142,7 @@ impl Tensor {
     }
 
     pub fn argmax(&self) -> usize {
-        self.data
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        crate::util::argmax(&self.data)
     }
 
     /// `[m,k] x [k,n] -> [m,n]` matrix multiply.

@@ -24,6 +24,21 @@ pub fn fmt_thousands(v: u64) -> String {
     out
 }
 
+/// NaN-safe argmax over f32 scores (0 for an empty or all-NaN slice).
+///
+/// `partial_cmp().unwrap()` panics on NaN, and `total_cmp` alone would
+/// rank +NaN above every real score; ignoring NaN entries instead means
+/// a single corrupt length can neither panic an executor thread nor win
+/// the argmax over real scores.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -48,7 +63,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -63,6 +78,17 @@ mod tests {
         assert_eq!(fmt_thousands(999), "999");
         assert_eq!(fmt_thousands(1000), "1,000");
         assert_eq!(fmt_thousands(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn argmax_basics_and_nan_safety() {
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        // A NaN score must neither panic nor win against real scores.
+        assert_eq!(argmax(&[0.1, f32::NAN, 0.3]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        // Ties resolve to the last max, matching max_by semantics.
+        assert_eq!(argmax(&[0.5, 0.5]), 1);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Offline stand-in for the `anyhow` crate, vendored because the build
+//! environment has no network access. Implements exactly the subset the
+//! fastcaps crate uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros, and the [`Context`] extension trait for
+//! `Result<T, E: std::error::Error>` and `Option<T>`.
+//!
+//! Display semantics follow upstream: `{}` prints the outermost message,
+//! `{:#}` prints the whole cause chain separated by `": "`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error: an outermost message plus its cause chain.
+pub struct Error {
+    /// Outermost context first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an additional layer of context (outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*).into())
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tt)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Err::<(), std::io::Error>(io_err())
+            .context("opening file")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening file");
+        assert_eq!(format!("{e:#}"), "opening file: gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = anyhow!("bad {} of {}", "kind", 7);
+        assert_eq!(format!("{e}"), "bad kind of 7");
+
+        fn fails() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(format!("{}", fails().unwrap_err()), "nope 1");
+
+        fn checked(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(checked(1).is_ok());
+        assert_eq!(
+            format!("{}", checked(-2).unwrap_err()),
+            "x must be positive, got -2"
+        );
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/xyz")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        assert_eq!(Some(5).context("missing").unwrap(), 5);
+    }
+}

@@ -4,9 +4,13 @@
 //! and a compute-bound backend must scale with `replicas(N)` — the
 //! host-side analogue of CapsAcc's PE-array parallelism.
 
-use fastcaps::backend::{BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use fastcaps::backend::{
+    BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend,
+    SimBackend,
+};
 use fastcaps::coordinator::batcher::BatchPolicy;
 use fastcaps::coordinator::server::Server;
+use fastcaps::data::{generate, Task};
 use fastcaps::tensor::Tensor;
 use fastcaps::util::bench::{report_model, Bencher};
 use std::time::Duration;
@@ -30,10 +34,9 @@ impl InferenceBackend for NullBackend {
         &self.0
     }
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
-        Ok(InferOutput {
-            lengths: req.images.iter().map(|_| vec![0.5; 10]).collect(),
-            frame_latency_s: None,
-        })
+        Ok(InferOutput::untimed(
+            req.images.iter().map(|_| vec![0.5; 10]).collect(),
+        ))
     }
 }
 
@@ -53,10 +56,9 @@ impl InferenceBackend for FixedCostBackend {
         while t0.elapsed() < self.cost {
             std::hint::spin_loop();
         }
-        Ok(InferOutput {
-            lengths: req.images.iter().map(|_| vec![0.5; 10]).collect(),
-            frame_latency_s: None,
-        })
+        Ok(InferOutput::untimed(
+            req.images.iter().map(|_| vec![0.5; 10]).collect(),
+        ))
     }
 }
 
@@ -155,6 +157,36 @@ fn main() {
     } else {
         println!("(single-core host: skipping the pool-scaling assertion)");
     }
+
+    b.section("batch-native sim path vs the per-frame reference loop (bucket 8)");
+    // The batched datapath (slice-optimized conv, weight-stationary û
+    // projection into a persistent scratch, one cycle-model pass per
+    // batch) must beat running the reference `run_frame` once per image.
+    // Values are bitwise identical between the two paths (asserted by
+    // fpga/backend tests); this guards the host-side speedup.
+    let mut sim = SimBackend::from_config(&BackendConfig::default()).unwrap();
+    let reference = sim.model().clone();
+    let data = generate(Task::Digits, 8, 42);
+    let req = InferRequest::new(data.images.clone());
+    let per_frame_ns = b
+        .bench("per-frame run_frame × 8 (reference loop)", || {
+            data.images
+                .iter()
+                .map(|img| reference.run_frame(img).unwrap().0)
+                .sum::<usize>()
+        })
+        .mean_ns;
+    let batched_ns = b
+        .bench("SimBackend::infer batch=8 (batch-native)", || {
+            sim.infer(&req).unwrap().lengths.len()
+        })
+        .mean_ns;
+    let speedup = per_frame_ns / batched_ns;
+    report_model("batched speedup vs per-frame loop", speedup, "x");
+    assert!(
+        speedup >= 1.3,
+        "batch-native sim path regressed: only {speedup:.2}x over the per-frame loop"
+    );
 
     b.section("single-request path");
     let server = Server::builder(|| {

@@ -1,5 +1,8 @@
 //! Bench: Fig. 1 — throughput and energy across all six configurations
-//! (original / pruned / pruned+optimized × MNIST / F-MNIST).
+//! (original / pruned / pruned+optimized × MNIST / F-MNIST), plus the
+//! frame-pipelined steady-state throughput of each (frames stream
+//! through the stage sequence at the slowest stage's initiation
+//! interval — the sustained-serving number).
 
 use fastcaps::config::SystemConfig;
 use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
@@ -19,8 +22,14 @@ fn main() {
     ] {
         let model = DeployedModel::timing_stub(&cfg, 7);
         let t = model.estimate_frame();
+        let bt = model.estimate_batch(8);
         let u = resources::estimate(&cfg);
-        report_model(&format!("{name} FPS"), t.fps(), "frames/s");
+        report_model(&format!("{name} FPS (single frame)"), t.fps(), "frames/s");
+        report_model(
+            &format!("{name} FPS (pipelined steady-state)"),
+            bt.steady_state_fps(),
+            "frames/s",
+        );
         report_model(
             &format!("{name} FPJ"),
             pm.fpj(t.fps(), &u, !cfg.is_pruned()),

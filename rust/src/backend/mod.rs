@@ -94,12 +94,32 @@ impl InferRequest {
 pub struct InferOutput {
     /// DigitCaps lengths (class scores) per image: `[batch][num_classes]`.
     pub lengths: Vec<Vec<f32>>,
-    /// Modeled on-device latency per frame in seconds, when the backend
-    /// reports timing ([`BackendSpec::reports_timing`]); `None` otherwise.
+    /// Modeled on-device latency of one frame in isolation, when the
+    /// backend reports timing ([`BackendSpec::reports_timing`]);
+    /// `None` otherwise.
     pub frame_latency_s: Option<f64>,
+    /// Modeled on-device time for the whole batch under the pipelined
+    /// cycle model ([`crate::fpga::BatchTiming`]): the first frame's full
+    /// latency plus one initiation interval per further frame — *not*
+    /// `batch × frame_latency_s`.
+    pub batch_latency_s: Option<f64>,
+    /// Modeled steady-state throughput once the accelerator's stage
+    /// pipeline is full (frames/s) — the sustained-serving number.
+    pub steady_state_fps: Option<f64>,
 }
 
 impl InferOutput {
+    /// An output with no modeled timing — for backends (oracle, PJRT,
+    /// test fakes) whose [`BackendSpec::reports_timing`] is false.
+    pub fn untimed(lengths: Vec<Vec<f32>>) -> InferOutput {
+        InferOutput {
+            lengths,
+            frame_latency_s: None,
+            batch_latency_s: None,
+            steady_state_fps: None,
+        }
+    }
+
     /// Argmax class per image (NaN-safe total order).
     pub fn predicted(&self) -> Vec<usize> {
         self.lengths.iter().map(|l| crate::util::argmax(l)).collect()
@@ -133,6 +153,21 @@ impl BackendSpec {
         self.batch_buckets.sort_unstable();
         self.batch_buckets.dedup();
         self
+    }
+
+    /// Canonical bucket ladder for host-synchronous backends: powers of
+    /// two up to `max` (inclusive when `max` itself is a power of two).
+    /// The single owner of bucket policy — `oracle` and `sim` size their
+    /// ladders here instead of copy-pasting literals; PJRT derives its
+    /// buckets from the compiled artifacts in the manifest.
+    pub fn pow2_buckets(max: usize) -> Vec<usize> {
+        let mut buckets = Vec::new();
+        let mut b = 1usize;
+        while b <= max.max(1) {
+            buckets.push(b);
+            b *= 2;
+        }
+        buckets
     }
 }
 
@@ -314,6 +349,34 @@ mod tests {
     fn registry_has_all_three_paths() {
         let r = BackendRegistry::with_defaults();
         assert_eq!(r.names(), vec!["oracle", "pjrt", "sim"]);
+    }
+
+    #[test]
+    fn pow2_bucket_ladder() {
+        assert_eq!(BackendSpec::pow2_buckets(8), vec![1, 2, 4, 8]);
+        assert_eq!(BackendSpec::pow2_buckets(16), vec![1, 2, 4, 8, 16]);
+        // Non-power-of-two caps truncate below the cap; zero still
+        // yields a servable single-frame bucket.
+        assert_eq!(BackendSpec::pow2_buckets(6), vec![1, 2, 4]);
+        assert_eq!(BackendSpec::pow2_buckets(0), vec![1]);
+    }
+
+    #[test]
+    fn sim_reports_batch_timing() {
+        let r = BackendRegistry::with_defaults();
+        let mut b = r.build("sim", &BackendConfig::default()).unwrap();
+        let (c, h, w) = b.spec().input_shape;
+        let bucket = *b.spec().batch_buckets.last().unwrap();
+        let req = InferRequest::new(vec![Tensor::zeros(&[c, h, w]); bucket]);
+        let out = b.infer(&req).unwrap();
+        let frame = out.frame_latency_s.unwrap();
+        let batch = out.batch_latency_s.unwrap();
+        let steady = out.steady_state_fps.unwrap();
+        // Pipelining: the batch costs more than one frame but less than
+        // `bucket` serial frames, and sustained FPS beats 1/latency.
+        assert!(batch > frame, "batch {batch} vs frame {frame}");
+        assert!(batch < bucket as f64 * frame);
+        assert!(steady > 1.0 / frame);
     }
 
     #[test]

@@ -1,11 +1,10 @@
 //! Batch adapter over the fp32 reference model ([`crate::capsnet`]) —
-//! the oracle every other execution path is validated against, now
-//! servable through the same [`InferenceBackend`] API. There is no
-//! batched kernel underneath (the reference forward is per-image), so
-//! the adapter loops the batch; it still exposes several buckets so the
-//! coordinator's batching amortizes queue/dispatch overhead, and the
-//! small buckets keep padding waste low (padding costs a full forward
-//! here, unlike the AOT paths).
+//! the oracle every other execution path is validated against, servable
+//! through the same [`InferenceBackend`] API. Requests run through the
+//! native [`CapsNet::forward_batch`] (shared weight traversal + one
+//! routing scratch across the batch, bit-exact vs the per-image
+//! forward). The bucket ladder stays small: padding still costs a full
+//! forward here, unlike the AOT paths.
 
 use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
 use crate::capsnet::{weights::Weights, CapsNet};
@@ -24,7 +23,7 @@ impl OracleBackend {
             kind: "oracle".into(),
             model: net.config.name.clone(),
             input_shape: net.config.input,
-            batch_buckets: vec![1, 2, 4, 8],
+            batch_buckets: BackendSpec::pow2_buckets(8),
             reports_timing: false,
             max_replicas: None,
         }
@@ -66,18 +65,13 @@ impl InferenceBackend for OracleBackend {
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
         self.validate(req)?;
-        let mut lengths = Vec::with_capacity(req.batch());
-        for img in &req.images {
-            let acts = self
-                .net
-                .forward(img)
-                .map_err(|e| BackendError::Execution(format!("oracle forward: {e:#}")))?;
-            lengths.push(acts.class_lengths());
-        }
-        Ok(InferOutput {
-            lengths,
-            frame_latency_s: None,
-        })
+        let acts = self
+            .net
+            .forward_batch(&req.images)
+            .map_err(|e| BackendError::Execution(format!("oracle forward: {e:#}")))?;
+        Ok(InferOutput::untimed(
+            acts.iter().map(|a| a.class_lengths()).collect(),
+        ))
     }
 }
 

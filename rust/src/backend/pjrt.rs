@@ -94,9 +94,6 @@ impl InferenceBackend for PjrtBackend {
         let lengths = engine
             .run_batch(&req.images)
             .map_err(|e| BackendError::Execution(format!("pjrt batch: {e:#}")))?;
-        Ok(InferOutput {
-            lengths,
-            frame_latency_s: None,
-        })
+        Ok(InferOutput::untimed(lengths))
     }
 }

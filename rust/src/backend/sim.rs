@@ -1,14 +1,18 @@
 //! The fixed-point FPGA accelerator simulator behind the unified API.
-//! Functional Q8.8/Q4.12 datapath per frame, plus the modeled on-device
-//! frame latency ([`BackendSpec::reports_timing`] = true) so serving
-//! metrics can be cross-checked against the cycle model.
+//! Batch-native: requests run through [`DeployedModel::run_batch`] with
+//! one [`BatchScratch`] owned for the backend's whole life, so
+//! steady-state serving allocates nothing per frame, and the reported
+//! timing is the pipelined [`crate::fpga::BatchTiming`] model
+//! ([`BackendSpec::reports_timing`] = true) — per-frame latency, whole
+//! batch latency, and steady-state FPS.
 
 use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
-use crate::fpga::DeployedModel;
+use crate::fpga::{BatchScratch, DeployedModel};
 
 pub struct SimBackend {
     model: DeployedModel,
     spec: BackendSpec,
+    scratch: BatchScratch,
 }
 
 impl SimBackend {
@@ -18,12 +22,20 @@ impl SimBackend {
             kind: "sim".into(),
             model: model.config.model.name.clone(),
             input_shape: model.config.model.input,
-            batch_buckets: vec![1, 2, 4, 8],
+            // Wider ladder than the oracle's: the pipelined cycle model
+            // prices marginal frames at one initiation interval, and the
+            // batch path's scratch reuse keeps the host-side marginal
+            // cost low too, so big buckets pay off.
+            batch_buckets: BackendSpec::pow2_buckets(16),
             reports_timing: true,
             max_replicas: None,
         }
         .normalize();
-        SimBackend { model, spec }
+        SimBackend {
+            model,
+            spec,
+            scratch: BatchScratch::new(),
+        }
     }
 
     /// Registry factory: synthetic deployment of the configured variant
@@ -45,19 +57,19 @@ impl InferenceBackend for SimBackend {
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
         self.validate(req)?;
-        let mut lengths = Vec::with_capacity(req.batch());
-        let mut latency = None;
-        for img in &req.images {
-            let (_, lens, timing) = self
-                .model
-                .run_frame(img)
-                .map_err(|e| BackendError::Execution(format!("sim frame: {e:#}")))?;
-            latency = Some(timing.latency_s());
-            lengths.push(lens);
-        }
+        let out = self
+            .model
+            .run_batch(&req.images, &mut self.scratch)
+            .map_err(|e| BackendError::Execution(format!("sim batch: {e:#}")))?;
+        // The per-frame loop this replaces overwrote `latency` every
+        // iteration and reported only the *last* frame's number as the
+        // batch's time; the batch figures now come from the pipelined
+        // cycle model in one place.
         Ok(InferOutput {
-            lengths,
-            frame_latency_s: latency,
+            lengths: out.lengths,
+            frame_latency_s: Some(out.timing.frame.latency_s()),
+            batch_latency_s: Some(out.timing.latency_s()),
+            steady_state_fps: Some(out.timing.steady_state_fps()),
         })
     }
 }
@@ -88,5 +100,19 @@ mod tests {
         assert!(b.spec().reports_timing);
         assert!(b.spec().max_replicas.is_none());
         assert_eq!(b.spec().input_shape, (1, 28, 28));
+        // Widened ladder: the pipelined model makes big buckets cheap.
+        assert_eq!(b.spec().batch_buckets, vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn batch_latency_is_pipelined_not_summed() {
+        let cfg = SystemConfig::proposed("mnist");
+        let mut b = SimBackend::new(DeployedModel::synthetic(&cfg, 9));
+        let data = generate(Task::Digits, 4, 31);
+        let out = b.infer(&InferRequest::new(data.images)).unwrap();
+        let frame = out.frame_latency_s.unwrap();
+        let batch = out.batch_latency_s.unwrap();
+        assert!(batch > frame && batch < 4.0 * frame, "batch {batch} frame {frame}");
+        assert!(out.steady_state_fps.unwrap() > 1.0 / frame);
     }
 }

@@ -10,7 +10,9 @@
 pub mod weights;
 
 use crate::config::CapsNetConfig;
-use crate::routing::{dynamic_routing, Predictions, RoutingOutput};
+use crate::routing::{
+    dynamic_routing, dynamic_routing_with, Predictions, RoutingOutput, RoutingScratch,
+};
 use crate::tensor::{conv2d, Tensor};
 use crate::util::rng::Rng;
 use crate::Result;
@@ -56,8 +58,10 @@ impl CapsNet {
         CapsNet { config, weights }
     }
 
-    /// Forward one `[c, h, w]` image through the full network.
-    pub fn forward(&self, image: &Tensor) -> Result<Activations> {
+    /// Stages up to (and including) the primary-capsule squash for one
+    /// image — shared verbatim between [`CapsNet::forward`] and
+    /// [`CapsNet::forward_batch`], so the two paths cannot drift.
+    fn primary_stage(&self, image: &Tensor) -> Result<PrimaryStage> {
         let cfg = &self.config;
         anyhow::ensure!(
             image.shape == vec![cfg.input.0, cfg.input.1, cfg.input.2],
@@ -101,6 +105,20 @@ impl CapsNet {
                 }
             }
         }
+        Ok(PrimaryStage {
+            conv1,
+            pc_conv,
+            primary_caps,
+        })
+    }
+
+    /// Forward one `[c, h, w]` image through the full network.
+    pub fn forward(&self, image: &Tensor) -> Result<Activations> {
+        let cfg = &self.config;
+        let stage = self.primary_stage(image)?;
+        let (h2, w2) = cfg.pc_out();
+        let n_caps = cfg.num_primary_caps();
+        let d = cfg.pc_dim;
 
         // DigitCaps projections û_{j|i} = W_{t(i),j}^T u_i (transform shared
         // across spatial positions within a type), then dynamic routing.
@@ -112,7 +130,7 @@ impl CapsNet {
         let w = &self.weights.w_ij;
         for i in 0..n_caps {
             let t = i / spatial;
-            let u = &primary_caps[i * d..(i + 1) * d];
+            let u = &stage.primary_caps[i * d..(i + 1) * d];
             for j in 0..n_out {
                 let base = ((t * n_out) + j) * d * d_out;
                 let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
@@ -131,28 +149,110 @@ impl CapsNet {
         let routing = dynamic_routing(&pred, cfg.routing_iters);
 
         Ok(Activations {
-            conv1,
-            pc_conv,
-            primary_caps,
+            conv1: stage.conv1,
+            pc_conv: stage.pc_conv,
+            primary_caps: stage.primary_caps,
             routing,
         })
     }
 
-    /// Classify one image (argmax of DigitCaps lengths).
-    pub fn predict(&self, image: &Tensor) -> Result<usize> {
-        Ok(self.forward(image)?.predicted_class())
+    /// Forward a batch of images, restructured around shared weight
+    /// traversal: the DigitCaps transform block `W[t][j]` is loaded once
+    /// and applied to every image's capsules of type `t` before moving to
+    /// the next block (weight-stationary, the batch analogue of the PE
+    /// array keeping one kernel resident), and one routing scratch is
+    /// reused across all frames.
+    ///
+    /// Per-element accumulation order is identical to [`CapsNet::forward`]
+    /// (each û element still sums over `kk` ascending), so the results are
+    /// bit-exact equal to the per-image path — a property test pins this.
+    pub fn forward_batch(&self, images: &[Tensor]) -> Result<Vec<Activations>> {
+        let cfg = &self.config;
+        let stages: Vec<PrimaryStage> = images
+            .iter()
+            .map(|img| self.primary_stage(img))
+            .collect::<Result<_>>()?;
+
+        let (h2, w2) = cfg.pc_out();
+        let n_caps = cfg.num_primary_caps();
+        let d = cfg.pc_dim;
+        let n_out = cfg.num_classes;
+        let d_out = cfg.dc_dim;
+        let spatial = h2 * w2;
+
+        // Shared weight traversal over the whole batch: for each transform
+        // block, sweep every image's capsules of that type.
+        let w = &self.weights.w_ij;
+        let mut u_hats = vec![vec![0.0f32; n_caps * n_out * d_out]; stages.len()];
+        for t in 0..cfg.pc_types {
+            for j in 0..n_out {
+                let base = ((t * n_out) + j) * d * d_out;
+                let wblock = &w.data[base..base + d * d_out];
+                for (stage, u_hat) in stages.iter().zip(u_hats.iter_mut()) {
+                    for p in 0..spatial {
+                        let i = t * spatial + p;
+                        let u = &stage.primary_caps[i * d..(i + 1) * d];
+                        let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
+                        for (kk, &uk) in u.iter().enumerate() {
+                            if uk == 0.0 {
+                                continue;
+                            }
+                            let wrow = &wblock[kk * d_out..][..d_out];
+                            for (o, &wv) in out.iter_mut().zip(wrow) {
+                                *o += uk * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Routing per frame, one scratch across the batch.
+        let mut scratch = RoutingScratch::new();
+        Ok(stages
+            .into_iter()
+            .zip(u_hats)
+            .map(|(stage, u_hat)| {
+                let pred = Predictions::new(n_caps, n_out, d_out, u_hat);
+                let routing = dynamic_routing_with(&pred, cfg.routing_iters, &mut scratch);
+                Activations {
+                    conv1: stage.conv1,
+                    pc_conv: stage.pc_conv,
+                    primary_caps: stage.primary_caps,
+                    routing,
+                }
+            })
+            .collect())
     }
 
-    /// Accuracy over a dataset.
+    /// Classify one image (argmax of DigitCaps lengths) — a batch of one
+    /// through the batch-native path.
+    pub fn predict(&self, image: &Tensor) -> Result<usize> {
+        let acts = self.forward_batch(std::slice::from_ref(image))?;
+        Ok(acts[0].predicted_class())
+    }
+
+    /// Accuracy over a dataset, evaluated through the batched forward.
     pub fn accuracy(&self, data: &crate::data::Dataset) -> Result<f64> {
+        const CHUNK: usize = 16;
         let mut correct = 0usize;
-        for (img, &label) in data.images.iter().zip(&data.labels) {
-            if self.predict(img)? == label {
-                correct += 1;
+        for (imgs, labels) in data.images.chunks(CHUNK).zip(data.labels.chunks(CHUNK)) {
+            for (acts, &label) in self.forward_batch(imgs)?.iter().zip(labels) {
+                if acts.predicted_class() == label {
+                    correct += 1;
+                }
             }
         }
         Ok(correct as f64 / data.len().max(1) as f64)
     }
+}
+
+/// Per-image intermediates up to the primary-capsule squash (the part of
+/// the forward pass with no cross-image structure to exploit).
+struct PrimaryStage {
+    conv1: Tensor,
+    pc_conv: Tensor,
+    primary_caps: Vec<f32>,
 }
 
 #[cfg(test)]
@@ -204,6 +304,60 @@ mod tests {
         let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
         let img = Tensor::zeros(&[1, 28, 28]);
         assert!(net.forward(&img).is_err());
+    }
+
+    #[test]
+    fn property_forward_batch_exactly_matches_per_image_forward() {
+        // The batched weight-stationary traversal keeps each û element's
+        // f32 accumulation order identical to the per-image path, so
+        // equality is *exact*, not approximate.
+        let mut rng = Rng::new(21);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        crate::testing::check(
+            "forward_batch == per-image forward (exact f32)",
+            8,
+            22,
+            |r| {
+                let n = 1 + r.below(5);
+                (0..n)
+                    .map(|_| {
+                        Tensor::randn(&[1, 20, 20], 0.4, r).map(|x| x.abs().min(1.0))
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |images| {
+                let batched = net.forward_batch(images).unwrap();
+                images.iter().zip(&batched).all(|(img, got)| {
+                    let want = net.forward(img).unwrap();
+                    got.routing.v == want.routing.v
+                        && got.routing.coupling == want.routing.coupling
+                        && got.primary_caps == want.primary_caps
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn predict_and_accuracy_ride_the_batch_path() {
+        let mut rng = Rng::new(23);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..5 {
+            let img = Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0));
+            labels.push(net.forward(&img).unwrap().predicted_class());
+            assert_eq!(net.predict(&img).unwrap(), labels[i]);
+            images.push(img);
+        }
+        let data = crate::data::Dataset {
+            images,
+            labels,
+            num_classes: 10,
+        };
+        // Labels are the model's own per-image predictions, so the batched
+        // accuracy path must score 100% — any batch/per-image divergence
+        // shows up as a miss.
+        assert_eq!(net.accuracy(&data).unwrap(), 1.0);
     }
 
     #[test]

@@ -43,14 +43,26 @@ impl BatchPolicy {
         if !deadline_hit {
             return None; // keep collecting
         }
-        // Deadline: ship everything using the smallest bucket that fits.
-        let bucket = self
+        // Deadline: ship now. Prefer a *full* bucket when it holds at
+        // least half of what the covering bucket would — padding frames
+        // cost real compute on host-synchronous backends (the sim runs
+        // every blank through the whole datapath), while the small
+        // remainder ships in the very next decision. On a dense pow2
+        // ladder this never pads; on a sparse AOT ladder (e.g. {1, 8})
+        // a short queue still pads the covering bucket rather than
+        // fragmenting into many tiny batches.
+        let cover = self
             .buckets
             .iter()
             .copied()
             .find(|&b| b >= queued)
             .unwrap_or(self.max_bucket());
-        Some((bucket, queued.min(bucket)))
+        if let Some(full) = self.buckets.iter().copied().rev().find(|&b| b <= queued) {
+            if full * 2 >= cover {
+                return Some((full, full));
+            }
+        }
+        Some((cover, queued.min(cover)))
     }
 
     /// Padding waste (fraction of bucket slots unused) for a decision.
@@ -91,6 +103,25 @@ mod tests {
         assert_eq!(policy().decide(3, false), None);
         assert_eq!(policy().decide(3, true), Some((8, 3)));
         assert_eq!(policy().decide(1, true), Some((1, 1)));
+    }
+
+    #[test]
+    fn deadline_prefers_full_bucket_over_heavy_padding() {
+        // The sim backend's dense ladder: 9–15 queued at deadline ship a
+        // full 8-bucket with zero padding instead of a 16-bucket with up
+        // to 7 blank frames of real host compute; the remainder ships in
+        // the next decision.
+        let p = BatchPolicy::new(vec![1, 2, 4, 8, 16], Duration::from_millis(1));
+        assert_eq!(p.decide(9, true), Some((8, 8)));
+        assert_eq!(p.decide(15, true), Some((8, 8)));
+        assert_eq!(p.decide(3, true), Some((2, 2)));
+        assert_eq!(p.decide(1, true), Some((1, 1)));
+        // Sparse AOT-style ladder: a full bucket under half the cover
+        // would fragment the batch, so short queues still pad (the
+        // pinned behavior of `partial_waits_until_deadline`).
+        let sparse = BatchPolicy::new(vec![1, 8], Duration::from_millis(1));
+        assert_eq!(sparse.decide(3, true), Some((8, 3)));
+        assert_eq!(sparse.decide(7, true), Some((8, 7)));
     }
 
     #[test]

@@ -504,10 +504,7 @@ mod tests {
                     l
                 })
                 .collect();
-            Ok(InferOutput {
-                lengths,
-                frame_latency_s: None,
-            })
+            Ok(InferOutput::untimed(lengths))
         }
     }
 
@@ -640,10 +637,7 @@ mod tests {
                 &self.0
             }
             fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
-                Ok(InferOutput {
-                    lengths: vec![vec![0.5; 10]; req.batch()],
-                    frame_latency_s: None,
-                })
+                Ok(InferOutput::untimed(vec![vec![0.5; 10]; req.batch()]))
             }
         }
         let server = Server::builder(|| {
@@ -707,10 +701,7 @@ mod tests {
                 &self.0
             }
             fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
-                Ok(InferOutput {
-                    lengths: vec![vec![0.5; 10]; req.batch()],
-                    frame_latency_s: None,
-                })
+                Ok(InferOutput::untimed(vec![vec![0.5; 10]; req.batch()]))
             }
         }
         let built = Arc::new(AtomicUsize::new(0));

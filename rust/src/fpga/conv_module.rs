@@ -152,6 +152,73 @@ impl ConvModule {
             .collect()
     }
 
+    /// Functional Q8.8 convolution into caller-provided scratch — the
+    /// batch hot path. Values are bitwise identical to
+    /// [`ConvModule::forward`]: the accumulators are plain `i64` integers
+    /// (the DSP cascade never overflows them), so the restructured
+    /// summation order cannot change a single bit.
+    ///
+    /// The restructure is what makes the batch path fast host-side: the
+    /// surviving kernel's 9-tap weight row is hoisted to a slice per
+    /// `ky`, and the inner dot product runs over `zip`ped subslices
+    /// instead of 4-array indexed accesses, so the per-tap bounds checks
+    /// of the reference loop disappear and the compiler can unroll the
+    /// k-wide window.
+    pub fn forward_into(
+        &self,
+        input: &[Q8],
+        h: usize,
+        w: usize,
+        acc: &mut Vec<i64>,
+        out: &mut Vec<Q8>,
+    ) {
+        assert_eq!(input.len(), self.in_ch * h * w);
+        let (oh, ow) = self.out_dims(h, w);
+        acc.clear();
+        acc.resize(self.out_ch * oh * ow, 0);
+        for o in 0..self.out_ch {
+            let b = (self.bias[o] as i64) << self.frac_w;
+            acc[o * oh * ow..(o + 1) * oh * ow].fill(b);
+        }
+        let kk = self.k * self.k;
+        for &(o, i) in &self.index.indices {
+            let (o, i) = (o as usize, i as usize);
+            let wk = &self.weights[(o * self.in_ch + i) * kk..][..kk];
+            for oy in 0..oh {
+                let arow_off = (o * oh + oy) * ow;
+                let arow = &mut acc[arow_off..arow_off + ow];
+                for ky in 0..self.k {
+                    let iy = oy * self.stride + ky;
+                    let irow = &input[(i * h + iy) * w..][..w];
+                    let wrow = &wk[ky * self.k..][..self.k];
+                    for (ox, a) in arow.iter_mut().enumerate() {
+                        let win = &irow[ox * self.stride..][..self.k];
+                        let mut s = 0i64;
+                        for (&wv, xv) in wrow.iter().zip(win) {
+                            s += wv as i64 * xv.raw() as i64;
+                        }
+                        *a += s;
+                    }
+                }
+            }
+        }
+        // Requantize to Q8.8 activations (round-to-nearest, saturate) —
+        // same collapse as `forward`.
+        let half = 1i64 << (self.frac_w - 1);
+        out.clear();
+        out.reserve(acc.len());
+        out.extend(acc.iter().map(|&a| {
+            let r = ((a + half) >> self.frac_w)
+                .clamp(i16::MIN as i64, i16::MAX as i64) as i16;
+            let v = Q8::from_raw(r);
+            if self.relu && v.raw() < 0 {
+                Q8::ZERO
+            } else {
+                v
+            }
+        }));
+    }
+
     /// Cycle cost of one frame through this module.
     pub fn timing(&self, h: usize, w: usize, pe: &PeArray, ii: u64, mem_bw: u64) -> StageTiming {
         let macs = self.macs(h, w);
@@ -228,6 +295,40 @@ mod tests {
         }
         // And the timing reflects only surviving kernels.
         assert_eq!(m.macs(6, 6), 16 * 2 * 9);
+    }
+
+    #[test]
+    fn forward_into_is_bitwise_identical_to_forward() {
+        // Integer accumulators make the restructured loop order exactly
+        // equal, across strides, relu, and pruning patterns.
+        let mut rng = Rng::new(7);
+        for (stride, relu, seed) in [(1usize, false, 10u64), (2, true, 11), (2, false, 12)] {
+            let (w, b) = fixture(6, 3, 3, seed);
+            let mut mask = KernelMask::all_alive(6, 3);
+            for o in 0..6 {
+                for i in 0..3 {
+                    if (o * 3 + i) % 4 == 0 {
+                        mask.set(o, i, false);
+                    }
+                }
+            }
+            let m = ConvModule::new(&w, &b, stride, IndexControl::from_mask(&mask), relu);
+            let input_f = Tensor::randn(&[3, 9, 9], 0.4, &mut rng);
+            let input_q: Vec<Q8> = input_f.data.iter().map(|&x| Q8::from_f32(x)).collect();
+            let want = m.forward(&input_q, 9, 9);
+            let (mut acc, mut got) = (Vec::new(), Vec::new());
+            m.forward_into(&input_q, 9, 9, &mut acc, &mut got);
+            assert_eq!(got, want, "stride={stride} relu={relu}");
+            // Reuse the same scratch for a second frame: no stale state.
+            let input2: Vec<Q8> = Tensor::randn(&[3, 9, 9], 0.4, &mut rng)
+                .data
+                .iter()
+                .map(|&x| Q8::from_f32(x))
+                .collect();
+            let want2 = m.forward(&input2, 9, 9);
+            m.forward_into(&input2, 9, 9, &mut acc, &mut got);
+            assert_eq!(got, want2);
+        }
     }
 
     #[test]

@@ -136,7 +136,9 @@ pub fn routing_timing(g: &RoutingGeometry, hw: &RoutingHardware, pe: &PeArray) -
         let fill = Op::ExpTaylor.cycles() + Op::DivExpLog.cycles() + 4;
         let softmax = r * (fill + (n - 1).max(0) * row_ii + n * j / hw.mem_bw);
         let fc = r * pe.mac_cycles(fc_macs, 1).max(mem(u_words));
-        let agreement = (r - 1) * pe.mac_cycles(agree_macs, 1).max(mem(u_words));
+        // r = 0 runs no agreement pass at all (saturating: plain r − 1
+        // would underflow u64).
+        let agreement = r.saturating_sub(1) * pe.mac_cycles(agree_macs, 1).max(mem(u_words));
         // Squash: J capsules per iteration through the dedicated unit.
         let per_squash = d_out.div_ceil(pe.macs_per_pe as u64)
             + Op::Sqrt.cycles()
@@ -145,7 +147,7 @@ pub fn routing_timing(g: &RoutingGeometry, hw: &RoutingHardware, pe: &PeArray) -
             + 2;
         let squash = r * j * per_squash;
         // Logit update: N·J adds, pipelined.
-        let logit_update = (r - 1) * pipelined_cycles(Op::Add, n * j);
+        let logit_update = r.saturating_sub(1) * pipelined_cycles(Op::Add, n * j);
         RoutingTiming {
             u_hat,
             softmax,
@@ -162,14 +164,14 @@ pub fn routing_timing(g: &RoutingGeometry, hw: &RoutingHardware, pe: &PeArray) -
             + j * Op::Add.cycles();
         let softmax = r * n * per_row;
         let fc = r * PeArray::scalar_mac_cycles(fc_macs, 1);
-        let agreement = (r - 1) * PeArray::scalar_mac_cycles(agree_macs, 1);
+        let agreement = r.saturating_sub(1) * PeArray::scalar_mac_cycles(agree_macs, 1);
         let per_squash = d_out * Op::Mac.cycles()
             + Op::Sqrt.cycles()
             + Op::DivFixed.cycles()
             + d_out * Op::Mul.cycles()
             + 2;
         let squash = r * j * per_squash;
-        let logit_update = (r - 1) * n * j * Op::Add.cycles();
+        let logit_update = r.saturating_sub(1) * n * j * Op::Add.cycles();
         RoutingTiming {
             u_hat,
             softmax,

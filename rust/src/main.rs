@@ -118,23 +118,36 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let data = fastcaps::data::generate(task, frames, seed);
     let pm = PowerModel::default();
     let u = resources::estimate(&cfg);
-    for (i, img) in data.images.iter().enumerate() {
-        let (class, lengths, t) = model.run_frame(img)?;
+    // The batch-native path: one scratch across all frames, cycle model
+    // priced once; per-frame values are bitwise what run_frame computes.
+    let mut scratch = fastcaps::fpga::BatchScratch::new();
+    let out = model.run_batch(&data.images, &mut scratch)?;
+    let t = &out.timing.frame;
+    for i in 0..data.images.len() {
         println!(
-            "frame {i}: label={} predicted={class} top-length={:.3} cycles={} ({:.2} ms)",
+            "frame {i}: label={} predicted={} top-length={:.3} cycles={} ({:.2} ms)",
             data.labels[i],
-            lengths.iter().cloned().fold(0.0f32, f32::max),
+            out.classes[i],
+            out.lengths[i].iter().cloned().fold(0.0f32, f32::max),
             fastcaps::util::fmt_thousands(t.total_cycles()),
             t.latency_s() * 1e3,
         );
     }
-    let t = model.estimate_frame();
     println!(
-        "\nsteady-state: {:.1} FPS, {:.1} FPJ, {:.3} ms/frame  (weights are random — \
+        "\nsingle-frame: {:.1} FPS, {:.1} FPJ, {:.3} ms/frame  (weights are random — \
          predictions are not meaningful, timing is)",
         t.fps(),
         pm.fpj(t.fps(), &u, !cfg.is_pruned()),
         t.latency_s() * 1e3
+    );
+    println!(
+        "pipelined:    {:.1} FPS steady-state ({} cycles/frame initiation interval), \
+         batch of {} in {:.3} ms ({:.1} FPS effective)",
+        out.timing.steady_state_fps(),
+        fastcaps::util::fmt_thousands(out.timing.initiation_cycles()),
+        out.timing.batch,
+        out.timing.latency_s() * 1e3,
+        out.timing.batch_fps(),
     );
     Ok(())
 }

@@ -77,6 +77,15 @@ fn isqrt_u64(x: u64) -> u64 {
 /// norm² in the wide accumulator. Output capsules have norm < 1 and are
 /// returned in Q4.12.
 pub fn squash_q88(s_raw: &[i16], counts: &mut OpCounts) -> Vec<Q12> {
+    let mut out = vec![Q12::ZERO; s_raw.len()];
+    squash_q88_into(s_raw, &mut out, counts);
+    out
+}
+
+/// [`squash_q88`] into a caller-provided buffer (batch hot path: no
+/// per-capsule allocation). Identical arithmetic and op counts.
+pub fn squash_q88_into(s_raw: &[i16], out: &mut [Q12], counts: &mut OpCounts) {
+    debug_assert_eq!(s_raw.len(), out.len());
     // norm² in Q16.16 (sum of squared Q8.8 raws).
     let mut acc: i64 = 0;
     for &x in s_raw {
@@ -84,7 +93,8 @@ pub fn squash_q88(s_raw: &[i16], counts: &mut OpCounts) -> Vec<Q12> {
     }
     counts.macs += s_raw.len() as u64;
     if acc == 0 {
-        return vec![Q12::ZERO; s_raw.len()];
+        out.fill(Q12::ZERO);
+        return;
     }
     // ‖s‖ in Q8.8 = isqrt of the Q16.16 accumulator.
     let norm_q88 = isqrt_u64(acc as u64) as i64;
@@ -96,15 +106,12 @@ pub fn squash_q88(s_raw: &[i16], counts: &mut OpCounts) -> Vec<Q12> {
     let scale_q12 = ((norm_q88 << 20) / denom).clamp(0, i16::MAX as i64);
     counts.divs += 1;
     counts.muls += s_raw.len() as u64;
-    s_raw
-        .iter()
-        .map(|&x| {
-            // Q8.8 × Q4.12 -> shift 8 -> Q4.12 (|v| < 1, no saturation).
-            let p = (x as i64) * scale_q12;
-            let r = (p + (1 << 7)) >> 8;
-            Q12::from_raw(r.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
-        })
-        .collect()
+    for (o, &x) in out.iter_mut().zip(s_raw) {
+        // Q8.8 × Q4.12 -> shift 8 -> Q4.12 (|v| < 1, no saturation).
+        let p = (x as i64) * scale_q12;
+        let r = (p + (1 << 7)) >> 8;
+        *o = Q12::from_raw(r.clamp(i16::MIN as i64, i16::MAX as i64) as i16);
+    }
 }
 
 /// Q4.12 squash on the dedicated Squash unit (Fig. 11a): norm² via MAC
@@ -141,33 +148,44 @@ pub fn squash_q12(s: &[Q12], counts: &mut OpCounts) -> Vec<Q12> {
 /// Baseline: `exp` per element + exact division per element.
 /// Taylor: max-shift, Eq. 2 exp per element, Eq. 3 division per element.
 pub fn softmax_q12(b: &[Q12], mode: SoftmaxMode, counts: &mut OpCounts) -> Vec<Q12> {
+    let mut out = vec![Q12::ZERO; b.len()];
+    softmax_q12_into(b, &mut out, mode, counts);
+    out
+}
+
+/// [`softmax_q12`] into a caller-provided buffer (the exponentials are
+/// staged in `out` itself, then normalized in place). Identical
+/// arithmetic and op counts to the allocating form.
+pub fn softmax_q12_into(b: &[Q12], out: &mut [Q12], mode: SoftmaxMode, counts: &mut OpCounts) {
+    debug_assert_eq!(b.len(), out.len());
     // Max-shift for range safety (a comparator tree in hardware; counted
     // as adds).
     let max = b.iter().fold(Q12::from_raw(i16::MIN), |m, &x| m.max(x));
     counts.adds += b.len() as u64;
-    let exps: Vec<Q12> = b
-        .iter()
-        .map(|&x| taylor::exp_taylor_q12(x.sub(max)))
-        .collect();
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = taylor::exp_taylor_q12(x.sub(max));
+    }
     counts.exps += b.len() as u64;
     // Σ e^x in the wide accumulator (the denominator can exceed the
     // Q4.12 range — the divider/log unit reads the accumulator register).
     let mut acc: i64 = 0;
-    for &e in &exps {
+    for &e in out.iter() {
         acc += e.raw() as i64;
     }
     acc = acc.max(1);
     counts.adds += b.len() as u64;
     counts.divs += b.len() as u64;
     match mode {
-        SoftmaxMode::Baseline => exps
-            .iter()
-            .map(|&e| taylor::div_exact_acc_q12(e, acc))
-            .collect(),
-        SoftmaxMode::Taylor => exps
-            .iter()
-            .map(|&e| taylor::div_explog_acc_q12(e, acc))
-            .collect(),
+        SoftmaxMode::Baseline => {
+            for o in out.iter_mut() {
+                *o = taylor::div_exact_acc_q12(*o, acc);
+            }
+        }
+        SoftmaxMode::Taylor => {
+            for o in out.iter_mut() {
+                *o = taylor::div_explog_acc_q12(*o, acc);
+            }
+        }
     }
 }
 
@@ -225,6 +243,131 @@ impl RoutingOutputQ12 {
     }
 }
 
+/// Reusable working buffers for fixed-point routing — the û tensor,
+/// logit/coupling/output arrays, and the FC-stage staging registers that
+/// [`dynamic_routing_q12`] would otherwise allocate per frame. Batch
+/// callers ([`crate::fpga::DeployedModel::run_batch`]) keep one scratch
+/// alive across all frames: [`RoutingScratch::prepare`] resizes and
+/// resets state for a geometry, the caller fills
+/// [`RoutingScratch::u_hat_mut`] with the frame's predictions, and
+/// [`RoutingScratch::run`] executes the routing iterations over them.
+#[derive(Debug, Default)]
+pub struct RoutingScratch {
+    n_in: usize,
+    n_out: usize,
+    d_out: usize,
+    u_hat: Vec<Q12>,
+    b: Vec<Q12>,
+    c: Vec<Q12>,
+    v: Vec<Q12>,
+    s_acc: Vec<i64>,
+    s_raw: Vec<i16>,
+}
+
+impl RoutingScratch {
+    pub fn new() -> RoutingScratch {
+        RoutingScratch::default()
+    }
+
+    /// Size every buffer for a routing geometry and reset all state
+    /// (logits to zero, û to zero). Reallocation only happens when the
+    /// geometry grows past the retained capacity.
+    pub fn prepare(&mut self, n_in: usize, n_out: usize, d_out: usize) {
+        self.n_in = n_in;
+        self.n_out = n_out;
+        self.d_out = d_out;
+        self.u_hat.clear();
+        self.u_hat.resize(n_in * n_out * d_out, Q12::ZERO);
+        self.b.clear();
+        self.b.resize(n_in * n_out, Q12::ZERO);
+        self.c.clear();
+        self.c.resize(n_in * n_out, Q12::ZERO);
+        self.v.clear();
+        self.v.resize(n_out * d_out, Q12::ZERO);
+        self.s_acc.clear();
+        self.s_acc.resize(d_out, 0);
+        self.s_raw.clear();
+        self.s_raw.resize(d_out, 0);
+    }
+
+    /// The û buffer (`[n_in][n_out][d_out]` flat) for the caller to fill
+    /// after [`RoutingScratch::prepare`] — e.g. the PE-array projection
+    /// writes its outputs straight in here, skipping an intermediate
+    /// tensor.
+    pub fn u_hat_mut(&mut self) -> &mut [Q12] {
+        &mut self.u_hat
+    }
+
+    /// Run dynamic routing over the prepared buffers. Identical
+    /// arithmetic, schedule, and [`OpCounts`] to [`dynamic_routing_q12`]
+    /// (which delegates here) — only the allocations differ.
+    pub fn run(&mut self, iterations: usize, mode: SoftmaxMode) -> RoutingOutputQ12 {
+        let (n_in, n_out, d) = (self.n_in, self.n_out, self.d_out);
+        let RoutingScratch {
+            u_hat,
+            b,
+            c,
+            v,
+            s_acc,
+            s_raw,
+            ..
+        } = self;
+        let mut counts = OpCounts::default();
+
+        for it in 0..iterations {
+            for i in 0..n_in {
+                softmax_q12_into(
+                    &b[i * n_out..(i + 1) * n_out],
+                    &mut c[i * n_out..(i + 1) * n_out],
+                    mode,
+                    &mut counts,
+                );
+            }
+            for j in 0..n_out {
+                // s_j accumulates per-dimension in wide registers (Q8.24).
+                s_acc.fill(0);
+                for i in 0..n_in {
+                    let cij = c[i * n_out + j];
+                    let u = &u_hat[(i * n_out + j) * d..][..d];
+                    for (a, &uk) in s_acc.iter_mut().zip(u) {
+                        *a = cij.mac(uk, *a);
+                    }
+                }
+                counts.macs += (n_in * d) as u64;
+                // Stage s in Q8.8 (range ±128 — weighted sums exceed
+                // Q4.12) and squash on the wide-input unit.
+                for (r, &a) in s_raw.iter_mut().zip(s_acc.iter()) {
+                    *r = ((a + (1 << 15)) >> 16).clamp(i16::MIN as i64, i16::MAX as i64)
+                        as i16;
+                }
+                squash_q88_into(s_raw, &mut v[j * d..(j + 1) * d], &mut counts);
+            }
+            if it + 1 < iterations {
+                for i in 0..n_in {
+                    for j in 0..n_out {
+                        let u = &u_hat[(i * n_out + j) * d..][..d];
+                        let vj = &v[j * d..(j + 1) * d];
+                        let mut acc = 0i64;
+                        for (&uk, &vk) in u.iter().zip(vj) {
+                            acc = uk.mac(vk, acc);
+                        }
+                        counts.macs += d as u64;
+                        b[i * n_out + j] = b[i * n_out + j].add(Q12::from_acc(acc));
+                        counts.adds += 1;
+                    }
+                }
+            }
+        }
+        RoutingOutputQ12 {
+            v: v.clone(),
+            coupling: c.clone(),
+            n_out,
+            d_out: d,
+            counts,
+        }
+    }
+}
+
 /// Fixed-point dynamic routing. Functionally identical for both loop
 /// orders (Code 1 vs Code 2 reorder only changes write patterns/timing),
 /// so one implementation serves both; `mode` selects the non-linear units.
@@ -233,63 +376,23 @@ pub fn dynamic_routing_q12(
     iterations: usize,
     mode: SoftmaxMode,
 ) -> RoutingOutputQ12 {
-    let (n_in, n_out, d) = (pred.n_in, pred.n_out, pred.d_out);
-    let mut counts = OpCounts::default();
-    let mut b = vec![Q12::ZERO; n_in * n_out];
-    let mut c = vec![Q12::ZERO; n_in * n_out];
-    let mut v = vec![Q12::ZERO; n_out * d];
+    dynamic_routing_q12_with(pred, iterations, mode, &mut RoutingScratch::new())
+}
 
-    for it in 0..iterations {
-        for i in 0..n_in {
-            let row = softmax_q12(&b[i * n_out..(i + 1) * n_out], mode, &mut counts);
-            c[i * n_out..(i + 1) * n_out].copy_from_slice(&row);
-        }
-        for j in 0..n_out {
-            // s_j accumulates per-dimension in wide registers (Q8.24).
-            let mut acc = vec![0i64; d];
-            for i in 0..n_in {
-                let cij = c[i * n_out + j];
-                let u = pred.at(i, j);
-                for (a, &uk) in acc.iter_mut().zip(u) {
-                    *a = cij.mac(uk, *a);
-                }
-            }
-            counts.macs += (n_in * d) as u64;
-            // Stage s in Q8.8 (range ±128 — weighted sums exceed Q4.12)
-            // and squash on the wide-input unit.
-            let s_raw: Vec<i16> = acc
-                .iter()
-                .map(|&a| {
-                    ((a + (1 << 15)) >> 16).clamp(i16::MIN as i64, i16::MAX as i64)
-                        as i16
-                })
-                .collect();
-            let sq = squash_q88(&s_raw, &mut counts);
-            v[j * d..(j + 1) * d].copy_from_slice(&sq);
-        }
-        if it + 1 < iterations {
-            for i in 0..n_in {
-                for j in 0..n_out {
-                    let u = pred.at(i, j);
-                    let vj = &v[j * d..(j + 1) * d];
-                    let mut acc = 0i64;
-                    for (&uk, &vk) in u.iter().zip(vj) {
-                        acc = uk.mac(vk, acc);
-                    }
-                    counts.macs += d as u64;
-                    b[i * n_out + j] = b[i * n_out + j].add(Q12::from_acc(acc));
-                    counts.adds += 1;
-                }
-            }
-        }
-    }
-    RoutingOutputQ12 {
-        v,
-        coupling: c,
-        n_out,
-        d_out: d,
-        counts,
-    }
+/// [`dynamic_routing_q12`] with caller-owned scratch: copies the
+/// predictions into the scratch û buffer and runs. Callers that can
+/// write û in place (the simulator's projection stage) should instead
+/// use [`RoutingScratch::prepare`] + [`RoutingScratch::u_hat_mut`] +
+/// [`RoutingScratch::run`] and skip the copy.
+pub fn dynamic_routing_q12_with(
+    pred: &PredictionsQ12,
+    iterations: usize,
+    mode: SoftmaxMode,
+    scratch: &mut RoutingScratch,
+) -> RoutingOutputQ12 {
+    scratch.prepare(pred.n_in, pred.n_out, pred.d_out);
+    scratch.u_hat_mut().copy_from_slice(&pred.u_hat);
+    scratch.run(iterations, mode)
 }
 
 #[cfg(test)]
@@ -338,14 +441,10 @@ mod tests {
         let tay = dynamic_routing_q12(&q, 3, SoftmaxMode::Taylor);
         let bl = base.lengths_f32();
         let tl = tay.lengths_f32();
-        let argmax = |v: &[f32]| {
-            v.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0
-        };
-        assert_eq!(argmax(&bl), argmax(&tl));
+        // NaN-safe total-order argmax (util::argmax) — the local
+        // partial_cmp().unwrap() closure this replaces would panic on a
+        // corrupt length instead of ranking it out.
+        assert_eq!(crate::util::argmax(&bl), crate::util::argmax(&tl));
         for (a, b) in bl.iter().zip(&tl) {
             assert!((a - b).abs() < 0.03, "taylor {a} vs baseline {b}");
         }
@@ -391,6 +490,27 @@ mod tests {
         assert_eq!(out1.counts.exps, 12 * 4);
         // divs = softmax divs + squash divs.
         assert_eq!(out1.counts.divs, 12 * 4 + 4);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless_and_bitwise() {
+        // One scratch threaded across frames of different geometry must
+        // reproduce the allocating path bit for bit — including the op
+        // counts the cycle model replays.
+        let mut scratch = RoutingScratch::new();
+        for (seed, (n_in, n_out, d)) in
+            [(4u64, (24, 10, 8)), (5, (8, 4, 16)), (6, (24, 10, 8))]
+        {
+            let pred = random_predictions(n_in, n_out, d, seed);
+            let q = PredictionsQ12::quantize(&pred);
+            for mode in [SoftmaxMode::Baseline, SoftmaxMode::Taylor] {
+                let fresh = dynamic_routing_q12(&q, 3, mode);
+                let reused = dynamic_routing_q12_with(&q, 3, mode, &mut scratch);
+                assert_eq!(fresh.v, reused.v);
+                assert_eq!(fresh.coupling, reused.coupling);
+                assert_eq!(fresh.counts, reused.counts);
+            }
+        }
     }
 
     #[test]

@@ -16,21 +16,45 @@ pub mod fixed;
 
 /// Squash non-linearity: `v = (‖s‖² / (1 + ‖s‖²)) · s / ‖s‖`.
 pub fn squash(s: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; s.len()];
+    squash_into(s, &mut out);
+    out
+}
+
+/// [`squash`] into a caller-provided buffer (batch hot path: no per-call
+/// allocation). Identical arithmetic to the allocating form.
+pub fn squash_into(s: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(s.len(), out.len());
     let norm2: f32 = s.iter().map(|x| x * x).sum();
     if norm2 == 0.0 {
-        return vec![0.0; s.len()];
+        out.fill(0.0);
+        return;
     }
     let norm = norm2.sqrt();
     let scale = norm2 / (1.0 + norm2) / norm;
-    s.iter().map(|&x| x * scale).collect()
+    for (o, &x) in out.iter_mut().zip(s) {
+        *o = x * scale;
+    }
 }
 
 /// Row softmax: `c_j = e^{b_j} / Σ_k e^{b_k}` (max-shifted for stability).
 pub fn softmax(b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; b.len()];
+    softmax_into(b, &mut out);
+    out
+}
+
+/// [`softmax`] into a caller-provided buffer. Identical arithmetic.
+pub fn softmax_into(b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(b.len(), out.len());
     let max = b.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = b.iter().map(|&x| (x - max).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    exps.iter().map(|&e| e / sum).collect()
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = (x - max).exp();
+    }
+    let sum: f32 = out.iter().sum();
+    for o in out.iter_mut() {
+        *o /= sum;
+    }
 }
 
 /// Prediction vectors `û_{j|i}` laid out as `[n_in][n_out][d_out]` flat.
@@ -100,20 +124,59 @@ impl RoutingOutput {
 ///   b_ij ← b_ij + û_{j|i} · v_j              (agreement step)
 /// ```
 pub fn dynamic_routing(pred: &Predictions, iterations: usize) -> RoutingOutput {
+    dynamic_routing_with(pred, iterations, &mut RoutingScratch::new())
+}
+
+/// Reusable working buffers for [`dynamic_routing_with`]: the logits,
+/// coupling, output-capsule, and weighted-sum arrays that the routing
+/// loop would otherwise allocate on every call. Batch callers
+/// ([`crate::capsnet::CapsNet::forward_batch`]) thread one scratch
+/// across all frames; buffers are resized and reset per call, so reuse
+/// can never leak state between frames.
+#[derive(Debug, Default)]
+pub struct RoutingScratch {
+    b: Vec<f32>,
+    c: Vec<f32>,
+    v: Vec<f32>,
+    s: Vec<f32>,
+}
+
+impl RoutingScratch {
+    pub fn new() -> RoutingScratch {
+        RoutingScratch::default()
+    }
+}
+
+/// [`dynamic_routing`] with caller-owned scratch — identical arithmetic
+/// (the allocating form delegates here), no per-frame allocation beyond
+/// the returned output.
+pub fn dynamic_routing_with(
+    pred: &Predictions,
+    iterations: usize,
+    scratch: &mut RoutingScratch,
+) -> RoutingOutput {
     let (n_in, n_out, d) = (pred.n_in, pred.n_out, pred.d_out);
-    let mut b = vec![0.0f32; n_in * n_out];
-    let mut c = vec![0.0f32; n_in * n_out];
-    let mut v = vec![0.0f32; n_out * d];
+    let RoutingScratch { b, c, v, s } = scratch;
+    b.clear();
+    b.resize(n_in * n_out, 0.0);
+    c.clear();
+    c.resize(n_in * n_out, 0.0);
+    v.clear();
+    v.resize(n_out * d, 0.0);
+    s.clear();
+    s.resize(d, 0.0);
 
     for it in 0..iterations {
         // Softmax over each input capsule's row of logits.
         for i in 0..n_in {
-            let row = softmax(&b[i * n_out..(i + 1) * n_out]);
-            c[i * n_out..(i + 1) * n_out].copy_from_slice(&row);
+            softmax_into(
+                &b[i * n_out..(i + 1) * n_out],
+                &mut c[i * n_out..(i + 1) * n_out],
+            );
         }
         // Weighted sum and squash per output capsule.
         for j in 0..n_out {
-            let mut s = vec![0.0f32; d];
+            s.fill(0.0);
             for i in 0..n_in {
                 let cij = c[i * n_out + j];
                 let u = pred.at(i, j);
@@ -121,7 +184,7 @@ pub fn dynamic_routing(pred: &Predictions, iterations: usize) -> RoutingOutput {
                     *sk += cij * uk;
                 }
             }
-            v[j * d..(j + 1) * d].copy_from_slice(&squash(&s));
+            squash_into(s, &mut v[j * d..(j + 1) * d]);
         }
         // Agreement update (skipped after the last iteration — the logits
         // would never be read again).
@@ -138,8 +201,8 @@ pub fn dynamic_routing(pred: &Predictions, iterations: usize) -> RoutingOutput {
         }
     }
     RoutingOutput {
-        v,
-        coupling: c,
+        v: v.clone(),
+        coupling: c.clone(),
         n_out,
         d_out: d,
     }
@@ -251,6 +314,25 @@ mod tests {
             (0..n_in).map(|i| o.coupling[i * n_out]).sum::<f32>()
         };
         assert!(sharp(&c3) > sharp(&c1));
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // One scratch threaded across problems of *different* geometry
+        // must reproduce the allocating path bit for bit — stale buffer
+        // contents may never leak between frames.
+        let mut rng = Rng::new(9);
+        let mut scratch = RoutingScratch::new();
+        for (n_in, n_out, d) in [(12, 4, 8), (5, 3, 4), (20, 10, 16), (5, 3, 4)] {
+            let u: Vec<f32> = (0..n_in * n_out * d)
+                .map(|_| rng.normal_f32(0.0, 0.7))
+                .collect();
+            let pred = Predictions::new(n_in, n_out, d, u);
+            let fresh = dynamic_routing(&pred, 3);
+            let reused = dynamic_routing_with(&pred, 3, &mut scratch);
+            assert_eq!(fresh.v, reused.v);
+            assert_eq!(fresh.coupling, reused.coupling);
+        }
     }
 
     #[test]

@@ -7,6 +7,10 @@ for the compute layer the rust runtime ends up executing.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# The property sweeps need hypothesis; skip the module (with a reason,
+# not a collection error) in environments without it. CI installs it.
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import matmul, ref, routing, softmax_taylor, squash

@@ -23,6 +23,7 @@ fn spec(kind: &str) -> BackendSpec {
         batch_buckets: vec![1, 8],
         reports_timing: false,
         max_replicas: None,
+        compression: None,
     }
 }
 

@@ -5,14 +5,15 @@
 //! a string-keyed [`BackendRegistry`].
 //!
 //! ```text
-//!             BackendRegistry ("oracle" | "sim" | "pjrt")
+//!        BackendRegistry ("oracle" | "oracle-sparse" | "sim" | "pjrt")
 //!                     │ build(name, &BackendConfig)
 //!                     ▼
 //!              Box<dyn InferenceBackend>
-//!              ┌───────┼─────────────┐
-//!              ▼       ▼             ▼
-//!        OracleBackend SimBackend PjrtBackend
-//!        (capsnet fp32) (fpga Q-path) (runtime HLO)
+//!        ┌───────────┬───────┼─────────────┐
+//!        ▼           ▼       ▼             ▼
+//!  OracleBackend SparseOracle SimBackend PjrtBackend
+//!  (capsnet fp32) (compiled    (fpga      (runtime HLO)
+//!                  sparse fp32) Q-path)
 //! ```
 //!
 //! The coordinator ([`crate::coordinator::server`]) schedules batches
@@ -27,11 +28,14 @@
 pub mod oracle;
 pub mod pjrt;
 pub mod sim;
+pub mod sparse;
 
 pub use oracle::OracleBackend;
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
+pub use sparse::SparseOracleBackend;
 
+use crate::capsnet::compiled::CompressionStats;
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -144,6 +148,10 @@ pub struct BackendSpec {
     /// Maximum concurrently running instances (`None` = unbounded).
     /// PJRT executables are single-owner, so that backend pins 1.
     pub max_replicas: Option<usize>,
+    /// Kernel-compression metadata when the backend executes a
+    /// sparse-compiled model (`oracle-sparse`): survivor counts and the
+    /// §III-C index-memory cost. `None` for dense execution paths.
+    pub compression: Option<CompressionStats>,
 }
 
 impl BackendSpec {
@@ -296,11 +304,15 @@ impl BackendRegistry {
         }
     }
 
-    /// The three built-in execution paths: `"oracle"`, `"sim"`, `"pjrt"`.
+    /// The built-in execution paths: `"oracle"`, `"oracle-sparse"`,
+    /// `"sim"`, `"pjrt"`.
     pub fn with_defaults() -> BackendRegistry {
         let mut r = BackendRegistry::new();
         r.register("oracle", |cfg| {
             Ok(Box::new(OracleBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
+        });
+        r.register("oracle-sparse", |cfg| {
+            Ok(Box::new(SparseOracleBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
         });
         r.register("sim", |cfg| {
             Ok(Box::new(SimBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
@@ -346,9 +358,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_all_three_paths() {
+    fn registry_has_all_builtin_paths() {
         let r = BackendRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["oracle", "pjrt", "sim"]);
+        assert_eq!(r.names(), vec!["oracle", "oracle-sparse", "pjrt", "sim"]);
     }
 
     #[test]
@@ -391,8 +403,13 @@ mod tests {
     #[test]
     fn sim_and_oracle_build_and_infer_one_bucket() {
         let r = BackendRegistry::with_defaults();
-        let cfg = BackendConfig::default();
-        for kind in ["sim", "oracle"] {
+        let cfg = BackendConfig {
+            // Nonexistent artifact dir: the oracle paths fall back to
+            // seeded random weights instead of depending on local files.
+            artifacts: PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        };
+        for kind in ["sim", "oracle", "oracle-sparse"] {
             let mut b = r.build(kind, &cfg).unwrap();
             let spec = b.spec().clone();
             assert_eq!(spec.kind, kind);

@@ -26,6 +26,7 @@ impl OracleBackend {
             batch_buckets: BackendSpec::pow2_buckets(8),
             reports_timing: false,
             max_replicas: None,
+            compression: None,
         }
         .normalize();
         OracleBackend { net, spec }

@@ -43,6 +43,7 @@ impl PjrtBackend {
             batch_buckets: engines.iter().map(|e| e.batch_size()).collect(),
             reports_timing: false,
             max_replicas: Some(1),
+            compression: None,
         }
         .normalize();
         Ok(PjrtBackend { engines, spec })

@@ -29,6 +29,7 @@ impl SimBackend {
             batch_buckets: BackendSpec::pow2_buckets(16),
             reports_timing: true,
             max_replicas: None,
+            compression: None,
         }
         .normalize();
         SimBackend {

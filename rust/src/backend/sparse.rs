@@ -1,0 +1,184 @@
+//! The sparse-compiled fp32 oracle behind the unified API
+//! (`"oracle-sparse"`): the prune→compile→serve path.
+//!
+//! Where [`super::OracleBackend`] serves the hand-compacted pruned
+//! architecture densely, this backend runs the *full* paper architecture
+//! through LAKP at the deployment plan's survivor counts
+//! ([`crate::config::SparsityPlan::paper_mnist`]: 64 + 423 kernels →
+//! 99.26% compression), compiles the survivors into the CSR packing
+//! shared with the FPGA Index Control Module, and executes only alive
+//! kernels — values stay bit-exact to the masked-dense reference while
+//! the dense ~1%-alive multiply cost disappears
+//! (`benches/pruning_bench.rs` asserts the ≥5× win). The spec reports
+//! the packing's [`CompressionStats`] so the coordinator and CLI can
+//! surface what the replica actually executes.
+
+use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use crate::capsnet::compiled::CompiledCapsNet;
+use crate::capsnet::{weights::Weights, CapsNet};
+use crate::config::{CapsNetConfig, SparsityPlan};
+use crate::pruning::NetworkMasks;
+use crate::util::rng::Rng;
+
+pub struct SparseOracleBackend {
+    net: CompiledCapsNet,
+    spec: BackendSpec,
+}
+
+impl SparseOracleBackend {
+    /// Wrap an already-compiled model.
+    pub fn new(net: CompiledCapsNet) -> SparseOracleBackend {
+        let stats = net.stats();
+        let spec = BackendSpec {
+            kind: "oracle-sparse".into(),
+            model: format!("{}-compiled", net.config.name),
+            input_shape: net.config.input,
+            batch_buckets: BackendSpec::pow2_buckets(8),
+            reports_timing: false,
+            max_replicas: None,
+            compression: Some(stats),
+        }
+        .normalize();
+        SparseOracleBackend { net, spec }
+    }
+
+    /// Registry factory: the full paper architecture for the dataset,
+    /// LAKP-pruned at the paper's survivor counts and compiled.
+    ///
+    /// Like the other factories, this does its full setup (here: LAKP
+    /// scoring + sparse compile, ~startup-only cost) once per replica —
+    /// the executor pool builds each replica's backend on its own
+    /// thread. When spinning many replicas around one model, compile
+    /// once and clone into a `ServerBuilder` closure instead (the
+    /// `fastcaps prune --compile --serve` path does exactly that).
+    ///
+    /// Weights resolve in order: an explicit [`BackendConfig::weights`]
+    /// override (must match the *full* architecture — the conventional
+    /// per-dataset `.fcw` files hold the compacted pruned architecture
+    /// and would be rejected), then `weights-<dataset>-full.fcw` in the
+    /// artifact directory, then seeded random weights (predictions are
+    /// noise, but the prune→compile→serve path is exercised end to end).
+    pub fn from_config(cfg: &BackendConfig) -> Result<SparseOracleBackend, BackendError> {
+        let (arch, plan) = if cfg.is_fmnist() {
+            (
+                CapsNetConfig::paper_full("capsnet-fmnist"),
+                SparsityPlan::paper_fmnist(),
+            )
+        } else {
+            (
+                CapsNetConfig::paper_full("capsnet-mnist"),
+                SparsityPlan::paper_mnist(),
+            )
+        };
+        let weights_path = match &cfg.weights {
+            Some(p) => Some(p.clone()),
+            None => {
+                let conventional = cfg.artifacts.join(if cfg.is_fmnist() {
+                    "weights-fmnist-full.fcw"
+                } else {
+                    "weights-mnist-full.fcw"
+                });
+                conventional.exists().then_some(conventional)
+            }
+        };
+        let weights = match weights_path {
+            Some(path) => {
+                let w = Weights::load(&path)
+                    .map_err(|e| BackendError::Init(format!("loading {path:?}: {e:#}")))?;
+                w.validate(&arch).map_err(|e| {
+                    BackendError::Init(format!(
+                        "oracle-sparse compiles the full architecture; weights mismatch: {e:#}"
+                    ))
+                })?;
+                w
+            }
+            None => Weights::random(&arch, &mut Rng::new(cfg.seed)),
+        };
+        let net = CapsNet {
+            config: arch,
+            weights,
+        };
+        let masks = NetworkMasks::from_plan(&net.weights, &net.config, &plan);
+        let compiled = CompiledCapsNet::compile(&net, &masks)
+            .map_err(|e| BackendError::Init(format!("sparse compile: {e:#}")))?;
+        Ok(SparseOracleBackend::new(compiled))
+    }
+
+    pub fn model(&self) -> &CompiledCapsNet {
+        &self.net
+    }
+}
+
+impl InferenceBackend for SparseOracleBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        let acts = self
+            .net
+            .forward_batch(&req.images)
+            .map_err(|e| BackendError::Execution(format!("sparse oracle forward: {e:#}")))?;
+        Ok(InferOutput::untimed(
+            acts.iter().map(|a| a.class_lengths()).collect(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tiny_sparse() -> (CapsNet, NetworkMasks, SparseOracleBackend) {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(15);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 128);
+        let b = SparseOracleBackend::new(CompiledCapsNet::compile(&net, &masks).unwrap());
+        (net, masks, b)
+    }
+
+    #[test]
+    fn spec_reports_compression() {
+        let (_, masks, b) = tiny_sparse();
+        assert_eq!(b.spec().kind, "oracle-sparse");
+        let c = b.spec().compression.as_ref().unwrap();
+        assert_eq!(c.survived_kernels, masks.survived());
+        assert_eq!(c.total_kernels, masks.total());
+        assert!(c.pruned_pct() > 50.0);
+    }
+
+    #[test]
+    fn served_lengths_match_masked_dense_oracle() {
+        let (net, masks, mut b) = tiny_sparse();
+        let dense = net.masked(&masks);
+        let mut rng = Rng::new(16);
+        let images: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0)))
+            .collect();
+        let out = b.infer(&InferRequest::new(images.clone())).unwrap();
+        for (img, got) in images.iter().zip(&out.lengths) {
+            let want = dense.forward(img).unwrap().class_lengths();
+            assert_eq!(got, &want, "bit-exactness through the serving API");
+        }
+        assert!(out.frame_latency_s.is_none());
+    }
+
+    #[test]
+    fn from_config_compiles_paper_plan() {
+        // Random weights (no artifacts on disk in tests): still compiles
+        // the full architecture at the paper's survivor counts.
+        let cfg = BackendConfig {
+            artifacts: std::path::PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        };
+        let b = SparseOracleBackend::from_config(&cfg).unwrap();
+        let c = b.spec().compression.as_ref().unwrap();
+        assert_eq!(c.survived_kernels, 64 + 423);
+        assert_eq!(c.total_kernels, 256 + 65536);
+        assert!(c.pruned_pct() > 99.0);
+        assert_eq!(b.spec().input_shape, (1, 28, 28));
+    }
+}

@@ -1,0 +1,442 @@
+//! Sparse-compiled execution of a pruned CapsNet.
+//!
+//! LAKP leaves the network ~99% kernel-sparse (§III-A: 99.26% of MNIST
+//! conv kernels removed), but [`crate::pruning::KernelMask::apply`] only
+//! *zeroes* weights — a masked-dense forward still multiplies through
+//! every dead kernel. [`CompiledCapsNet`] closes that prune→execute gap:
+//! [`CompiledCapsNet::compile`] packs only the surviving kernels into a
+//! CSR-style per-layer layout whose alive-kernel index lists are the
+//! FPGA Index Control Module's own representation
+//! ([`IndexControl::packed_rows`], §III-C), so the software and hardware
+//! models share one sparsity encoding, and `forward`/`forward_batch`
+//! skip dead kernels entirely.
+//!
+//! ## Bit-exactness contract
+//!
+//! `compile(net, masks).forward(x) ≡ net.masked(masks).forward(x)`
+//! per element, for finite activations. This holds because
+//!
+//! * within each output channel the packed kernels keep ascending
+//!   input-channel order (the dense loop order), so the surviving
+//!   contributions are accumulated in exactly the dense sequence, and
+//! * a dead kernel's dense contribution is `acc += x * 0.0`, which
+//!   leaves a finite f32 accumulator unchanged — skipping it is exact;
+//! * every post-conv stage (primary-capsule squash, DigitCaps û
+//!   projection, dynamic routing) is the *same code* as the dense path
+//!   ([`squash_primary`] and the shared `finish_forward` /
+//!   `finish_forward_batch` routing tails), not a reimplementation.
+//!
+//! A property test pins the contract on random masks; the golden test
+//! in `tests/compiled_golden.rs` pins it at the paper's MNIST/F-MNIST
+//! compression points and at 100% density (compiled ≡ dense).
+
+use super::{
+    finish_forward, finish_forward_batch, squash_primary, Activations, CapsNet, PrimaryStage,
+};
+use crate::config::CapsNetConfig;
+use crate::fpga::index_control::{IndexControl, PackedRows};
+use crate::pruning::{KernelMask, NetworkMasks};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// One conv layer packed to its surviving kernels.
+#[derive(Debug, Clone)]
+pub struct SparseConvLayer {
+    pub out_ch: usize,
+    pub in_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    /// Alive-kernel index lists — the layout `IndexControl` keeps
+    /// on-chip (§III-C), shared verbatim with the hardware model.
+    pub index: PackedRows,
+    /// Packed kernel weights: `kh*kw` values per surviving kernel, in
+    /// `index` order (out channel major, in channel ascending).
+    data: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl SparseConvLayer {
+    /// Pack the surviving kernels of an OIHW tensor.
+    pub fn pack(
+        w: &Tensor,
+        bias: &Tensor,
+        stride: usize,
+        mask: &KernelMask,
+    ) -> Result<SparseConvLayer> {
+        anyhow::ensure!(w.rank() == 4, "expected OIHW weights, got {:?}", w.shape);
+        let (out_ch, in_ch, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+        anyhow::ensure!(
+            mask.out_ch == out_ch && mask.in_ch == in_ch,
+            "mask grid {}x{} != weight grid {}x{}",
+            mask.out_ch,
+            mask.in_ch,
+            out_ch,
+            in_ch
+        );
+        anyhow::ensure!(
+            bias.len() == out_ch,
+            "bias len {} != out_ch {}",
+            bias.len(),
+            out_ch
+        );
+        let index = IndexControl::from_mask(mask).packed_rows();
+        let kk = kh * kw;
+        let mut data = Vec::with_capacity(index.survived() * kk);
+        for o in 0..out_ch {
+            for &i in index.row(o) {
+                let base = (o * in_ch + i as usize) * kk;
+                data.extend_from_slice(&w.data[base..base + kk]);
+            }
+        }
+        Ok(SparseConvLayer {
+            out_ch,
+            in_ch,
+            kh,
+            kw,
+            stride,
+            index,
+            data,
+            bias: bias.data.clone(),
+        })
+    }
+
+    /// Sparse 2-D convolution over `[C_in, H, W]` input: the dense
+    /// `conv2d` loop nest with the input-channel loop replaced by this
+    /// output channel's alive-kernel list. Dead output channels (empty
+    /// rows) still produce `bias` like the dense path.
+    pub fn forward(&self, input: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            input.rank() == 3 && input.shape[0] == self.in_ch,
+            "sparse conv wants [{}, H, W], got {:?}",
+            self.in_ch,
+            input.shape
+        );
+        let (h, w) = (input.shape[1], input.shape[2]);
+        anyhow::ensure!(h >= self.kh && w >= self.kw, "kernel larger than input");
+        let oh = (h - self.kh) / self.stride + 1;
+        let ow = (w - self.kw) / self.stride + 1;
+        let kk = self.kh * self.kw;
+        let mut out = Tensor::zeros(&[self.out_ch, oh, ow]);
+        for o in 0..self.out_ch {
+            let b = self.bias[o];
+            let row_start = self.index.row_ptr[o] as usize;
+            let row = self.index.row(o);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = b;
+                    for (n, &i) in row.iter().enumerate() {
+                        let kernel = &self.data[(row_start + n) * kk..][..kk];
+                        let i = i as usize;
+                        for ky in 0..self.kh {
+                            let iy = oy * self.stride + ky;
+                            let in_row =
+                                &input.data[(i * h + iy) * w + ox * self.stride..];
+                            let w_row = &kernel[ky * self.kw..][..self.kw];
+                            for (kx, &wv) in w_row.iter().enumerate() {
+                                acc += in_row[kx] * wv;
+                            }
+                        }
+                    }
+                    out.data[(o * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn survived(&self) -> usize {
+        self.index.survived()
+    }
+
+    pub fn total(&self) -> usize {
+        self.out_ch * self.in_ch
+    }
+
+    /// On-chip index memory this layer's survivor list costs (the
+    /// packing owns the §III-C cost model).
+    pub fn index_bytes(&self) -> usize {
+        self.index.index_bytes()
+    }
+}
+
+/// Packing summary of a compiled model — the compression metadata the
+/// `oracle-sparse` backend reports through its `BackendSpec`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionStats {
+    pub survived_kernels: usize,
+    pub total_kernels: usize,
+    /// §III-C index memory: bytes of alive-kernel indices kept on-chip.
+    pub index_bytes: usize,
+}
+
+impl CompressionStats {
+    /// Fraction of conv kernels eliminated, percent (the paper's
+    /// headline 99.26 / 98.84 numbers at the deployment masks).
+    pub fn pruned_pct(&self) -> f64 {
+        crate::pruning::pruned_pct(self.survived_kernels, self.total_kernels)
+    }
+}
+
+/// A CapsNet compiled against its pruning masks: only surviving kernels
+/// are stored and executed. See the module docs for the bit-exactness
+/// contract vs the masked-dense [`CapsNet`].
+#[derive(Debug, Clone)]
+pub struct CompiledCapsNet {
+    pub config: CapsNetConfig,
+    pub conv1: SparseConvLayer,
+    pub pc: SparseConvLayer,
+    /// DigitCaps transform `[pc_types, n_classes, pc_dim, dc_dim]` —
+    /// dense: it is tiny and its dead-capsule work is already skipped
+    /// value-wise (`û += 0 · w` short-circuits in the projection).
+    w_ij: Tensor,
+}
+
+impl CompiledCapsNet {
+    /// Pack `net`'s surviving kernels under `masks`.
+    ///
+    /// The weights are read *unmasked* and packing selects whole
+    /// kernels, so `compile(net, m) == compile(net.masked(m), m)`; for
+    /// unstructured ([`crate::pruning::WeightMask`]) pruning, apply the
+    /// weight mask to the tensors first and compile with its
+    /// [`crate::pruning::WeightMask::to_kernel_mask`] collapse — the
+    /// packed kernels then carry their interior zeros.
+    pub fn compile(net: &CapsNet, masks: &NetworkMasks) -> Result<CompiledCapsNet> {
+        let cfg = &net.config;
+        net.weights.validate(cfg)?;
+        let conv1 = SparseConvLayer::pack(
+            &net.weights.conv1_w,
+            &net.weights.conv1_b,
+            cfg.conv1_stride,
+            &masks.conv1,
+        )?;
+        let pc = SparseConvLayer::pack(
+            &net.weights.pc_w,
+            &net.weights.pc_b,
+            cfg.pc_stride,
+            &masks.pc,
+        )?;
+        Ok(CompiledCapsNet {
+            config: cfg.clone(),
+            conv1,
+            pc,
+            w_ij: net.weights.w_ij.clone(),
+        })
+    }
+
+    pub fn stats(&self) -> CompressionStats {
+        CompressionStats {
+            survived_kernels: self.conv1.survived() + self.pc.survived(),
+            total_kernels: self.conv1.total() + self.pc.total(),
+            index_bytes: self.conv1.index_bytes() + self.pc.index_bytes(),
+        }
+    }
+
+    /// The sparse primary stage: Conv1 → ReLU → PrimaryCaps conv over
+    /// surviving kernels only, then the shared squash regrouping — the
+    /// same [`PrimaryStage`] the dense path produces, so the routing
+    /// tail is literally shared code.
+    fn primary_stage(&self, image: &Tensor) -> Result<PrimaryStage> {
+        let cfg = &self.config;
+        anyhow::ensure!(
+            image.shape == vec![cfg.input.0, cfg.input.1, cfg.input.2],
+            "input shape {:?} != config {:?}",
+            image.shape,
+            cfg.input
+        );
+        let conv1 = self.conv1.forward(image)?.relu();
+        let pc_conv = self.pc.forward(&conv1)?;
+        let primary_caps = squash_primary(cfg, &pc_conv);
+        Ok(PrimaryStage {
+            conv1,
+            pc_conv,
+            primary_caps,
+        })
+    }
+
+    /// Forward one image — bit-exact to the masked-dense
+    /// [`CapsNet::forward`]: the sparse primary stage, then the dense
+    /// path's own routing tail ([`finish_forward`]).
+    pub fn forward(&self, image: &Tensor) -> Result<Activations> {
+        let stage = self.primary_stage(image)?;
+        Ok(finish_forward(&self.config, &self.w_ij, stage))
+    }
+
+    /// Forward a batch — the sparse primary stage per frame, then the
+    /// dense path's batched tail ([`finish_forward_batch`]:
+    /// weight-stationary û traversal, one routing scratch). Bit-exact to
+    /// both the per-image [`Self::forward`] and the masked-dense batch
+    /// path.
+    pub fn forward_batch(&self, images: &[Tensor]) -> Result<Vec<Activations>> {
+        let stages: Vec<PrimaryStage> = images
+            .iter()
+            .map(|img| self.primary_stage(img))
+            .collect::<Result<_>>()?;
+        Ok(finish_forward_batch(&self.config, &self.w_ij, stages))
+    }
+
+    /// Classify one image through the batch path.
+    pub fn predict(&self, image: &Tensor) -> Result<usize> {
+        let acts = self.forward_batch(std::slice::from_ref(image))?;
+        Ok(acts[0].predicted_class())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_masks(cfg: &CapsNetConfig, r: &mut Rng) -> NetworkMasks {
+        let mut masks = NetworkMasks::dense(cfg);
+        // Random density per layer, including occasionally fully dense.
+        let p_dead = [0, 3, 6, 9][r.below(4)];
+        for o in 0..masks.conv1.out_ch {
+            for i in 0..masks.conv1.in_ch {
+                if r.below(10) < p_dead {
+                    masks.conv1.set(o, i, false);
+                }
+            }
+        }
+        for o in 0..masks.pc.out_ch {
+            for i in 0..masks.pc.in_ch {
+                if r.below(10) < p_dead {
+                    masks.pc.set(o, i, false);
+                }
+            }
+        }
+        masks
+    }
+
+    #[test]
+    fn property_compiled_is_bit_exact_to_masked_dense() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(41);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        crate::testing::check(
+            "compile(mask(net)) ≡ mask(net), element-exact",
+            8,
+            42,
+            |r| {
+                let masks = random_masks(&cfg, r);
+                let img = Tensor::randn(&[1, 20, 20], 0.4, r).map(|x| x.abs().min(1.0));
+                (masks, img)
+            },
+            |(masks, img)| {
+                let dense = net.masked(masks);
+                let compiled = CompiledCapsNet::compile(&net, masks).unwrap();
+                let want = dense.forward(img).unwrap();
+                let got = compiled.forward(img).unwrap();
+                got.conv1.data == want.conv1.data
+                    && got.pc_conv.data == want.pc_conv.data
+                    && got.primary_caps == want.primary_caps
+                    && got.routing.v == want.routing.v
+                    && got.routing.coupling == want.routing.coupling
+            },
+        );
+    }
+
+    #[test]
+    fn property_compiled_batch_matches_per_image() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(43);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 96);
+        let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+        crate::testing::check(
+            "compiled forward_batch == per-image forward (exact f32)",
+            6,
+            44,
+            |r| {
+                let n = 1 + r.below(4);
+                (0..n)
+                    .map(|_| Tensor::randn(&[1, 20, 20], 0.4, r).map(|x| x.abs().min(1.0)))
+                    .collect::<Vec<_>>()
+            },
+            |images| {
+                let batched = compiled.forward_batch(images).unwrap();
+                images.iter().zip(&batched).all(|(img, got)| {
+                    let want = compiled.forward(img).unwrap();
+                    got.routing.v == want.routing.v
+                        && got.primary_caps == want.primary_caps
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn dense_masks_reproduce_the_dense_net() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(45);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let compiled = CompiledCapsNet::compile(&net, &NetworkMasks::dense(&cfg)).unwrap();
+        assert_eq!(compiled.stats().survived_kernels, compiled.stats().total_kernels);
+        let img = Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0));
+        let want = net.forward(&img).unwrap();
+        let got = compiled.forward(&img).unwrap();
+        assert_eq!(got.routing.v, want.routing.v);
+        assert_eq!(got.class_lengths(), want.class_lengths());
+    }
+
+    #[test]
+    fn packing_stats_track_masks() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(46);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let masks = NetworkMasks::lakp(&net.weights, &cfg, 4, 50);
+        let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+        let stats = compiled.stats();
+        assert_eq!(stats.survived_kernels, 54);
+        assert_eq!(stats.total_kernels, masks.total());
+        assert_eq!(stats.index_bytes, 54 * 4);
+        assert!(stats.pruned_pct() > 80.0);
+        // The packed weights hold exactly kh*kw values per survivor.
+        assert_eq!(compiled.conv1.survived(), 4);
+        assert_eq!(compiled.pc.survived(), 50);
+    }
+
+    #[test]
+    fn unstructured_weight_mask_flows_through_the_compiler() {
+        // WeightMask path: mask weights first, collapse to kernel
+        // granularity, compile — still bit-exact vs the weight-masked
+        // dense model.
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(47);
+        let mut net = CapsNet::random(cfg.clone(), &mut rng);
+        let wm = crate::pruning::WeightMask {
+            bits: (0..net.weights.pc_w.len()).map(|_| rng.below(4) != 0).collect(),
+        };
+        wm.apply(&mut net.weights.pc_w);
+        let masks = NetworkMasks {
+            conv1: KernelMask::all_alive(cfg.conv1_ch, cfg.input.0),
+            pc: wm.to_kernel_mask(cfg.pc_channels(), cfg.conv1_ch),
+        };
+        let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+        assert!(compiled.pc.survived() <= compiled.pc.total());
+        let img = Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0));
+        let want = net.forward(&img).unwrap();
+        let got = compiled.forward(&img).unwrap();
+        assert_eq!(got.routing.v, want.routing.v);
+    }
+
+    #[test]
+    fn compile_rejects_mismatched_masks() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(48);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let bad = NetworkMasks {
+            conv1: KernelMask::all_alive(3, 3),
+            pc: KernelMask::all_alive(cfg.pc_channels(), cfg.conv1_ch),
+        };
+        assert!(CompiledCapsNet::compile(&net, &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(49);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let compiled = CompiledCapsNet::compile(&net, &NetworkMasks::dense(&cfg)).unwrap();
+        assert!(compiled.forward(&Tensor::zeros(&[1, 28, 28])).is_err());
+    }
+}

@@ -7,7 +7,10 @@
 //! (executing the JAX-lowered HLO) and the fixed-point FPGA simulator are
 //! both tested against it.
 
+pub mod compiled;
 pub mod weights;
+
+pub use compiled::CompiledCapsNet;
 
 use crate::config::CapsNetConfig;
 use crate::routing::{
@@ -87,24 +90,7 @@ impl CapsNet {
             cfg.pc_stride,
         )?;
 
-        // Regroup [types*dim, h, w] -> capsules [type, y, x][dim], squash.
-        let (h2, w2) = cfg.pc_out();
-        let n_caps = cfg.num_primary_caps();
-        let d = cfg.pc_dim;
-        let mut primary_caps = vec![0.0f32; n_caps * d];
-        for t in 0..cfg.pc_types {
-            for y in 0..h2 {
-                for x in 0..w2 {
-                    let cap = (t * h2 + y) * w2 + x;
-                    let mut s = vec![0.0f32; d];
-                    for k in 0..d {
-                        s[k] = pc_conv.at(&[t * d + k, y, x]);
-                    }
-                    let v = crate::routing::squash(&s);
-                    primary_caps[cap * d..(cap + 1) * d].copy_from_slice(&v);
-                }
-            }
-        }
+        let primary_caps = squash_primary(cfg, &pc_conv);
         Ok(PrimaryStage {
             conv1,
             pc_conv,
@@ -114,46 +100,8 @@ impl CapsNet {
 
     /// Forward one `[c, h, w]` image through the full network.
     pub fn forward(&self, image: &Tensor) -> Result<Activations> {
-        let cfg = &self.config;
         let stage = self.primary_stage(image)?;
-        let (h2, w2) = cfg.pc_out();
-        let n_caps = cfg.num_primary_caps();
-        let d = cfg.pc_dim;
-
-        // DigitCaps projections û_{j|i} = W_{t(i),j}^T u_i (transform shared
-        // across spatial positions within a type), then dynamic routing.
-        let n_out = cfg.num_classes;
-        let d_out = cfg.dc_dim;
-        let spatial = h2 * w2;
-        let mut u_hat = vec![0.0f32; n_caps * n_out * d_out];
-        // w_ij layout: [pc_types, n_out, pc_dim, dc_dim].
-        let w = &self.weights.w_ij;
-        for i in 0..n_caps {
-            let t = i / spatial;
-            let u = &stage.primary_caps[i * d..(i + 1) * d];
-            for j in 0..n_out {
-                let base = ((t * n_out) + j) * d * d_out;
-                let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
-                for (kk, &uk) in u.iter().enumerate() {
-                    if uk == 0.0 {
-                        continue;
-                    }
-                    let wrow = &w.data[base + kk * d_out..][..d_out];
-                    for (o, &wv) in out.iter_mut().zip(wrow) {
-                        *o += uk * wv;
-                    }
-                }
-            }
-        }
-        let pred = Predictions::new(n_caps, n_out, d_out, u_hat);
-        let routing = dynamic_routing(&pred, cfg.routing_iters);
-
-        Ok(Activations {
-            conv1: stage.conv1,
-            pc_conv: stage.pc_conv,
-            primary_caps: stage.primary_caps,
-            routing,
-        })
+        Ok(finish_forward(&self.config, &self.weights.w_ij, stage))
     }
 
     /// Forward a batch of images, restructured around shared weight
@@ -167,62 +115,20 @@ impl CapsNet {
     /// (each û element still sums over `kk` ascending), so the results are
     /// bit-exact equal to the per-image path — a property test pins this.
     pub fn forward_batch(&self, images: &[Tensor]) -> Result<Vec<Activations>> {
-        let cfg = &self.config;
         let stages: Vec<PrimaryStage> = images
             .iter()
             .map(|img| self.primary_stage(img))
             .collect::<Result<_>>()?;
+        Ok(finish_forward_batch(&self.config, &self.weights.w_ij, stages))
+    }
 
-        let (h2, w2) = cfg.pc_out();
-        let n_caps = cfg.num_primary_caps();
-        let d = cfg.pc_dim;
-        let n_out = cfg.num_classes;
-        let d_out = cfg.dc_dim;
-        let spatial = h2 * w2;
-
-        // Shared weight traversal over the whole batch: for each transform
-        // block, sweep every image's capsules of that type.
-        let w = &self.weights.w_ij;
-        let mut u_hats = vec![vec![0.0f32; n_caps * n_out * d_out]; stages.len()];
-        for t in 0..cfg.pc_types {
-            for j in 0..n_out {
-                let base = ((t * n_out) + j) * d * d_out;
-                let wblock = &w.data[base..base + d * d_out];
-                for (stage, u_hat) in stages.iter().zip(u_hats.iter_mut()) {
-                    for p in 0..spatial {
-                        let i = t * spatial + p;
-                        let u = &stage.primary_caps[i * d..(i + 1) * d];
-                        let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
-                        for (kk, &uk) in u.iter().enumerate() {
-                            if uk == 0.0 {
-                                continue;
-                            }
-                            let wrow = &wblock[kk * d_out..][..d_out];
-                            for (o, &wv) in out.iter_mut().zip(wrow) {
-                                *o += uk * wv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Routing per frame, one scratch across the batch.
-        let mut scratch = RoutingScratch::new();
-        Ok(stages
-            .into_iter()
-            .zip(u_hats)
-            .map(|(stage, u_hat)| {
-                let pred = Predictions::new(n_caps, n_out, d_out, u_hat);
-                let routing = dynamic_routing_with(&pred, cfg.routing_iters, &mut scratch);
-                Activations {
-                    conv1: stage.conv1,
-                    pc_conv: stage.pc_conv,
-                    primary_caps: stage.primary_caps,
-                    routing,
-                }
-            })
-            .collect())
+    /// The masked-dense form of this model under `masks`: pruned kernels
+    /// zeroed but every loop still executed densely. This is the
+    /// bit-exactness reference for [`compiled::CompiledCapsNet`].
+    pub fn masked(&self, masks: &crate::pruning::NetworkMasks) -> CapsNet {
+        let mut net = self.clone();
+        masks.apply(&mut net.weights);
+        net
     }
 
     /// Classify one image (argmax of DigitCaps lengths) — a batch of one
@@ -248,11 +154,165 @@ impl CapsNet {
 }
 
 /// Per-image intermediates up to the primary-capsule squash (the part of
-/// the forward pass with no cross-image structure to exploit).
+/// the forward pass with no cross-image structure to exploit). Also
+/// produced by the sparse [`compiled`] path, so the routing tail below
+/// is one shared implementation.
 struct PrimaryStage {
     conv1: Tensor,
     pc_conv: Tensor,
     primary_caps: Vec<f32>,
+}
+
+/// The post-primary tail for one frame: û projection → dynamic routing →
+/// [`Activations`]. Shared by [`CapsNet::forward`] and
+/// [`compiled::CompiledCapsNet::forward`] — the bit-exactness contract
+/// between the dense and sparse paths is that everything after the conv
+/// stages is literally the same code.
+fn finish_forward(cfg: &CapsNetConfig, w_ij: &Tensor, stage: PrimaryStage) -> Activations {
+    let u_hat = project_u_hat(cfg, w_ij, &stage.primary_caps);
+    let pred = Predictions::new(cfg.num_primary_caps(), cfg.num_classes, cfg.dc_dim, u_hat);
+    let routing = dynamic_routing(&pred, cfg.routing_iters);
+    Activations {
+        conv1: stage.conv1,
+        pc_conv: stage.pc_conv,
+        primary_caps: stage.primary_caps,
+        routing,
+    }
+}
+
+/// The batched tail: weight-stationary û projection, then routing per
+/// frame with one scratch across the batch. Shared by
+/// [`CapsNet::forward_batch`] and
+/// [`compiled::CompiledCapsNet::forward_batch`].
+fn finish_forward_batch(
+    cfg: &CapsNetConfig,
+    w_ij: &Tensor,
+    stages: Vec<PrimaryStage>,
+) -> Vec<Activations> {
+    let caps: Vec<&[f32]> = stages.iter().map(|s| s.primary_caps.as_slice()).collect();
+    let u_hats = project_u_hat_batch(cfg, w_ij, &caps);
+    let mut scratch = RoutingScratch::new();
+    stages
+        .into_iter()
+        .zip(u_hats)
+        .map(|(stage, u_hat)| {
+            let pred =
+                Predictions::new(cfg.num_primary_caps(), cfg.num_classes, cfg.dc_dim, u_hat);
+            let routing = dynamic_routing_with(&pred, cfg.routing_iters, &mut scratch);
+            Activations {
+                conv1: stage.conv1,
+                pc_conv: stage.pc_conv,
+                primary_caps: stage.primary_caps,
+                routing,
+            }
+        })
+        .collect()
+}
+
+/// Regroup the PrimaryCaps conv output `[types*dim, h, w]` into capsules
+/// `[type, y, x][dim]` and squash each. Shared verbatim by the dense
+/// ([`CapsNet`]) and sparse-compiled ([`compiled::CompiledCapsNet`])
+/// paths, so the post-conv stages cannot drift between them.
+pub(crate) fn squash_primary(cfg: &CapsNetConfig, pc_conv: &Tensor) -> Vec<f32> {
+    let (h2, w2) = cfg.pc_out();
+    let n_caps = cfg.num_primary_caps();
+    let d = cfg.pc_dim;
+    let mut primary_caps = vec![0.0f32; n_caps * d];
+    let mut s = vec![0.0f32; d];
+    for t in 0..cfg.pc_types {
+        for y in 0..h2 {
+            for x in 0..w2 {
+                let cap = (t * h2 + y) * w2 + x;
+                for (k, sk) in s.iter_mut().enumerate() {
+                    *sk = pc_conv.at(&[t * d + k, y, x]);
+                }
+                crate::routing::squash_into(
+                    &s,
+                    &mut primary_caps[cap * d..(cap + 1) * d],
+                );
+            }
+        }
+    }
+    primary_caps
+}
+
+/// DigitCaps projections û_{j|i} = W_{t(i),j}^T u_i for one image
+/// (transform shared across spatial positions within a type). Per-element
+/// accumulation sums over `kk` ascending; [`project_u_hat_batch`] keeps
+/// the identical order, so per-image and batched results are bit-exact
+/// equal. `w_ij` layout: `[pc_types, n_out, pc_dim, dc_dim]`.
+pub(crate) fn project_u_hat(
+    cfg: &CapsNetConfig,
+    w_ij: &Tensor,
+    primary_caps: &[f32],
+) -> Vec<f32> {
+    let (h2, w2) = cfg.pc_out();
+    let n_caps = cfg.num_primary_caps();
+    let d = cfg.pc_dim;
+    let n_out = cfg.num_classes;
+    let d_out = cfg.dc_dim;
+    let spatial = h2 * w2;
+    let mut u_hat = vec![0.0f32; n_caps * n_out * d_out];
+    for i in 0..n_caps {
+        let t = i / spatial;
+        let u = &primary_caps[i * d..(i + 1) * d];
+        for j in 0..n_out {
+            let base = ((t * n_out) + j) * d * d_out;
+            let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
+            for (kk, &uk) in u.iter().enumerate() {
+                if uk == 0.0 {
+                    continue;
+                }
+                let wrow = &w_ij.data[base + kk * d_out..][..d_out];
+                for (o, &wv) in out.iter_mut().zip(wrow) {
+                    *o += uk * wv;
+                }
+            }
+        }
+    }
+    u_hat
+}
+
+/// Batched DigitCaps projection with shared weight traversal: each
+/// transform block `W[t][j]` is loaded once and applied to every image's
+/// capsules of type `t` (weight-stationary, the batch analogue of the PE
+/// array keeping one kernel resident). Per-element accumulation order is
+/// identical to [`project_u_hat`].
+pub(crate) fn project_u_hat_batch(
+    cfg: &CapsNetConfig,
+    w_ij: &Tensor,
+    primary_caps: &[&[f32]],
+) -> Vec<Vec<f32>> {
+    let (h2, w2) = cfg.pc_out();
+    let n_caps = cfg.num_primary_caps();
+    let d = cfg.pc_dim;
+    let n_out = cfg.num_classes;
+    let d_out = cfg.dc_dim;
+    let spatial = h2 * w2;
+    let mut u_hats = vec![vec![0.0f32; n_caps * n_out * d_out]; primary_caps.len()];
+    for t in 0..cfg.pc_types {
+        for j in 0..n_out {
+            let base = ((t * n_out) + j) * d * d_out;
+            let wblock = &w_ij.data[base..base + d * d_out];
+            for (caps, u_hat) in primary_caps.iter().zip(u_hats.iter_mut()) {
+                for p in 0..spatial {
+                    let i = t * spatial + p;
+                    let u = &caps[i * d..(i + 1) * d];
+                    let out = &mut u_hat[(i * n_out + j) * d_out..][..d_out];
+                    for (kk, &uk) in u.iter().enumerate() {
+                        if uk == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wblock[kk * d_out..][..d_out];
+                        for (o, &wv) in out.iter_mut().zip(wrow) {
+                            *o += uk * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    u_hats
 }
 
 #[cfg(test)]

@@ -246,8 +246,7 @@ impl Server {
     /// Drain and stop the pool. Returns final metrics.
     pub fn shutdown(mut self) -> Metrics {
         self.close_and_join();
-        let m = self.shared.metrics.lock().unwrap().clone();
-        m
+        self.shared.metrics.lock().unwrap().clone()
     }
 
     fn close_and_join(&mut self) {
@@ -476,6 +475,7 @@ mod tests {
                     batch_buckets: vec![1, 4],
                     reports_timing: false,
                     max_replicas: None,
+                    compression: None,
                 },
                 delay,
                 calls,
@@ -648,6 +648,7 @@ mod tests {
                 batch_buckets: vec![4, 8],
                 reports_timing: false,
                 max_replicas: None,
+                compression: None,
             })) as Box<dyn InferenceBackend>)
         })
         .max_batch(2)
@@ -677,6 +678,7 @@ mod tests {
                 batch_buckets: vec![1],
                 reports_timing: false,
                 max_replicas: None,
+                compression: None,
             })) as Box<dyn InferenceBackend>)
         })
         .max_wait(Duration::from_millis(1))
@@ -715,6 +717,7 @@ mod tests {
                 batch_buckets: vec![1],
                 reports_timing: false,
                 max_replicas: Some(1),
+                compression: None,
             })) as Box<dyn InferenceBackend>)
         })
         .replicas(8)

@@ -30,6 +30,11 @@ fn sat16(v: i32) -> i16 {
     v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
 }
 
+// `add`/`mul`/... deliberately shadow the operator names instead of
+// implementing `std::ops`: every call site should read as *saturating
+// Q-format* arithmetic, not ordinary `+`/`*` — the visible method name
+// is the reminder that these ops round and clamp like the DSP48E path.
+#[allow(clippy::should_implement_trait)]
 impl<const F: u32> Fx<F> {
     pub const FRAC: u32 = F;
     pub const ONE: Fx<F> = Fx(1 << F);

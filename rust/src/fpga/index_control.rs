@@ -39,6 +39,71 @@ impl IndexControl {
         // k×k-deep MAC schedule (hidden for k² ≥ 4, i.e. always here).
         4 + self.indices.len() as u64 / 64
     }
+
+    /// The survivor list regrouped per output channel — the CSR-style
+    /// layout both executors consume: the hardware address generators
+    /// walk one output channel's alive kernels back to back, and the
+    /// software sparse path ([`crate::capsnet::compiled`]) packs its
+    /// weights in exactly this order, so the two models share one
+    /// sparsity representation.
+    ///
+    /// `row_ptr[o]..row_ptr[o + 1]` indexes `cols`; `cols[n]` is the
+    /// input channel of the n-th surviving kernel. Within a row the
+    /// input channels are ascending (the mask enumeration order), which
+    /// is what keeps a sparse traversal's accumulation order identical
+    /// to the dense loop nest.
+    pub fn packed_rows(&self) -> PackedRows {
+        // `indices` is sorted by (o, i) — guaranteed by `from_mask`, but
+        // the field is public, so enforce the precondition instead of
+        // silently mis-assigning survivors to the wrong row. A hard
+        // assert: this runs only at pack time (O(survivors), startup
+        // path), and release builds are exactly where a silent
+        // wrong-weights packing would otherwise go unnoticed.
+        assert!(
+            self.indices.windows(2).all(|w| w[0] < w[1]),
+            "IndexControl.indices must be strictly sorted by (out_ch, in_ch)"
+        );
+        // One pass suffices on sorted input: each row's end offset is the
+        // running count, and empty rows inherit the previous offset
+        // afterwards.
+        let mut row_ptr = vec![0u32; self.out_ch + 1];
+        let mut cols = Vec::with_capacity(self.indices.len());
+        for &(ko, ki) in &self.indices {
+            cols.push(ki);
+            row_ptr[ko as usize + 1] = cols.len() as u32;
+        }
+        for o in 1..=self.out_ch {
+            row_ptr[o] = row_ptr[o].max(row_ptr[o - 1]);
+        }
+        PackedRows { row_ptr, cols }
+    }
+}
+
+/// CSR-style alive-kernel index lists (see [`IndexControl::packed_rows`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedRows {
+    /// `out_ch + 1` offsets into `cols`.
+    pub row_ptr: Vec<u32>,
+    /// Input channel of each surviving kernel, row-major by out channel.
+    pub cols: Vec<u16>,
+}
+
+impl PackedRows {
+    /// The surviving input channels of output channel `o`.
+    pub fn row(&self, o: usize) -> &[u16] {
+        &self.cols[self.row_ptr[o] as usize..self.row_ptr[o + 1] as usize]
+    }
+
+    pub fn survived(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// On-chip index memory this packing costs (§III-C: a `u16` pair
+    /// per surviving kernel) — same cost model as
+    /// [`IndexControl::index_bytes`].
+    pub fn index_bytes(&self) -> usize {
+        self.survived() * 4
+    }
 }
 
 #[cfg(test)]
@@ -55,6 +120,56 @@ mod tests {
         assert_eq!(ic.survived(), 12);
         assert_eq!(ic.index_bytes(), 48);
         assert!(ic.indices.iter().all(|&(o, _)| o != 2));
+    }
+
+    #[test]
+    fn packed_rows_group_survivors_per_out_channel() {
+        let mut m = KernelMask::all_alive(4, 3);
+        m.set(0, 1, false);
+        for i in 0..3 {
+            m.set(2, i, false); // row 2 fully dead
+        }
+        let p = IndexControl::from_mask(&m).packed_rows();
+        assert_eq!(p.row_ptr, vec![0, 2, 5, 5, 8]);
+        assert_eq!(p.row(0), &[0, 2]);
+        assert_eq!(p.row(1), &[0, 1, 2]);
+        assert_eq!(p.row(2), &[] as &[u16]);
+        assert_eq!(p.row(3), &[0, 1, 2]);
+        assert_eq!(p.survived(), m.survived());
+    }
+
+    #[test]
+    fn packed_rows_match_mask_on_random_patterns() {
+        crate::testing::check(
+            "packed_rows ≡ mask survivors, rows ascending",
+            20,
+            77,
+            |r| {
+                let (o, i) = (1 + r.below(9), 1 + r.below(9));
+                let mut m = KernelMask::all_alive(o, i);
+                for oc in 0..o {
+                    for ic in 0..i {
+                        if r.below(3) == 0 {
+                            m.set(oc, ic, false);
+                        }
+                    }
+                }
+                m
+            },
+            |m| {
+                let p = IndexControl::from_mask(m).packed_rows();
+                if p.survived() != m.survived() {
+                    return false;
+                }
+                (0..m.out_ch).all(|o| {
+                    let row = p.row(o);
+                    row.windows(2).all(|w| w[0] < w[1])
+                        && row.iter().all(|&i| m.get(o, i as usize))
+                        && row.len()
+                            == (0..m.in_ch).filter(|&i| m.get(o, i)).count()
+                })
+            },
+        );
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //!   Pruning (LAKP) engine and its baselines, a cycle-level simulator of the
 //!   paper's PYNQ-Z1 accelerator (PE array, BRAM banks, index control,
 //!   conv + dynamic-routing modules, Taylor-approximated non-linear units),
-//!   a PJRT runtime that executes the AOT-lowered JAX model, a unified
-//!   [`backend`] execution API over all three model implementations, and
+//!   a PJRT runtime that executes the AOT-lowered JAX model, a
+//!   sparse-compiled executor ([`capsnet::compiled`]) that shares the
+//!   Index Control Module's alive-kernel packing, a unified [`backend`]
+//!   execution API over all the model implementations, and
 //!   a serving coordinator (admission → shared queue → executor pool of
 //!   backend replicas) that keeps Python off the request path.
 //! * **L2 (python/compile/model.py)** — the CapsNet forward graph in JAX,
@@ -21,6 +23,13 @@
 //! for the paper-to-module map and the backend-subsystem diagram, and
 //! the paper-anchored assertions in `rust/tests/` and `rust/benches/`
 //! for the reproduced numbers.
+
+// The numeric code is written as explicit index loop nests that mirror
+// the accelerator's hardware loops (out-channel / in-channel / tap order
+// is the bit-exactness contract between the dense, sparse-compiled and
+// fixed-point datapaths); iterator-chain rewrites would obscure that
+// correspondence, so the range-loop style lint is opted out crate-wide.
+#![allow(clippy::needless_range_loop)]
 
 pub mod backend;
 pub mod capsnet;

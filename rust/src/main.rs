@@ -3,10 +3,12 @@
 //! ```text
 //! fastcaps report <table1|table2|table3|fig1|fig5|fig8|fig14|all>
 //! fastcaps simulate [--dataset mnist|fmnist] [--config original|pruned|proposed] [--frames N]
-//! fastcaps serve    [--backend oracle|sim|pjrt] [--model capsnet-mnist-pruned]
+//! fastcaps serve    [--backend oracle|oracle-sparse|sim|pjrt] [--model capsnet-mnist-pruned]
 //!                   [--dataset mnist|fmnist] [--replicas N] [--max-queue N]
 //!                   [--requests N] [--clients K] [--artifacts DIR]
-//! fastcaps prune    [--weights FILE.fcw] [--method lakp|kp] [--sparsity S]
+//! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
+//!                   [--sparsity S] [--compile] [--serve] [--replicas N]
+//!                   [--requests N] [--clients K]
 //! fastcaps selftest
 //! ```
 
@@ -49,10 +51,14 @@ fn print_help() {
          \x20                exps: table1 table2 table3 fig1 fig5 fig8 fig14 all\n\
          \x20 simulate       run frames through the cycle-level accelerator simulator\n\
          \x20 serve          start the serving coordinator and drive a workload\n\
-         \x20                backends: oracle (fp32 reference), sim (FPGA\n\
+         \x20                backends: oracle (fp32 reference), oracle-sparse\n\
+         \x20                (sparse-compiled pruned fp32), sim (FPGA\n\
          \x20                simulator, default), pjrt (AOT artifacts);\n\
          \x20                --replicas N scales the executor pool\n\
-         \x20 prune          LAKP/KP-prune a .fcw weight file, print compression\n\
+         \x20 prune          LAKP/KP-prune weights, print compression;\n\
+         \x20                --compile packs survivors into the sparse\n\
+         \x20                execution path (CSR / Index-Control layout),\n\
+         \x20                --serve then serves the compiled model\n\
          \x20 selftest       quick end-to-end sanity checks\n"
     );
 }
@@ -209,6 +215,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.pool_size(),
         spec.batch_buckets,
     );
+    drive_workload(server, task, n_requests, n_clients);
+    Ok(())
+}
+
+/// Drive `n_requests` generated frames from `n_clients` client threads
+/// through a running server, then shut it down and print the metrics
+/// summary. Shared by `serve` and the `prune --compile --serve` flow.
+fn drive_workload(server: Server, task: Task, n_requests: usize, n_clients: usize) {
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..n_clients {
@@ -232,13 +246,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wall.as_secs_f64(),
         m.requests as f64 / wall.as_secs_f64()
     );
-    Ok(())
 }
 
 fn cmd_prune(args: &Args) -> Result<()> {
-    use fastcaps::pruning::{kp, lakp, AdjacencyNorms};
+    use fastcaps::capsnet::{CapsNet, CompiledCapsNet};
+    use fastcaps::pruning::{kp, lakp, AdjacencyNorms, KernelMask, NetworkMasks};
 
-    let cfg = fastcaps::config::CapsNetConfig::paper_full("capsnet-mnist");
+    let raw_dataset = args.get_or("dataset", "mnist");
+    let task = Task::parse(raw_dataset).ok_or_else(|| {
+        anyhow::anyhow!("unknown dataset '{raw_dataset}' (expected mnist|fmnist)")
+    })?;
+    let dataset = match task {
+        Task::Digits => "mnist",
+        Task::Garments => "fmnist",
+    };
+    let cfg = fastcaps::config::CapsNetConfig::paper_full(&format!("capsnet-{dataset}"));
     let sparsity = args.get_f64("sparsity", 0.9);
     let method = args.get_or("method", "lakp").to_string();
     let weights = match args.get("weights") {
@@ -268,6 +290,92 @@ fn cmd_prune(args: &Args) -> Result<()> {
         types * h2 * w2,
         result.mask.index_bytes(),
     );
+
+    // `--compile`/`--serve` are boolean, but the parser turns a flag
+    // followed by a stray non-dash token into a key=value option —
+    // `prune --serve mnist` would silently skip serving. Treat either
+    // form as "set" so a trailing typo can't swallow the step.
+    let flagged = |name: &str| args.flag(name) || args.get(name).is_some();
+    if !flagged("compile") {
+        // --serve depends on a compiled model; ignoring it silently
+        // would look like a successful serve that never happened.
+        anyhow::ensure!(
+            !flagged("serve"),
+            "--serve requires --compile (serve runs the sparse-compiled model)"
+        );
+        return Ok(());
+    }
+
+    // prune → compile: pack the survivors into the CSR / Index-Control
+    // layout and execute only alive kernels, bit-exact to masked-dense.
+    let masks = NetworkMasks {
+        conv1: KernelMask::all_alive(cfg.conv1_ch, cfg.input.0),
+        pc: result.mask.clone(),
+    };
+    let net = CapsNet {
+        config: cfg.clone(),
+        weights,
+    };
+    let compiled = CompiledCapsNet::compile(&net, &masks)?;
+    let stats = compiled.stats();
+    println!(
+        "compiled: {} / {} kernels packed ({:.2}% pruned, {} B index memory)",
+        stats.survived_kernels,
+        stats.total_kernels,
+        stats.pruned_pct(),
+        stats.index_bytes,
+    );
+
+    // Bit-exactness spot check + dense-vs-sparse wall-clock on one frame.
+    let dense = net.masked(&masks);
+    let frame = fastcaps::data::generate(task, 1, args.get_u64("seed", 7))
+        .images
+        .remove(0);
+    let t0 = std::time::Instant::now();
+    let want = dense.forward(&frame)?;
+    let dense_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = std::time::Instant::now();
+    let got = compiled.forward(&frame)?;
+    let sparse_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        got.routing.v == want.routing.v && got.primary_caps == want.primary_caps,
+        "compiled forward diverged from masked-dense reference"
+    );
+    println!(
+        "bit-exact vs masked-dense ✓   dense {dense_ms:.2} ms/frame, \
+         sparse {sparse_ms:.2} ms/frame ({:.1}x)",
+        dense_ms / sparse_ms.max(1e-9),
+    );
+
+    if !flagged("serve") {
+        return Ok(());
+    }
+
+    // prune → compile → serve: replicas of the compiled model behind the
+    // coordinator, driven with generated traffic.
+    let n_requests = args.get_usize("requests", 64);
+    let n_clients = args.get_usize("clients", 4).max(1);
+    let server = Server::builder(move || {
+        Ok(Box::new(fastcaps::backend::SparseOracleBackend::new(compiled.clone()))
+            as Box<dyn fastcaps::backend::InferenceBackend>)
+    })
+    .replicas(args.get_usize("replicas", 2))
+    .max_wait(Duration::from_millis(args.get_u64("max-wait-ms", 5)))
+    .max_queue_depth(args.get_usize("max-queue", 1024))
+    .start();
+    if let Some(e) = server.init_error() {
+        anyhow::bail!("starting compiled backend: {e}");
+    }
+    let spec = server.spec().expect("init succeeded").clone();
+    println!(
+        "serving {n_requests} requests from {n_clients} client threads \
+         (backend={}, model={}, replicas={}, {:.2}% kernels pruned)",
+        spec.kind,
+        spec.model,
+        server.pool_size(),
+        spec.compression.as_ref().map(|c| c.pruned_pct()).unwrap_or(0.0),
+    );
+    drive_workload(server, task, n_requests, n_clients);
     Ok(())
 }
 
@@ -279,7 +387,7 @@ fn cmd_selftest() -> Result<()> {
     let prop = DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 7)
         .estimate_frame()
         .fps();
-    println!("[1/3] simulator: original {orig:.1} FPS, proposed {prop:.1} FPS");
+    println!("[1/4] simulator: original {orig:.1} FPS, proposed {prop:.1} FPS");
     anyhow::ensure!(prop > 100.0 * orig, "speedup shape broken");
 
     // 2. Fixed-point units.
@@ -288,11 +396,37 @@ fn cmd_selftest() -> Result<()> {
     let e = taylor::exp_taylor_q12(x).to_f32();
     anyhow::ensure!((e - 0.7f32.exp()).abs() < 0.01, "taylor exp off: {e}");
     println!(
-        "[2/3] fixed-point Taylor exp(0.7) = {e:.4} (want {:.4})",
+        "[2/4] fixed-point Taylor exp(0.7) = {e:.4} (want {:.4})",
         0.7f32.exp()
     );
 
-    // 3. PJRT runtime if artifacts exist (and the `pjrt` feature is in).
+    // 3. Sparse compile: LAKP masks → CSR packing, bit-exact forward.
+    {
+        use fastcaps::capsnet::{CapsNet, CompiledCapsNet};
+        use fastcaps::pruning::NetworkMasks;
+        let cfg = fastcaps::config::CapsNetConfig::tiny();
+        let mut rng = fastcaps::util::rng::Rng::new(7);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 64);
+        let compiled = CompiledCapsNet::compile(&net, &masks)?;
+        let img = fastcaps::tensor::Tensor::randn(&[1, 20, 20], 0.4, &mut rng)
+            .map(|v| v.abs().min(1.0));
+        let want = net.masked(&masks).forward(&img)?;
+        let got = compiled.forward(&img)?;
+        anyhow::ensure!(
+            got.routing.v == want.routing.v,
+            "compiled forward diverged from masked-dense"
+        );
+        let stats = compiled.stats();
+        println!(
+            "[3/4] sparse compile: {}/{} kernels packed ({:.1}% pruned), bit-exact ✓",
+            stats.survived_kernels,
+            stats.total_kernels,
+            stats.pruned_pct()
+        );
+    }
+
+    // 4. PJRT runtime if artifacts exist (and the `pjrt` feature is in).
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         match fastcaps::runtime::Runtime::open(dir) {
@@ -301,13 +435,13 @@ fn cmd_selftest() -> Result<()> {
                     rt.engine("capsnet-mnist-pruned", 1, &dir.join("weights-mnist.fcw"))?;
                 let img = fastcaps::data::generate(Task::Digits, 1, 3).images.remove(0);
                 let lengths = engine.run_batch(&[img])?;
-                println!("[3/3] PJRT lengths: {:?}", lengths[0]);
+                println!("[4/4] PJRT lengths: {:?}", lengths[0]);
                 anyhow::ensure!(lengths[0].len() == 10);
             }
-            Err(e) => println!("[3/3] skipped PJRT ({e})"),
+            Err(e) => println!("[4/4] skipped PJRT ({e})"),
         }
     } else {
-        println!("[3/3] skipped PJRT (no artifacts/ — run `make artifacts`)");
+        println!("[4/4] skipped PJRT (no artifacts/ — run `make artifacts`)");
     }
     println!("selftest OK");
     Ok(())

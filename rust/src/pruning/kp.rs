@@ -25,9 +25,32 @@ pub fn mask_from_scores(
     in_ch: usize,
     sparsity: f64,
 ) -> KernelMask {
-    assert_eq!(scores.len(), out_ch * in_ch);
     let total = scores.len();
     let n_prune = ((total as f64) * sparsity.clamp(0.0, 1.0)).floor() as usize;
+    mask_pruning_lowest(scores, out_ch, in_ch, n_prune)
+}
+
+/// Build a mask keeping exactly `keep` of the highest-scored kernels —
+/// the form deployment planning wants (the paper reports survivor
+/// *counts*: 64 + 423 kernels on MNIST), with no fraction→count
+/// round-trip through floating point.
+pub fn mask_keeping(
+    scores: &[f32],
+    out_ch: usize,
+    in_ch: usize,
+    keep: usize,
+) -> KernelMask {
+    mask_pruning_lowest(scores, out_ch, in_ch, scores.len().saturating_sub(keep))
+}
+
+fn mask_pruning_lowest(
+    scores: &[f32],
+    out_ch: usize,
+    in_ch: usize,
+    n_prune: usize,
+) -> KernelMask {
+    assert_eq!(scores.len(), out_ch * in_ch);
+    let total = scores.len();
     let mut order: Vec<usize> = (0..total).collect();
     order.sort_by(|&a, &b| {
         scores[a]
@@ -36,7 +59,7 @@ pub fn mask_from_scores(
             .then(a.cmp(&b)) // deterministic tie-break
     });
     let mut mask = KernelMask::all_alive(out_ch, in_ch);
-    for &n in order.iter().take(n_prune) {
+    for &n in order.iter().take(n_prune.min(total)) {
         mask.set(n / in_ch, n % in_ch, false);
     }
     mask
@@ -74,6 +97,21 @@ mod tests {
     fn full_sparsity_prunes_all() {
         let w = tensor_with_kernel_sums(&[&[1.0, 2.0]], 3, 3);
         assert_eq!(prune_layer(&w, 1.0).mask.survived(), 0);
+    }
+
+    #[test]
+    fn mask_keeping_exact_counts() {
+        let w = tensor_with_kernel_sums(&[&[1.0, 4.0], &[3.0, 2.0]], 3, 3);
+        let scores = kernel_scores(&w);
+        for keep in 0..=4 {
+            let m = mask_keeping(&scores, 2, 2, keep);
+            assert_eq!(m.survived(), keep, "keep={keep}");
+        }
+        // keep > total saturates instead of underflowing.
+        assert_eq!(mask_keeping(&scores, 2, 2, 9).survived(), 4);
+        // The survivors are the highest-scored kernels.
+        let m = mask_keeping(&scores, 2, 2, 2);
+        assert!(m.get(0, 1) && m.get(1, 0));
     }
 
     #[test]

@@ -108,6 +108,26 @@ impl WeightMask {
     pub fn index_bytes(&self) -> usize {
         self.survived() * 4
     }
+
+    /// Collapse to kernel granularity over an `out_ch × in_ch` grid of
+    /// `k×k` kernels: a kernel survives iff any of its weights does.
+    /// This is how an unstructured mask enters the sparse-compiled path
+    /// ([`crate::capsnet::compiled`]): apply the weight mask first (so
+    /// partially-dead kernels carry their zeros), then compile with the
+    /// collapsed kernel mask to skip the fully-dead ones.
+    pub fn to_kernel_mask(&self, out_ch: usize, in_ch: usize) -> KernelMask {
+        assert_eq!(self.bits.len() % (out_ch * in_ch), 0);
+        let kk = self.bits.len() / (out_ch * in_ch);
+        let mut mask = KernelMask::all_alive(out_ch, in_ch);
+        for o in 0..out_ch {
+            for i in 0..in_ch {
+                let base = (o * in_ch + i) * kk;
+                let alive = self.bits[base..base + kk].iter().any(|&b| b);
+                mask.set(o, i, alive);
+            }
+        }
+        mask
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +175,25 @@ mod tests {
                 .collect(),
         };
         assert!(km.index_bytes() * 20 < wm.index_bytes());
+    }
+
+    #[test]
+    fn weight_mask_collapses_to_kernel_granularity() {
+        // 2×2 grid of 2×2 kernels; kernel (0,1) fully dead, (1,0) has one
+        // surviving weight → alive at kernel granularity.
+        let mut bits = vec![true; 16];
+        for b in bits.iter_mut().take(8).skip(4) {
+            *b = false; // kernel (0,1): weights 4..8
+        }
+        for b in bits.iter_mut().take(11).skip(8) {
+            *b = false; // kernel (1,0): 3 of 4 weights dead
+        }
+        let wm = WeightMask { bits };
+        let km = wm.to_kernel_mask(2, 2);
+        assert!(km.get(0, 0));
+        assert!(!km.get(0, 1));
+        assert!(km.get(1, 0));
+        assert!(km.get(1, 1));
     }
 
     #[test]

@@ -24,6 +24,8 @@ pub mod mask;
 
 pub use mask::{KernelMask, WeightMask};
 
+use crate::capsnet::weights::Weights;
+use crate::config::{CapsNetConfig, SparsityPlan};
 use crate::tensor::Tensor;
 
 /// Per-channel coupling norms of the adjacent layers, used by Eq. 1.
@@ -119,6 +121,106 @@ pub struct LayerPruneResult {
     pub scores: Vec<f32>,
 }
 
+/// Kernel masks for both conv layers of a CapsNet — the network-level
+/// prune artifact the sparse compiler ([`crate::capsnet::compiled`])
+/// consumes and [`crate::fpga::IndexControl`] mirrors on-chip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkMasks {
+    /// Conv1 grid: `conv1_ch × c_in`.
+    pub conv1: KernelMask,
+    /// PrimaryCaps grid: `pc_channels × conv1_ch`.
+    pub pc: KernelMask,
+}
+
+impl NetworkMasks {
+    /// Everything alive (compiling with this reproduces the dense net).
+    pub fn dense(cfg: &CapsNetConfig) -> NetworkMasks {
+        NetworkMasks {
+            conv1: KernelMask::all_alive(cfg.conv1_ch, cfg.input.0),
+            pc: KernelMask::all_alive(cfg.pc_channels(), cfg.conv1_ch),
+        }
+    }
+
+    /// LAKP over the whole network at explicit survivor counts (the form
+    /// the paper reports: 64 + 423 kernels on MNIST). Conv1 is pruned
+    /// first; the PrimaryCaps scores then see the *masked* Conv1 as
+    /// their `prev` norms, so kernels consuming dead channels score zero
+    /// and are eliminated before any kernel on a live channel — the
+    /// §III "interconnections between neighboring layer kernels" step.
+    pub fn lakp(
+        weights: &Weights,
+        cfg: &CapsNetConfig,
+        keep_conv1: usize,
+        keep_pc: usize,
+    ) -> NetworkMasks {
+        let (c_in, _, _) = cfg.input;
+        let adj1 = AdjacencyNorms {
+            prev: vec![1.0; c_in], // no prunable producer before Conv1
+            next: AdjacencyNorms::next_from_conv(&weights.pc_w),
+        };
+        let conv1 = kp::mask_keeping(
+            &lakp::kernel_scores(&weights.conv1_w, &adj1),
+            cfg.conv1_ch,
+            c_in,
+            keep_conv1,
+        );
+        let mut conv1_masked = weights.conv1_w.clone();
+        conv1.apply(&mut conv1_masked);
+        let adj_pc = AdjacencyNorms {
+            prev: AdjacencyNorms::prev_from_conv(&conv1_masked),
+            next: AdjacencyNorms::next_from_digitcaps(
+                &weights.w_ij,
+                cfg.pc_types,
+                cfg.pc_dim,
+            ),
+        };
+        let pc = kp::mask_keeping(
+            &lakp::kernel_scores(&weights.pc_w, &adj_pc),
+            cfg.pc_channels(),
+            cfg.conv1_ch,
+            keep_pc,
+        );
+        NetworkMasks { conv1, pc }
+    }
+
+    /// LAKP at a deployment plan's survivor counts (e.g.
+    /// [`SparsityPlan::paper_mnist`]: 64 + 423 → 99.26% compression).
+    pub fn from_plan(
+        weights: &Weights,
+        cfg: &CapsNetConfig,
+        plan: &SparsityPlan,
+    ) -> NetworkMasks {
+        NetworkMasks::lakp(weights, cfg, plan.conv1_kernels, plan.pc_kernels)
+    }
+
+    /// Zero the pruned kernels of both conv layers in place — the
+    /// masked-dense reference the sparse-compiled path is bit-exact to.
+    pub fn apply(&self, weights: &mut Weights) {
+        self.conv1.apply(&mut weights.conv1_w);
+        self.pc.apply(&mut weights.pc_w);
+    }
+
+    pub fn survived(&self) -> usize {
+        self.conv1.survived() + self.pc.survived()
+    }
+
+    pub fn total(&self) -> usize {
+        self.conv1.total() + self.pc.total()
+    }
+
+    /// Fraction of conv kernels removed, in percent.
+    pub fn pruned_pct(&self) -> f64 {
+        pruned_pct(self.survived(), self.total())
+    }
+}
+
+/// Fraction of kernels removed, in percent — the single owner of the
+/// compression-rate arithmetic (shared with
+/// [`crate::capsnet::compiled::CompressionStats`]).
+pub fn pruned_pct(survived: usize, total: usize) -> f64 {
+    100.0 * (1.0 - survived as f64 / total.max(1) as f64)
+}
+
 /// Dead-channel analysis after kernel pruning: output channels of the
 /// layer that retain no kernel — these channels (and any capsule types
 /// whose channels are all dead) can be removed entirely (§III: "the
@@ -177,6 +279,48 @@ mod tests {
         let norms = AdjacencyNorms::next_from_conv(&next);
         assert!((norms[0] - 15.0).abs() < 1e-4); // consumers of ch 0: 6+9
         assert!((norms[1] - 20.0).abs() < 1e-4); // consumers of ch 1: 10+10
+    }
+
+    #[test]
+    fn network_masks_keep_exact_survivor_counts() {
+        let cfg = crate::config::CapsNetConfig::tiny();
+        let mut rng = crate::util::rng::Rng::new(17);
+        let w = Weights::random(&cfg, &mut rng);
+        let masks = NetworkMasks::lakp(&w, &cfg, 10, 40);
+        assert_eq!(masks.conv1.survived(), 10);
+        assert_eq!(masks.pc.survived(), 40);
+        assert_eq!(masks.survived(), 50);
+        assert_eq!(
+            masks.total(),
+            cfg.conv1_ch * cfg.input.0 + cfg.pc_channels() * cfg.conv1_ch
+        );
+        assert!(masks.pruned_pct() > 80.0);
+        // Dense masks change nothing.
+        let dense = NetworkMasks::dense(&cfg);
+        assert_eq!(dense.survived(), dense.total());
+    }
+
+    #[test]
+    fn network_masks_eliminate_kernels_on_dead_channels_first() {
+        // After Conv1 loses channels, every PrimaryCaps kernel consuming
+        // a dead channel scores zero (prev norm 0) and must be pruned
+        // before any kernel on a live channel.
+        let cfg = crate::config::CapsNetConfig::tiny();
+        let mut rng = crate::util::rng::Rng::new(18);
+        let w = Weights::random(&cfg, &mut rng);
+        let keep_conv1 = cfg.conv1_ch / 2;
+        let masks = NetworkMasks::lakp(&w, &cfg, keep_conv1, 60);
+        let dead = dead_output_channels(&masks.conv1);
+        for o in 0..masks.pc.out_ch {
+            for i in 0..masks.pc.in_ch {
+                if masks.pc.get(o, i) {
+                    assert!(
+                        !dead[i],
+                        "surviving pc kernel ({o},{i}) consumes dead conv1 channel"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

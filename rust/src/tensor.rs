@@ -176,7 +176,12 @@ impl Tensor {
 
 /// 2-D convolution: input `[C_in, H, W]`, weight `[C_out, C_in, KH, KW]`,
 /// bias `[C_out]`, valid padding, square stride. Output `[C_out, H', W']`.
-pub fn conv2d(input: &Tensor, weight: &Tensor, bias: Option<&Tensor>, stride: usize) -> Result<Tensor> {
+pub fn conv2d(
+    input: &Tensor,
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    stride: usize,
+) -> Result<Tensor> {
     if input.rank() != 3 || weight.rank() != 4 {
         bail!(
             "conv2d wants [C,H,W] x [O,I,KH,KW], got {:?} x {:?}",
@@ -235,7 +240,7 @@ mod tests {
         let mut t = Tensor::zeros(&[2, 3, 4]);
         t.set(&[1, 2, 3], 7.5);
         assert_eq!(t.at(&[1, 2, 3]), 7.5);
-        assert_eq!(t.offset(&[1, 2, 3]), 1 * 12 + 2 * 4 + 3);
+        assert_eq!(t.offset(&[1, 2, 3]), 12 + 2 * 4 + 3);
     }
 
     #[test]

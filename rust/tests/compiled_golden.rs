@@ -1,0 +1,115 @@
+//! Golden pins for the sparse-compiled path: `CompiledCapsNet` logits
+//! vs the masked-dense `CapsNet` on fixed seeds, for both dataset
+//! shapes and at 100% mask density. Exact f32 equality, not tolerance —
+//! the compiled path's contract is bit-exactness (the golden reference
+//! is computed, not stored: platform libm differences in `exp` make
+//! literal logit files non-portable, but the two paths must agree
+//! bit-for-bit on any one platform).
+
+use fastcaps::capsnet::{CapsNet, CompiledCapsNet};
+use fastcaps::config::{CapsNetConfig, SparsityPlan};
+use fastcaps::data::{generate, Task};
+use fastcaps::pruning::NetworkMasks;
+use fastcaps::util::rng::Rng;
+
+/// Compiled logits == masked-dense logits at the paper's intra-channel
+/// survivor counts, on the compacted MNIST / F-MNIST architectures.
+#[test]
+fn compiled_logits_pin_masked_dense_at_paper_counts() {
+    let cases = [
+        (
+            CapsNetConfig::paper_pruned_mnist(),
+            SparsityPlan::paper_mnist(),
+            Task::Digits,
+            101u64,
+        ),
+        (
+            CapsNetConfig::paper_pruned_fmnist(),
+            SparsityPlan::paper_fmnist(),
+            Task::Garments,
+            102u64,
+        ),
+    ];
+    for (cfg, plan, task, seed) in cases {
+        let mut rng = Rng::new(seed);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        // Intra-channel kernel sparsity of the deployed model: e.g. 423
+        // of 3584 PrimaryCaps kernels on MNIST — what the Index Control
+        // Module skips on-chip and the compiled path skips in software.
+        let masks = NetworkMasks::from_plan(&net.weights, &cfg, &plan);
+        assert_eq!(masks.pc.survived(), plan.pc_kernels, "{}", cfg.name);
+
+        let dense = net.masked(&masks);
+        let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+        let data = generate(task, 2, seed);
+        let want = dense.forward_batch(&data.images).unwrap();
+        let got = compiled.forward_batch(&data.images).unwrap();
+        for (frame, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.class_lengths(),
+                w.class_lengths(),
+                "{} frame {frame}: compiled logits != masked-dense logits",
+                cfg.name
+            );
+            assert_eq!(g.routing.v, w.routing.v, "{} frame {frame}", cfg.name);
+            assert_eq!(g.primary_caps, w.primary_caps, "{} frame {frame}", cfg.name);
+        }
+    }
+}
+
+/// At 100% mask density the compiled model is the dense model: packing
+/// every kernel must change nothing.
+#[test]
+fn compiled_at_full_density_equals_dense() {
+    let cfg = CapsNetConfig::paper_pruned_mnist();
+    let mut rng = Rng::new(103);
+    let net = CapsNet::random(cfg.clone(), &mut rng);
+    let masks = NetworkMasks::dense(&cfg);
+    let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+    assert_eq!(
+        compiled.stats().survived_kernels,
+        compiled.stats().total_kernels
+    );
+    let img = generate(Task::Digits, 1, 104).images.remove(0);
+    let want = net.forward(&img).unwrap();
+    let got = compiled.forward(&img).unwrap();
+    assert_eq!(got.class_lengths(), want.class_lengths());
+    assert_eq!(got.routing.v, want.routing.v);
+    assert_eq!(got.pc_conv.data, want.pc_conv.data);
+}
+
+/// The compiled model serves through the coordinator unchanged: an
+/// `oracle-sparse` pool's responses equal direct compiled predictions.
+#[test]
+fn coordinator_serves_compiled_model() {
+    use fastcaps::backend::{InferenceBackend, SparseOracleBackend};
+    use fastcaps::coordinator::server::Server;
+
+    let cfg = CapsNetConfig::tiny();
+    let mut rng = Rng::new(105);
+    let net = CapsNet::random(cfg.clone(), &mut rng);
+    let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 100);
+    let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+    let direct = compiled.clone();
+    let server = Server::builder(move || {
+        Ok(Box::new(SparseOracleBackend::new(compiled.clone())) as Box<dyn InferenceBackend>)
+    })
+    .replicas(2)
+    .max_wait(std::time::Duration::from_millis(2))
+    .start();
+    let spec = server.spec().unwrap().clone();
+    assert_eq!(spec.kind, "oracle-sparse");
+    let compression = spec.compression.expect("sparse spec reports compression");
+    assert_eq!(compression.survived_kernels, 112);
+
+    let mut rng = Rng::new(106);
+    for _ in 0..5 {
+        let img = fastcaps::tensor::Tensor::randn(&[1, 20, 20], 0.4, &mut rng)
+            .map(|x| x.abs().min(1.0));
+        let want = direct.predict(&img).unwrap();
+        let resp = server.classify(img).unwrap();
+        assert_eq!(resp.predicted, want, "served vs direct compiled prediction");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, 5);
+}

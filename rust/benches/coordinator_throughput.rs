@@ -189,6 +189,27 @@ fn main() {
         "batch-native sim path regressed: only {speedup:.2}x over the per-frame loop"
     );
 
+    b.section("sparse sim vs dense sim (modeled steady-state, paper survivor counts)");
+    // Serving-side view of the sparsity payoff: the sim-sparse geometry
+    // (LAKP survivors on the full architecture) must strictly dominate
+    // the dense simulator's modeled steady-state FPS.
+    {
+        use fastcaps::config::SystemConfig;
+        use fastcaps::fpga::DeployedModel;
+        let dense_fps = DeployedModel::timing_stub(&SystemConfig::original("mnist"), 7)
+            .estimate_batch(8)
+            .steady_state_fps();
+        let sparse_fps = DeployedModel::timing_stub(&SystemConfig::masked("mnist"), 7)
+            .estimate_batch(8)
+            .steady_state_fps();
+        report_model("dense sim steady-state", dense_fps, "FPS");
+        report_model("sparse sim steady-state", sparse_fps, "FPS");
+        assert!(
+            sparse_fps > dense_fps,
+            "sparse sim must strictly dominate dense sim: {sparse_fps:.1} vs {dense_fps:.1}"
+        );
+    }
+
     b.section("single-request path");
     let server = Server::builder(|| {
         Ok(Box::new(NullBackend(spec("null"))) as Box<dyn InferenceBackend>)

@@ -85,4 +85,31 @@ fn main() {
         "sparse-compiled oracle must be ≥5x the dense oracle at paper \
          compression rates, got {speedup:.2}x"
     );
+
+    b.section("modeled FPGA serving: sparse sim vs dense sim (paper survivor counts)");
+    // The same LAKP masks, deployed on the fixed-point FPGA simulator:
+    // the CSR cycle model prices only survivors, so the sparse sim's
+    // steady-state FPS must strictly dominate the dense sim's.
+    use fastcaps::config::SystemConfig;
+    use fastcaps::fpga::DeployedModel;
+    let sparse_sys = SystemConfig::masked("mnist");
+    let sparse_sim = DeployedModel::new(sparse_sys, &w, &masks.conv1, &masks.pc).unwrap();
+    let dense_sim = DeployedModel::timing_stub(&SystemConfig::original("mnist"), 7);
+    let sparse_fps = sparse_sim.estimate_batch(8).steady_state_fps();
+    let dense_fps = dense_sim.estimate_batch(8).steady_state_fps();
+    report_model("dense sim steady-state", dense_fps, "FPS");
+    report_model("sparse sim steady-state", sparse_fps, "FPS");
+    assert!(
+        sparse_fps > dense_fps,
+        "sparse sim must strictly dominate the dense sim at the paper's \
+         survivor counts: {sparse_fps:.1} vs {dense_fps:.1} FPS"
+    );
+    // F-MNIST plan point too (timing-only stubs price the geometry).
+    let sparse_f = DeployedModel::timing_stub(&SystemConfig::masked("fmnist"), 7);
+    let dense_f = DeployedModel::timing_stub(&SystemConfig::original("fmnist"), 7);
+    assert!(
+        sparse_f.estimate_batch(8).steady_state_fps()
+            > dense_f.estimate_batch(8).steady_state_fps(),
+        "f-mnist sparse sim must dominate the dense sim"
+    );
 }

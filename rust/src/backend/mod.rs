@@ -5,15 +5,15 @@
 //! a string-keyed [`BackendRegistry`].
 //!
 //! ```text
-//!        BackendRegistry ("oracle" | "oracle-sparse" | "sim" | "pjrt")
+//!   BackendRegistry ("oracle" | "oracle-sparse" | "sim" | "sim-sparse" | "pjrt")
 //!                     │ build(name, &BackendConfig)
 //!                     ▼
 //!              Box<dyn InferenceBackend>
-//!        ┌───────────┬───────┼─────────────┐
-//!        ▼           ▼       ▼             ▼
-//!  OracleBackend SparseOracle SimBackend PjrtBackend
-//!  (capsnet fp32) (compiled    (fpga      (runtime HLO)
-//!                  sparse fp32) Q-path)
+//!        ┌───────────┬───────┼─────────────┬──────────────┐
+//!        ▼           ▼       ▼             ▼              ▼
+//!  OracleBackend SparseOracle SimBackend SimSparseBackend PjrtBackend
+//!  (capsnet fp32) (compiled    (fpga      (fpga Q-path,   (runtime HLO)
+//!                  sparse fp32) Q-path)    CSR survivors)
 //! ```
 //!
 //! The coordinator ([`crate::coordinator::server`]) schedules batches
@@ -28,11 +28,13 @@
 pub mod oracle;
 pub mod pjrt;
 pub mod sim;
+pub mod sim_sparse;
 pub mod sparse;
 
 pub use oracle::OracleBackend;
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
+pub use sim_sparse::SimSparseBackend;
 pub use sparse::SparseOracleBackend;
 
 use crate::capsnet::compiled::CompressionStats;
@@ -266,6 +268,25 @@ impl BackendConfig {
         }
     }
 
+    /// The *full-architecture* `.fcw` weights the prune-at-deploy
+    /// backends (`oracle-sparse`, `sim-sparse`) consume: an explicit
+    /// [`BackendConfig::weights`] override, else the conventional
+    /// `weights-<dataset>-full.fcw` in the artifact directory when it
+    /// exists. `None` means fall back to seeded random weights.
+    pub fn full_weights_path(&self) -> Option<PathBuf> {
+        match &self.weights {
+            Some(p) => Some(p.clone()),
+            None => {
+                let conventional = self.artifacts.join(if self.is_fmnist() {
+                    "weights-fmnist-full.fcw"
+                } else {
+                    "weights-mnist-full.fcw"
+                });
+                conventional.exists().then_some(conventional)
+            }
+        }
+    }
+
     /// The simulator/oracle system config for this dataset + variant
     /// (dataset canonicalized so task aliases pick the right model).
     pub fn system_config(&self) -> crate::config::SystemConfig {
@@ -305,7 +326,7 @@ impl BackendRegistry {
     }
 
     /// The built-in execution paths: `"oracle"`, `"oracle-sparse"`,
-    /// `"sim"`, `"pjrt"`.
+    /// `"sim"`, `"sim-sparse"`, `"pjrt"`.
     pub fn with_defaults() -> BackendRegistry {
         let mut r = BackendRegistry::new();
         r.register("oracle", |cfg| {
@@ -316,6 +337,9 @@ impl BackendRegistry {
         });
         r.register("sim", |cfg| {
             Ok(Box::new(SimBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
+        });
+        r.register("sim-sparse", |cfg| {
+            Ok(Box::new(SimSparseBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
         });
         r.register("pjrt", |cfg| {
             Ok(Box::new(PjrtBackend::from_config(cfg)?) as Box<dyn InferenceBackend>)
@@ -360,7 +384,10 @@ mod tests {
     #[test]
     fn registry_has_all_builtin_paths() {
         let r = BackendRegistry::with_defaults();
-        assert_eq!(r.names(), vec!["oracle", "oracle-sparse", "pjrt", "sim"]);
+        assert_eq!(
+            r.names(),
+            vec!["oracle", "oracle-sparse", "pjrt", "sim", "sim-sparse"]
+        );
     }
 
     #[test]
@@ -409,7 +436,7 @@ mod tests {
             artifacts: PathBuf::from("/nonexistent/artifacts"),
             ..BackendConfig::default()
         };
-        for kind in ["sim", "oracle", "oracle-sparse"] {
+        for kind in ["sim", "oracle", "oracle-sparse", "sim-sparse"] {
             let mut b = r.build(kind, &cfg).unwrap();
             let spec = b.spec().clone();
             assert_eq!(spec.kind, kind);

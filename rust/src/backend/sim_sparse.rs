@@ -1,0 +1,176 @@
+//! The sparsity-aware FPGA simulator behind the unified API
+//! (`"sim-sparse"`): the fixed-point counterpart of
+//! [`super::SparseOracleBackend`].
+//!
+//! Where [`super::SimBackend`] serves the paper's *compacted* preset
+//! architectures, this backend deploys the **full** paper architecture
+//! LAKP-pruned at the deployment plan's survivor counts
+//! ([`crate::config::SystemConfig::masked`]) onto the Q-format datapath:
+//! the conv modules store and execute only the CSR-packed survivors
+//! (bit-exact to masking the dense tensor — the fpga property tests pin
+//! it), the ~80 KB of packed weights live on-chip instead of replaying
+//! over DDR (the uncompacted 1152-capsule û still spills — the step the
+//! compacted presets eliminate), and the cycle model prices only
+//! surviving kernels. The spec
+//! therefore reports *both* the pipelined timing
+//! ([`BackendSpec::reports_timing`]) and the packing's
+//! [`crate::capsnet::compiled::CompressionStats`]
+//! ([`BackendSpec::compression`]) — the modeled-FPS-vs-compression story
+//! the paper's Fig. 1 tells, servable behind the coordinator.
+
+use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use crate::capsnet::weights::Weights;
+use crate::config::SystemConfig;
+use crate::fpga::{BatchScratch, DeployedModel};
+use crate::pruning::NetworkMasks;
+use crate::util::rng::Rng;
+
+pub struct SimSparseBackend {
+    model: DeployedModel,
+    spec: BackendSpec,
+    scratch: BatchScratch,
+}
+
+impl SimSparseBackend {
+    /// Wrap an already-deployed (CSR-packed, quantized) model. The spec
+    /// reports whatever the modules actually pack, so this also serves
+    /// hand-pruned deployments (the `fastcaps prune --serve --backend
+    /// sim-sparse` path).
+    pub fn new(model: DeployedModel) -> SimSparseBackend {
+        let stats = model.compression();
+        let spec = BackendSpec {
+            kind: "sim-sparse".into(),
+            model: format!("{}-sparse", model.config.model.name),
+            input_shape: model.config.model.input,
+            // Same wide ladder as `sim`: marginal frames cost one
+            // initiation interval in the pipelined cycle model.
+            batch_buckets: BackendSpec::pow2_buckets(16),
+            reports_timing: true,
+            max_replicas: None,
+            compression: Some(stats),
+        }
+        .normalize();
+        SimSparseBackend {
+            model,
+            spec,
+            scratch: BatchScratch::new(),
+        }
+    }
+
+    /// Registry factory: the full paper architecture for the dataset,
+    /// LAKP-pruned at the paper plan's survivor counts and deployed on
+    /// the fixed-point datapath. Weights resolve like `oracle-sparse`
+    /// ([`BackendConfig::full_weights_path`]): explicit override →
+    /// `weights-<dataset>-full.fcw` → seeded random (predictions are
+    /// noise, but the prune→deploy→serve path runs end to end).
+    pub fn from_config(cfg: &BackendConfig) -> Result<SimSparseBackend, BackendError> {
+        let sys = SystemConfig::masked(if cfg.is_fmnist() { "fmnist" } else { "mnist" });
+        let weights = match cfg.full_weights_path() {
+            Some(path) => {
+                let w = Weights::load(&path)
+                    .map_err(|e| BackendError::Init(format!("loading {path:?}: {e:#}")))?;
+                w.validate(&sys.model).map_err(|e| {
+                    BackendError::Init(format!(
+                        "sim-sparse deploys the full architecture; weights mismatch: {e:#}"
+                    ))
+                })?;
+                w
+            }
+            None => Weights::random(&sys.model, &mut Rng::new(cfg.seed)),
+        };
+        let masks = NetworkMasks::from_plan(&weights, &sys.model, &sys.sparsity);
+        let model = DeployedModel::new(sys, &weights, &masks.conv1, &masks.pc)
+            .map_err(|e| BackendError::Init(format!("sparse deployment: {e:#}")))?;
+        Ok(SimSparseBackend::new(model))
+    }
+
+    pub fn model(&self) -> &DeployedModel {
+        &self.model
+    }
+}
+
+impl InferenceBackend for SimSparseBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        let out = self
+            .model
+            .run_batch(&req.images, &mut self.scratch)
+            .map_err(|e| BackendError::Execution(format!("sim-sparse batch: {e:#}")))?;
+        Ok(InferOutput {
+            lengths: out.lengths,
+            frame_latency_s: Some(out.timing.frame.latency_s()),
+            batch_latency_s: Some(out.timing.latency_s()),
+            steady_state_fps: Some(out.timing.steady_state_fps()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Task};
+    use std::path::PathBuf;
+
+    fn no_artifacts() -> BackendConfig {
+        BackendConfig {
+            artifacts: PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        }
+    }
+
+    #[test]
+    fn spec_reports_compression_and_timing_at_plan_counts() {
+        let b = SimSparseBackend::from_config(&no_artifacts()).unwrap();
+        let spec = b.spec();
+        assert_eq!(spec.kind, "sim-sparse");
+        assert!(spec.reports_timing);
+        assert_eq!(spec.input_shape, (1, 28, 28));
+        let c = spec.compression.as_ref().unwrap();
+        assert_eq!(c.survived_kernels, 64 + 423);
+        assert_eq!(c.total_kernels, 256 + 65536);
+        assert!(c.pruned_pct() > 99.0);
+        // And the conv modules store only the survivors.
+        assert_eq!(
+            b.model().conv1.weights.len() + b.model().pc.weights.len(),
+            (64 + 423) * 81
+        );
+    }
+
+    #[test]
+    fn served_lengths_match_direct_run_frame_and_report_pipelined_timing() {
+        let mut b = SimSparseBackend::from_config(&no_artifacts()).unwrap();
+        let direct = b.model().clone();
+        let data = generate(Task::Digits, 2, 19);
+        let out = b.infer(&InferRequest::new(data.images.clone())).unwrap();
+        for (img, got) in data.images.iter().zip(&out.lengths) {
+            let (_, want, _) = direct.run_frame(img).unwrap();
+            assert_eq!(got, &want, "served vs direct sparse sim");
+        }
+        let frame = out.frame_latency_s.unwrap();
+        let batch = out.batch_latency_s.unwrap();
+        // The uncompacted û spill leaves the masked deployment DDR-bound,
+        // so the serial û stream floors the initiation interval: the
+        // 2-frame batch costs at most two full frames and steady-state
+        // FPS sits at (or above) the 1/latency rate — never below it.
+        assert!(batch > frame && batch <= 2.0 * frame, "{batch} vs {frame}");
+        assert!(out.steady_state_fps.unwrap() >= 0.99 / frame);
+    }
+
+    #[test]
+    fn steady_state_dominates_the_dense_sim() {
+        // The serving-level view of the acceptance criterion: the
+        // sparse sim's modeled steady-state FPS strictly beats the
+        // dense (original) sim's on the same traffic.
+        let sparse = SimSparseBackend::from_config(&no_artifacts()).unwrap();
+        let dense_cfg = SystemConfig::original("mnist");
+        let dense = DeployedModel::timing_stub(&dense_cfg, 7);
+        assert!(
+            sparse.model().estimate_batch(8).steady_state_fps()
+                > dense.estimate_batch(8).steady_state_fps()
+        );
+    }
+}

@@ -70,18 +70,7 @@ impl SparseOracleBackend {
                 SparsityPlan::paper_mnist(),
             )
         };
-        let weights_path = match &cfg.weights {
-            Some(p) => Some(p.clone()),
-            None => {
-                let conventional = cfg.artifacts.join(if cfg.is_fmnist() {
-                    "weights-fmnist-full.fcw"
-                } else {
-                    "weights-mnist-full.fcw"
-                });
-                conventional.exists().then_some(conventional)
-            }
-        };
-        let weights = match weights_path {
+        let weights = match cfg.full_weights_path() {
             Some(path) => {
                 let w = Weights::load(&path)
                     .map_err(|e| BackendError::Init(format!("loading {path:?}: {e:#}")))?;

@@ -166,7 +166,9 @@ impl SparseConvLayer {
 pub struct CompressionStats {
     pub survived_kernels: usize,
     pub total_kernels: usize,
-    /// §III-C index memory: bytes of alive-kernel indices kept on-chip.
+    /// §III-C index memory kept on-chip: the CSR sidecar (`u16` column
+    /// per survivor + `u32` row pointer per output channel + 1), the
+    /// same cost the BRAM/DDR models charge.
     pub index_bytes: usize,
 }
 
@@ -388,7 +390,9 @@ mod tests {
         let stats = compiled.stats();
         assert_eq!(stats.survived_kernels, 54);
         assert_eq!(stats.total_kernels, masks.total());
-        assert_eq!(stats.index_bytes, 54 * 4);
+        // CSR sidecar per layer: u16 col per survivor + u32 row pointer
+        // per output channel (+1). conv1: 4 of 16×1; pc: 50 of 32×16.
+        assert_eq!(stats.index_bytes, (4 * 2 + 17 * 4) + (50 * 2 + 33 * 4));
         assert!(stats.pruned_pct() > 80.0);
         // The packed weights hold exactly kh*kw values per survivor.
         assert_eq!(compiled.conv1.survived(), 4);

@@ -361,6 +361,51 @@ impl SystemConfig {
         }
     }
 
+    /// The *full* paper architecture with LAKP masks applied in place —
+    /// no channel/type compaction: all 1152 primary capsules remain (a
+    /// dead conv output channel still emits its bias, exactly like the
+    /// masked-dense reference), but only the plan's surviving kernels
+    /// are stored, executed, and cycle-priced, and the ~80 KB of packed
+    /// survivor weights live on-chip instead of replaying over DDR (the
+    /// uncompacted 1152-capsule û working set still spills — see
+    /// `DeployedModel::ddr_bytes`). This is what the `sim-sparse`
+    /// backend deploys; `pruned`/`proposed` model the further-compacted
+    /// architecture the paper ships (252/432 capsules, û on-chip),
+    /// which is *not* value-equivalent to masking alone.
+    pub fn masked(dataset: &str) -> SystemConfig {
+        let model = CapsNetConfig::paper_full(&format!("capsnet-{dataset}"));
+        let paper = match dataset {
+            "fmnist" => SparsityPlan::paper_fmnist(),
+            _ => SparsityPlan::paper_mnist(),
+        };
+        SystemConfig::masked_with_counts(model, paper.conv1_kernels, paper.pc_kernels)
+    }
+
+    /// A masked (uncompacted) deployment of `model` at explicit survivor
+    /// counts — the single owner of the `sim-sparse` deployment
+    /// invariants, shared by [`SystemConfig::masked`] and the
+    /// `fastcaps prune --serve --backend sim-sparse` path: masking
+    /// removes kernels, not channels or capsule types (compaction is a
+    /// separate deployment step), on the PYNQ-Z1 budget with the
+    /// optimized schedule.
+    pub fn masked_with_counts(
+        model: CapsNetConfig,
+        conv1_kernels: usize,
+        pc_kernels: usize,
+    ) -> SystemConfig {
+        SystemConfig {
+            sparsity: SparsityPlan {
+                conv1_kernels,
+                pc_kernels,
+                conv1_channels: model.conv1_ch,
+                pc_types: model.pc_types,
+            },
+            model,
+            budget: FpgaBudget::pynq_z1(),
+            options: AcceleratorOptions::optimized(),
+        }
+    }
+
     pub fn is_pruned(&self) -> bool {
         self.sparsity != SparsityPlan::dense(&self.model)
     }
@@ -447,6 +492,22 @@ mod tests {
             assert!(!o.options.optimized_routing);
             assert!(x.options.optimized_routing);
             assert!(o.model.total_params() > p.model.total_params());
+        }
+    }
+
+    #[test]
+    fn masked_config_keeps_full_capsule_set() {
+        for (d, kernels) in [("mnist", 64 + 423), ("fmnist", 96 + 667)] {
+            let m = SystemConfig::masked(d);
+            assert!(m.is_pruned(), "kernel-sparse ⇒ pruned regime");
+            assert_eq!(m.model.num_primary_caps(), 1152);
+            assert_eq!(m.sparsity.num_primary_caps(&m.model), 1152);
+            assert_eq!(m.sparsity.conv1_kernels + m.sparsity.pc_kernels, kernels);
+            assert_eq!(m.sparsity.pc_types, 32, "no type compaction");
+            // Survivor weights fit on-chip (the point of pruning):
+            // 78,894 B (MNIST) / 123,606 B (F-MNIST) — a fraction of
+            // the 560 KB device the dense 10.7 MB model overflows 19×.
+            assert!(m.sparsity.survived_conv_params(&m.model) * 2 < 150_000);
         }
     }
 

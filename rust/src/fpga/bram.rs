@@ -9,6 +9,24 @@
 /// Usable bytes per BRAM36 block (32 Kbit data).
 pub const BRAM36_BYTES: usize = 4096;
 
+/// On-chip bytes of one conv layer's resident weights in the CSR packing
+/// ([`super::index_control::PackedRows`]): packed 16-bit weight words
+/// plus, for a sparse layer, the index memory the Index Control Module
+/// walks — one `u16` column per survivor and `out_ch + 1` `u32` row
+/// pointers. A dense layer (`survived == total`) carries no index
+/// (the address generators enumerate the grid), so 100% density
+/// degenerates to the plain `2 × params` accounting. A fully pruned
+/// layer still holds its row pointers: the on-chip sequencer needs the
+/// (all-equal) offsets to skip every row.
+pub fn csr_weight_bytes(survived: usize, total: usize, kk: usize, out_ch: usize) -> usize {
+    let weights = survived * kk * 2;
+    if survived == total {
+        weights
+    } else {
+        weights + survived * 2 + (out_ch + 1) * 4
+    }
+}
+
 /// One allocated buffer.
 #[derive(Debug, Clone)]
 pub struct Buffer {
@@ -79,6 +97,19 @@ mod tests {
         let single = l.alloc("a", 8192, false);
         let dbl = l.alloc("b", 8192, true);
         assert_eq!(dbl, 2.0 * single);
+    }
+
+    #[test]
+    fn csr_weight_accounting() {
+        // Dense: exactly 2 bytes/param, no index.
+        assert_eq!(csr_weight_bytes(64, 64, 81, 64), 64 * 81 * 2);
+        // Sparse: packed words + u16 cols + u32 row pointers.
+        assert_eq!(
+            csr_weight_bytes(423, 3584, 81, 56),
+            423 * 81 * 2 + 423 * 2 + 57 * 4
+        );
+        // Fully pruned: only the row pointers remain on-chip.
+        assert_eq!(csr_weight_bytes(0, 3584, 81, 56), 57 * 4);
     }
 
     #[test]

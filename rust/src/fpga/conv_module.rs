@@ -2,13 +2,24 @@
 //! kernels on the PE array, with joint functional (Q8.8) and timing
 //! semantics.
 //!
+//! The module is sparsity-first: only surviving kernels are *stored*
+//! (k·k 16-bit words per survivor, packed in the CSR order of
+//! [`IndexControl::packed_rows`] — the same `PackedRows` the
+//! sparse-compiled oracle packs against), and the execution loops walk
+//! the CSR rows directly. Within a row the input channels ascend, which
+//! is the dense loop-nest order, so the sparse traversal's integer
+//! accumulation sequence is bit-for-bit the masked-dense one; a dense
+//! layer is the degenerate all-rows-full case.
+//!
 //! Timing model: the PE array iterates output positions; per position the
-//! index FIFO streams surviving kernels, each contributing k×k MACs. The
+//! Index Control Module streams surviving kernels, each contributing k×k
+//! MACs (empty rows cost one row-pointer skip — see
+//! [`super::index_control::PackedRows::fetch_overhead_cycles`]). The
 //! inner loop pipelines at II=1 in the optimized schedule (II=2 when
 //! resource pressure prevents full partitioning, as in the original
 //! design). Activations write out through the output BRAM banks.
 
-use super::index_control::IndexControl;
+use super::index_control::{IndexControl, PackedRows};
 use super::pe::PeArray;
 use crate::fixed::Q8;
 use crate::tensor::Tensor;
@@ -27,11 +38,13 @@ pub struct StageTiming {
 /// One conv layer as deployed: 16-bit weights in a per-layer dynamic
 /// fixed-point format (Q-CapsNets-style [25]: the fraction width is chosen
 /// from the layer's weight range, so small-magnitude layers like
-/// PrimaryCaps keep precision), plus the survivor index list.
+/// PrimaryCaps keep precision), packed to the surviving kernels only.
 #[derive(Debug, Clone)]
 pub struct ConvModule {
-    /// OIHW weight raw values at `Q(16-frac_w).frac_w` (pruned kernels
-    /// hold zeros and are skipped via the index list).
+    /// Packed kernel weights at `Q(16-frac_w).frac_w`: `k·k` raw values
+    /// per *surviving* kernel, in `rows` order (out-channel major,
+    /// input channels ascending within a row). Dead kernels are not
+    /// stored at all — this is what the BRAM/DDR models account.
     pub weights: Vec<i16>,
     /// Fractional bits of the weight format (per-layer).
     pub frac_w: u32,
@@ -41,7 +54,10 @@ pub struct ConvModule {
     pub in_ch: usize,
     pub k: usize,
     pub stride: usize,
-    pub index: IndexControl,
+    /// CSR alive-kernel layout — the representation the Index Control
+    /// Module keeps on-chip, shared verbatim with the sparse-compiled
+    /// oracle ([`crate::capsnet::compiled`]).
+    pub rows: PackedRows,
     /// Apply ReLU to outputs (Conv1 yes, PrimaryCaps no).
     pub relu: bool,
 }
@@ -64,28 +80,66 @@ impl ConvModule {
         relu: bool,
     ) -> ConvModule {
         assert_eq!(weights.rank(), 4);
-        let max_abs = weights.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let (out_ch, in_ch, k) = (weights.shape[0], weights.shape[1], weights.shape[2]);
+        assert_eq!(index.out_ch, out_ch, "index grid / weight grid mismatch");
+        assert_eq!(index.in_ch, in_ch, "index grid / weight grid mismatch");
+        let rows = index.packed_rows();
+        let kk = k * k;
+        // The dynamic fixed-point range is chosen from the *surviving*
+        // kernels only: dead kernels never execute, so their magnitudes
+        // must not cost the layer precision. This also makes a sparse
+        // deployment of unmasked weights quantize exactly like a dense
+        // deployment of the masked tensor (zeros never raise the range)
+        // — the masked-dense bit-exactness contract.
+        let mut max_abs = 0.0f32;
+        let mut packed = Vec::with_capacity(rows.survived() * kk);
+        for o in 0..out_ch {
+            for &i in rows.row(o) {
+                let base = (o * in_ch + i as usize) * kk;
+                for &x in &weights.data[base..base + kk] {
+                    max_abs = max_abs.max(x.abs());
+                }
+            }
+        }
         let frac_w = pick_frac(max_abs.max(1e-6));
         let scale = (1i64 << frac_w) as f32;
-        ConvModule {
-            weights: weights
-                .data
-                .iter()
-                .map(|&x| {
+        for o in 0..out_ch {
+            for &i in rows.row(o) {
+                let base = (o * in_ch + i as usize) * kk;
+                packed.extend(weights.data[base..base + kk].iter().map(|&x| {
                     (x * scale)
                         .round()
                         .clamp(i16::MIN as f32, i16::MAX as f32) as i16
-                })
-                .collect(),
+                }));
+            }
+        }
+        ConvModule {
+            weights: packed,
             frac_w,
             bias: bias.data.iter().map(|&x| Q8::from_f32(x).raw()).collect(),
-            out_ch: weights.shape[0],
-            in_ch: weights.shape[1],
-            k: weights.shape[2],
+            out_ch,
+            in_ch,
+            k,
             stride,
-            index,
+            rows,
             relu,
         }
+    }
+
+    /// Surviving kernels this module stores and executes.
+    pub fn survived(&self) -> usize {
+        self.rows.survived()
+    }
+
+    /// Kernels of the dense `out_ch × in_ch` grid.
+    pub fn total(&self) -> usize {
+        self.out_ch * self.in_ch
+    }
+
+    /// Bytes of packed 16-bit kernel weights (BRAM-resident for pruned
+    /// deployments, replayed over DDR per frame by the original design).
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.len() * 2
     }
 
     /// Output spatial dims for an input of `h × w`.
@@ -99,11 +153,16 @@ impl ConvModule {
     /// MACs per frame: output positions × surviving kernels × k².
     pub fn macs(&self, h: usize, w: usize) -> u64 {
         let (oh, ow) = self.out_dims(h, w);
-        (oh * ow) as u64 * self.index.survived() as u64 * (self.k * self.k) as u64
+        (oh * ow) as u64 * self.rows.survived() as u64 * (self.k * self.k) as u64
     }
 
     /// Functional Q8.8 convolution over surviving kernels only (what the
     /// index-controlled PE array computes). Input/output layout `[C,H,W]`.
+    ///
+    /// The CSR walk visits kernels in (out_ch, ascending in_ch) order —
+    /// exactly the dense loop nest restricted to survivors — so the
+    /// integer accumulation sequence, and therefore every output bit,
+    /// matches a dense module run on the masked weight tensor.
     pub fn forward(&self, input: &[Q8], h: usize, w: usize) -> Vec<Q8> {
         assert_eq!(input.len(), self.in_ch * h * w);
         let (oh, ow) = self.out_dims(h, w);
@@ -117,22 +176,25 @@ impl ConvModule {
             }
         }
         let kk = self.k * self.k;
-        for &(o, i) in &self.index.indices {
-            let (o, i) = (o as usize, i as usize);
-            let wbase = (o * self.in_ch + i) * kk;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut a = acc[(o * oh + oy) * ow + ox];
-                    for ky in 0..self.k {
-                        let iy = oy * self.stride + ky;
-                        let irow = (i * h + iy) * w + ox * self.stride;
-                        for kx in 0..self.k {
-                            let wv = self.weights[wbase + ky * self.k + kx] as i64;
-                            let xv = input[irow + kx].raw() as i64;
-                            a += wv * xv;
+        for o in 0..self.out_ch {
+            let row_start = self.rows.row_ptr[o] as usize;
+            for (n, &i) in self.rows.row(o).iter().enumerate() {
+                let i = i as usize;
+                let wbase = (row_start + n) * kk;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut a = acc[(o * oh + oy) * ow + ox];
+                        for ky in 0..self.k {
+                            let iy = oy * self.stride + ky;
+                            let irow = (i * h + iy) * w + ox * self.stride;
+                            for kx in 0..self.k {
+                                let wv = self.weights[wbase + ky * self.k + kx] as i64;
+                                let xv = input[irow + kx].raw() as i64;
+                                a += wv * xv;
+                            }
                         }
+                        acc[(o * oh + oy) * ow + ox] = a;
                     }
-                    acc[(o * oh + oy) * ow + ox] = a;
                 }
             }
         }
@@ -181,23 +243,26 @@ impl ConvModule {
             acc[o * oh * ow..(o + 1) * oh * ow].fill(b);
         }
         let kk = self.k * self.k;
-        for &(o, i) in &self.index.indices {
-            let (o, i) = (o as usize, i as usize);
-            let wk = &self.weights[(o * self.in_ch + i) * kk..][..kk];
-            for oy in 0..oh {
-                let arow_off = (o * oh + oy) * ow;
-                let arow = &mut acc[arow_off..arow_off + ow];
-                for ky in 0..self.k {
-                    let iy = oy * self.stride + ky;
-                    let irow = &input[(i * h + iy) * w..][..w];
-                    let wrow = &wk[ky * self.k..][..self.k];
-                    for (ox, a) in arow.iter_mut().enumerate() {
-                        let win = &irow[ox * self.stride..][..self.k];
-                        let mut s = 0i64;
-                        for (&wv, xv) in wrow.iter().zip(win) {
-                            s += wv as i64 * xv.raw() as i64;
+        for o in 0..self.out_ch {
+            let row_start = self.rows.row_ptr[o] as usize;
+            for (n, &i) in self.rows.row(o).iter().enumerate() {
+                let i = i as usize;
+                let wk = &self.weights[(row_start + n) * kk..][..kk];
+                for oy in 0..oh {
+                    let arow_off = (o * oh + oy) * ow;
+                    let arow = &mut acc[arow_off..arow_off + ow];
+                    for ky in 0..self.k {
+                        let iy = oy * self.stride + ky;
+                        let irow = &input[(i * h + iy) * w..][..w];
+                        let wrow = &wk[ky * self.k..][..self.k];
+                        for (ox, a) in arow.iter_mut().enumerate() {
+                            let win = &irow[ox * self.stride..][..self.k];
+                            let mut s = 0i64;
+                            for (&wv, xv) in wrow.iter().zip(win) {
+                                s += wv as i64 * xv.raw() as i64;
+                            }
+                            *a += s;
                         }
-                        *a += s;
                     }
                 }
             }
@@ -225,7 +290,7 @@ impl ConvModule {
         let (oh, ow) = self.out_dims(h, w);
         let out_words = (self.out_ch * oh * ow) as u64;
         let compute = pe.mac_cycles(macs, ii)
-            + self.index.fetch_overhead_cycles()
+            + self.rows.fetch_overhead_cycles()
             // Pipeline refill at each output-row boundary.
             + (oh as u64) * pe.depth;
         let mem = out_words.div_ceil(mem_bw.max(1));
@@ -329,6 +394,71 @@ mod tests {
             m.forward_into(&input2, 9, 9, &mut acc, &mut got);
             assert_eq!(got, want2);
         }
+    }
+
+    #[test]
+    fn property_csr_module_matches_masked_dense_bitwise() {
+        // The packed module built from unmasked weights + a mask must be
+        // bit-identical to a dense (all-alive) module built from the
+        // masked tensor: the fraction width comes from the survivors
+        // (zeros never raise the range), survivor quantization is
+        // identical, the CSR walk keeps the dense accumulation order,
+        // and a dead kernel's dense contribution is an exact integer 0.
+        crate::testing::check_msg(
+            "CSR conv ≡ masked-dense conv (bitwise)",
+            10,
+            91,
+            |r| {
+                let (o, i) = (1 + r.below(6), 1 + r.below(4));
+                let stride = 1 + r.below(2);
+                let relu = r.below(2) == 0;
+                let w = Tensor::randn(&[o, i, 3, 3], 0.5, r);
+                let b = Tensor::randn(&[o], 0.2, r);
+                let mut mask = KernelMask::all_alive(o, i);
+                for oc in 0..o {
+                    for ic in 0..i {
+                        if r.below(3) == 0 {
+                            mask.set(oc, ic, false);
+                        }
+                    }
+                }
+                let input: Vec<Q8> = Tensor::randn(&[i, 10, 10], 0.4, r)
+                    .data
+                    .iter()
+                    .map(|&x| Q8::from_f32(x))
+                    .collect();
+                (w, b, stride, relu, mask, input)
+            },
+            |(w, b, stride, relu, mask, input)| {
+                let sparse =
+                    ConvModule::new(w, b, *stride, IndexControl::from_mask(mask), *relu);
+                if sparse.weights.len() != mask.survived() * 9 {
+                    return Err(format!(
+                        "packed {} words for {} survivors",
+                        sparse.weights.len(),
+                        mask.survived()
+                    ));
+                }
+                let mut wz = w.clone();
+                mask.apply(&mut wz);
+                let alive = KernelMask::all_alive(mask.out_ch, mask.in_ch);
+                let dense =
+                    ConvModule::new(&wz, b, *stride, IndexControl::from_mask(&alive), *relu);
+                if sparse.frac_w != dense.frac_w {
+                    return Err(format!("frac_w {} != {}", sparse.frac_w, dense.frac_w));
+                }
+                let want = dense.forward(input, 10, 10);
+                if sparse.forward(input, 10, 10) != want {
+                    return Err("forward diverged from masked-dense".into());
+                }
+                let (mut acc, mut got) = (Vec::new(), Vec::new());
+                sparse.forward_into(input, 10, 10, &mut acc, &mut got);
+                if got != want {
+                    return Err("forward_into diverged from masked-dense".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -30,6 +30,36 @@ impl Default for DdrModel {
     }
 }
 
+/// Per-frame DDR traffic of one conv layer's weight replay under the CSR
+/// packing: the packed 16-bit kernel weights, plus — when the layer is
+/// actually sparse — the index sidecar the Index Control Module consumes
+/// (one `u16` column per survivor and `out_ch + 1` `u32` row pointers).
+///
+/// Two boundary cases are load-bearing:
+/// * **Dense** (`survived == total`): no sidecar streams — the dense
+///   design has no Index Control Module and its address generators
+///   enumerate the grid — so the original design's 10.7 MB replay is the
+///   exact degenerate case and the paper's 5-FPS anchor is unchanged.
+/// * **Fully pruned** (`survived == 0`): the layer's DMA descriptor is
+///   elided entirely, so *nothing* streams — not even row pointers. The
+///   accounting must saturate at 0 here; charging the fixed
+///   `(out_ch + 1)` pointer sidecar (or letting a `survived - 1`-style
+///   inter-kernel term wrap) would invent traffic for a layer the
+///   accelerator never touches.
+pub fn conv_weight_stream_bytes(survived: u64, total: u64, kk: u64, out_ch: u64) -> u64 {
+    if survived == 0 {
+        return 0;
+    }
+    // One cost model for the packed layout: the DDR replay moves exactly
+    // what BRAM would hold resident, minus the fully-pruned case above.
+    super::bram::csr_weight_bytes(
+        survived as usize,
+        total as usize,
+        kk as usize,
+        out_ch as usize,
+    ) as u64
+}
+
 impl DdrModel {
     /// Cycles to stream `bytes` with single-beat (non-burst) reads.
     pub fn stream_cycles_single(&self, bytes: u64) -> u64 {
@@ -79,5 +109,30 @@ mod tests {
         let m = DdrModel::default();
         assert_eq!(m.stream_cycles_single(0), 0);
         assert_eq!(m.stream_cycles_burst(0), 0);
+    }
+
+    #[test]
+    fn dense_layer_streams_exactly_its_weights() {
+        // Degenerate 100%-density case: 2 bytes per weight, no sidecar —
+        // the original design's replay accounting, unchanged.
+        assert_eq!(conv_weight_stream_bytes(3584, 3584, 81, 256), 3584 * 81 * 2);
+    }
+
+    #[test]
+    fn sparse_layer_adds_the_index_sidecar() {
+        let bytes = conv_weight_stream_bytes(423, 65536, 81, 256);
+        assert_eq!(bytes, 423 * 81 * 2 + 423 * 2 + 257 * 4);
+        // The sidecar is a rounding error next to the weights it saves.
+        assert!(bytes < conv_weight_stream_bytes(65536, 65536, 81, 256) / 100);
+    }
+
+    #[test]
+    fn fully_pruned_layer_streams_zero_bytes() {
+        // Regression (saturation fix): a fully pruned layer must yield 0
+        // stream bytes — no row-pointer sidecar, no wrapped subtraction.
+        assert_eq!(conv_weight_stream_bytes(0, 65536, 81, 256), 0);
+        assert_eq!(conv_weight_stream_bytes(0, 1, 9, 1), 0);
+        // And a single survivor immediately pays weights + sidecar.
+        assert_eq!(conv_weight_stream_bytes(1, 4, 9, 2), 9 * 2 + 2 + 3 * 4);
     }
 }

@@ -75,7 +75,11 @@ impl IndexControl {
         for o in 1..=self.out_ch {
             row_ptr[o] = row_ptr[o].max(row_ptr[o - 1]);
         }
-        PackedRows { row_ptr, cols }
+        PackedRows {
+            row_ptr,
+            cols,
+            in_ch: self.in_ch,
+        }
     }
 }
 
@@ -86,6 +90,9 @@ pub struct PackedRows {
     pub row_ptr: Vec<u32>,
     /// Input channel of each surviving kernel, row-major by out channel.
     pub cols: Vec<u16>,
+    /// Input channels of the dense grid (lets the packing know when it
+    /// is degenerate-dense and needs no index memory at all).
+    pub in_ch: usize,
 }
 
 impl PackedRows {
@@ -98,11 +105,50 @@ impl PackedRows {
         self.cols.len()
     }
 
-    /// On-chip index memory this packing costs (§III-C: a `u16` pair
-    /// per surviving kernel) — same cost model as
-    /// [`IndexControl::index_bytes`].
+    /// Number of output channels (rows) in the packing.
+    pub fn out_ch(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Output channels that kept no kernel at all. The address
+    /// generators must still visit their row pointer to skip them.
+    pub fn empty_rows(&self) -> usize {
+        (0..self.out_ch())
+            .filter(|&o| self.row_ptr[o] == self.row_ptr[o + 1])
+            .count()
+    }
+
+    /// Whether every kernel of the dense grid survived.
+    pub fn is_dense(&self) -> bool {
+        self.survived() == self.out_ch() * self.in_ch
+    }
+
+    /// On-chip index memory this packing costs (§III-C): one `u16`
+    /// column per surviving kernel plus `out_ch + 1` `u32` row pointers
+    /// — the same sidecar the BRAM/DDR models charge
+    /// ([`super::bram::csr_weight_bytes`]), so every consumer of the
+    /// packing reports one number; a degenerate-dense packing needs no
+    /// index at all (the address generators enumerate the grid). The
+    /// flat survivor-*list* form, [`IndexControl::index_bytes`], keeps
+    /// the paper's u16-pair cost for the un-packed representation.
     pub fn index_bytes(&self) -> usize {
-        self.survived() * 4
+        if self.is_dense() {
+            0
+        } else {
+            self.survived() * 2 + (self.out_ch() + 1) * 4
+        }
+    }
+
+    /// Cycles of index-fetch overhead for one pass of the Index Control
+    /// Module over this packing: the FIFO fill, the per-kernel switch
+    /// cost not hidden by the k×k-deep MAC schedule (1 in 64), and one
+    /// cycle per *empty* row — a row-pointer advance with no MACs to
+    /// hide behind. At 100% density no row is empty, so this equals the
+    /// flat survivor-list model ([`IndexControl::fetch_overhead_cycles`])
+    /// exactly, which is what keeps the dense paper anchors bit-stable
+    /// across the CSR refactor.
+    pub fn fetch_overhead_cycles(&self) -> u64 {
+        4 + self.survived() as u64 / 64 + self.empty_rows() as u64
     }
 }
 
@@ -170,6 +216,30 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn packed_overhead_matches_flat_model_at_full_density() {
+        // No empty rows at density 1.0 → the CSR overhead model is the
+        // exact degenerate case of the flat survivor-list model.
+        let m = KernelMask::all_alive(56, 64);
+        let ic = IndexControl::from_mask(&m);
+        let p = ic.packed_rows();
+        assert_eq!(p.empty_rows(), 0);
+        assert_eq!(p.out_ch(), 56);
+        assert_eq!(p.fetch_overhead_cycles(), ic.fetch_overhead_cycles());
+    }
+
+    #[test]
+    fn empty_rows_cost_a_pointer_skip() {
+        let mut m = KernelMask::all_alive(8, 4);
+        for i in 0..4 {
+            m.set(2, i, false);
+            m.set(5, i, false);
+        }
+        let p = IndexControl::from_mask(&m).packed_rows();
+        assert_eq!(p.empty_rows(), 2);
+        assert_eq!(p.fetch_overhead_cycles(), 4 + 24 / 64 + 2);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! which units exist in which configuration — follows the architecture
 //! directly, so config-to-config deltas are mechanistic, not fitted.
 
-use super::bram::BramLedger;
+use super::bram::{csr_weight_bytes, BramLedger};
 use crate::config::SystemConfig;
 
 /// Resource utilization of one accelerator build.
@@ -95,10 +95,30 @@ pub fn bram_plan(cfg: &SystemConfig) -> BramLedger {
     let n_caps = s.num_primary_caps(m);
 
     // 16-bit weights. The original design streams weights from DDR and
-    // only holds stream buffers; pruned designs hold everything on-chip.
+    // only holds stream buffers; pruned designs hold everything on-chip
+    // in the CSR packing — packed survivor words plus the Index Control
+    // Module's column/row-pointer memory, per layer.
     if cfg.is_pruned() {
-        let conv_w = s.survived_conv_params(m) as usize * 2;
-        ledger.alloc("weights.conv(+idx)", conv_w + (s.conv1_kernels + s.pc_kernels) * 4, false);
+        ledger.alloc(
+            "weights.conv1(csr)",
+            csr_weight_bytes(
+                s.conv1_kernels,
+                m.conv1_ch * c_in,
+                m.conv1_k * m.conv1_k,
+                m.conv1_ch,
+            ),
+            false,
+        );
+        ledger.alloc(
+            "weights.pc(csr)",
+            csr_weight_bytes(
+                s.pc_kernels,
+                m.pc_channels() * m.conv1_ch,
+                m.pc_k * m.pc_k,
+                m.pc_channels(),
+            ),
+            false,
+        );
         let wij = s.pc_types * m.num_classes * m.pc_dim * m.dc_dim * 2;
         ledger.alloc("weights.w_ij", wij, false);
     } else {

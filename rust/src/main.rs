@@ -1,13 +1,15 @@
 //! `fastcaps` — CLI for the FastCaps reproduction.
 //!
 //! ```text
-//! fastcaps report <table1|table2|table3|fig1|fig5|fig8|fig14|all>
+//! fastcaps report <table1|table2|table3|fig1|fig5|fig8|fig14|sparse|all>
 //! fastcaps simulate [--dataset mnist|fmnist] [--config original|pruned|proposed] [--frames N]
-//! fastcaps serve    [--backend oracle|oracle-sparse|sim|pjrt] [--model capsnet-mnist-pruned]
-//!                   [--dataset mnist|fmnist] [--replicas N] [--max-queue N]
+//! fastcaps serve    [--backend oracle|oracle-sparse|sim|sim-sparse|pjrt]
+//!                   [--model capsnet-mnist-pruned] [--dataset mnist|fmnist]
+//!                   [--replicas N] [--max-queue N]
 //!                   [--requests N] [--clients K] [--artifacts DIR]
 //! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
-//!                   [--sparsity S] [--compile] [--serve] [--replicas N]
+//!                   [--sparsity S] [--compile] [--serve]
+//!                   [--backend oracle-sparse|sim-sparse] [--replicas N]
 //!                   [--requests N] [--clients K]
 //! fastcaps selftest
 //! ```
@@ -48,17 +50,21 @@ fn print_help() {
         "fastcaps — FastCaps (LAKP + routing-optimized CapsNet accelerator) reproduction\n\n\
          subcommands:\n\
          \x20 report <exp>   regenerate a paper table/figure\n\
-         \x20                exps: table1 table2 table3 fig1 fig5 fig8 fig14 all\n\
+         \x20                exps: table1 table2 table3 fig1 fig5 fig8 fig14\n\
+         \x20                sparse (dense-vs-pruned modeled FPS/DDR/BRAM) all\n\
          \x20 simulate       run frames through the cycle-level accelerator simulator\n\
          \x20 serve          start the serving coordinator and drive a workload\n\
          \x20                backends: oracle (fp32 reference), oracle-sparse\n\
          \x20                (sparse-compiled pruned fp32), sim (FPGA\n\
-         \x20                simulator, default), pjrt (AOT artifacts);\n\
+         \x20                simulator, default), sim-sparse (FPGA simulator\n\
+         \x20                over CSR survivors: pipelined timing +\n\
+         \x20                compression), pjrt (AOT artifacts);\n\
          \x20                --replicas N scales the executor pool\n\
          \x20 prune          LAKP/KP-prune weights, print compression;\n\
          \x20                --compile packs survivors into the sparse\n\
          \x20                execution path (CSR / Index-Control layout),\n\
          \x20                --serve then serves the compiled model\n\
+         \x20                (--backend oracle-sparse|sim-sparse)\n\
          \x20 selftest       quick end-to-end sanity checks\n"
     );
 }
@@ -77,6 +83,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig8" => print!("{}", fastcaps::report::fig8()),
         "fig14" => print!("{}", fastcaps::report::fig14()),
         "ablation" => print!("{}", fastcaps::report::ablation()),
+        "sparse" => print!("{}", fastcaps::report::sparse()),
         "table1" => print!("{}", fastcaps::report::table1(&dir)?),
         "fig5" => print!("{}", fastcaps::report::fig5(&dir)?),
         "all" => {
@@ -215,6 +222,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.pool_size(),
         spec.batch_buckets,
     );
+    if let Some(c) = &spec.compression {
+        println!(
+            "each replica executes {}/{} conv kernels ({:.2}% pruned, {} B index memory)",
+            c.survived_kernels,
+            c.total_kernels,
+            c.pruned_pct(),
+            c.index_bytes,
+        );
+    }
     drive_workload(server, task, n_requests, n_clients);
     Ok(())
 }
@@ -351,18 +367,54 @@ fn cmd_prune(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    // prune → compile → serve: replicas of the compiled model behind the
-    // coordinator, driven with generated traffic.
+    // prune → compile → serve: replicas of the pruned model behind the
+    // coordinator, driven with generated traffic. `--backend` picks the
+    // executor: the sparse-compiled fp32 oracle (default) or the
+    // fixed-point FPGA simulator deployed over the same CSR survivors.
     let n_requests = args.get_usize("requests", 64);
     let n_clients = args.get_usize("clients", 4).max(1);
-    let server = Server::builder(move || {
-        Ok(Box::new(fastcaps::backend::SparseOracleBackend::new(compiled.clone()))
-            as Box<dyn fastcaps::backend::InferenceBackend>)
-    })
-    .replicas(args.get_usize("replicas", 2))
-    .max_wait(Duration::from_millis(args.get_u64("max-wait-ms", 5)))
-    .max_queue_depth(args.get_usize("max-queue", 1024))
-    .start();
+    let backend_kind = args.get_or("backend", "oracle-sparse").to_string();
+    let replicas = args.get_usize("replicas", 2);
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
+    let max_queue = args.get_usize("max-queue", 1024);
+    let server = match backend_kind.as_str() {
+        "sim-sparse" => {
+            let sys = SystemConfig::masked_with_counts(
+                cfg.clone(),
+                masks.conv1.survived(),
+                masks.pc.survived(),
+            );
+            let deployed = DeployedModel::new(sys, &net.weights, &masks.conv1, &masks.pc)?;
+            let t = deployed.estimate_batch(8);
+            println!(
+                "deployed on the sparse FPGA datapath: modeled {:.1} FPS steady-state \
+                 ({:.2} ms single-frame, DDR bytes/frame {})",
+                t.steady_state_fps(),
+                t.frame.latency_s() * 1e3,
+                deployed.ddr_bytes(),
+            );
+            Server::builder(move || {
+                Ok(Box::new(fastcaps::backend::SimSparseBackend::new(deployed.clone()))
+                    as Box<dyn fastcaps::backend::InferenceBackend>)
+            })
+            .replicas(replicas)
+            .max_wait(max_wait)
+            .max_queue_depth(max_queue)
+            .start()
+        }
+        "oracle-sparse" => Server::builder(move || {
+            Ok(Box::new(fastcaps::backend::SparseOracleBackend::new(compiled.clone()))
+                as Box<dyn fastcaps::backend::InferenceBackend>)
+        })
+        .replicas(replicas)
+        .max_wait(max_wait)
+        .max_queue_depth(max_queue)
+        .start(),
+        other => anyhow::bail!(
+            "prune --serve runs the pruned model: \
+             --backend oracle-sparse|sim-sparse (got '{other}')"
+        ),
+    };
     if let Some(e) = server.init_error() {
         anyhow::bail!("starting compiled backend: {e}");
     }
@@ -387,7 +439,7 @@ fn cmd_selftest() -> Result<()> {
     let prop = DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 7)
         .estimate_frame()
         .fps();
-    println!("[1/4] simulator: original {orig:.1} FPS, proposed {prop:.1} FPS");
+    println!("[1/5] simulator: original {orig:.1} FPS, proposed {prop:.1} FPS");
     anyhow::ensure!(prop > 100.0 * orig, "speedup shape broken");
 
     // 2. Fixed-point units.
@@ -396,7 +448,7 @@ fn cmd_selftest() -> Result<()> {
     let e = taylor::exp_taylor_q12(x).to_f32();
     anyhow::ensure!((e - 0.7f32.exp()).abs() < 0.01, "taylor exp off: {e}");
     println!(
-        "[2/4] fixed-point Taylor exp(0.7) = {e:.4} (want {:.4})",
+        "[2/5] fixed-point Taylor exp(0.7) = {e:.4} (want {:.4})",
         0.7f32.exp()
     );
 
@@ -419,14 +471,67 @@ fn cmd_selftest() -> Result<()> {
         );
         let stats = compiled.stats();
         println!(
-            "[3/4] sparse compile: {}/{} kernels packed ({:.1}% pruned), bit-exact ✓",
+            "[3/5] sparse compile: {}/{} kernels packed ({:.1}% pruned), bit-exact ✓",
             stats.survived_kernels,
             stats.total_kernels,
             stats.pruned_pct()
         );
     }
 
-    // 4. PJRT runtime if artifacts exist (and the `pjrt` feature is in).
+    // 4. Sparse FPGA datapath: the CSR-packed DeployedModel must be
+    //    bitwise identical to deploying the masked (zeroed) tensor
+    //    densely, on a random kernel mask — the release-binary proof of
+    //    the sparsity-aware Q-format datapath.
+    {
+        use fastcaps::capsnet::weights::Weights;
+        use fastcaps::pruning::KernelMask;
+        let cfg = SystemConfig::proposed("mnist");
+        let m = cfg.model.clone();
+        let mut rng = fastcaps::util::rng::Rng::new(23);
+        let weights = Weights::random(&m, &mut rng);
+        let mut conv1_mask = KernelMask::all_alive(m.conv1_ch, m.input.0);
+        let mut pc_mask = KernelMask::all_alive(m.pc_channels(), m.conv1_ch);
+        for o in 0..conv1_mask.out_ch {
+            for i in 0..conv1_mask.in_ch {
+                if rng.below(4) == 0 {
+                    conv1_mask.set(o, i, false);
+                }
+            }
+        }
+        for o in 0..pc_mask.out_ch {
+            for i in 0..pc_mask.in_ch {
+                if rng.below(3) == 0 {
+                    pc_mask.set(o, i, false);
+                }
+            }
+        }
+        let sparse = DeployedModel::new(cfg.clone(), &weights, &conv1_mask, &pc_mask)?;
+        let mut masked = weights.clone();
+        conv1_mask.apply(&mut masked.conv1_w);
+        pc_mask.apply(&mut masked.pc_w);
+        let dense = DeployedModel::new(
+            cfg.clone(),
+            &masked,
+            &KernelMask::all_alive(m.conv1_ch, m.input.0),
+            &KernelMask::all_alive(m.pc_channels(), m.conv1_ch),
+        )?;
+        let img = fastcaps::data::generate(Task::Digits, 1, 5).images.remove(0);
+        let (cs, ls, _) = sparse.run_frame(&img)?;
+        let (cd, ld, _) = dense.run_frame(&img)?;
+        anyhow::ensure!(
+            cs == cd && ls == ld,
+            "sparse sim diverged from masked-dense deployment"
+        );
+        let c = sparse.compression();
+        println!(
+            "[4/5] sim-sparse datapath: {}/{} kernels packed, \
+             CSR ≡ masked-dense bitwise ✓",
+            c.survived_kernels,
+            c.total_kernels,
+        );
+    }
+
+    // 5. PJRT runtime if artifacts exist (and the `pjrt` feature is in).
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         match fastcaps::runtime::Runtime::open(dir) {
@@ -435,13 +540,13 @@ fn cmd_selftest() -> Result<()> {
                     rt.engine("capsnet-mnist-pruned", 1, &dir.join("weights-mnist.fcw"))?;
                 let img = fastcaps::data::generate(Task::Digits, 1, 3).images.remove(0);
                 let lengths = engine.run_batch(&[img])?;
-                println!("[4/4] PJRT lengths: {:?}", lengths[0]);
+                println!("[5/5] PJRT lengths: {:?}", lengths[0]);
                 anyhow::ensure!(lengths[0].len() == 10);
             }
-            Err(e) => println!("[4/4] skipped PJRT ({e})"),
+            Err(e) => println!("[5/5] skipped PJRT ({e})"),
         }
     } else {
-        println!("[4/4] skipped PJRT (no artifacts/ — run `make artifacts`)");
+        println!("[5/5] skipped PJRT (no artifacts/ — run `make artifacts`)");
     }
     println!("selftest OK");
     Ok(())

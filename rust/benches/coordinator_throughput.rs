@@ -9,6 +9,7 @@ use fastcaps::backend::{
     SimBackend,
 };
 use fastcaps::coordinator::batcher::BatchPolicy;
+use fastcaps::coordinator::net::{NetClient, NetServer};
 use fastcaps::coordinator::server::Server;
 use fastcaps::data::{generate, Task};
 use fastcaps::tensor::Tensor;
@@ -114,6 +115,81 @@ fn main() {
         rps > 10_000.0,
         "coordinator became the bottleneck: {rps:.0} req/s"
     );
+
+    b.section("socket front-end: loopback throughput (no-op backend)");
+    // The TCP path must sustain ≥5k req/s of framed traffic — decode,
+    // admission, batch, respond — with zero dropped or hung requests
+    // after a graceful drain (ISSUE 5 acceptance gate). Clients pipeline
+    // on their own connections; responses stream back in request order.
+    {
+        let server = Server::builder(|| {
+            Ok(Box::new(NullBackend(spec("null"))) as Box<dyn InferenceBackend>)
+        })
+        .max_wait(Duration::from_micros(200))
+        .max_queue_depth(8192)
+        .start();
+        let net = NetServer::bind("127.0.0.1:0", server).expect("bind loopback");
+        let addr = net.local_addr();
+        let n_clients = 4usize;
+        let per_client = 1000usize;
+        let window = 64usize;
+        let t0 = std::time::Instant::now();
+        let ok_total: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut client = NetClient::connect(addr).expect("connect");
+                        client
+                            .set_read_timeout(Some(Duration::from_secs(30)))
+                            .unwrap();
+                        let img = Tensor::zeros(&[1, 28, 28]);
+                        let mut ok = 0usize;
+                        let mut inflight = 0usize;
+                        for _ in 0..per_client {
+                            if inflight == window {
+                                client.recv().expect("response");
+                                ok += 1;
+                                inflight -= 1;
+                            }
+                            client.send(&img).expect("send");
+                            inflight += 1;
+                        }
+                        while inflight > 0 {
+                            client.recv().expect("tail response");
+                            ok += 1;
+                            inflight -= 1;
+                        }
+                        ok
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let rps = ok_total as f64 / t0.elapsed().as_secs_f64();
+        report_model("socket loopback throughput", rps, "req/s");
+        assert_eq!(
+            ok_total,
+            n_clients * per_client,
+            "dropped or rejected requests on the socket path"
+        );
+        assert!(
+            rps >= 5_000.0,
+            "socket path below the 5k req/s gate: {rps:.0} req/s"
+        );
+        let m = net.shutdown(); // graceful drain must terminate cleanly
+        assert_eq!(
+            m.requests as usize, ok_total,
+            "server-side accounting disagrees after drain"
+        );
+        assert_eq!(m.wire_requests as usize, ok_total);
+        assert_eq!(m.wire_errors, 0);
+        assert_eq!(m.connections_closed, m.connections_opened);
+        report_model(
+            "socket p99 latency",
+            m.latency.percentile_us(99.0) as f64,
+            "us",
+        );
+    }
 
     b.section("executor pool scaling (fixed 1ms/batch backend)");
     let mut scaling = Vec::new();

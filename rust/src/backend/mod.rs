@@ -165,6 +165,20 @@ impl BackendSpec {
         self
     }
 
+    /// Elements in one input image (C·H·W).
+    pub fn input_elems(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+
+    /// Exact byte count of one image on the wire (f32-le words): the
+    /// network front-end validates classify payloads against this, so
+    /// shape checking at the socket boundary is spec-driven, not
+    /// duplicated per call site.
+    pub fn input_wire_bytes(&self) -> usize {
+        self.input_elems() * std::mem::size_of::<f32>()
+    }
+
     /// Canonical bucket ladder for host-synchronous backends: powers of
     /// two up to `max` (inclusive when `max` itself is a power of two).
     /// The single owner of bucket policy — `oracle` and `sim` size their
@@ -388,6 +402,16 @@ mod tests {
             r.names(),
             vec!["oracle", "oracle-sparse", "pjrt", "sim", "sim-sparse"]
         );
+    }
+
+    #[test]
+    fn input_wire_bytes_follow_spec_shape() {
+        let r = BackendRegistry::with_defaults();
+        let b = r.build("sim", &BackendConfig::default()).unwrap();
+        let spec = b.spec();
+        assert_eq!(spec.input_shape, (1, 28, 28));
+        assert_eq!(spec.input_elems(), 784);
+        assert_eq!(spec.input_wire_bytes(), 3136);
     }
 
     #[test]

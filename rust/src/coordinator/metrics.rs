@@ -1,8 +1,14 @@
 //! Serving metrics: fixed-bucket latency histogram + counters.
 //! Allocation-free on the record path (the executor thread calls
 //! [`Metrics::record`] per response).
+//!
+//! [`Server::metrics`](crate::coordinator::server::Server::metrics) hands
+//! out *snapshots* ([`Metrics::snapshot`]): the elapsed wall time is
+//! frozen at snapshot time, so a summary printed seconds after shutdown
+//! reports the throughput the server actually sustained, not a number
+//! that decays while the snapshot sits on the caller's stack.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Log-spaced latency histogram from 1 µs to ~17 s.
 #[derive(Debug, Clone)]
@@ -50,7 +56,22 @@ impl LatencyHistogram {
         self.max_us
     }
 
-    /// Approximate percentile (upper edge of the containing bucket).
+    /// Fold another histogram in (same fixed buckets): used by
+    /// client-side load generators that record per-thread and merge.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Approximate percentile: the upper edge of the containing bucket,
+    /// clamped to the observed maximum. The clamp matters twice: a bucket
+    /// edge can exceed every sample in it (one 10 µs sample would
+    /// otherwise report p99 = 16 µs > max = 10 µs), and the top bucket is
+    /// open-ended (its edge, ~33 s, is a format artifact, not a latency).
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -60,7 +81,12 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return 1u64 << (i + 1);
+                if i + 1 == self.buckets.len() {
+                    // Open-ended top bucket: its nominal edge is below
+                    // samples beyond it; max_us is the only true bound.
+                    return self.max_us;
+                }
+                return (1u64 << (i + 1)).min(self.max_us);
             }
         }
         self.max_us
@@ -78,7 +104,22 @@ pub struct Metrics {
     pub rejected: u64,
     /// Requests dropped because a backend batch failed.
     pub backend_errors: u64,
+    /// Executor replicas that exited abnormally (backend panic). A
+    /// normal drain leaves this 0 — the regression the counter pins.
+    pub replicas_died: u64,
+    /// TCP connections accepted by the network front-end.
+    pub connections_opened: u64,
+    /// Connections that finished (client close, drain, or wire fault).
+    pub connections_closed: u64,
+    /// Classify frames decoded at the wire boundary (includes requests
+    /// later rejected at admission — compare with `requests`).
+    pub wire_requests: u64,
+    /// Typed error frames sent back over the wire.
+    pub wire_errors: u64,
     pub started: Instant,
+    /// Wall time frozen by [`Metrics::snapshot`]; `None` while the
+    /// metrics are live inside the server.
+    elapsed: Option<Duration>,
 }
 
 impl Default for Metrics {
@@ -90,7 +131,13 @@ impl Default for Metrics {
             padded_slots: 0,
             rejected: 0,
             backend_errors: 0,
+            replicas_died: 0,
+            connections_opened: 0,
+            connections_closed: 0,
+            wire_requests: 0,
+            wire_errors: 0,
             started: Instant::now(),
+            elapsed: None,
         }
     }
 }
@@ -114,8 +161,40 @@ impl Metrics {
         self.backend_errors += n;
     }
 
+    pub fn record_replica_died(&mut self) {
+        self.replicas_died += 1;
+    }
+
+    pub fn record_connection_opened(&mut self) {
+        self.connections_opened += 1;
+    }
+
+    /// Fold one finished connection's counters in (called once when the
+    /// connection handler exits, so the record path stays per-connection
+    /// local and lock-free).
+    pub fn record_connection_closed(&mut self, wire_requests: u64, wire_errors: u64) {
+        self.connections_closed += 1;
+        self.wire_requests += wire_requests;
+        self.wire_errors += wire_errors;
+    }
+
+    /// A copy whose wall clock is frozen *now*: `throughput_rps` on the
+    /// returned value stays constant no matter when it is read. Live
+    /// metrics (no snapshot) keep using the running clock.
+    pub fn snapshot(&self) -> Metrics {
+        let mut m = self.clone();
+        m.elapsed = Some(self.elapsed());
+        m
+    }
+
+    /// Wall time this metrics window covers: frozen at snapshot time,
+    /// or still running for the live instance.
+    pub fn elapsed(&self) -> Duration {
+        self.elapsed.unwrap_or_else(|| self.started.elapsed())
+    }
+
     pub fn throughput_rps(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64();
+        let secs = self.elapsed().as_secs_f64();
         if secs == 0.0 {
             0.0
         } else {
@@ -132,7 +211,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} rejected={} errors={} batches={} mean_batch={:.2} padded={} \
              latency(mean={:.0}us p50={}us p99={}us max={}us)",
             self.requests,
@@ -145,7 +224,20 @@ impl Metrics {
             self.latency.percentile_us(50.0),
             self.latency.percentile_us(99.0),
             self.latency.max_us(),
-        )
+        );
+        if self.connections_opened > 0 {
+            s.push_str(&format!(
+                " net(conns={}/{} wire_reqs={} wire_errs={})",
+                self.connections_closed,
+                self.connections_opened,
+                self.wire_requests,
+                self.wire_errors,
+            ));
+        }
+        if self.replicas_died > 0 {
+            s.push_str(&format!(" replicas_died={}", self.replicas_died));
+        }
+        s
     }
 }
 
@@ -183,6 +275,97 @@ mod tests {
         assert_eq!(m.padded_slots, 2);
         assert_eq!(m.requests, 14);
         assert!((m.mean_batch_size() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_clamped_to_max() {
+        // The regression from ISSUE 5: one 10 µs sample lands in bucket
+        // [8,16), whose upper edge (16) used to be reported as p50/p99 —
+        // a percentile above the observed maximum.
+        let mut h = LatencyHistogram::default();
+        h.record(10);
+        assert_eq!(h.max_us(), 10);
+        assert_eq!(h.percentile_us(50.0), 10);
+        assert_eq!(h.percentile_us(99.0), 10);
+        // Top (open-ended) bucket: the edge is a format artifact (~33 s);
+        // the report must stay at the observed max.
+        let mut h = LatencyHistogram::default();
+        h.record(60_000_000); // 60 s, beyond the last bucket edge
+        assert_eq!(h.percentile_us(99.0), 60_000_000);
+    }
+
+    #[test]
+    fn percentile_never_exceeds_max_property() {
+        crate::testing::check(
+            "percentile_us(p) <= max_us for all p",
+            60,
+            19,
+            |r| {
+                let mut h = LatencyHistogram::default();
+                for _ in 0..(1 + r.below(400)) {
+                    // span every bucket including the open-ended top one
+                    h.record(1 + r.below(50_000_000) as u64);
+                }
+                h
+            },
+            |h| {
+                (1..=100)
+                    .map(|p| p as f64)
+                    .all(|p| h.percentile_us(p) <= h.max_us())
+            },
+        );
+    }
+
+    #[test]
+    fn histogram_merge_equals_joint_recording() {
+        let mut joint = LatencyHistogram::default();
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for (i, us) in [3u64, 17, 900, 42_000, 5, 1_000_000].iter().enumerate() {
+            joint.record(*us);
+            if i % 2 == 0 {
+                a.record(*us);
+            } else {
+                b.record(*us);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), joint.count());
+        assert_eq!(a.max_us(), joint.max_us());
+        assert_eq!(a.mean_us(), joint.mean_us());
+        for p in [10.0, 50.0, 99.0] {
+            assert_eq!(a.percentile_us(p), joint.percentile_us(p));
+        }
+    }
+
+    #[test]
+    fn snapshot_rps_is_stable_across_a_sleep() {
+        let mut m = Metrics::default();
+        for _ in 0..100 {
+            m.record(50);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let snap = m.snapshot();
+        let r1 = snap.throughput_rps();
+        assert!(r1 > 0.0);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // The snapshot froze its wall clock: identical reading later.
+        assert_eq!(snap.throughput_rps(), r1, "snapshot RPS decayed");
+        // The live instance keeps its running clock (decays as designed).
+        assert!(m.throughput_rps() < r1);
+        // A snapshot of a snapshot keeps the original frozen window.
+        assert_eq!(snap.snapshot().throughput_rps(), r1);
+    }
+
+    #[test]
+    fn connection_counters_in_summary() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("net("));
+        m.record_connection_opened();
+        m.record_connection_opened();
+        m.record_connection_closed(5, 1);
+        let s = m.summary();
+        assert!(s.contains("net(conns=1/2 wire_reqs=5 wire_errs=1)"), "{s}");
     }
 
     #[test]

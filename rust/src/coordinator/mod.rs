@@ -23,8 +23,14 @@
 //!   available bucket or a deadline, then pick the best bucket
 //!   (vLLM-style bucketed batching; the AOT artifacts provide b=1 and
 //!   b=8 executables, padding fills the remainder).
-//! * [`metrics`] — latency histogram + throughput, rejection, and error
-//!   counters shared across the pool.
+//! * [`metrics`] — latency histogram + throughput, rejection, error,
+//!   and network-connection counters shared across the pool. Snapshots
+//!   freeze their wall clock so reported RPS doesn't decay after the
+//!   fact.
+//! * [`wire`] / [`net`] — the network front-end: a length-prefixed
+//!   binary protocol ([`wire`]) and a `TcpListener` serving layer +
+//!   [`net::NetClient`] ([`net`]), so processes that are not `fastcaps`
+//!   can classify images through the same admission queue.
 //!
 //! Everything is std-only (threads + condvar queue); the vendored crate
 //! set has no tokio, and the workload (sub-ms model steps) doesn't need
@@ -32,7 +38,9 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod net;
 pub mod server;
+pub mod wire;
 
 use crate::tensor::Tensor;
 use std::time::Instant;

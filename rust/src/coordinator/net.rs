@@ -1,0 +1,577 @@
+//! Network serving front-end: a `TcpListener` over the executor pool,
+//! making the coordinator reachable from processes that are not
+//! `fastcaps` (the paper's serving story — edge FPGAs answering real
+//! request traffic — rather than threads calling `Server::submit`
+//! in-process).
+//!
+//! ```text
+//!             ┌ acceptor thread (nonblocking accept + stop flag)
+//!  TcpListener┤
+//!             └ per connection: reader thread ──► writer thread
+//!                  │ decode frame (wire.rs)        │ in request order:
+//!                  │ validate vs BackendSpec       │ recv() response,
+//!                  │ Server::submit ───────────────► write Response /
+//!                  │   (bounded admission queue)     typed Error frame
+//! ```
+//!
+//! * **Ordering.** The reader forwards one [`Reply`] per request into an
+//!   in-order channel the writer drains, so responses stream back in
+//!   request order even though the pool executes batches concurrently —
+//!   clients may pipeline without tagging requests.
+//! * **Validation.** The reader checks each classify payload against the
+//!   backend's [`BackendSpec::input_shape`](crate::backend::BackendSpec)
+//!   *before* admission: a wrong-sized image gets a typed
+//!   [`ErrorCode::InvalidRequest`] frame and the connection stays
+//!   usable. Admission rejections (`QueueFull`) and a dead pool
+//!   (`Unavailable`) surface the same way instead of hanging the client.
+//! * **Drain.** [`NetServer::shutdown`] stops accepting, shuts the read
+//!   side of every connection (no new requests), lets writers finish
+//!   every in-flight response, joins all threads, and only then drains
+//!   and stops the executor pool. A client can request the same drain
+//!   over the wire with a [`FrameType::Shutdown`] frame
+//!   ([`NetClient::shutdown_server`]); `fastcaps serve --listen` blocks
+//!   on [`NetServer::wait_shutdown_requested`] for exactly that.
+//! * **Counters.** Per-connection request/error counts are folded into
+//!   the shared [`Metrics`] when the connection closes
+//!   (`connections_opened/closed`, `wire_requests`, `wire_errors`).
+
+use super::metrics::Metrics;
+use super::server::Server;
+use super::wire::{self, ErrorCode, Fault, FrameType, ServerFrame, WireResponse};
+use super::Response;
+use crate::backend::BackendError;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Per-connection cap on decoded-but-unwritten replies. A client that
+/// pipelines without reading responses fills this, then the writer's
+/// TCP send buffer; the reader then blocks in `send` instead of growing
+/// server memory — backpressure ends at the client's own socket.
+const REPLY_WINDOW: usize = 256;
+
+/// Upper bound on any single response write. A peer that stops reading
+/// (but keeps the connection alive) would otherwise block the writer —
+/// and therefore drain — forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One in-order slot in a connection's response stream.
+enum Reply {
+    /// A response the executor pool will produce.
+    Pending(mpsc::Receiver<Response>),
+    /// A typed error produced at the wire/admission boundary.
+    Reject(ErrorCode, String),
+    /// Acknowledge a graceful-drain request.
+    Ack,
+}
+
+struct NetShared {
+    server: Server,
+    input_shape: (usize, usize, usize),
+    /// Exact classify-payload size (`BackendSpec::input_wire_bytes`):
+    /// the spec-driven shape check at the wire boundary.
+    expected_bytes: u32,
+    /// Tells the acceptor to stop; set by [`NetServer::shutdown`]/Drop.
+    stop: AtomicBool,
+    /// Set when a wire `Shutdown` frame (or local call) requests a
+    /// graceful drain; `serve --listen` blocks on it.
+    drain_requested: Mutex<bool>,
+    drain_cv: Condvar,
+    /// Read-half handles of live connections, keyed by connection id,
+    /// so drain can unblock readers mid-`read`.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Join handles of spawned connection handler threads.
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    next_conn: AtomicU64,
+}
+
+impl NetShared {
+    fn request_shutdown(&self) {
+        *self.drain_requested.lock().unwrap() = true;
+        self.drain_cv.notify_all();
+    }
+}
+
+/// TCP front-end over a running [`Server`]. Owns the server: dropping
+/// or [`shutdown`](NetServer::shutdown)ting the front-end drains the
+/// pool too.
+pub struct NetServer {
+    inner: Option<Arc<NetShared>>,
+    acceptor: Option<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind a listener and start accepting. `addr` may use port 0 for
+    /// an OS-assigned port ([`NetServer::local_addr`] reports it). A
+    /// server whose backend never initialized is rejected here — there
+    /// is nothing to serve.
+    pub fn bind(addr: &str, server: Server) -> Result<NetServer, BackendError> {
+        if let Some(e) = server.init_error() {
+            return Err(BackendError::Unavailable(format!(
+                "refusing to listen for a backend that never started: {e}"
+            )));
+        }
+        let spec = server
+            .spec()
+            .ok_or_else(|| BackendError::Unavailable("server has no backend spec".into()))?;
+        let input_shape = spec.input_shape;
+        let expected_bytes = spec.input_wire_bytes() as u32;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| BackendError::Init(format!("bind {addr}: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| BackendError::Init(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| BackendError::Init(format!("set_nonblocking: {e}")))?;
+
+        let shared = Arc::new(NetShared {
+            server,
+            input_shape,
+            expected_bytes,
+            stop: AtomicBool::new(false),
+            drain_requested: Mutex::new(false),
+            drain_cv: Condvar::new(),
+            conns: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+        });
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("fastcaps-net-acceptor".into())
+                .spawn(move || accept_loop(listener, &shared))
+                .expect("spawning acceptor thread")
+        };
+        Ok(NetServer {
+            inner: Some(shared),
+            acceptor: Some(acceptor),
+            local_addr,
+        })
+    }
+
+    /// Address the listener is bound to (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The wrapped server, e.g. for in-process submits alongside the
+    /// socket path (benches compare the two).
+    pub fn server(&self) -> &Server {
+        &self.shared().server
+    }
+
+    /// Whether a graceful drain has been requested (wire `Shutdown`
+    /// frame or [`NetServer::request_shutdown`]).
+    pub fn shutdown_requested(&self) -> bool {
+        *self.shared().drain_requested.lock().unwrap()
+    }
+
+    /// Ask for a graceful drain (same effect as a wire `Shutdown`
+    /// frame): wakes [`NetServer::wait_shutdown_requested`] waiters.
+    pub fn request_shutdown(&self) {
+        self.shared().request_shutdown();
+    }
+
+    /// Block until a graceful drain is requested.
+    pub fn wait_shutdown_requested(&self) {
+        let shared = self.shared();
+        let mut requested = shared.drain_requested.lock().unwrap();
+        while !*requested {
+            requested = shared.drain_cv.wait(requested).unwrap();
+        }
+    }
+
+    fn shared(&self) -> &Arc<NetShared> {
+        self.inner.as_ref().expect("NetServer already shut down")
+    }
+
+    /// Graceful drain: stop accepting, finish every request already
+    /// read off a connection, close connections, then drain and stop
+    /// the executor pool. Returns the final (frozen) metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.begin_drain();
+        let inner = self.inner.take().expect("drained once");
+        match Arc::try_unwrap(inner) {
+            Ok(shared) => shared.server.shutdown(),
+            // Unreachable once every thread is joined, but never panic
+            // in a shutdown path: fall back to a snapshot.
+            Err(arc) => arc.server.metrics(),
+        }
+    }
+
+    fn begin_drain(&mut self) {
+        let Some(shared) = self.inner.as_ref() else {
+            return;
+        };
+        shared.stop.store(true, Ordering::SeqCst);
+        shared.request_shutdown(); // unblock wait_shutdown_requested
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // Unblock readers stuck in `read`: no new requests, in-flight
+        // replies still flow (only the read half closes).
+        for stream in shared.conns.lock().unwrap().values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let handlers: Vec<_> = shared.handlers.lock().unwrap().drain(..).collect();
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.begin_drain();
+        // The pool itself drains via the Server's own Drop when the
+        // last Arc<NetShared> reference goes away.
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<NetShared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The accepted socket may inherit the listener's
+                // nonblocking mode on some platforms; handlers want
+                // blocking reads.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                // The conns entry is how drain unblocks this reader; a
+                // connection we cannot register we must not serve, or
+                // shutdown could join a reader nobody can wake (fd
+                // exhaustion is exactly when try_clone fails).
+                let Ok(read_half) = stream.try_clone() else {
+                    continue; // dropping the stream closes it
+                };
+                shared.conns.lock().unwrap().insert(id, read_half);
+                shared.server.with_metrics(|m| m.record_connection_opened());
+                let shared2 = shared.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("fastcaps-net-conn-{id}"))
+                    .spawn(move || handle_connection(id, stream, &shared2))
+                    .expect("spawning connection handler");
+                let mut handlers = shared.handlers.lock().unwrap();
+                // Reap finished connections so a long-running server's
+                // handle list is bounded by *live* connections, not by
+                // every connection ever accepted.
+                handlers.retain(|h| !h.is_finished());
+                handlers.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => {
+                // Transient accept failure (EMFILE, aborted handshake):
+                // keep serving the connections we have.
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// Reader half of one connection; spawns its writer, decodes and
+/// validates frames, forwards work to the pool, and folds counters into
+/// the shared metrics on exit.
+fn handle_connection(id: u64, stream: TcpStream, shared: &Arc<NetShared>) {
+    // Bounded: past REPLY_WINDOW queued replies the reader blocks here
+    // instead of buffering an unreading client's backlog in server
+    // memory. A blocked send unblocks with an error when the writer
+    // exits (client gone or write timeout), so drain cannot wedge on it.
+    let (reply_tx, reply_rx) = mpsc::sync_channel::<Reply>(REPLY_WINDOW);
+    let writer = stream
+        .try_clone()
+        .map(|w| {
+            std::thread::Builder::new()
+                .name(format!("fastcaps-net-write-{id}"))
+                .spawn(move || write_loop(w, reply_rx))
+                .expect("spawning connection writer")
+        })
+        .ok();
+
+    let mut reader = BufReader::new(stream);
+    let (c, h, w) = shared.input_shape;
+    let expected_bytes = shared.expected_bytes;
+    let mut wire_requests = 0u64;
+    let mut wire_errors = 0u64;
+    // Set when the connection dies on a desynchronized stream: unread
+    // inbound bytes must be consumed before closing, or the close turns
+    // into a TCP RST that can destroy the in-flight error frame.
+    let mut linger_drain = false;
+
+    // The reader owns the decision to keep or drop the connection: a
+    // recoverable fault queues a typed error and continues; a
+    // desynchronizing fault queues the error and breaks (the writer
+    // still flushes everything queued before the connection closes).
+    loop {
+        match wire::read_header(&mut reader) {
+            Err(Fault::Closed) | Err(Fault::Truncated) | Err(Fault::Io(_)) => break,
+            Err(
+                fault @ (Fault::BadMagic(_)
+                | Fault::BadVersion(_)
+                | Fault::UnknownType(_)
+                | Fault::BadPayload(_)),
+            ) => {
+                // BadPayload cannot come from read_header today, but a
+                // future header extension would route it here: a
+                // desynchronized stream is fatal either way.
+                wire_errors += 1;
+                linger_drain = true;
+                let _ = reply_tx.send(Reply::Reject(ErrorCode::Malformed, fault.to_string()));
+                break;
+            }
+            Err(fault @ Fault::Oversized(_)) => {
+                wire_errors += 1;
+                linger_drain = true;
+                let _ = reply_tx.send(Reply::Reject(ErrorCode::Oversized, fault.to_string()));
+                break;
+            }
+            Ok((FrameType::Classify, len)) => {
+                wire_requests += 1;
+                let Ok(payload) = wire::read_payload(&mut reader, len) else {
+                    break; // stream died mid-payload
+                };
+                if len != expected_bytes {
+                    // Spec-driven shape validation at the wire boundary:
+                    // typed error, connection survives.
+                    wire_errors += 1;
+                    let _ = reply_tx.send(Reply::Reject(
+                        ErrorCode::InvalidRequest,
+                        format!(
+                            "image payload is {len} bytes; backend input shape \
+                             ({c}, {h}, {w}) needs exactly {expected_bytes} \
+                             bytes of f32-le data"
+                        ),
+                    ));
+                    continue;
+                }
+                let image = match wire::decode_classify(&payload)
+                    .map_err(|f| f.to_string())
+                    .and_then(|data| {
+                        Tensor::from_vec(&[c, h, w], data).map_err(|e| e.to_string())
+                    }) {
+                    Ok(img) => img,
+                    Err(msg) => {
+                        wire_errors += 1;
+                        let _ = reply_tx.send(Reply::Reject(ErrorCode::InvalidRequest, msg));
+                        continue;
+                    }
+                };
+                let reply = match shared.server.submit(image) {
+                    Ok(rx) => Reply::Pending(rx),
+                    Err(e @ BackendError::QueueFull { .. }) => {
+                        wire_errors += 1;
+                        Reply::Reject(ErrorCode::QueueFull, e.to_string())
+                    }
+                    Err(e @ BackendError::Unavailable(_)) => {
+                        wire_errors += 1;
+                        Reply::Reject(ErrorCode::Unavailable, e.to_string())
+                    }
+                    Err(e) => {
+                        wire_errors += 1;
+                        Reply::Reject(ErrorCode::Execution, e.to_string())
+                    }
+                };
+                if reply_tx.send(reply).is_err() {
+                    break; // writer died (client gone)
+                }
+            }
+            Ok((FrameType::Shutdown, len)) => {
+                if wire::read_payload(&mut reader, len).is_err() {
+                    break;
+                }
+                let _ = reply_tx.send(Reply::Ack);
+                shared.request_shutdown();
+                break;
+            }
+            Ok((ty, _len)) => {
+                // A server→client frame type arriving here means the
+                // peer is not a FastCaps client; drop the connection.
+                wire_errors += 1;
+                linger_drain = true;
+                let _ = reply_tx.send(Reply::Reject(
+                    ErrorCode::Malformed,
+                    format!("client sent server-side frame type {ty:?}"),
+                ));
+                break;
+            }
+        }
+    }
+
+    // Let the writer flush every queued reply (in-flight requests get
+    // their responses during drain), then account the connection.
+    drop(reply_tx);
+    let writer_errors = writer.and_then(|h| h.join().ok()).unwrap_or(0);
+    if linger_drain {
+        // Lingering close: swallow whatever the peer already sent
+        // (bounded in bytes and time) so our FIN isn't turned into a
+        // RST while the error frame is still in flight.
+        let mut stream = reader.into_inner();
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+        let mut scratch = [0u8; 4096];
+        let mut budget = 64 * 1024usize;
+        loop {
+            match std::io::Read::read(&mut stream, &mut scratch) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    budget = budget.saturating_sub(n);
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    shared.conns.lock().unwrap().remove(&id);
+    shared
+        .server
+        .with_metrics(|m| m.record_connection_closed(wire_requests, wire_errors + writer_errors));
+}
+
+/// Writer half: drains the in-order reply stream, waiting on the pool's
+/// response channel per pending request. Returns the number of error
+/// frames it produced itself (dropped requests → `Unavailable`).
+fn write_loop(stream: TcpStream, replies: mpsc::Receiver<Reply>) -> u64 {
+    let mut w = BufWriter::new(stream);
+    let mut own_errors = 0u64;
+    for reply in replies {
+        let ok = match reply {
+            Reply::Pending(rx) => match rx.recv() {
+                Ok(resp) => wire::write_response(&mut w, &resp).is_ok(),
+                Err(_) => {
+                    // The executor dropped the request (backend failure
+                    // or shutdown race): the client gets a typed error
+                    // instead of a silent hole in the response stream.
+                    own_errors += 1;
+                    wire::write_error(
+                        &mut w,
+                        ErrorCode::Unavailable,
+                        "executor dropped the request (backend failure or shutdown)",
+                    )
+                    .is_ok()
+                }
+            },
+            Reply::Reject(code, msg) => wire::write_error(&mut w, code, &msg).is_ok(),
+            Reply::Ack => wire::write_empty(&mut w, FrameType::ShutdownAck).is_ok(),
+        };
+        if !ok || w.flush().is_err() {
+            break; // client gone; reader will notice on its next read
+        }
+    }
+    own_errors
+}
+
+// ---------------------------------------------------------------------
+// client
+
+/// Client-side error for the socket path.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport failed (connect, read, write, truncated stream).
+    Io(String),
+    /// The byte stream was not valid protocol.
+    Protocol(String),
+    /// The server answered with a typed error frame.
+    Rejected { code: ErrorCode, message: String },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(m) => write!(f, "net io: {m}"),
+            NetError::Protocol(m) => write!(f, "net protocol: {m}"),
+            NetError::Rejected { code, message } => {
+                write!(f, "server rejected request ({code:?}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<Fault> for NetError {
+    fn from(f: Fault) -> NetError {
+        match f {
+            Fault::Closed | Fault::Truncated | Fault::Io(_) => NetError::Io(f.to_string()),
+            other => NetError::Protocol(other.to_string()),
+        }
+    }
+}
+
+/// Blocking client for the wire protocol. Supports both the simple
+/// round-trip ([`NetClient::classify`]) and pipelining
+/// ([`NetClient::send`] N times, then [`NetClient::recv`] N times —
+/// responses come back in request order).
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect(addr).map_err(|e| NetError::Io(e.to_string()))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().map_err(|e| NetError::Io(e.to_string()))?;
+        Ok(NetClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Bound how long [`NetClient::recv`] may block (None = forever).
+    /// Tests use this so a server regression fails instead of hanging.
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> Result<(), NetError> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(dur)
+            .map_err(|e| NetError::Io(e.to_string()))
+    }
+
+    /// Send one classify request without waiting for the response.
+    pub fn send(&mut self, image: &Tensor) -> Result<(), NetError> {
+        wire::write_classify(&mut self.writer, &image.data)
+            .map_err(|e| NetError::Io(e.to_string()))
+    }
+
+    /// Receive the next response in request order. A typed error frame
+    /// becomes [`NetError::Rejected`]; the connection stays usable for
+    /// recoverable codes (`QueueFull`, `InvalidRequest`, `Unavailable`).
+    pub fn recv(&mut self) -> Result<WireResponse, NetError> {
+        match wire::read_server_frame(&mut self.reader)? {
+            ServerFrame::Response(resp) => Ok(resp),
+            ServerFrame::Error { code, message } => Err(NetError::Rejected { code, message }),
+            ServerFrame::ShutdownAck => Err(NetError::Protocol(
+                "unexpected shutdown ack (no shutdown was requested)".into(),
+            )),
+        }
+    }
+
+    /// Round-trip one image.
+    pub fn classify(&mut self, image: &Tensor) -> Result<WireResponse, NetError> {
+        self.send(image)?;
+        self.recv()
+    }
+
+    /// Ask the server for a graceful drain and wait for the
+    /// acknowledgement. Pending pipelined responses are drained first
+    /// (they arrive before the ack, in order).
+    pub fn shutdown_server(mut self) -> Result<(), NetError> {
+        wire::write_empty(&mut self.writer, FrameType::Shutdown)
+            .map_err(|e| NetError::Io(e.to_string()))?;
+        loop {
+            match wire::read_server_frame(&mut self.reader)? {
+                ServerFrame::ShutdownAck => return Ok(()),
+                ServerFrame::Response(_) | ServerFrame::Error { .. } => continue,
+            }
+        }
+    }
+}

@@ -17,7 +17,7 @@ use super::{Request, Response};
 use crate::backend::{BackendError, BackendSpec, InferRequest, InferenceBackend};
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,6 +38,58 @@ struct Shared {
     max_wait: Duration,
     /// Replicas that finished init and are serving.
     live: AtomicUsize,
+    /// Replicas spawned but still inside their factory. The pool is
+    /// only *dead* when both `live` and `booting` are 0 — a panic on
+    /// the last live replica while another is still building must not
+    /// condemn the queue that replica is about to serve.
+    booting: AtomicUsize,
+    /// Set when the pool died *while the queue was still open* (every
+    /// replica exited abnormally, e.g. a backend panic) — as opposed to
+    /// a requested shutdown. Admission reads it to return the right
+    /// typed error instead of a misleading "server is shut down".
+    pool_died: AtomicBool,
+}
+
+impl Shared {
+    /// Close admission iff no replica is live *and* none is still
+    /// booting. Called whenever a replica exits or fails init. The
+    /// check runs under the state mutex, and the booting→live
+    /// transition ([`Shared::mark_replica_live`]) takes the same mutex,
+    /// so a replica finishing init can never slip between this check
+    /// and the close. No-op during a requested shutdown (`open` already
+    /// false).
+    fn close_if_pool_dead(&self) {
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if st.open
+            && self.live.load(Ordering::SeqCst) == 0
+            && self.booting.load(Ordering::SeqCst) == 0
+        {
+            // No executor will ever drain the queue again. Close
+            // admission and drop the queued jobs — dropping the senders
+            // disconnects every waiting `recv()`, so callers fail fast
+            // instead of hanging.
+            self.pool_died.store(true, Ordering::SeqCst);
+            st.open = false;
+            st.jobs.clear();
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Atomically (w.r.t. [`Shared::close_if_pool_dead`]) move one
+    /// replica from booting to live, so the pool never looks
+    /// transiently dead while a healthy replica finishes init.
+    fn mark_replica_live(&self) {
+        let _st = self
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.live.fetch_add(1, Ordering::SeqCst);
+        self.booting.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 struct QueueState {
@@ -110,10 +162,13 @@ impl ServerBuilder {
             max_depth: self.max_queue_depth,
             max_wait: self.max_wait,
             live: AtomicUsize::new(0),
+            booting: AtomicUsize::new(0),
+            pool_died: AtomicBool::new(false),
         });
 
         let (spec_tx, spec_rx) = mpsc::channel::<Result<BackendSpec, BackendError>>();
         let mut handles = Vec::with_capacity(self.replicas);
+        shared.booting.fetch_add(1, Ordering::SeqCst);
         handles.push(spawn_replica(
             0,
             shared.clone(),
@@ -138,6 +193,7 @@ impl ServerBuilder {
         if let Some(spec) = &spec {
             let cap = spec.max_replicas.unwrap_or(usize::MAX);
             for idx in 1..self.replicas.min(cap) {
+                shared.booting.fetch_add(1, Ordering::SeqCst);
                 handles.push(spawn_replica(
                     idx,
                     shared.clone(),
@@ -210,9 +266,18 @@ impl Server {
         };
         {
             let mut st = self.shared.state.lock().unwrap();
+            // Queue closed ⟺ no executor will ever drain new work: set by
+            // shutdown, by an init failure, or by `ReplicaGuard` when the
+            // last replica dies. Enqueueing past this point would strand
+            // the caller's `recv()` forever, so fail typed instead.
             if !st.open {
                 return Err(BackendError::Unavailable(match &self.init_error {
                     Some(e) => format!("backend never started: {e}"),
+                    None if self.shared.pool_died.load(Ordering::SeqCst) => {
+                        "all executor replicas have died (backend failure); \
+                         server accepts no work"
+                            .into()
+                    }
                     None => "server is shut down".into(),
                 }));
             }
@@ -239,14 +304,28 @@ impl Server {
         })
     }
 
-    pub fn metrics(&self) -> Metrics {
-        self.shared.metrics.lock().unwrap().clone()
+    /// Whether the pool died while serving (every replica exited
+    /// abnormally), as opposed to a requested shutdown.
+    pub fn pool_died(&self) -> bool {
+        self.shared.pool_died.load(Ordering::SeqCst)
     }
 
-    /// Drain and stop the pool. Returns final metrics.
+    /// A point-in-time metrics snapshot: its wall clock is frozen, so
+    /// `throughput_rps` stays stable no matter when the caller prints it.
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Run a closure against the live shared metrics. Crate-internal
+    /// hook for the network front-end's per-connection counters.
+    pub(crate) fn with_metrics<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
+        f(&mut self.shared.metrics.lock().unwrap())
+    }
+
+    /// Drain and stop the pool. Returns final (frozen) metrics.
     pub fn shutdown(mut self) -> Metrics {
         self.close_and_join();
-        self.shared.metrics.lock().unwrap().clone()
+        self.metrics()
     }
 
     fn close_and_join(&mut self) {
@@ -268,22 +347,33 @@ impl Drop for Server {
 /// or *panic* (unwind runs Drop) — and fails pending work fast once the
 /// last replica is gone, instead of leaving `classify` callers hanging
 /// on a queue nobody serves.
+///
+/// Pool *death* (last replica gone, none still booting, while the
+/// queue is still open) is distinguished from normal shutdown (queue
+/// already closed by `close_and_join` before replicas exit): only
+/// death sets [`Shared::pool_died`] and drop-notifies the queued
+/// waiters — see [`Shared::close_if_pool_dead`]. Racing a normal
+/// shutdown is safe because the state mutex serializes the close with
+/// both `submit` and `close_and_join`; racing a still-booting replica
+/// is safe because its init outcome re-runs the same check.
 struct ReplicaGuard {
     shared: Arc<Shared>,
 }
 
 impl Drop for ReplicaGuard {
     fn drop(&mut self) {
-        if self.shared.live.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let mut st = self
-                .shared
-                .state
+        if std::thread::panicking() {
+            // Abnormal exit (backend panic): make the death observable
+            // in the metrics even when surviving replicas keep serving.
+            self.shared
+                .metrics
                 .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner);
-            st.open = false;
-            st.jobs.clear(); // dropped senders disconnect the callers
-            self.shared.cv.notify_all();
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .record_replica_died();
         }
+        self.shared.live.fetch_sub(1, Ordering::SeqCst);
+        self.shared.close_if_pool_dead();
+        self.shared.cv.notify_all();
     }
 }
 
@@ -302,23 +392,22 @@ fn spawn_replica(
             let (mut backend, buckets) = match init {
                 Ok(ok) => ok,
                 Err(e) => {
+                    shared.booting.fetch_sub(1, Ordering::SeqCst);
                     if let Some(tx) = spec_tx {
+                        // Replica 0: the builder observes the error and
+                        // closes the queue itself.
                         let _ = tx.send(Err(e.clone()));
                     } else {
                         // A degraded pool is easy to miss; say so.
                         eprintln!("[coordinator] replica {idx} failed to init: {e}");
-                        if shared.live.load(Ordering::SeqCst) == 0 {
-                            // Pool never came up at all: fail pending work.
-                            let mut st = shared.state.lock().unwrap();
-                            st.open = false;
-                            st.jobs.clear();
-                            shared.cv.notify_all();
-                        }
+                        // If this was the last hope (nothing live,
+                        // nothing else booting), fail pending work.
+                        shared.close_if_pool_dead();
                     }
                     return Err(e);
                 }
             };
-            shared.live.fetch_add(1, Ordering::SeqCst);
+            shared.mark_replica_live();
             let _guard = ReplicaGuard {
                 shared: shared.clone(),
             };
@@ -693,6 +782,207 @@ mod tests {
         let later = server.classify(Tensor::zeros(&[1, 4, 4]));
         assert!(matches!(later, Err(BackendError::Unavailable(_))));
         server.shutdown();
+    }
+
+    /// Panics on the `fail_on`-th infer call; serves normally before.
+    struct DelayedPanicBackend {
+        spec: BackendSpec,
+        calls: usize,
+        fail_on: usize,
+    }
+
+    impl DelayedPanicBackend {
+        fn boxed(fail_on: usize) -> Box<dyn InferenceBackend> {
+            Box::new(DelayedPanicBackend {
+                spec: BackendSpec {
+                    kind: "delayed-panic".into(),
+                    model: "delayed-panic".into(),
+                    input_shape: (1, 4, 4),
+                    batch_buckets: vec![1],
+                    reports_timing: false,
+                    max_replicas: None,
+                    compression: None,
+                },
+                calls: 0,
+                fail_on,
+            })
+        }
+    }
+
+    impl InferenceBackend for DelayedPanicBackend {
+        fn spec(&self) -> &BackendSpec {
+            &self.spec
+        }
+        fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+            self.calls += 1;
+            if self.calls >= self.fail_on {
+                panic!("backend bug on call {}", self.calls);
+            }
+            Ok(InferOutput::untimed(vec![vec![0.5; 10]; req.batch()]))
+        }
+    }
+
+    #[test]
+    fn dead_pool_drop_notifies_queued_waiters_and_rejects_new_work() {
+        // One replica, bucket 1, first infer panics: requests that were
+        // already queued must be drop-notified (recv fails fast), and
+        // later admissions must get a typed error naming the dead pool —
+        // nobody may hang on a queue no executor drains.
+        let server = Server::builder(|| Ok(DelayedPanicBackend::boxed(1)))
+            .max_wait(Duration::from_millis(1))
+            .max_queue_depth(64)
+            .start();
+        let mut receivers = Vec::new();
+        for _ in 0..6 {
+            match server.submit(Tensor::zeros(&[1, 4, 4])) {
+                // Accepted before the death was observed: the channel
+                // must disconnect, never block forever.
+                Ok(rx) => receivers.push(rx),
+                // Submitted after the guard closed the queue.
+                Err(BackendError::Unavailable(m)) => {
+                    assert!(m.contains("died"), "wrong dead-pool message: {m}")
+                }
+                Err(other) => panic!("unexpected admission error {other:?}"),
+            }
+        }
+        for rx in receivers {
+            // Must be Disconnected (drop-notified), not Timeout — a
+            // Timeout here is exactly the hang this test pins.
+            assert!(
+                matches!(
+                    rx.recv_timeout(Duration::from_secs(5)),
+                    Err(mpsc::RecvTimeoutError::Disconnected)
+                ),
+                "queued waiter was neither served nor drop-notified"
+            );
+        }
+        // The death is now fully observable: flag, typed admission error,
+        // and the abnormal-exit counter.
+        assert!(server.pool_died());
+        match server.classify(Tensor::zeros(&[1, 4, 4])) {
+            Err(BackendError::Unavailable(m)) => {
+                assert!(m.contains("died"), "wrong dead-pool message: {m}")
+            }
+            other => panic!("expected Unavailable, got {other:?}"),
+        }
+        let m = server.shutdown();
+        assert_eq!(m.replicas_died, 1);
+    }
+
+    #[test]
+    fn death_of_last_live_replica_spares_a_still_booting_one() {
+        // Replica 0 (a panic backend) dies while replica 1 is still
+        // inside its factory: the pool must NOT be declared dead — the
+        // booting replica comes up and serves the queued work. Replica
+        // 1's factory waits for the panic to have fired, so the
+        // interleaving under test is deterministic, not timing-based.
+        struct PanicAndFlag(BackendSpec, Arc<std::sync::atomic::AtomicBool>);
+        impl InferenceBackend for PanicAndFlag {
+            fn spec(&self) -> &BackendSpec {
+                &self.0
+            }
+            fn infer(&mut self, _req: &InferRequest) -> Result<InferOutput, BackendError> {
+                self.1.store(true, Ordering::SeqCst);
+                panic!("backend bug");
+            }
+        }
+        let built = Arc::new(AtomicUsize::new(0));
+        let built2 = built.clone();
+        let died = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let died2 = died.clone();
+        let server = Server::builder(move || {
+            if built2.fetch_add(1, Ordering::SeqCst) == 0 {
+                let spec = BackendSpec {
+                    kind: "panic-flag".into(),
+                    model: "panic-flag".into(),
+                    input_shape: (1, 4, 4),
+                    batch_buckets: vec![1],
+                    reports_timing: false,
+                    max_replicas: None,
+                    compression: None,
+                };
+                Ok(Box::new(PanicAndFlag(spec, died2.clone())) as Box<dyn InferenceBackend>)
+            } else {
+                // Boot only after replica 0's panic began (bounded wait
+                // so a regression fails instead of hanging the test).
+                for _ in 0..500 {
+                    if died2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(Box::new(ToyBackend::new(
+                    Duration::ZERO,
+                    Arc::new(AtomicUsize::new(0)),
+                )) as Box<dyn InferenceBackend>)
+            }
+        })
+        .replicas(2)
+        .max_wait(Duration::from_millis(1))
+        .start();
+        // First request rides replica 0 and dies with it.
+        let first = server.submit(Tensor::zeros(&[1, 4, 4])).unwrap();
+        assert!(
+            matches!(
+                first.recv_timeout(Duration::from_secs(5)),
+                Err(mpsc::RecvTimeoutError::Disconnected)
+            ),
+            "in-flight request on the dying replica must disconnect"
+        );
+        // The pool is not dead: replica 1 is booting. This submit must
+        // be accepted and eventually *served*, not cleared or rejected.
+        let rx = server
+            .submit(Tensor::full(&[1, 4, 4], 0.35))
+            .expect("queue must stay open while a replica is booting");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("booting replica never served the queued request");
+        assert_eq!(resp.predicted, 3);
+        assert!(!server.pool_died());
+        let m = server.shutdown();
+        assert_eq!(m.replicas_died, 1);
+        assert_eq!(built.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn normal_shutdown_is_not_reported_as_pool_death() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::ZERO, calls)
+            .max_wait(Duration::from_millis(1))
+            .replicas(2)
+            .start();
+        for _ in 0..4 {
+            server.classify(Tensor::full(&[1, 4, 4], 0.5)).unwrap();
+        }
+        assert!(!server.pool_died());
+        let m = server.shutdown();
+        // The drain path must not be miscounted as replica death.
+        assert_eq!(m.replicas_died, 0);
+        assert_eq!(m.requests, 4);
+    }
+
+    #[test]
+    fn metrics_snapshots_freeze_throughput() {
+        // `Server::metrics`/`shutdown` return snapshots: the reported
+        // RPS must not decay while the snapshot sits on the caller's
+        // stack (the ISSUE 5 snapshot-decaying-RPS regression).
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::ZERO, calls)
+            .max_wait(Duration::from_millis(1))
+            .start();
+        for _ in 0..8 {
+            server.classify(Tensor::full(&[1, 4, 4], 0.5)).unwrap();
+        }
+        let live = server.metrics();
+        let r1 = live.throughput_rps();
+        assert!(r1 > 0.0);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(live.throughput_rps(), r1, "snapshot RPS decayed");
+        let fin = server.shutdown();
+        let r2 = fin.throughput_rps();
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(fin.throughput_rps(), r2, "final metrics RPS decayed");
     }
 
     #[test]

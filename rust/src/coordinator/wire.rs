@@ -1,0 +1,535 @@
+//! Wire protocol for the network serving front-end: length-prefixed
+//! binary frames over a byte stream (TCP in practice; the codec is
+//! written against `io::Read`/`io::Write` so tests run it over
+//! in-memory buffers).
+//!
+//! ```text
+//!  frame  := header payload
+//!  header := magic[4]=b"FCAP"  version:u8  type:u8  len:u32le
+//!
+//!  client → server                server → client
+//!    Classify  (len = C·H·W·4       Response    (lengths, predicted,
+//!               f32-le image)                    latency_us, batch)
+//!    Shutdown  (len = 0, asks        Error       (code:u8, utf-8 msg)
+//!               a graceful drain)    ShutdownAck (len = 0)
+//! ```
+//!
+//! Error frames are *typed* ([`ErrorCode`]): admission overload
+//! (`QueueFull`), spec violations (`InvalidRequest` — e.g. a payload
+//! whose byte count is not the backend's input shape), dead/stopped
+//! server (`Unavailable`), and framing faults (`Malformed`,
+//! `Oversized`). Recoverable faults (wrong shape, queue full) leave the
+//! connection usable; stream-desynchronizing faults (bad magic,
+//! oversized prefix) get an error frame and then the connection closes,
+//! since the byte stream cannot be resynchronized.
+//!
+//! All integers are little-endian; f32 payloads are IEEE-754 bit
+//! patterns, so a round-tripped response is bit-identical to the
+//! in-process [`super::Response`] it encodes.
+
+use super::Response;
+use std::io::{self, Read, Write};
+
+/// Frame preamble: identifies a FastCaps peer before any length field
+/// is trusted.
+pub const MAGIC: [u8; 4] = *b"FCAP";
+/// Protocol version; bumped on any incompatible framing change.
+pub const VERSION: u8 = 1;
+/// Hard cap on any payload (4 MiB — far above any spec input shape). A
+/// larger length prefix is a [`Fault::Oversized`] and the connection is
+/// dropped rather than allocating attacker-controlled sizes.
+pub const MAX_PAYLOAD: u32 = 4 << 20;
+/// Fixed header size: magic + version + type + length prefix.
+pub const HEADER_LEN: usize = 10;
+
+/// Frame discriminant (the `type` header byte). Client→server types are
+/// low, server→client types have the high bit set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// f32-le image payload in the server's spec input shape.
+    Classify = 0x01,
+    /// Ask the server for a graceful drain (empty payload).
+    Shutdown = 0x02,
+    /// Successful classification result.
+    Response = 0x81,
+    /// Typed error ([`ErrorCode`] + message).
+    Error = 0x82,
+    /// Acknowledges a [`FrameType::Shutdown`] before the drain starts.
+    ShutdownAck = 0x83,
+}
+
+impl FrameType {
+    pub fn from_u8(v: u8) -> Option<FrameType> {
+        match v {
+            0x01 => Some(FrameType::Classify),
+            0x02 => Some(FrameType::Shutdown),
+            0x81 => Some(FrameType::Response),
+            0x82 => Some(FrameType::Error),
+            0x83 => Some(FrameType::ShutdownAck),
+            _ => None,
+        }
+    }
+}
+
+/// Typed error codes carried by [`FrameType::Error`] frames — the wire
+/// image of [`crate::backend::BackendError`] plus the framing faults
+/// that only exist at this boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Admission queue at capacity; retry later. Connection survives.
+    QueueFull = 1,
+    /// Malformed request (wrong input shape/byte count). Connection
+    /// survives.
+    InvalidRequest = 2,
+    /// Server shut down or every replica died. Connection survives
+    /// (each subsequent request gets the same answer).
+    Unavailable = 3,
+    /// Unrecognized magic/version/frame type; the stream cannot be
+    /// resynchronized, so the connection closes after this frame.
+    Malformed = 4,
+    /// Length prefix beyond [`MAX_PAYLOAD`]; connection closes.
+    Oversized = 5,
+    /// The backend failed executing a well-formed request.
+    Execution = 6,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::QueueFull),
+            2 => Some(ErrorCode::InvalidRequest),
+            3 => Some(ErrorCode::Unavailable),
+            4 => Some(ErrorCode::Malformed),
+            5 => Some(ErrorCode::Oversized),
+            6 => Some(ErrorCode::Execution),
+            _ => None,
+        }
+    }
+}
+
+/// What went wrong while reading a frame. `Closed` is the clean
+/// end-of-stream between frames; everything else is a protocol or
+/// transport fault.
+#[derive(Debug)]
+pub enum Fault {
+    /// Peer closed the stream at a frame boundary (normal end).
+    Closed,
+    /// Stream ended mid-frame (truncated header or payload).
+    Truncated,
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unsupported protocol version.
+    BadVersion(u8),
+    /// Unknown frame-type byte.
+    UnknownType(u8),
+    /// Length prefix above [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// Payload did not decode as the declared frame type.
+    BadPayload(String),
+    /// Underlying transport error.
+    Io(String),
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::Closed => write!(f, "connection closed"),
+            Fault::Truncated => write!(f, "stream truncated mid-frame"),
+            Fault::BadMagic(m) => write!(f, "bad magic {m:02x?} (want {MAGIC:02x?})"),
+            Fault::BadVersion(v) => write!(f, "unsupported protocol version {v} (want {VERSION})"),
+            Fault::UnknownType(t) => write!(f, "unknown frame type {t:#04x}"),
+            Fault::Oversized(n) => {
+                write!(f, "length prefix {n} exceeds max payload {MAX_PAYLOAD}")
+            }
+            Fault::BadPayload(m) => write!(f, "bad payload: {m}"),
+            Fault::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl From<io::Error> for Fault {
+    fn from(e: io::Error) -> Fault {
+        match e.kind() {
+            io::ErrorKind::UnexpectedEof => Fault::Truncated,
+            _ => Fault::Io(e.to_string()),
+        }
+    }
+}
+
+/// A decoded server→client frame.
+#[derive(Debug)]
+pub enum ServerFrame {
+    Response(WireResponse),
+    Error { code: ErrorCode, message: String },
+    ShutdownAck,
+}
+
+/// The client-side image of [`super::Response`]. `lengths` round-trips
+/// the f32 bit patterns exactly, so equality with the in-process
+/// response is bitwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    pub lengths: Vec<f32>,
+    pub predicted: u16,
+    pub latency_us: u64,
+    pub batch: u16,
+}
+
+// ---------------------------------------------------------------------
+// encoding
+
+fn frame_bytes(ty: FrameType, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(ty as u8);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Write a classify request: the image as f32-le words.
+pub fn write_classify(w: &mut impl Write, image: &[f32]) -> io::Result<()> {
+    let mut payload = Vec::with_capacity(image.len() * 4);
+    for v in image {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&frame_bytes(FrameType::Classify, &payload))
+}
+
+/// Write an empty-payload frame (`Shutdown` / `ShutdownAck`).
+pub fn write_empty(w: &mut impl Write, ty: FrameType) -> io::Result<()> {
+    w.write_all(&frame_bytes(ty, &[]))
+}
+
+/// Write a successful classification response.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
+    let mut p = Vec::with_capacity(2 + resp.lengths.len() * 4 + 12);
+    p.extend_from_slice(&(resp.lengths.len() as u16).to_le_bytes());
+    for v in &resp.lengths {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p.extend_from_slice(&(resp.predicted as u16).to_le_bytes());
+    p.extend_from_slice(&resp.latency_us.to_le_bytes());
+    p.extend_from_slice(&(resp.batch as u16).to_le_bytes());
+    w.write_all(&frame_bytes(FrameType::Response, &p))
+}
+
+/// Write a typed error frame.
+pub fn write_error(w: &mut impl Write, code: ErrorCode, message: &str) -> io::Result<()> {
+    // Bound the message so the frame itself can't be oversized.
+    let msg = &message.as_bytes()[..message.len().min(1024)];
+    let mut p = Vec::with_capacity(3 + msg.len());
+    p.push(code as u8);
+    p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    p.extend_from_slice(msg);
+    w.write_all(&frame_bytes(FrameType::Error, &p))
+}
+
+// ---------------------------------------------------------------------
+// decoding
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], at_boundary: bool) -> Result<(), Fault> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                // EOF before the first byte of a frame is a clean close;
+                // anywhere else the stream died mid-frame.
+                return Err(if at_boundary && filled == 0 {
+                    Fault::Closed
+                } else {
+                    Fault::Truncated
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read and validate a frame header. Returns the frame type and payload
+/// length; the caller reads the payload next.
+pub fn read_header(r: &mut impl Read) -> Result<(FrameType, u32), Fault> {
+    let mut h = [0u8; HEADER_LEN];
+    read_exact_or(r, &mut h, true)?;
+    if h[0..4] != MAGIC {
+        return Err(Fault::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    if h[4] != VERSION {
+        return Err(Fault::BadVersion(h[4]));
+    }
+    let ty = FrameType::from_u8(h[5]).ok_or(Fault::UnknownType(h[5]))?;
+    let len = u32::from_le_bytes([h[6], h[7], h[8], h[9]]);
+    if len > MAX_PAYLOAD {
+        return Err(Fault::Oversized(len));
+    }
+    Ok((ty, len))
+}
+
+/// Read exactly `len` payload bytes.
+pub fn read_payload(r: &mut impl Read, len: u32) -> Result<Vec<u8>, Fault> {
+    let mut p = vec![0u8; len as usize];
+    read_exact_or(r, &mut p, false)?;
+    Ok(p)
+}
+
+/// Decode a classify payload into f32 words. The *shape* check against
+/// the backend spec is the server's job; this only checks alignment.
+pub fn decode_classify(payload: &[u8]) -> Result<Vec<f32>, Fault> {
+    if payload.len() % 4 != 0 {
+        return Err(Fault::BadPayload(format!(
+            "classify payload of {} bytes is not a whole number of f32 words",
+            payload.len()
+        )));
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+struct Cursor<'a> {
+    p: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], Fault> {
+        if self.off + n > self.p.len() {
+            return Err(Fault::BadPayload(format!(
+                "payload too short: wanted {} more bytes at offset {} of {}",
+                n,
+                self.off,
+                self.p.len()
+            )));
+        }
+        let s = &self.p[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, Fault> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, Fault> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32, Fault> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+fn decode_response(payload: &[u8]) -> Result<WireResponse, Fault> {
+    let mut c = Cursor { p: payload, off: 0 };
+    let n = c.u16()? as usize;
+    let mut lengths = Vec::with_capacity(n);
+    for _ in 0..n {
+        lengths.push(c.f32()?);
+    }
+    Ok(WireResponse {
+        lengths,
+        predicted: c.u16()?,
+        latency_us: c.u64()?,
+        batch: c.u16()?,
+    })
+}
+
+fn decode_error(payload: &[u8]) -> Result<(ErrorCode, String), Fault> {
+    let mut c = Cursor { p: payload, off: 0 };
+    let code = c.take(1)?[0];
+    let code = ErrorCode::from_u8(code)
+        .ok_or_else(|| Fault::BadPayload(format!("unknown error code {code}")))?;
+    let n = c.u16()? as usize;
+    let msg = String::from_utf8_lossy(c.take(n)?).into_owned();
+    Ok((code, msg))
+}
+
+/// Read one server→client frame (header + payload + decode).
+pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, Fault> {
+    let (ty, len) = read_header(r)?;
+    let payload = read_payload(r, len)?;
+    match ty {
+        FrameType::Response => Ok(ServerFrame::Response(decode_response(&payload)?)),
+        FrameType::Error => {
+            let (code, message) = decode_error(&payload)?;
+            Ok(ServerFrame::Error { code, message })
+        }
+        FrameType::ShutdownAck => Ok(ServerFrame::ShutdownAck),
+        other => Err(Fault::BadPayload(format!(
+            "unexpected client-side frame type {other:?} from server"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_response(resp: &Response) -> WireResponse {
+        let mut buf = Vec::new();
+        write_response(&mut buf, resp).unwrap();
+        match read_server_frame(&mut buf.as_slice()).unwrap() {
+            ServerFrame::Response(w) => w,
+            other => panic!("expected response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_bit_identical() {
+        let resp = Response {
+            id: 42,
+            lengths: vec![0.1, 0.9, f32::MIN_POSITIVE, 1.0e-20, 0.25],
+            predicted: 1,
+            latency_us: 123_456_789,
+            batch: 8,
+        };
+        let w = roundtrip_response(&resp);
+        // Bitwise equality, not approximate: the wire must not perturb
+        // the classification result.
+        assert_eq!(w.lengths.len(), resp.lengths.len());
+        for (a, b) in w.lengths.iter().zip(&resp.lengths) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(w.predicted, 1);
+        assert_eq!(w.latency_us, 123_456_789);
+        assert_eq!(w.batch, 8);
+    }
+
+    #[test]
+    fn classify_roundtrips() {
+        let image = vec![0.0f32, -1.5, 3.25, f32::EPSILON];
+        let mut buf = Vec::new();
+        write_classify(&mut buf, &image).unwrap();
+        let (ty, len) = read_header(&mut buf.as_slice()).unwrap();
+        assert_eq!(ty, FrameType::Classify);
+        assert_eq!(len as usize, image.len() * 4);
+        let payload = read_payload(&mut &buf[HEADER_LEN..], len).unwrap();
+        let got = decode_classify(&payload).unwrap();
+        for (a, b) in got.iter().zip(&image) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_frame_roundtrips() {
+        let mut buf = Vec::new();
+        write_error(&mut buf, ErrorCode::QueueFull, "queue full (max depth 64)").unwrap();
+        match read_server_frame(&mut buf.as_slice()).unwrap() {
+            ServerFrame::Error { code, message } => {
+                assert_eq!(code, ErrorCode::QueueFull);
+                assert!(message.contains("64"));
+            }
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut buf = Vec::new();
+        write_empty(&mut buf, FrameType::Shutdown).unwrap();
+        buf[0] = b'X';
+        assert!(matches!(
+            read_header(&mut buf.as_slice()),
+            Err(Fault::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn bad_version_and_type_detected() {
+        let mut buf = Vec::new();
+        write_empty(&mut buf, FrameType::Shutdown).unwrap();
+        let mut v = buf.clone();
+        v[4] = 99;
+        assert!(matches!(
+            read_header(&mut v.as_slice()),
+            Err(Fault::BadVersion(99))
+        ));
+        let mut t = buf;
+        t[5] = 0x7f;
+        assert!(matches!(
+            read_header(&mut t.as_slice()),
+            Err(Fault::UnknownType(0x7f))
+        ));
+    }
+
+    #[test]
+    fn oversized_length_prefix_detected() {
+        let mut buf = Vec::new();
+        write_empty(&mut buf, FrameType::Classify).unwrap();
+        buf[6..10].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(
+            read_header(&mut buf.as_slice()),
+            Err(Fault::Oversized(_))
+        ));
+    }
+
+    #[test]
+    fn clean_close_vs_truncation() {
+        // Empty stream = clean close at a frame boundary.
+        assert!(matches!(read_header(&mut [].as_slice()), Err(Fault::Closed)));
+        // A partial header = truncation.
+        let mut buf = Vec::new();
+        write_empty(&mut buf, FrameType::Shutdown).unwrap();
+        assert!(matches!(
+            read_header(&mut buf[..5].as_ref()),
+            Err(Fault::Truncated)
+        ));
+        // Full header promising a payload that never arrives = truncation.
+        let mut buf = Vec::new();
+        write_classify(&mut buf, &[1.0; 16]).unwrap();
+        let stream = &buf[..HEADER_LEN + 7];
+        let mut r = stream;
+        let (_, len) = read_header(&mut r).unwrap();
+        assert!(matches!(read_payload(&mut r, len), Err(Fault::Truncated)));
+    }
+
+    #[test]
+    fn misaligned_classify_payload_rejected() {
+        assert!(matches!(
+            decode_classify(&[0u8; 7]),
+            Err(Fault::BadPayload(_))
+        ));
+    }
+
+    #[test]
+    fn short_response_payload_rejected() {
+        // Claim 100 lengths, deliver 1: decode must fail typed, not read
+        // out of bounds.
+        let resp = Response {
+            id: 1,
+            lengths: vec![0.5],
+            predicted: 0,
+            latency_us: 5,
+            batch: 1,
+        };
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        buf[HEADER_LEN..HEADER_LEN + 2].copy_from_slice(&100u16.to_le_bytes());
+        assert!(matches!(
+            read_server_frame(&mut buf.as_slice()),
+            Err(Fault::BadPayload(_))
+        ));
+    }
+
+    #[test]
+    fn error_message_truncated_to_bound() {
+        let long = "x".repeat(5000);
+        let mut buf = Vec::new();
+        write_error(&mut buf, ErrorCode::Execution, &long).unwrap();
+        match read_server_frame(&mut buf.as_slice()).unwrap() {
+            ServerFrame::Error { message, .. } => assert_eq!(message.len(), 1024),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+}

@@ -13,7 +13,9 @@
 //!   Index Control Module's alive-kernel packing, a unified [`backend`]
 //!   execution API over all the model implementations, and
 //!   a serving coordinator (admission → shared queue → executor pool of
-//!   backend replicas) that keeps Python off the request path.
+//!   backend replicas) that keeps Python off the request path, and a TCP
+//!   network front-end ([`coordinator::net`] / [`coordinator::wire`])
+//!   that makes the whole stack servable to other processes.
 //! * **L2 (python/compile/model.py)** — the CapsNet forward graph in JAX,
 //!   lowered once to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the routing

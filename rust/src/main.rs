@@ -7,6 +7,10 @@
 //!                   [--model capsnet-mnist-pruned] [--dataset mnist|fmnist]
 //!                   [--replicas N] [--max-queue N]
 //!                   [--requests N] [--clients K] [--artifacts DIR]
+//!                   [--listen ADDR]   # TCP front-end; drains on a wire
+//!                                     # Shutdown frame (bench-net --stop)
+//! fastcaps bench-net --addr ADDR [--clients K] [--requests N]
+//!                   [--window W] [--dataset mnist|fmnist] [--stop]
 //! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
 //!                   [--sparsity S] [--compile] [--serve]
 //!                   [--backend oracle-sparse|sim-sparse] [--replicas N]
@@ -16,6 +20,7 @@
 
 use fastcaps::backend::{BackendConfig, BackendRegistry};
 use fastcaps::config::SystemConfig;
+use fastcaps::coordinator::net::NetServer;
 use fastcaps::coordinator::server::Server;
 use fastcaps::data::Task;
 use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
@@ -32,6 +37,7 @@ fn main() {
         "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "bench-net" => cmd_bench_net(&args),
         "prune" => cmd_prune(&args),
         "selftest" => cmd_selftest(),
         _ => {
@@ -59,7 +65,14 @@ fn print_help() {
          \x20                simulator, default), sim-sparse (FPGA simulator\n\
          \x20                over CSR survivors: pipelined timing +\n\
          \x20                compression), pjrt (AOT artifacts);\n\
-         \x20                --replicas N scales the executor pool\n\
+         \x20                --replicas N scales the executor pool;\n\
+         \x20                --listen ADDR serves the wire protocol over TCP\n\
+         \x20                instead of driving in-process traffic (drains\n\
+         \x20                gracefully on a wire Shutdown frame)\n\
+         \x20 bench-net      drive a listening server over TCP:\n\
+         \x20                --addr HOST:PORT [--clients K] [--requests N]\n\
+         \x20                [--window W pipelined depth] [--stop: ask the\n\
+         \x20                server to drain and exit after the run]\n\
          \x20 prune          LAKP/KP-prune weights, print compression;\n\
          \x20                --compile packs survivors into the sparse\n\
          \x20                execution path (CSR / Index-Control layout),\n\
@@ -214,14 +227,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let spec = server.spec().expect("init succeeded").clone();
 
-    println!(
-        "serving {n_requests} requests from {n_clients} client threads \
-         (backend={backend_kind}, model={}, dataset={dataset}, \
-         replicas={}, buckets={:?})",
-        spec.model,
-        server.pool_size(),
-        spec.batch_buckets,
-    );
+    if args.get("listen").is_none() {
+        println!(
+            "serving {n_requests} requests from {n_clients} client threads \
+             (backend={backend_kind}, model={}, dataset={dataset}, \
+             replicas={}, buckets={:?})",
+            spec.model,
+            server.pool_size(),
+            spec.batch_buckets,
+        );
+    } else {
+        println!(
+            "serving over TCP (backend={backend_kind}, model={}, dataset={dataset}, \
+             replicas={}, buckets={:?})",
+            spec.model,
+            server.pool_size(),
+            spec.batch_buckets,
+        );
+    }
     if let Some(c) = &spec.compression {
         println!(
             "each replica executes {}/{} conv kernels ({:.2}% pruned, {} B index memory)",
@@ -231,7 +254,162 @@ fn cmd_serve(args: &Args) -> Result<()> {
             c.index_bytes,
         );
     }
+    if let Some(listen) = args.get("listen") {
+        // Socket front-end: serve the wire protocol instead of driving
+        // in-process traffic. Blocks until a client requests a graceful
+        // drain (`fastcaps bench-net --addr ... --stop`), then finishes
+        // in-flight work and exits 0 — CI asserts exactly that.
+        let net = NetServer::bind(listen, server)
+            .map_err(|e| anyhow::anyhow!("starting TCP front-end on {listen}: {e}"))?;
+        println!(
+            "listening on {} (input {}x{}x{} f32; stop with: \
+             fastcaps bench-net --addr {} --requests 0 --stop)",
+            net.local_addr(),
+            spec.input_shape.0,
+            spec.input_shape.1,
+            spec.input_shape.2,
+            net.local_addr(),
+        );
+        net.wait_shutdown_requested();
+        println!("shutdown requested over the wire; draining");
+        let m = net.shutdown();
+        println!("{}", m.summary());
+        return Ok(());
+    }
     drive_workload(server, task, n_requests, n_clients);
+    Ok(())
+}
+
+/// `fastcaps bench-net`: open-loop load generator for a listening
+/// `fastcaps serve --listen` process. Each client thread pipelines up to
+/// `--window` requests on its own connection and measures end-to-end
+/// (client-observed) latency; the report has the same shape as
+/// `drive_workload`'s so in-process and socket numbers read side by
+/// side.
+fn cmd_bench_net(args: &Args) -> Result<()> {
+    use fastcaps::coordinator::metrics::Metrics;
+    use fastcaps::coordinator::net::{NetClient, NetError};
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    /// Receive the next in-order response, pricing it against the FIFO
+    /// of send times. Typed server rejections are counted, not fatal.
+    fn drain_one(
+        client: &mut NetClient,
+        sent: &mut VecDeque<Instant>,
+        local: &mut Metrics,
+        rejected: &AtomicU64,
+    ) -> Result<()> {
+        let t = sent.pop_front().expect("response without a request");
+        match client.recv() {
+            Ok(_resp) => local.record(t.elapsed().as_micros() as u64),
+            Err(NetError::Rejected { .. }) => {
+                rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => anyhow::bail!("recv: {e}"),
+        }
+        Ok(())
+    }
+
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("bench-net requires --addr HOST:PORT"))?
+        .to_string();
+    let n_requests = args.get_usize("requests", 256);
+    let n_clients = args.get_usize("clients", 4).max(1);
+    let window = args.get_usize("window", 16).max(1);
+    let task = Task::parse(args.get_or("dataset", "mnist"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset (expected mnist|fmnist)"))?;
+
+    let metrics = Mutex::new(Metrics::default());
+    let rejected = AtomicU64::new(0);
+    let t0 = Instant::now();
+    if n_requests > 0 {
+        println!(
+            "bench-net: {n_requests} requests from {n_clients} pipelined clients \
+             (window {window}) against {addr}"
+        );
+        std::thread::scope(|scope| -> Result<()> {
+            let mut workers = Vec::new();
+            for c in 0..n_clients {
+                let addr = addr.as_str();
+                let metrics = &metrics;
+                let rejected = &rejected;
+                let share = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+                workers.push(scope.spawn(move || -> Result<()> {
+                    let mut client = NetClient::connect(addr)
+                        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+                    // A wedged server must fail the bench, not hang it
+                    // (CI waits on this process).
+                    client
+                        .set_read_timeout(Some(Duration::from_secs(30)))
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let data = fastcaps::data::generate(task, share, c as u64);
+                    // In-order pipelining: responses come back in request
+                    // order, so a FIFO of send times prices each response.
+                    let mut sent: VecDeque<Instant> = VecDeque::with_capacity(window);
+                    let mut local = Metrics::default();
+                    for img in &data.images {
+                        if sent.len() == window {
+                            drain_one(&mut client, &mut sent, &mut local, rejected)?;
+                        }
+                        sent.push_back(Instant::now());
+                        client
+                            .send(img)
+                            .map_err(|e| anyhow::anyhow!("send: {e}"))?;
+                    }
+                    while !sent.is_empty() {
+                        drain_one(&mut client, &mut sent, &mut local, rejected)?;
+                    }
+                    let mut m = metrics.lock().unwrap();
+                    m.requests += local.requests;
+                    m.latency.merge(&local.latency);
+                    Ok(())
+                }));
+            }
+            for w in workers {
+                w.join().expect("bench-net client thread panicked")?;
+            }
+            Ok(())
+        })?;
+        let wall = t0.elapsed();
+        let m = metrics.into_inner().unwrap();
+        let rej = rejected.load(Ordering::Relaxed);
+        println!(
+            "requests={} rejected={rej} latency(mean={:.0}us p50={}us p99={}us max={}us)",
+            m.requests,
+            m.latency.mean_us(),
+            m.latency.percentile_us(50.0),
+            m.latency.percentile_us(99.0),
+            m.latency.max_us(),
+        );
+        println!(
+            "wall: {:.2}s  end-to-end throughput: {:.1} req/s",
+            wall.as_secs_f64(),
+            m.requests as f64 / wall.as_secs_f64()
+        );
+        anyhow::ensure!(
+            m.requests + rej == n_requests as u64,
+            "response accounting broken: {} ok + {rej} rejected != {n_requests}",
+            m.requests
+        );
+    }
+
+    if args.flag("stop") {
+        let client =
+            NetClient::connect(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        // Bound the wait for the ack the same way: a server that never
+        // acks is a failure to report, not a hang.
+        client
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        client
+            .shutdown_server()
+            .map_err(|e| anyhow::anyhow!("shutdown: {e}"))?;
+        println!("server acknowledged shutdown; draining");
+    }
     Ok(())
 }
 

@@ -1,0 +1,373 @@
+//! Loopback integration tests for the network serving front-end: the
+//! wire protocol end to end over real TCP connections — happy path
+//! (bit-identical to in-process serving), every framing fault getting a
+//! typed error frame without poisoning the connection or the server,
+//! pipelined ordering under concurrency, graceful drain, and the
+//! dead-pool path surfacing as a typed error instead of a hang.
+
+use fastcaps::backend::{BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use fastcaps::coordinator::net::{NetClient, NetError, NetServer};
+use fastcaps::coordinator::server::Server;
+use fastcaps::coordinator::wire::{self, ErrorCode, ServerFrame, MAGIC, MAX_PAYLOAD, VERSION};
+use fastcaps::tensor::Tensor;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn toy_spec(buckets: Vec<usize>) -> BackendSpec {
+    BackendSpec {
+        kind: "toy".into(),
+        model: "toy".into(),
+        input_shape: (1, 4, 4),
+        batch_buckets: buckets,
+        reports_timing: false,
+        max_replicas: None,
+        compression: None,
+    }
+}
+
+/// Deterministic backend: the lengths one-hot-encode the image mean, so
+/// wire and in-process answers are comparable bit for bit.
+struct ToyBackend {
+    spec: BackendSpec,
+    delay: Duration,
+}
+
+impl InferenceBackend for ToyBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(InferOutput::untimed(
+            req.images
+                .iter()
+                .map(|img| {
+                    let m = img.sum() / img.len() as f32;
+                    let mut l = vec![0.1f32; 10];
+                    l[(m * 10.0) as usize % 10] = 0.9;
+                    l
+                })
+                .collect(),
+        ))
+    }
+}
+
+/// A toy server listening on an OS-assigned loopback port.
+fn toy_net(delay: Duration, max_wait: Duration, max_queue: usize) -> NetServer {
+    let server = Server::builder(move || {
+        Ok(Box::new(ToyBackend {
+            spec: toy_spec(vec![1, 4]),
+            delay,
+        }) as Box<dyn InferenceBackend>)
+    })
+    .max_wait(max_wait)
+    .max_queue_depth(max_queue)
+    .start();
+    NetServer::bind("127.0.0.1:0", server).expect("bind loopback")
+}
+
+fn connect(net: &NetServer) -> NetClient {
+    let c = NetClient::connect(net.local_addr()).expect("connect");
+    c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    c
+}
+
+/// Image whose toy prediction is `k % 10` (mean = k/10 + 0.05).
+fn image_for(k: usize) -> Tensor {
+    Tensor::full(&[1, 4, 4], (k % 10) as f32 / 10.0 + 0.05)
+}
+
+#[test]
+fn net_clients_match_in_process_classify_bitwise() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(1), 1024);
+    std::thread::scope(|scope| {
+        for c in 0..3usize {
+            let net = &net;
+            scope.spawn(move || {
+                let mut client = connect(net);
+                for k in 0..8 {
+                    let img = image_for(c * 8 + k);
+                    let direct = net.server().classify(img.clone()).unwrap();
+                    let wired = client.classify(&img).unwrap();
+                    // Bit-identical lengths: the wire must not perturb
+                    // the classification result.
+                    assert_eq!(wired.lengths.len(), direct.lengths.len());
+                    for (a, b) in wired.lengths.iter().zip(&direct.lengths) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                    assert_eq!(wired.predicted as usize, direct.predicted);
+                    assert_eq!(wired.predicted as usize, (c * 8 + k) % 10);
+                }
+            });
+        }
+    });
+    let m = net.shutdown();
+    // 24 wire + 24 in-process requests; per-connection counters folded.
+    assert_eq!(m.requests, 48);
+    assert_eq!(m.wire_requests, 24);
+    assert_eq!(m.wire_errors, 0);
+    assert_eq!(m.connections_opened, 3);
+    assert_eq!(m.connections_closed, 3);
+}
+
+/// Raw-socket helper: read one server frame with a timeout.
+fn read_frame(stream: &TcpStream) -> Result<ServerFrame, wire::Fault> {
+    stream.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let mut r = BufReader::new(stream);
+    wire::read_server_frame(&mut r)
+}
+
+#[test]
+fn malformed_magic_gets_typed_error_and_server_survives() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(1), 1024);
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.write_all(b"XXXXgarbage-not-a-frame").unwrap();
+    raw.flush().unwrap();
+    match read_frame(&raw).unwrap() {
+        ServerFrame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::Malformed);
+            assert!(message.contains("magic"), "{message}");
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    // The stream cannot be resynchronized: the server closes it.
+    assert!(matches!(read_frame(&raw), Err(wire::Fault::Closed)));
+    // But the *server* is not poisoned: a fresh connection serves.
+    let mut client = connect(&net);
+    assert_eq!(client.classify(&image_for(3)).unwrap().predicted, 3);
+    let m = net.shutdown();
+    assert_eq!(m.wire_errors, 1);
+}
+
+#[test]
+fn truncated_frame_does_not_poison_server() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(1), 1024);
+    {
+        let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+        // Valid header promising a 64-byte image, then die mid-payload.
+        let mut h = Vec::new();
+        h.extend_from_slice(&MAGIC);
+        h.push(VERSION);
+        h.push(0x01); // Classify
+        h.extend_from_slice(&64u32.to_le_bytes());
+        h.extend_from_slice(&[0u8; 10]);
+        raw.write_all(&h).unwrap();
+        raw.flush().unwrap();
+        // Drop: the server sees a truncated stream and just closes.
+    }
+    let mut client = connect(&net);
+    assert_eq!(client.classify(&image_for(7)).unwrap().predicted, 7);
+    let m = net.shutdown();
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn oversized_length_prefix_gets_typed_error() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(1), 1024);
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    let mut h = Vec::new();
+    h.extend_from_slice(&MAGIC);
+    h.push(VERSION);
+    h.push(0x01); // Classify
+    h.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    raw.write_all(&h).unwrap();
+    raw.flush().unwrap();
+    match read_frame(&raw).unwrap() {
+        ServerFrame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::Oversized);
+            assert!(message.contains("exceeds"), "{message}");
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    assert!(matches!(read_frame(&raw), Err(wire::Fault::Closed)));
+    let mut client = connect(&net);
+    assert_eq!(client.classify(&image_for(1)).unwrap().predicted, 1);
+    net.shutdown();
+}
+
+#[test]
+fn wrong_input_shape_typed_error_connection_survives() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(1), 1024);
+    let mut client = connect(&net);
+    // 2×2 image against a (1,4,4) spec: 16 bytes instead of 64.
+    match client.classify(&Tensor::full(&[1, 2, 2], 0.5)) {
+        Err(NetError::Rejected { code, message }) => {
+            assert_eq!(code, ErrorCode::InvalidRequest);
+            assert!(message.contains("64"), "should name expected bytes: {message}");
+            assert!(message.contains("(1, 4, 4)"), "should name the spec shape: {message}");
+        }
+        other => panic!("expected InvalidRequest rejection, got {other:?}"),
+    }
+    // Same connection still serves a well-formed request afterwards.
+    assert_eq!(client.classify(&image_for(5)).unwrap().predicted, 5);
+    let m = net.shutdown();
+    assert_eq!(m.wire_errors, 1);
+    assert_eq!(m.requests, 1); // the malformed one never hit the pool
+}
+
+#[test]
+fn concurrent_pipelined_clients_get_responses_in_request_order() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(2), 1024);
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let net = &net;
+            scope.spawn(move || {
+                let mut client = connect(net);
+                let n = 16;
+                for k in 0..n {
+                    client.send(&image_for(c + 2 * k)).unwrap();
+                }
+                for k in 0..n {
+                    let resp = client.recv().unwrap();
+                    assert_eq!(
+                        resp.predicted as usize,
+                        (c + 2 * k) % 10,
+                        "client {c} got response {k} out of order"
+                    );
+                }
+            });
+        }
+    });
+    let m = net.shutdown();
+    assert_eq!(m.requests, 64);
+    assert_eq!(m.wire_requests, 64);
+}
+
+#[test]
+fn graceful_drain_finishes_in_flight_requests() {
+    let net = toy_net(Duration::from_millis(5), Duration::from_millis(1), 1024);
+    let mut client = connect(&net);
+    let n = 6;
+    for k in 0..n {
+        client.send(&image_for(k)).unwrap();
+    }
+    // Let the reader thread pull everything off the socket so the
+    // requests count as in-flight when the drain cuts the read side.
+    std::thread::sleep(Duration::from_millis(100));
+    let collector = std::thread::spawn(move || {
+        let mut got = 0usize;
+        for k in 0..n {
+            let resp = client.recv().expect("in-flight response lost in drain");
+            assert_eq!(resp.predicted as usize, k % 10);
+            got += 1;
+        }
+        got
+    });
+    let m = net.shutdown();
+    assert_eq!(collector.join().unwrap(), n);
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.connections_closed, m.connections_opened);
+}
+
+#[test]
+fn wire_shutdown_frame_triggers_graceful_drain() {
+    let net = toy_net(Duration::ZERO, Duration::from_millis(1), 1024);
+    assert!(!net.shutdown_requested());
+    let mut client = connect(&net);
+    assert_eq!(client.classify(&image_for(4)).unwrap().predicted, 4);
+    client.shutdown_server().expect("shutdown ack");
+    net.wait_shutdown_requested(); // must return, not block
+    assert!(net.shutdown_requested());
+    let m = net.shutdown();
+    assert_eq!(m.requests, 1);
+}
+
+#[test]
+fn queue_full_surfaces_as_typed_error_over_wire() {
+    // One slow replica, queue depth 1: a pipelined burst must overflow
+    // admission, and the overflow must come back as typed QueueFull
+    // frames — the connection (and server) keep working.
+    let net = toy_net(Duration::from_millis(30), Duration::from_micros(100), 1);
+    let mut client = connect(&net);
+    let n = 12;
+    for k in 0..n {
+        client.send(&image_for(k)).unwrap();
+    }
+    let mut ok = 0;
+    let mut rejected = 0;
+    for _ in 0..n {
+        match client.recv() {
+            Ok(_) => ok += 1,
+            Err(NetError::Rejected { code, .. }) => {
+                assert_eq!(code, ErrorCode::QueueFull);
+                rejected += 1;
+            }
+            Err(other) => panic!("unexpected transport error: {other}"),
+        }
+    }
+    assert_eq!(ok + rejected, n);
+    assert!(rejected >= 1, "burst of {n} never overflowed depth-1 queue");
+    assert!(ok >= 1, "everything was rejected");
+    // Connection survives the rejections: an eventual retry succeeds.
+    let mut served = false;
+    for _ in 0..100 {
+        match client.classify(&image_for(2)) {
+            Ok(resp) => {
+                assert_eq!(resp.predicted, 2);
+                served = true;
+                break;
+            }
+            Err(NetError::Rejected { code, .. }) if code == ErrorCode::QueueFull => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(other) => panic!("unexpected error: {other}"),
+        }
+    }
+    assert!(served, "connection never recovered after QueueFull");
+    let m = net.shutdown();
+    // The retry loop may add further rejections beyond the burst's.
+    assert!(m.rejected as usize >= rejected, "{} < {rejected}", m.rejected);
+}
+
+#[test]
+fn dead_pool_is_typed_error_over_wire_not_a_hang() {
+    struct PanicBackend(BackendSpec);
+    impl InferenceBackend for PanicBackend {
+        fn spec(&self) -> &BackendSpec {
+            &self.0
+        }
+        fn infer(&mut self, _req: &InferRequest) -> Result<InferOutput, BackendError> {
+            panic!("backend bug");
+        }
+    }
+    let server = Server::builder(|| {
+        Ok(Box::new(PanicBackend(toy_spec(vec![1]))) as Box<dyn InferenceBackend>)
+    })
+    .max_wait(Duration::from_millis(1))
+    .start();
+    let net = NetServer::bind("127.0.0.1:0", server).unwrap();
+    let mut client = connect(&net);
+    // First request rides the panicking replica: the dropped response
+    // must come back as a typed Unavailable frame within the timeout.
+    match client.classify(&image_for(0)) {
+        Err(NetError::Rejected { code, .. }) => assert_eq!(code, ErrorCode::Unavailable),
+        other => panic!("expected Unavailable rejection, got {other:?}"),
+    }
+    // Later requests are rejected at admission (dead pool), same type.
+    match client.classify(&image_for(1)) {
+        Err(NetError::Rejected { code, message }) => {
+            assert_eq!(code, ErrorCode::Unavailable);
+            assert!(message.contains("died"), "{message}");
+        }
+        other => panic!("expected Unavailable rejection, got {other:?}"),
+    }
+    let m = net.shutdown();
+    assert_eq!(m.replicas_died, 1);
+    assert_eq!(m.wire_errors, 2, "both rejections must be counted");
+}
+
+#[test]
+fn listener_refuses_backend_that_never_started() {
+    let server =
+        Server::builder(|| Err(BackendError::Init("backend init failed".into()))).start();
+    match NetServer::bind("127.0.0.1:0", server) {
+        Err(BackendError::Unavailable(m)) => assert!(m.contains("never started"), "{m}"),
+        other => panic!("expected Unavailable, got {other:?}"),
+    }
+}

@@ -25,6 +25,7 @@ fn spec(kind: &str) -> BackendSpec {
         reports_timing: false,
         max_replicas: None,
         compression: None,
+        fingerprint: 0,
     }
 }
 
@@ -60,6 +61,38 @@ impl InferenceBackend for FixedCostBackend {
         }
         Ok(InferOutput::untimed(
             req.images.iter().map(|_| vec![0.5; 10]).collect(),
+        ))
+    }
+}
+
+/// Deterministic spin-cost backend for the cache section: busy-spins
+/// `cost` per batch like [`FixedCostBackend`], but the lengths are a
+/// pure function of the image bits, so a cached response can be checked
+/// bit-identical against an uncached run of the same traffic.
+struct SpinEchoBackend {
+    spec: BackendSpec,
+    cost: Duration,
+}
+
+impl InferenceBackend for SpinEchoBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < self.cost {
+            std::hint::spin_loop();
+        }
+        Ok(InferOutput::untimed(
+            req.images
+                .iter()
+                .map(|img| {
+                    let mean = img.sum() / img.len() as f32;
+                    (0..10)
+                        .map(|k| (mean * (k as f32 + 1.0)).sin() * 0.5 + 0.5)
+                        .collect()
+                })
+                .collect(),
         ))
     }
 }
@@ -283,6 +316,86 @@ fn main() {
         assert!(
             sparse_fps > dense_fps,
             "sparse sim must strictly dominate dense sim: {sparse_fps:.1} vs {dense_fps:.1}"
+        );
+    }
+
+    b.section("content-addressed cache: 90% duplicate traffic (500us/frame backend)");
+    // DESIGN.md §Perf L3 target: at 90% duplicate traffic the cache must
+    // buy ≥10x end-to-end throughput over the identical uncached server,
+    // with bit-identical responses. The duplicate stream mixes a hot
+    // 8-frame pool (90%) with a repeating 100-frame long tail (10%), so
+    // even the "cold" fraction amortizes — ~108 distinct frames ever
+    // reach the backend out of 2000 requests.
+    {
+        use fastcaps::cache::CacheConfig;
+        let hot = generate(Task::Digits, 8, 101).images;
+        let tail = generate(Task::Digits, 100, 202).images;
+        let mut rng = fastcaps::util::rng::Rng::new(303);
+        let traffic: Vec<Tensor> = (0..2000)
+            .map(|i| {
+                if rng.f64() < 0.9 {
+                    hot[rng.below(hot.len())].clone()
+                } else {
+                    tail[i % tail.len()].clone()
+                }
+            })
+            .collect();
+        let builder = || {
+            Server::builder(|| {
+                let mut s = spec("spin-echo");
+                // Bucket 1: every admitted request pays the full spin,
+                // so the comparison isolates the cache, not batching.
+                s.batch_buckets = vec![1];
+                Ok(Box::new(SpinEchoBackend {
+                    spec: s,
+                    cost: Duration::from_micros(500),
+                }) as Box<dyn InferenceBackend>)
+            })
+            .max_wait(Duration::from_micros(50))
+        };
+        let run = |server: &Server| {
+            let t0 = std::time::Instant::now();
+            let responses: Vec<(usize, Vec<u32>)> = traffic
+                .iter()
+                .map(|img| {
+                    let r = server.classify(img.clone()).unwrap();
+                    (r.predicted, r.lengths.iter().map(|x| x.to_bits()).collect())
+                })
+                .collect();
+            (
+                traffic.len() as f64 / t0.elapsed().as_secs_f64(),
+                responses,
+            )
+        };
+        let uncached = builder().start();
+        let (rps_u, resp_u) = run(&uncached);
+        uncached.shutdown();
+        let cached = builder().cache(CacheConfig::with_entries(1024)).start();
+        let (rps_c, resp_c) = run(&cached);
+        let m = cached.shutdown();
+        report_model("uncached throughput", rps_u, "req/s");
+        report_model("cached throughput", rps_c, "req/s");
+        report_model("cache speedup", rps_c / rps_u, "x");
+        assert_eq!(
+            resp_u, resp_c,
+            "cached responses must be bit-identical to uncached ones"
+        );
+        assert!(
+            rps_c >= 10.0 * rps_u,
+            "cache below the 10x gate at 90% duplicates: \
+             {rps_c:.0} vs {rps_u:.0} req/s"
+        );
+        assert!(m.cache_hits > 0, "duplicate traffic produced no hits");
+        assert_eq!(
+            m.cache_hits + m.cache_misses + m.cache_coalesced,
+            m.requests,
+            "cache accounting broken"
+        );
+        assert_eq!(m.cache_stale, 0, "stale sightings must be impossible");
+        assert!(
+            (m.cache_misses as usize) <= 108,
+            "more backend passes than distinct frames: {}",
+            m.cache_misses
         );
     }
 

@@ -154,9 +154,32 @@ pub struct BackendSpec {
     /// sparse-compiled model (`oracle-sparse`): survivor counts and the
     /// §III-C index-memory cost. `None` for dense execution paths.
     pub compression: Option<CompressionStats>,
+    /// Deployment fingerprint: a content hash over the backend kind,
+    /// model/dataset name, and the deployed weight (and mask) bits.
+    /// The inference cache ([`crate::cache`]) mixes it into every key,
+    /// so two deployments that could answer the same input differently
+    /// (different weights, different pruning masks, different backend)
+    /// can never alias — a redeploy invalidates by construction. `0`
+    /// means "no fingerprint" and disables cache reuse guarantees
+    /// (test-only backends that don't care may leave it 0).
+    pub fingerprint: u64,
 }
 
 impl BackendSpec {
+    /// Digest a deployment identity into a [`BackendSpec::fingerprint`]:
+    /// the backend kind and model name (two executors can answer the
+    /// same weights differently — `oracle` in f32 vs `sim` in Q8.8),
+    /// plus a content hash of the deployed weight/mask bits computed by
+    /// the model type itself (`Weights::fingerprint`,
+    /// `CompiledCapsNet::fingerprint`, `DeployedModel::fingerprint`).
+    pub fn deployment_fingerprint(kind: &str, model: &str, content: u64) -> u64 {
+        let mut h = crate::util::hash::Hash64::new(0x6465_706c_6f79); // "deploy"
+        h.absorb_str(kind);
+        h.absorb_str(model);
+        h.absorb(content);
+        h.finish()
+    }
+
     /// Normalize buckets (sorted, deduplicated, non-empty is asserted by
     /// constructors).
     pub fn normalize(mut self) -> BackendSpec {

@@ -27,6 +27,11 @@ impl OracleBackend {
             reports_timing: false,
             max_replicas: None,
             compression: None,
+            fingerprint: BackendSpec::deployment_fingerprint(
+                "oracle",
+                &net.config.name,
+                net.weights.fingerprint(),
+            ),
         }
         .normalize();
         OracleBackend { net, spec }

@@ -44,6 +44,25 @@ impl PjrtBackend {
             reports_timing: false,
             max_replicas: Some(1),
             compression: None,
+            // Weight bits live inside opaque AOT artifacts, so the
+            // content hash is over the manifest identity (model, artifact
+            // files, shapes, buckets) — weaker than the native backends'
+            // bit-level fingerprints, but re-exported artifacts get new
+            // manifest entries, which is the redeploy signal we have.
+            fingerprint: BackendSpec::deployment_fingerprint("pjrt", &entry.model, {
+                let mut h = crate::util::hash::Hash64::new(0x706a_7274); // "pjrt"
+                for e in &engines {
+                    h.absorb_str(&e.entry.name);
+                    h.absorb_str(&e.entry.file);
+                    h.absorb(e.entry.batch as u64);
+                    h.absorb(e.entry.num_classes as u64);
+                    h.absorb(e.entry.input_shape.len() as u64);
+                    for &d in &e.entry.input_shape {
+                        h.absorb(d as u64);
+                    }
+                }
+                h.finish()
+            }),
         }
         .normalize();
         Ok(PjrtBackend { engines, spec })

@@ -30,6 +30,11 @@ impl SimBackend {
             reports_timing: true,
             max_replicas: None,
             compression: None,
+            fingerprint: BackendSpec::deployment_fingerprint(
+                "sim",
+                &model.config.model.name,
+                model.fingerprint(),
+            ),
         }
         .normalize();
         SimBackend {

@@ -48,6 +48,11 @@ impl SimSparseBackend {
             reports_timing: true,
             max_replicas: None,
             compression: Some(stats),
+            fingerprint: BackendSpec::deployment_fingerprint(
+                "sim-sparse",
+                &model.config.model.name,
+                model.fingerprint(),
+            ),
         }
         .normalize();
         SimSparseBackend {

@@ -37,6 +37,11 @@ impl SparseOracleBackend {
             reports_timing: false,
             max_replicas: None,
             compression: Some(stats),
+            fingerprint: BackendSpec::deployment_fingerprint(
+                "oracle-sparse",
+                &net.config.name,
+                net.fingerprint(),
+            ),
         }
         .normalize();
         SparseOracleBackend { net, spec }

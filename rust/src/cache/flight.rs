@@ -1,0 +1,320 @@
+//! Single-flight coalescing: N concurrent identical misses run ONE
+//! inference.
+//!
+//! The first miss becomes the *leader* and owns a [`FlightLead`]; it
+//! rides the normal admission queue into the executor pool. Duplicates
+//! arriving while the flight is open park a [`Waiter`] (their response
+//! sender) on the flight entry instead of queueing. When the leader's
+//! response arrives, [`FlightLead::complete`] publishes it to the store
+//! and fans it out to every waiter. If the leader never completes — its
+//! batch failed, it was rejected at admission, the pool died, or the
+//! server shut down — the `FlightLead` is *dropped*, which removes the
+//! entry and drops every parked sender: each waiter's `recv()`
+//! disconnects immediately and surfaces as the same typed
+//! `Unavailable` error an uncached dropped request gets. Waiters can
+//! therefore observe exactly two outcomes: the leader's response, or a
+//! typed error — never a hang.
+//!
+//! Lock order is table → entry-state (the leader only takes the state
+//! lock after releasing the table lock), so joiners holding the table
+//! lock can always park without deadlock.
+
+use super::store::{CacheStore, CachedOutput};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::Response;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+/// A parked duplicate request, served (or drop-notified) when the
+/// flight finishes. Latency is measured from the waiter's own arrival.
+pub(crate) struct Waiter {
+    pub id: u64,
+    pub enqueued: Instant,
+    pub tx: mpsc::Sender<Response>,
+}
+
+struct FlightState {
+    waiters: Vec<Waiter>,
+    /// Set exactly once, after the entry has left the table — a join
+    /// that somehow races the finish is refused instead of parking on
+    /// a flight nobody will ever complete.
+    done: bool,
+}
+
+/// One in-flight inference, shared between its leader and its waiters.
+pub(crate) struct FlightEntry {
+    state: Mutex<FlightState>,
+}
+
+impl FlightEntry {
+    fn new() -> FlightEntry {
+        FlightEntry {
+            state: Mutex::new(FlightState {
+                waiters: Vec::new(),
+                done: false,
+            }),
+        }
+    }
+
+    /// Park a waiter; `Err` returns it if the flight already finished.
+    fn join(&self, w: Waiter) -> Result<(), Waiter> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        if st.done {
+            return Err(w);
+        }
+        st.waiters.push(w);
+        Ok(())
+    }
+
+    /// Mark done and take the waiters (idempotent: a second call — e.g.
+    /// a completed lead's Drop — gets an empty vec).
+    fn finish(&self) -> Vec<Waiter> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.done = true;
+        std::mem::take(&mut st.waiters)
+    }
+}
+
+/// key → open flight. One entry per distinct in-flight request content.
+#[derive(Default)]
+pub(crate) struct FlightTable {
+    flights: Mutex<HashMap<u128, Arc<FlightEntry>>>,
+}
+
+/// Outcome of [`FlightTable::join_or_lead`].
+pub(crate) enum FlightRole {
+    /// No open flight: the caller is now the leader and must either run
+    /// inference to completion or drop the lead (which drop-notifies).
+    Lead(FlightLead),
+    /// Parked on an existing flight; the caller's `rx` resolves when
+    /// the flight finishes.
+    Joined,
+    /// The flight finished between lookup and join — the waiter is
+    /// handed back so the caller can re-check the store and try again.
+    Finished(Waiter),
+}
+
+impl FlightTable {
+    /// Join the open flight for `key`, or open one and lead it.
+    pub(crate) fn join_or_lead(
+        self: &Arc<Self>,
+        key: u128,
+        fingerprint: u64,
+        store: &Arc<CacheStore>,
+        waiter: Waiter,
+    ) -> FlightRole {
+        let mut table = self.flights.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(entry) = table.get(&key) {
+            return match entry.join(waiter) {
+                Ok(()) => FlightRole::Joined,
+                Err(w) => FlightRole::Finished(w),
+            };
+        }
+        let entry = Arc::new(FlightEntry::new());
+        table.insert(key, entry.clone());
+        drop(table);
+        FlightRole::Lead(FlightLead {
+            key,
+            fingerprint,
+            entry,
+            store: store.clone(),
+            table: self.clone(),
+            completed: false,
+        })
+    }
+
+    /// Remove `key` iff it still maps to this exact entry (a defensive
+    /// identity check: a successor flight under the same key must not
+    /// be torn down by a stale lead).
+    fn remove(&self, key: u128, entry: &Arc<FlightEntry>) {
+        let mut table = self.flights.lock().unwrap_or_else(PoisonError::into_inner);
+        if table.get(&key).is_some_and(|e| Arc::ptr_eq(e, entry)) {
+            table.remove(&key);
+        }
+    }
+
+    /// Open flights right now (test observability).
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.flights
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+}
+
+/// Leadership of one flight. Either [`FlightLead::complete`] runs, or
+/// Drop aborts the flight and drop-notifies every waiter.
+pub(crate) struct FlightLead {
+    key: u128,
+    fingerprint: u64,
+    entry: Arc<FlightEntry>,
+    store: Arc<CacheStore>,
+    table: Arc<FlightTable>,
+    completed: bool,
+}
+
+impl FlightLead {
+    /// Publish the leader's response: insert into the store *first*,
+    /// then unlink the flight, then fan out to waiters — so any thread
+    /// that misses the flight in the table is guaranteed to hit the
+    /// store. Waiter latencies are recorded from each waiter's own
+    /// arrival time.
+    pub(crate) fn complete(&mut self, resp: &Response, m: &mut Metrics) {
+        self.completed = true;
+        let cached = Arc::new(CachedOutput {
+            lengths: resp.lengths.clone(),
+            predicted: resp.predicted,
+            batch: resp.batch,
+            fingerprint: self.fingerprint,
+        });
+        let evicted = self.store.insert(self.key, cached.clone());
+        m.record_cache_evicted(evicted);
+        self.table.remove(self.key, &self.entry);
+        for w in self.entry.finish() {
+            let r = cached.to_response(w.id, w.enqueued);
+            m.record(r.latency_us);
+            let _ = w.tx.send(r); // waiter may have gone away; fine
+        }
+    }
+}
+
+impl Drop for FlightLead {
+    fn drop(&mut self) {
+        if !self.completed {
+            // The leader died without a response (failed batch, admission
+            // rejection, pool death, shutdown drain): unlink the flight
+            // and drop the parked senders — every waiter's recv()
+            // disconnects and maps to a typed Unavailable.
+            self.table.remove(self.key, &self.entry);
+            drop(self.entry.finish());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn waiter(id: u64) -> (Waiter, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Waiter {
+                id,
+                enqueued: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    fn toy_response(id: u64) -> Response {
+        Response {
+            id,
+            lengths: vec![0.25; 10],
+            predicted: 4,
+            latency_us: 17,
+            batch: 2,
+        }
+    }
+
+    #[test]
+    fn leader_then_joiners_then_complete_fans_out() {
+        let table = Arc::new(FlightTable::default());
+        let store = Arc::new(CacheStore::new(8, 1));
+        let (w0, _rx0) = waiter(1);
+        let mut lead = match table.join_or_lead(5, 99, &store, w0) {
+            FlightRole::Lead(l) => l,
+            _ => panic!("first caller must lead"),
+        };
+        let mut waiter_rxs = Vec::new();
+        for id in 2..5 {
+            let (w, rx) = waiter(id);
+            match table.join_or_lead(5, 99, &store, w) {
+                FlightRole::Joined => waiter_rxs.push((id, rx)),
+                _ => panic!("duplicate must join the open flight"),
+            }
+        }
+        assert_eq!(table.len(), 1);
+        let mut m = Metrics::default();
+        lead.complete(&toy_response(1), &mut m);
+        for (id, rx) in waiter_rxs {
+            let r = rx.recv().expect("waiter must be served");
+            assert_eq!(r.id, id, "waiter keeps its own request id");
+            assert_eq!(r.predicted, 4);
+            assert_eq!(r.lengths, vec![0.25; 10]);
+            assert_eq!(r.batch, 2);
+        }
+        assert_eq!(m.requests, 3, "one record per served waiter");
+        assert_eq!(table.len(), 0, "completed flight must leave the table");
+        let hit = store.get(5).expect("completed flight fills the store");
+        assert_eq!(hit.fingerprint, 99);
+    }
+
+    #[test]
+    fn dropped_lead_disconnects_waiters_instead_of_hanging() {
+        let table = Arc::new(FlightTable::default());
+        let store = Arc::new(CacheStore::new(8, 1));
+        let (w0, rx0) = waiter(1);
+        let lead = match table.join_or_lead(9, 1, &store, w0) {
+            FlightRole::Lead(l) => l,
+            _ => panic!("first caller must lead"),
+        };
+        let (w1, rx1) = waiter(2);
+        assert!(matches!(
+            table.join_or_lead(9, 1, &store, w1),
+            FlightRole::Joined
+        ));
+        drop(lead); // leader failed before completing
+        assert!(
+            matches!(rx1.recv(), Err(mpsc::RecvError)),
+            "waiter must disconnect, not hang"
+        );
+        // The leader's own channel came from the caller and is simply
+        // unused here; the flight is gone and the store untouched.
+        drop(rx0);
+        assert_eq!(table.len(), 0);
+        assert!(store.get(9).is_none());
+    }
+
+    #[test]
+    fn next_request_after_abort_leads_a_fresh_flight() {
+        let table = Arc::new(FlightTable::default());
+        let store = Arc::new(CacheStore::new(8, 1));
+        let (w0, _rx0) = waiter(1);
+        let lead = match table.join_or_lead(3, 1, &store, w0) {
+            FlightRole::Lead(l) => l,
+            _ => panic!(),
+        };
+        drop(lead);
+        let (w1, _rx1) = waiter(2);
+        assert!(
+            matches!(table.join_or_lead(3, 1, &store, w1), FlightRole::Lead(_)),
+            "an aborted flight must not block retries from leading"
+        );
+    }
+
+    #[test]
+    fn completed_lead_drop_is_inert() {
+        let table = Arc::new(FlightTable::default());
+        let store = Arc::new(CacheStore::new(8, 1));
+        let (w0, _rx0) = waiter(1);
+        let mut lead = match table.join_or_lead(7, 1, &store, w0) {
+            FlightRole::Lead(l) => l,
+            _ => panic!(),
+        };
+        let mut m = Metrics::default();
+        lead.complete(&toy_response(1), &mut m);
+        // A new flight under the same key must survive the old lead's
+        // Drop (identity check in FlightTable::remove).
+        let (w1, _rx1) = waiter(2);
+        let lead2 = match table.join_or_lead(7, 1, &store, w1) {
+            FlightRole::Lead(l) => l,
+            _ => panic!("store hit is checked by the caller, not the table"),
+        };
+        drop(lead);
+        assert_eq!(table.len(), 1, "successor flight was torn down");
+        drop(lead2);
+    }
+}

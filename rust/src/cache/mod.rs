@@ -1,0 +1,299 @@
+//! Content-addressed inference cache with single-flight coalescing.
+//!
+//! Real serving traffic repeats (retries, duplicated sensors, hot
+//! classes), and the paper identifies dynamic routing as the dominant
+//! inference cost — FastCaps' 82→1351 FPS on PYNQ-Z1 came entirely
+//! from attacking it. This layer sits between the network front-end
+//! and the admission queue and turns a duplicate request into an
+//! O(hash) lookup instead of another full conv+routing pass, for every
+//! backend at once.
+//!
+//! **Key derivation.** A request's key is two independently-seeded
+//! 64-bit lanes ([`crate::util::hash::Hash64`]) over the *deployment
+//! fingerprint* followed by the input tensor's shape and exact f32 bit
+//! patterns. The fingerprint ([`crate::backend::BackendSpec::fingerprint`])
+//! digests the backend kind, model/dataset name, and the deployed
+//! weight (and mask) bits — so a `prune --compile --serve` style
+//! redeploy changes every key and a stale hit is structurally
+//! impossible, rather than relying on explicit invalidation.
+//!
+//! **Single-flight.** A miss opens a flight in the [`flight`] table;
+//! concurrent identical misses park on it instead of queueing, and the
+//! one leader's response fans out to all of them (or a typed error
+//! does, if the leader dies). See [`flight`] for the state machine.
+//!
+//! **Store.** Completed responses land in a bounded sharded clock-LRU
+//! ([`store::CacheStore`]), shareable across server generations via
+//! [`crate::coordinator::server::ServerBuilder::cache_store`] — which
+//! is exactly what the redeploy integration test does to prove the
+//! fingerprint isolation.
+
+pub mod flight;
+pub mod store;
+
+pub use store::{CacheStore, CachedOutput};
+
+use crate::tensor::Tensor;
+use crate::util::hash::Hash64;
+use flight::{FlightRole, FlightTable, Waiter};
+use std::sync::Arc;
+
+/// Cache sizing. `entries == 0` disables the layer entirely (the
+/// server then never consults it).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Total cached responses across all shards.
+    pub entries: usize,
+    /// Lock shards; more shards = less contention, slightly looser LRU.
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            entries: 4096,
+            shards: 8,
+        }
+    }
+}
+
+impl CacheConfig {
+    /// Default sharding with an explicit entry budget (0 = disabled).
+    pub fn with_entries(entries: usize) -> CacheConfig {
+        CacheConfig {
+            entries,
+            ..CacheConfig::default()
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.entries > 0
+    }
+}
+
+/// Outcome of a cache lookup, consumed by `Server::submit`.
+pub(crate) enum Lookup {
+    /// Fingerprint-validated store hit: serve without touching the pool.
+    Hit(Arc<CachedOutput>),
+    /// Parked on an in-flight identical request.
+    Joined,
+    /// Caller leads: run inference, then `lead.complete(...)`. `stale`
+    /// reports that a wrong-fingerprint entry was found (and refused)
+    /// under this key — with the fingerprint hashed into the key this
+    /// is structurally impossible, and the counter it feeds stays 0.
+    Lead {
+        lead: flight::FlightLead,
+        stale: bool,
+    },
+}
+
+/// One deployment's view of the cache: a store + flight table bound to
+/// the serving backend's fingerprint.
+pub struct InferenceCache {
+    store: Arc<CacheStore>,
+    flights: Arc<FlightTable>,
+    fingerprint: u64,
+}
+
+impl InferenceCache {
+    pub fn new(cfg: &CacheConfig, fingerprint: u64) -> InferenceCache {
+        InferenceCache::with_store(
+            Arc::new(CacheStore::new(cfg.entries, cfg.shards)),
+            fingerprint,
+        )
+    }
+
+    /// Bind to an existing store — entries written by other deployments
+    /// (different fingerprints) are invisible, not shared; this is how
+    /// a redeploy keeps the allocation without inheriting stale state.
+    pub fn with_store(store: Arc<CacheStore>, fingerprint: u64) -> InferenceCache {
+        InferenceCache {
+            store,
+            flights: Arc::new(FlightTable::default()),
+            fingerprint,
+        }
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn store(&self) -> &Arc<CacheStore> {
+        &self.store
+    }
+
+    /// Content address of one input under this deployment: fingerprint
+    /// first, then shape, then exact f32 bits. Two independently-seeded
+    /// lanes make the effective key 128-bit, so accidental collision is
+    /// out of reach for any realistic cache population.
+    pub fn key_of(&self, image: &Tensor) -> u128 {
+        let mut lo = Hash64::new(0x4641_5354_4341_5053); // "FASTCAPS"
+        let mut hi = Hash64::new(0x6361_6368_656b_6579); // "cachekey"
+        for h in [&mut lo, &mut hi] {
+            h.absorb(self.fingerprint);
+            h.absorb(image.shape.len() as u64);
+            for &d in &image.shape {
+                h.absorb(d as u64);
+            }
+            h.absorb_f32s(&image.data);
+        }
+        ((hi.finish() as u128) << 64) | lo.finish() as u128
+    }
+
+    /// Resolve one request against the cache. Never blocks beyond two
+    /// short mutexes; the `Finished` race (a flight completing between
+    /// the store probe and the join) retries, and each retry can only
+    /// happen after another thread made real progress, so the loop
+    /// terminates.
+    pub(crate) fn lookup(&self, key: u128, mut waiter: Waiter) -> Lookup {
+        let mut stale = false;
+        loop {
+            if let Some(out) = self.store.get(key) {
+                if out.fingerprint == self.fingerprint {
+                    return Lookup::Hit(out);
+                }
+                // Refuse to serve it; lead a fresh flight that will
+                // overwrite the entry. (Unreachable by construction.)
+                stale = true;
+            }
+            waiter = match self
+                .flights
+                .join_or_lead(key, self.fingerprint, &self.store, waiter)
+            {
+                FlightRole::Lead(lead) => return Lookup::Lead { lead, stale },
+                FlightRole::Joined => return Lookup::Joined,
+                FlightRole::Finished(w) => w,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn cache(entries: usize, fingerprint: u64) -> InferenceCache {
+        InferenceCache::new(&CacheConfig::with_entries(entries.max(1)), fingerprint)
+    }
+
+    fn waiter(id: u64) -> (Waiter, mpsc::Receiver<crate::coordinator::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Waiter {
+                id,
+                enqueued: Instant::now(),
+                tx,
+            },
+            rx,
+        )
+    }
+
+    fn image(seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(&[1, 4, 4]);
+        for (i, x) in t.data.iter_mut().enumerate() {
+            *x = (seed as f32) * 0.01 + i as f32;
+        }
+        t
+    }
+
+    #[test]
+    fn key_is_deterministic_and_content_sensitive() {
+        let c = cache(16, 7);
+        let a = image(1);
+        assert_eq!(c.key_of(&a), c.key_of(&a.clone()));
+        assert_ne!(c.key_of(&a), c.key_of(&image(2)));
+        // One flipped mantissa bit must change the key.
+        let mut b = a.clone();
+        b.data[5] = f32::from_bits(b.data[5].to_bits() ^ 1);
+        assert_ne!(c.key_of(&a), c.key_of(&b));
+        // Same data, different shape must change the key.
+        let mut s = a.clone();
+        s.shape = vec![1, 2, 8];
+        assert_ne!(c.key_of(&a), c.key_of(&s));
+    }
+
+    #[test]
+    fn fingerprint_partitions_the_key_space() {
+        let img = image(3);
+        let v1 = cache(16, 100);
+        let v2 = cache(16, 200);
+        assert_ne!(
+            v1.key_of(&img),
+            v2.key_of(&img),
+            "a redeploy (new fingerprint) must change every key"
+        );
+    }
+
+    #[test]
+    fn shared_store_with_new_fingerprint_never_hits_old_entries() {
+        // The redeploy story in miniature: same store Arc, different
+        // fingerprint ⇒ the old deployment's entries are unreachable.
+        let v1 = cache(16, 100);
+        let img = image(4);
+        let (w, _rx) = waiter(1);
+        let key1 = v1.key_of(&img);
+        match v1.lookup(key1, w) {
+            Lookup::Lead { mut lead, stale } => {
+                assert!(!stale);
+                let resp = crate::coordinator::Response {
+                    id: 1,
+                    lengths: vec![0.5; 10],
+                    predicted: 0,
+                    latency_us: 1,
+                    batch: 1,
+                };
+                let mut m = crate::coordinator::metrics::Metrics::default();
+                lead.complete(&resp, &mut m);
+            }
+            _ => panic!("first lookup must lead"),
+        }
+        let (w, _rx) = waiter(2);
+        assert!(
+            matches!(v1.lookup(key1, w), Lookup::Hit(_)),
+            "same deployment must hit"
+        );
+        let v2 = InferenceCache::with_store(v1.store().clone(), 200);
+        let (w, _rx) = waiter(3);
+        match v2.lookup(v2.key_of(&img), w) {
+            Lookup::Lead { stale, .. } => {
+                assert!(!stale, "different key, so not even a stale sighting")
+            }
+            _ => panic!("new fingerprint must miss the old entry"),
+        }
+    }
+
+    #[test]
+    fn duplicate_lookups_coalesce_until_leader_completes() {
+        let c = cache(16, 9);
+        let img = image(5);
+        let key = c.key_of(&img);
+        let (w, _rx) = waiter(1);
+        let mut lead = match c.lookup(key, w) {
+            Lookup::Lead { lead, .. } => lead,
+            _ => panic!("miss must lead"),
+        };
+        let (w2, rx2) = waiter(2);
+        assert!(matches!(c.lookup(key, w2), Lookup::Joined));
+        let resp = crate::coordinator::Response {
+            id: 1,
+            lengths: vec![0.125; 10],
+            predicted: 3,
+            latency_us: 10,
+            batch: 4,
+        };
+        let mut m = crate::coordinator::metrics::Metrics::default();
+        lead.complete(&resp, &mut m);
+        let got = rx2.recv().expect("waiter served on completion");
+        assert_eq!(got.id, 2);
+        assert_eq!(got.predicted, 3);
+        assert_eq!(
+            got.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            resp.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "coalesced response must be bit-identical to the leader's"
+        );
+        let (w3, _rx3) = waiter(3);
+        assert!(matches!(c.lookup(key, w3), Lookup::Hit(_)));
+    }
+}

@@ -1,0 +1,278 @@
+//! Bounded sharded response store with clock (second-chance) eviction.
+//!
+//! std-only: each shard is a `Mutex<HashMap + slot ring>`; the shard
+//! index comes from the key's high bits (the low bits pick the
+//! `HashMap` bucket, so both levels see independent key material).
+//! Clock eviction approximates LRU without an intrusive list: a hit
+//! sets the slot's referenced bit, the insert hand clears bits until it
+//! finds an unreferenced victim. All locks recover from poisoning with
+//! [`std::sync::PoisonError::into_inner`] — the store holds plain data,
+//! and a panicking client thread must not take the cache down with it.
+
+use crate::coordinator::Response;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+/// The cached, backend-independent part of a response. `lengths` is
+/// shared by `Arc`, so serving a hit never copies the score vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedOutput {
+    /// DigitCaps lengths, bit-identical to the response that filled the
+    /// entry.
+    pub lengths: Vec<f32>,
+    pub predicted: usize,
+    /// Batch size the filling request was served in (reported so a hit
+    /// is indistinguishable from the original response apart from
+    /// latency).
+    pub batch: usize,
+    /// Deployment fingerprint the entry was computed under. The
+    /// fingerprint is already part of the key, so a lookup can never
+    /// return another deployment's entry; this copy exists for the
+    /// belt-and-braces validation behind the `stale` counter.
+    pub fingerprint: u64,
+}
+
+impl CachedOutput {
+    /// Materialize a response for one request: cached content, the
+    /// request's own id, latency measured from its own arrival. Apart
+    /// from `latency_us` the result is bit-identical to the response
+    /// that filled the entry.
+    pub fn to_response(&self, id: u64, enqueued: Instant) -> Response {
+        Response {
+            id,
+            lengths: self.lengths.clone(),
+            predicted: self.predicted,
+            latency_us: enqueued.elapsed().as_micros() as u64,
+            batch: self.batch,
+        }
+    }
+}
+
+struct Slot {
+    key: u128,
+    value: Arc<CachedOutput>,
+    referenced: bool,
+}
+
+struct Shard {
+    /// key → index into `slots`.
+    map: HashMap<u128, usize>,
+    slots: Vec<Slot>,
+    /// Clock hand for second-chance eviction.
+    hand: usize,
+    capacity: usize,
+}
+
+impl Shard {
+    fn get(&mut self, key: u128) -> Option<Arc<CachedOutput>> {
+        let &idx = self.map.get(&key)?;
+        self.slots[idx].referenced = true;
+        Some(self.slots[idx].value.clone())
+    }
+
+    /// Insert or replace; returns the number of entries evicted (0 or 1).
+    fn insert(&mut self, key: u128, value: Arc<CachedOutput>) -> u64 {
+        if let Some(&idx) = self.map.get(&key) {
+            // Same key raced in twice (e.g. two leaders across a store
+            // re-check window): keep the newer value, evict nothing.
+            self.slots[idx].value = value;
+            self.slots[idx].referenced = true;
+            return 0;
+        }
+        if self.slots.len() < self.capacity {
+            self.map.insert(key, self.slots.len());
+            self.slots.push(Slot {
+                key,
+                value,
+                referenced: false,
+            });
+            return 0;
+        }
+        // Full: advance the clock hand, granting one second chance per
+        // referenced slot. Terminates within 2 laps (every bit cleared
+        // after lap one).
+        loop {
+            let idx = self.hand;
+            self.hand = (self.hand + 1) % self.slots.len();
+            if self.slots[idx].referenced {
+                self.slots[idx].referenced = false;
+                continue;
+            }
+            self.map.remove(&self.slots[idx].key);
+            self.map.insert(key, idx);
+            self.slots[idx] = Slot {
+                key,
+                value,
+                referenced: false,
+            };
+            return 1;
+        }
+    }
+}
+
+/// Sharded bounded store keyed by 128-bit content hashes.
+#[derive(Debug)]
+pub struct CacheStore {
+    shards: Vec<Mutex<Shard>>,
+    capacity: usize,
+}
+
+impl std::fmt::Debug for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Shard")
+            .field("len", &self.slots.len())
+            .field("capacity", &self.capacity)
+            .finish()
+    }
+}
+
+impl CacheStore {
+    /// `entries` total capacity spread over `shards` shards (both floored
+    /// at 1; remainder entries go to the first shards).
+    pub fn new(entries: usize, shards: usize) -> CacheStore {
+        let entries = entries.max(1);
+        let nshards = shards.clamp(1, entries);
+        let shards = (0..nshards)
+            .map(|i| {
+                let capacity = entries / nshards + usize::from(i < entries % nshards);
+                Mutex::new(Shard {
+                    map: HashMap::new(),
+                    slots: Vec::new(),
+                    hand: 0,
+                    capacity,
+                })
+            })
+            .collect();
+        CacheStore {
+            shards,
+            capacity: entries,
+        }
+    }
+
+    fn shard(&self, key: u128) -> std::sync::MutexGuard<'_, Shard> {
+        // High bits select the shard; HashMap consumes the full key, so
+        // the two levels don't correlate.
+        let idx = ((key >> 96) as usize) % self.shards.len();
+        self.shards[idx]
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn get(&self, key: u128) -> Option<Arc<CachedOutput>> {
+        self.shard(key).get(key)
+    }
+
+    /// Returns the number of entries evicted to make room (0 or 1).
+    pub fn insert(&self, key: u128, value: Arc<CachedOutput>) -> u64 {
+        self.shard(key).insert(key, value)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(PoisonError::into_inner).slots.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn out(tag: usize) -> Arc<CachedOutput> {
+        Arc::new(CachedOutput {
+            lengths: vec![tag as f32; 10],
+            predicted: tag % 10,
+            batch: 1,
+            fingerprint: 7,
+        })
+    }
+
+    #[test]
+    fn get_miss_then_insert_then_hit() {
+        let store = CacheStore::new(8, 2);
+        assert!(store.get(42).is_none());
+        assert_eq!(store.insert(42, out(1)), 0);
+        let hit = store.get(42).expect("hit after insert");
+        assert_eq!(hit.predicted, 1);
+        assert_eq!(store.len(), 1);
+        assert!(!store.is_empty());
+    }
+
+    #[test]
+    fn same_key_replaces_without_eviction() {
+        let store = CacheStore::new(2, 1);
+        store.insert(1, out(1));
+        assert_eq!(store.insert(1, out(2)), 0);
+        assert_eq!(store.get(1).unwrap().predicted, 2);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn capacity_bounds_len_and_counts_evictions() {
+        let store = CacheStore::new(4, 2);
+        let mut evicted = 0;
+        for k in 0..32u128 {
+            // Spread keys over both shards via the high bits.
+            evicted += store.insert((k << 96) | k, out(k as usize));
+        }
+        assert!(store.len() <= store.capacity());
+        assert_eq!(evicted as usize, 32 - store.len());
+    }
+
+    #[test]
+    fn clock_eviction_spares_recently_hit_entries() {
+        let store = CacheStore::new(2, 1);
+        store.insert(1, out(1));
+        store.insert(2, out(2));
+        // Touch key 1: its referenced bit must grant a second chance.
+        store.get(1).unwrap();
+        store.insert(3, out(3));
+        assert!(store.get(1).is_some(), "recently-hit entry was evicted");
+        assert!(store.get(3).is_some(), "new entry missing");
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn zero_entries_floors_to_one() {
+        let store = CacheStore::new(0, 8);
+        assert_eq!(store.capacity(), 1);
+        store.insert(1, out(1));
+        assert_eq!(store.insert(2, out(2)), 1);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_hammer_stays_bounded_and_consistent() {
+        // 4 threads × 500 mixed get/insert ops on a 16-entry store: no
+        // deadlock, len never exceeds capacity, and every value read
+        // back under a key is a value some thread inserted under it.
+        let store = Arc::new(CacheStore::new(16, 4));
+        std::thread::scope(|scope| {
+            for t in 0..4u128 {
+                let store = store.clone();
+                scope.spawn(move || {
+                    for i in 0..500u128 {
+                        let k = ((i % 24) << 96) | ((i % 24) ^ t);
+                        if i % 3 == 0 {
+                            store.insert(k, out((k & 0xff) as usize));
+                        } else if let Some(v) = store.get(k) {
+                            assert_eq!(v.predicted, ((k & 0xff) as usize) % 10);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(store.len() <= store.capacity());
+    }
+}

@@ -158,6 +158,19 @@ impl SparseConvLayer {
     pub fn index_bytes(&self) -> usize {
         self.index.index_bytes()
     }
+
+    /// Fold this layer's full deployed content — geometry, CSR survivor
+    /// index, packed weight and bias bits — into a deployment
+    /// fingerprint (see [`CompiledCapsNet::fingerprint`]).
+    fn absorb_fingerprint(&self, h: &mut crate::util::hash::Hash64) {
+        for d in [self.out_ch, self.in_ch, self.kh, self.kw, self.stride] {
+            h.absorb(d as u64);
+        }
+        h.absorb_u32s(&self.index.row_ptr);
+        h.absorb_u16s(&self.index.cols);
+        h.absorb_f32s(&self.data);
+        h.absorb_f32s(&self.bias);
+    }
 }
 
 /// Packing summary of a compiled model — the compression metadata the
@@ -234,6 +247,25 @@ impl CompiledCapsNet {
         }
     }
 
+    /// Content fingerprint over everything this executor computes with:
+    /// both packed layers (geometry, CSR survivor index, packed weight
+    /// and bias bits) and the dense `w_ij` bits. Re-pruning with a
+    /// different mask changes the survivor index and therefore the
+    /// fingerprint even when the underlying weight tensor is unchanged
+    /// — the property the cache's redeploy-invalidation rests on.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Hash64::new(0x6373_7221); // "csr!"
+        for layer in [&self.conv1, &self.pc] {
+            layer.absorb_fingerprint(&mut h);
+        }
+        h.absorb(self.w_ij.shape.len() as u64);
+        for &d in &self.w_ij.shape {
+            h.absorb(d as u64);
+        }
+        h.absorb_f32s(&self.w_ij.data);
+        h.finish()
+    }
+
     /// The sparse primary stage: Conv1 → ReLU → PrimaryCaps conv over
     /// surviving kernels only, then the shared squash regrouping — the
     /// same [`PrimaryStage`] the dense path produces, so the routing
@@ -308,6 +340,28 @@ mod tests {
             }
         }
         masks
+    }
+
+    #[test]
+    fn fingerprint_changes_with_masks_not_with_recompiles() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(77);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let m1 = NetworkMasks::lakp(&net.weights, &cfg, 12, 128);
+        let m2 = NetworkMasks::lakp(&net.weights, &cfg, 10, 100);
+        let a = CompiledCapsNet::compile(&net, &m1).unwrap();
+        let b = CompiledCapsNet::compile(&net, &m1).unwrap();
+        let c = CompiledCapsNet::compile(&net, &m2).unwrap();
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "same net + same masks must fingerprint identically"
+        );
+        assert_ne!(
+            a.fingerprint(),
+            c.fingerprint(),
+            "a re-prune (same weights, new masks) must re-key the deployment"
+        );
     }
 
     #[test]

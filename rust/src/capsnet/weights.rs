@@ -123,6 +123,29 @@ impl Weights {
         (w, worst)
     }
 
+    /// Content fingerprint over shapes and exact f32 bit patterns of
+    /// all five tensors (in `.fcw` save order). Feeds
+    /// [`crate::backend::BackendSpec::fingerprint`], so any weight
+    /// change — retrain, re-quantize, even a single flipped mantissa
+    /// bit — re-keys the inference cache.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Hash64::new(0x6663_7721); // "fcw!"
+        for t in [
+            &self.conv1_w,
+            &self.conv1_b,
+            &self.pc_w,
+            &self.pc_b,
+            &self.w_ij,
+        ] {
+            h.absorb(t.shape.len() as u64);
+            for &d in &t.shape {
+                h.absorb(d as u64);
+            }
+            h.absorb_f32s(&t.data);
+        }
+        h.finish()
+    }
+
     /// Serialize to the `.fcw` interchange format.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut buf: Vec<u8> = Vec::new();
@@ -227,6 +250,23 @@ pub fn parse_fcw(buf: &[u8]) -> Result<BTreeMap<String, Tensor>> {
 mod tests {
     use super::*;
     use crate::config::CapsNetConfig;
+
+    #[test]
+    fn fingerprint_tracks_weight_bits() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let w = Weights::random(&cfg, &mut rng);
+        assert_eq!(w.fingerprint(), w.clone().fingerprint(), "deterministic");
+        assert_ne!(
+            w.fingerprint(),
+            Weights::random(&cfg, &mut rng).fingerprint(),
+            "different draws must differ"
+        );
+        // A single flipped mantissa bit must re-key the deployment.
+        let mut bitflip = w.clone();
+        bitflip.pc_w.data[0] = f32::from_bits(bitflip.pc_w.data[0].to_bits() ^ 1);
+        assert_ne!(w.fingerprint(), bitflip.fingerprint());
+    }
 
     #[test]
     fn random_weights_validate() {

@@ -116,6 +116,23 @@ pub struct Metrics {
     pub wire_requests: u64,
     /// Typed error frames sent back over the wire.
     pub wire_errors: u64,
+    /// Requests answered straight from the inference cache (no backend
+    /// work, no queue admission). Cache hits still count in `requests`
+    /// and the latency histogram.
+    pub cache_hits: u64,
+    /// Requests that missed the cache and led an inference flight.
+    pub cache_misses: u64,
+    /// Requests coalesced onto an already-in-flight identical request
+    /// (single-flight): they wait for the leader's response instead of
+    /// enqueuing their own job.
+    pub cache_coalesced: u64,
+    /// Entries evicted from the cache store to make room.
+    pub cache_evicted: u64,
+    /// Cached entries found under a request's key with a *different*
+    /// deployment fingerprint. The fingerprint is hashed into the key,
+    /// so this is structurally impossible and must stay 0 — a nonzero
+    /// value means the key derivation broke.
+    pub cache_stale: u64,
     pub started: Instant,
     /// Wall time frozen by [`Metrics::snapshot`]; `None` while the
     /// metrics are live inside the server.
@@ -136,6 +153,11 @@ impl Default for Metrics {
             connections_closed: 0,
             wire_requests: 0,
             wire_errors: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_coalesced: 0,
+            cache_evicted: 0,
+            cache_stale: 0,
             started: Instant::now(),
             elapsed: None,
         }
@@ -176,6 +198,32 @@ impl Metrics {
         self.connections_closed += 1;
         self.wire_requests += wire_requests;
         self.wire_errors += wire_errors;
+    }
+
+    pub fn record_cache_hit(&mut self) {
+        self.cache_hits += 1;
+    }
+
+    pub fn record_cache_miss(&mut self) {
+        self.cache_misses += 1;
+    }
+
+    pub fn record_cache_coalesced(&mut self) {
+        self.cache_coalesced += 1;
+    }
+
+    pub fn record_cache_evicted(&mut self, n: u64) {
+        self.cache_evicted += n;
+    }
+
+    pub fn record_cache_stale(&mut self) {
+        self.cache_stale += 1;
+    }
+
+    /// True once any cache-layer event has been observed (used to keep
+    /// the summary line cache-free on uncached deployments).
+    pub fn cache_active(&self) -> bool {
+        self.cache_hits + self.cache_misses + self.cache_coalesced + self.cache_evicted > 0
     }
 
     /// A copy whose wall clock is frozen *now*: `throughput_rps` on the
@@ -232,6 +280,16 @@ impl Metrics {
                 self.connections_opened,
                 self.wire_requests,
                 self.wire_errors,
+            ));
+        }
+        if self.cache_active() {
+            s.push_str(&format!(
+                " cache(hits={} misses={} coalesced={} evicted={} stale={})",
+                self.cache_hits,
+                self.cache_misses,
+                self.cache_coalesced,
+                self.cache_evicted,
+                self.cache_stale,
             ));
         }
         if self.replicas_died > 0 {
@@ -366,6 +424,22 @@ mod tests {
         m.record_connection_closed(5, 1);
         let s = m.summary();
         assert!(s.contains("net(conns=1/2 wire_reqs=5 wire_errs=1)"), "{s}");
+    }
+
+    #[test]
+    fn cache_counters_in_summary_only_when_active() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("cache("));
+        m.record_cache_miss();
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_cache_coalesced();
+        m.record_cache_evicted(3);
+        let s = m.summary();
+        assert!(
+            s.contains("cache(hits=2 misses=1 coalesced=1 evicted=3 stale=0)"),
+            "{s}"
+        );
     }
 
     #[test]

@@ -15,6 +15,8 @@ use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::{Request, Response};
 use crate::backend::{BackendError, BackendSpec, InferRequest, InferenceBackend};
+use crate::cache::flight::{FlightLead, Waiter};
+use crate::cache::{CacheConfig, CacheStore, InferenceCache, Lookup};
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -22,7 +24,41 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-type Job = (Request, mpsc::Sender<Response>);
+type Job = (Request, Completion);
+
+/// Where a finished job's response goes: straight back to the one
+/// submitter, or through the single-flight lead — which also publishes
+/// the response to the cache and fans it out to coalesced waiters.
+///
+/// Dropping a `Flight` completion without delivering (admission
+/// rejection, failed batch, pool death, shutdown with a cleared queue)
+/// drops the [`FlightLead`], which aborts the flight: every parked
+/// waiter's channel disconnects and surfaces as the same typed
+/// `Unavailable` the leader gets.
+pub(crate) enum Completion {
+    Direct(mpsc::Sender<Response>),
+    Flight {
+        tx: mpsc::Sender<Response>,
+        lead: FlightLead,
+    },
+}
+
+impl Completion {
+    /// Deliver the response (metrics for the leader itself are recorded
+    /// by the caller; `complete` records each coalesced waiter's own
+    /// latency).
+    fn deliver(self, resp: Response, m: &mut Metrics) {
+        match self {
+            Completion::Direct(tx) => {
+                let _ = tx.send(resp); // receiver may have gone away; fine
+            }
+            Completion::Flight { tx, mut lead } => {
+                lead.complete(&resp, m);
+                let _ = tx.send(resp);
+            }
+        }
+    }
+}
 
 /// Builds one backend replica. Called once per replica, *on* the
 /// replica's own thread.
@@ -105,6 +141,8 @@ pub struct ServerBuilder {
     max_wait: Duration,
     max_queue_depth: usize,
     max_batch: Option<usize>,
+    cache: Option<CacheConfig>,
+    cache_store: Option<Arc<CacheStore>>,
 }
 
 impl ServerBuilder {
@@ -118,6 +156,8 @@ impl ServerBuilder {
             max_wait: Duration::from_millis(5),
             max_queue_depth: 1024,
             max_batch: None,
+            cache: None,
+            cache_store: None,
         }
     }
 
@@ -145,6 +185,23 @@ impl ServerBuilder {
     /// Batch policy: ignore backend buckets above this size.
     pub fn max_batch(mut self, n: usize) -> Self {
         self.max_batch = Some(n.max(1));
+        self
+    }
+
+    /// Enable the content-addressed inference cache (off by default).
+    /// The cache is keyed by the input bits *and* the backend's
+    /// deployment fingerprint, so it never serves responses across
+    /// model redeployments. `entries == 0` leaves it off.
+    pub fn cache(mut self, cfg: CacheConfig) -> Self {
+        self.cache = Some(cfg);
+        self
+    }
+
+    /// Enable the cache bound to an existing store: a redeploy keeps
+    /// the allocation, while the new deployment's fingerprint makes the
+    /// old entries unreachable. Takes precedence over [`Self::cache`].
+    pub fn cache_store(mut self, store: Arc<CacheStore>) -> Self {
+        self.cache_store = Some(store);
         self
     }
 
@@ -204,11 +261,23 @@ impl ServerBuilder {
             }
         }
 
+        // The cache binds to the *served* deployment's fingerprint, so
+        // it can only exist once the spec is known (init failure ⇒ no
+        // cache; nothing would ever fill it anyway).
+        let cache = match (&spec, self.cache_store, self.cache) {
+            (Some(s), Some(store), _) => Some(InferenceCache::with_store(store, s.fingerprint)),
+            (Some(s), None, Some(cfg)) if cfg.enabled() => {
+                Some(InferenceCache::new(&cfg, s.fingerprint))
+            }
+            _ => None,
+        };
+
         Server {
             shared,
             handles,
             spec,
             init_error,
+            cache,
             next_id: AtomicU64::new(1),
         }
     }
@@ -220,6 +289,7 @@ pub struct Server {
     handles: Vec<JoinHandle<Result<(), BackendError>>>,
     spec: Option<BackendSpec>,
     init_error: Option<BackendError>,
+    cache: Option<InferenceCache>,
     next_id: AtomicU64,
 }
 
@@ -255,14 +325,65 @@ impl Server {
         self.handles.len()
     }
 
+    /// The cache's backing store, when the cache layer is enabled —
+    /// hand it to the next deployment's [`ServerBuilder::cache_store`]
+    /// to keep the allocation across a redeploy.
+    pub fn cache_store(&self) -> Option<&Arc<CacheStore>> {
+        self.cache.as_ref().map(|c| c.store())
+    }
+
     /// Submit an image; returns the response channel, or a typed
     /// rejection when the server is down or the queue is at capacity.
+    ///
+    /// With the cache layer enabled, the request is resolved against
+    /// the cache *before* admission: a hit answers immediately without
+    /// touching the queue, a duplicate of an in-flight request parks on
+    /// that flight (single-flight coalescing), and only a genuine miss
+    /// pays queue admission and a backend pass.
     pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<Response>, BackendError> {
         let (rtx, rrx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             enqueued: Instant::now(),
+        };
+        let completion = match &self.cache {
+            None => Completion::Direct(rtx),
+            Some(cache) => {
+                let key = cache.key_of(&req.image);
+                // The flight parks a clone; `rtx` stays with this call
+                // for the hit / lead paths.
+                let parked = Waiter {
+                    id: req.id,
+                    enqueued: req.enqueued,
+                    tx: rtx.clone(),
+                };
+                match cache.lookup(key, parked) {
+                    Lookup::Hit(out) => {
+                        let resp = out.to_response(req.id, req.enqueued);
+                        {
+                            let mut m = self.shared.metrics.lock().unwrap();
+                            m.record_cache_hit();
+                            m.record(resp.latency_us);
+                        }
+                        let _ = rtx.send(resp);
+                        return Ok(rrx);
+                    }
+                    Lookup::Joined => {
+                        self.shared.metrics.lock().unwrap().record_cache_coalesced();
+                        return Ok(rrx);
+                    }
+                    Lookup::Lead { lead, stale } => {
+                        let mut m = self.shared.metrics.lock().unwrap();
+                        m.record_cache_miss();
+                        if stale {
+                            m.record_cache_stale();
+                        }
+                        drop(m);
+                        Completion::Flight { tx: rtx, lead }
+                    }
+                }
+            }
         };
         {
             let mut st = self.shared.state.lock().unwrap();
@@ -284,11 +405,14 @@ impl Server {
             if st.jobs.len() >= self.shared.max_depth {
                 drop(st);
                 self.shared.metrics.lock().unwrap().record_rejected();
+                // A rejected lead drops its `Completion::Flight`, which
+                // aborts the flight and disconnects any waiters that
+                // managed to coalesce onto it — nobody hangs.
                 return Err(BackendError::QueueFull {
                     depth: self.shared.max_depth,
                 });
             }
-            st.jobs.push_back((req, rtx));
+            st.jobs.push_back((req, completion));
         }
         self.shared.cv.notify_one();
         Ok(rrx)
@@ -525,16 +649,18 @@ fn run_and_reply(
         Ok(out) => {
             let mut m = metrics.lock().unwrap();
             m.record_batch(bucket, take);
-            for ((req, rtx), lens) in jobs.into_iter().zip(out.lengths) {
+            for ((req, done), lens) in jobs.into_iter().zip(out.lengths) {
                 let resp = Response::from_lengths(req.id, lens, req.enqueued, bucket);
                 m.record(resp.latency_us);
-                let _ = rtx.send(resp); // receiver may have gone away; fine
+                done.deliver(resp, &mut m);
             }
         }
         Err(e) => {
-            // Dropping the senders disconnects the per-request channels,
-            // so each caller observes a typed Unavailable error from
-            // `classify` — one bad batch does not kill the replica.
+            // Dropping the completions disconnects the per-request
+            // channels (and aborts any single-flight leads, dropping
+            // their coalesced waiters too), so each caller observes a
+            // typed Unavailable error from `classify` — one bad batch
+            // does not kill the replica.
             metrics.lock().unwrap().record_backend_errors(take as u64);
             eprintln!("[coordinator] backend error on batch of {take}: {e}");
         }
@@ -565,6 +691,7 @@ mod tests {
                     reports_timing: false,
                     max_replicas: None,
                     compression: None,
+                    fingerprint: 0,
                 },
                 delay,
                 calls,
@@ -738,6 +865,7 @@ mod tests {
                 reports_timing: false,
                 max_replicas: None,
                 compression: None,
+                fingerprint: 0,
             })) as Box<dyn InferenceBackend>)
         })
         .max_batch(2)
@@ -768,6 +896,7 @@ mod tests {
                 reports_timing: false,
                 max_replicas: None,
                 compression: None,
+                fingerprint: 0,
             })) as Box<dyn InferenceBackend>)
         })
         .max_wait(Duration::from_millis(1))
@@ -802,6 +931,7 @@ mod tests {
                     reports_timing: false,
                     max_replicas: None,
                     compression: None,
+                    fingerprint: 0,
                 },
                 calls: 0,
                 fail_on,
@@ -900,6 +1030,7 @@ mod tests {
                     reports_timing: false,
                     max_replicas: None,
                     compression: None,
+                    fingerprint: 0,
                 };
                 Ok(Box::new(PanicAndFlag(spec, died2.clone())) as Box<dyn InferenceBackend>)
             } else {
@@ -1008,6 +1139,7 @@ mod tests {
                 reports_timing: false,
                 max_replicas: Some(1),
                 compression: None,
+                fingerprint: 0,
             })) as Box<dyn InferenceBackend>)
         })
         .replicas(8)
@@ -1016,5 +1148,247 @@ mod tests {
         let _ = server.classify(Tensor::zeros(&[1, 4, 4])).unwrap();
         assert_eq!(built.load(Ordering::SeqCst), 1, "pool ignored max_replicas(1)");
         server.shutdown();
+    }
+
+    #[test]
+    fn cache_hit_skips_the_backend_and_is_bit_identical() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = toy_server(Duration::ZERO, calls.clone())
+            .max_wait(Duration::from_millis(1))
+            .cache(CacheConfig::with_entries(64))
+            .start();
+        let img = Tensor::full(&[1, 4, 4], 0.35);
+        let first = server.classify(img.clone()).unwrap();
+        let backend_calls = calls.load(Ordering::Relaxed);
+        let second = server.classify(img.clone()).unwrap();
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            backend_calls,
+            "a cache hit must not reach the backend"
+        );
+        assert_eq!(
+            first.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            second
+                .lengths
+                .iter()
+                .map(|x| x.to_bits())
+                .collect::<Vec<_>>(),
+            "cached response must be bit-identical"
+        );
+        assert_eq!(second.predicted, first.predicted);
+        assert_ne!(second.id, first.id, "hits keep their own request id");
+        // A different input misses and runs the backend again.
+        server.classify(Tensor::full(&[1, 4, 4], 0.65)).unwrap();
+        assert!(calls.load(Ordering::Relaxed) > backend_calls);
+        let m = server.shutdown();
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.cache_misses, 2);
+        assert_eq!(m.cache_stale, 0);
+        assert_eq!(m.requests, 3);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_coalesce_to_one_backend_call() {
+        // A slow backend, one replica, bucket 1: the first request
+        // opens a flight and holds the executor; the duplicates park on
+        // the flight. Exactly one backend call serves all of them.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = Arc::new(
+            Server::builder({
+                let calls = calls.clone();
+                move || {
+                    let mut b = ToyBackend::new(Duration::from_millis(100), calls.clone());
+                    b.spec.batch_buckets = vec![1];
+                    Ok(Box::new(b) as Box<dyn InferenceBackend>)
+                }
+            })
+            .max_wait(Duration::from_millis(1))
+            .cache(CacheConfig::with_entries(64))
+            .start(),
+        );
+        let img = Tensor::full(&[1, 4, 4], 0.35);
+        // Leader first, so the duplicates find its open flight.
+        let lead_rx = server.submit(img.clone()).unwrap();
+        let threads: Vec<_> = (0..7)
+            .map(|_| {
+                let server = server.clone();
+                let img = img.clone();
+                std::thread::spawn(move || server.classify(img).unwrap())
+            })
+            .collect();
+        let lead_resp = lead_rx.recv().unwrap();
+        for t in threads {
+            let r = t.join().unwrap();
+            assert_eq!(r.predicted, lead_resp.predicted);
+            assert_eq!(
+                r.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                lead_resp
+                    .lengths
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect::<Vec<_>>(),
+                "coalesced response must be bit-identical to the leader's"
+            );
+        }
+        let server = Arc::into_inner(server).expect("all clones joined");
+        let m = server.shutdown();
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.cache_misses, 1, "exactly one flight leader");
+        assert_eq!(
+            m.cache_hits + m.cache_coalesced,
+            7,
+            "every duplicate was served without its own backend pass"
+        );
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            1,
+            "8 identical requests must cost one inference"
+        );
+    }
+
+    #[test]
+    fn failed_leader_fans_typed_error_to_coalesced_waiters() {
+        // The backend fails every batch (typed error, replica survives).
+        // The leader AND every waiter coalesced onto its flight must
+        // observe the typed Unavailable — no waiter may hang on a flight
+        // whose inference never produced a response.
+        struct FailingBackend {
+            spec: BackendSpec,
+            gate: Arc<AtomicBool>,
+        }
+        impl InferenceBackend for FailingBackend {
+            fn spec(&self) -> &BackendSpec {
+                &self.spec
+            }
+            fn infer(&mut self, _req: &InferRequest) -> Result<InferOutput, BackendError> {
+                while !self.gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(BackendError::Unavailable("accelerator fault".into()))
+            }
+        }
+        let gate = Arc::new(AtomicBool::new(false));
+        let server = Arc::new(
+            Server::builder({
+                let gate = gate.clone();
+                move || {
+                    let mut spec = ToyBackend::new(Duration::ZERO, Arc::default()).spec;
+                    spec.batch_buckets = vec![1];
+                    Ok(Box::new(FailingBackend {
+                        spec,
+                        gate: gate.clone(),
+                    }) as Box<dyn InferenceBackend>)
+                }
+            })
+            .max_wait(Duration::from_millis(1))
+            .cache(CacheConfig::with_entries(64))
+            .start(),
+        );
+        let img = Tensor::full(&[1, 4, 4], 0.5);
+        let lead_rx = server.submit(img.clone()).unwrap();
+        let waiters: Vec<_> = (0..3)
+            .map(|_| {
+                let server = server.clone();
+                let img = img.clone();
+                std::thread::spawn(move || server.classify(img))
+            })
+            .collect();
+        // Let the duplicates coalesce before the leader's batch fails.
+        std::thread::sleep(Duration::from_millis(50));
+        gate.store(true, Ordering::SeqCst);
+        assert!(
+            matches!(
+                lead_rx.recv_timeout(Duration::from_secs(5)),
+                Err(mpsc::RecvTimeoutError::Disconnected)
+            ),
+            "leader must be drop-notified on batch failure"
+        );
+        for t in waiters {
+            match t.join().unwrap() {
+                Err(BackendError::Unavailable(_)) => {}
+                other => panic!("waiter must see typed Unavailable, got {other:?}"),
+            }
+        }
+        let server = Arc::into_inner(server).expect("all clones joined");
+        let m = server.shutdown();
+        assert!(m.backend_errors >= 1);
+        assert_eq!(m.cache_stale, 0);
+    }
+
+    #[test]
+    fn pool_death_drop_notifies_coalesced_waiters() {
+        // Single replica panics on its first batch: the leader's flight
+        // dies with the job queue, and every coalesced waiter must
+        // disconnect — the cached flavor of
+        // `dead_pool_drop_notifies_queued_waiters_and_rejects_new_work`.
+        let server = Arc::new(
+            Server::builder(|| Ok(DelayedPanicBackend::boxed(1)))
+                .max_wait(Duration::from_millis(30))
+                .cache(CacheConfig::with_entries(64))
+                .start(),
+        );
+        let img = Tensor::full(&[1, 4, 4], 0.25);
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            match server.submit(img.clone()) {
+                Ok(rx) => rxs.push(rx),
+                Err(BackendError::Unavailable(_)) => {} // died already
+                Err(other) => panic!("unexpected admission error {other:?}"),
+            }
+        }
+        for rx in rxs {
+            assert!(
+                matches!(
+                    rx.recv_timeout(Duration::from_secs(5)),
+                    Err(mpsc::RecvTimeoutError::Disconnected)
+                ),
+                "coalesced waiter was neither served nor drop-notified"
+            );
+        }
+        let server = Arc::into_inner(server).expect("sole owner");
+        server.shutdown();
+    }
+
+    #[test]
+    fn cache_accounting_stays_consistent_under_eviction_pressure() {
+        // A 4-entry cache hammered with 32 distinct inputs from 4
+        // threads: hits + misses + coalesced must equal requests, the
+        // store stays bounded, and stale sightings stay impossible.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let server = Arc::new(
+            toy_server(Duration::ZERO, calls)
+                .max_wait(Duration::from_millis(1))
+                .cache(CacheConfig {
+                    entries: 4,
+                    shards: 2,
+                })
+                .start(),
+        );
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let server = server.clone();
+                std::thread::spawn(move || {
+                    for i in 0..64u32 {
+                        let v = ((t * 64 + i) % 32) as f32 / 40.0;
+                        server.classify(Tensor::full(&[1, 4, 4], v)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let server = Arc::into_inner(server).expect("all clones joined");
+        let store_len = server.cache_store().expect("cache enabled").len();
+        assert!(store_len <= 4, "store exceeded capacity: {store_len}");
+        let m = server.shutdown();
+        assert_eq!(m.requests, 256);
+        assert_eq!(
+            m.cache_hits + m.cache_misses + m.cache_coalesced,
+            m.requests,
+            "every request must be exactly one of hit/miss/coalesced"
+        );
+        assert!(m.cache_evicted > 0, "32 keys through 4 entries must evict");
+        assert_eq!(m.cache_stale, 0);
     }
 }

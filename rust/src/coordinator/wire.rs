@@ -522,6 +522,123 @@ mod tests {
         ));
     }
 
+    /// A random well-formed server→client frame (all three types).
+    fn random_server_frame(r: &mut crate::util::rng::Rng) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match r.below(3) {
+            0 => {
+                let resp = Response {
+                    id: r.below(1000) as u64,
+                    lengths: (0..r.below(12)).map(|_| r.f32()).collect(),
+                    predicted: r.below(10),
+                    latency_us: r.below(100_000) as u64,
+                    batch: 1 + r.below(16),
+                };
+                write_response(&mut buf, &resp).unwrap();
+            }
+            1 => {
+                let msg = "x".repeat(r.below(40));
+                write_error(&mut buf, ErrorCode::Execution, &msg).unwrap();
+            }
+            _ => write_empty(&mut buf, FrameType::ShutdownAck).unwrap(),
+        }
+        buf
+    }
+
+    #[test]
+    fn truncated_prefixes_fault_typed_never_panic_property() {
+        // Every strict prefix of a well-formed frame must decode to the
+        // typed boundary faults (clean close at byte 0, truncation
+        // anywhere else) — never a panic, hang, or out-of-bounds read —
+        // while the untruncated frame still decodes fine.
+        crate::testing::check(
+            "strict frame prefixes fault as Closed/Truncated",
+            40,
+            29,
+            random_server_frame,
+            |buf| {
+                (0..buf.len()).all(|cut| {
+                    matches!(
+                        read_server_frame(&mut &buf[..cut]),
+                        Err(Fault::Closed | Fault::Truncated)
+                    )
+                }) && read_server_frame(&mut buf.as_slice()).is_ok()
+            },
+        );
+    }
+
+    #[test]
+    fn single_bit_flips_decode_typed_or_ok_never_panic_property() {
+        // One flipped bit anywhere in a well-formed frame: the decoder
+        // must terminate with Ok or a typed Fault. Ok is legitimate —
+        // e.g. a flip inside an f32 length word yields a different but
+        // well-formed response — the property pinned here is that no
+        // corruption panics the decoder or drives a wild allocation.
+        crate::testing::check(
+            "bit-flipped frames decode without panicking",
+            80,
+            31,
+            |r| {
+                let mut buf = random_server_frame(r);
+                let bit = r.below(buf.len() * 8);
+                buf[bit / 8] ^= 1 << (bit % 8);
+                (buf, bit)
+            },
+            |(buf, _bit)| {
+                let _ = read_server_frame(&mut buf.as_slice());
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn corrupted_classify_frames_fault_typed_property() {
+        // Client→server direction: truncations and bit flips of a
+        // classify frame must surface as typed faults (or decode to
+        // some f32 image), never panic the header/payload readers.
+        crate::testing::check(
+            "classify frame corruption is typed",
+            40,
+            37,
+            |r| {
+                let image: Vec<f32> = (0..(1 + r.below(64))).map(|_| r.f32()).collect();
+                let mut buf = Vec::new();
+                write_classify(&mut buf, &image).unwrap();
+                let bit = r.below(buf.len() * 8);
+                let cut = r.below(buf.len());
+                (buf, bit, cut)
+            },
+            |(buf, bit, cut)| {
+                // Truncated prefix: typed boundary fault.
+                let prefix_ok = {
+                    let mut s = &buf[..*cut];
+                    match read_header(&mut s) {
+                        Err(Fault::Closed | Fault::Truncated) => true,
+                        Ok((_, len)) => matches!(
+                            read_payload(&mut s, len),
+                            Ok(_) | Err(Fault::Truncated)
+                        ),
+                        Err(_) => false,
+                    }
+                };
+                // Bit flip: typed fault or a decodable (different) frame.
+                let mut flipped = buf.clone();
+                flipped[bit / 8] ^= 1 << (bit % 8);
+                let mut s = flipped.as_slice();
+                let flip_ok = match read_header(&mut s) {
+                    Ok((_, len)) => match read_payload(&mut s, len) {
+                        Ok(p) => decode_classify(&p).is_ok() || p.len() % 4 != 0,
+                        Err(Fault::Truncated) => true,
+                        Err(_) => false,
+                    },
+                    Err(Fault::Closed) => false, // header bytes exist
+                    Err(_) => true, // BadMagic/BadVersion/UnknownType/Oversized
+                };
+                prefix_ok && flip_ok
+            },
+        );
+    }
+
     #[test]
     fn error_message_truncated_to_bound() {
         let long = "x".repeat(5000);

@@ -72,6 +72,21 @@ fn pick_frac(max_abs: f32) -> u32 {
 }
 
 impl ConvModule {
+    /// Fold this module's deployed content — geometry, CSR survivor
+    /// index, quantized weight/bias raw bits, weight format — into a
+    /// deployment fingerprint (see `DeployedModel::fingerprint`).
+    pub(crate) fn absorb_fingerprint(&self, h: &mut crate::util::hash::Hash64) {
+        for d in [self.out_ch, self.in_ch, self.k, self.stride] {
+            h.absorb(d as u64);
+        }
+        h.absorb(self.frac_w as u64);
+        h.absorb(u64::from(self.relu));
+        h.absorb_u32s(&self.rows.row_ptr);
+        h.absorb_u16s(&self.rows.cols);
+        h.absorb_i16s(&self.weights);
+        h.absorb_i16s(&self.bias);
+    }
+
     pub fn new(
         weights: &Tensor,
         bias: &Tensor,

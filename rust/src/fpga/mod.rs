@@ -213,6 +213,25 @@ impl DeployedModel {
             .expect("timing stub is always consistent")
     }
 
+    /// Content fingerprint over the *quantized* deployed state: both
+    /// conv modules (geometry, CSR survivor index, raw i16 weight/bias
+    /// bits, weight formats) and the Q4.12 DigitCaps transform. A new
+    /// prune plan changes the survivor index, a requantization changes
+    /// the raw bits — either way the inference cache re-keys. Hashing
+    /// the quantized bits (not the f32 source) matters: two f32 weight
+    /// sets that quantize identically compute identically here.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Hash64::new(0x6670_6761); // "fpga"
+        h.absorb_str(&self.config.model.name);
+        self.conv1.absorb_fingerprint(&mut h);
+        self.pc.absorb_fingerprint(&mut h);
+        h.absorb(self.w_ij.len() as u64);
+        for q in &self.w_ij {
+            h.absorb(q.raw() as u16 as u64);
+        }
+        h.finish()
+    }
+
     fn pe(&self) -> PeArray {
         PeArray::new(&self.config.options)
     }
@@ -639,6 +658,25 @@ pub fn synthetic_masks(
 mod tests {
     use super::*;
     use crate::config::SystemConfig;
+
+    #[test]
+    fn deployment_fingerprint_tracks_survivor_masks() {
+        // Zero weights, plan-accurate masks: the only seed-dependent
+        // content is the survivor index, so this pins that a re-prune
+        // alone (same weight bits) re-keys the deployment.
+        let cfg = SystemConfig::masked("mnist");
+        let a = DeployedModel::timing_stub(&cfg, 7);
+        assert_eq!(
+            a.fingerprint(),
+            DeployedModel::timing_stub(&cfg, 7).fingerprint(),
+            "same config + seed must fingerprint identically"
+        );
+        assert_ne!(
+            a.fingerprint(),
+            DeployedModel::timing_stub(&cfg, 8).fingerprint(),
+            "different masks must fingerprint differently"
+        );
+    }
 
     #[test]
     fn synthetic_masks_match_plan() {

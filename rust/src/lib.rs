@@ -34,6 +34,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod backend;
+pub mod cache;
 pub mod capsnet;
 pub mod config;
 pub mod coordinator;

@@ -9,16 +9,21 @@
 //!                   [--requests N] [--clients K] [--artifacts DIR]
 //!                   [--listen ADDR]   # TCP front-end; drains on a wire
 //!                                     # Shutdown frame (bench-net --stop)
+//!                   [--cache-entries N]  # content-addressed response cache
+//!                                        # (default 4096 with --listen, else 0)
 //! fastcaps bench-net --addr ADDR [--clients K] [--requests N]
 //!                   [--window W] [--dataset mnist|fmnist] [--stop]
+//!                   [--dup-rate P] [--dup-pool N]  # P of traffic drawn from a
+//!                                                  # shared N-frame hot pool
 //! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
 //!                   [--sparsity S] [--compile] [--serve]
 //!                   [--backend oracle-sparse|sim-sparse] [--replicas N]
-//!                   [--requests N] [--clients K]
+//!                   [--requests N] [--clients K] [--cache-entries N]
 //! fastcaps selftest
 //! ```
 
 use fastcaps::backend::{BackendConfig, BackendRegistry};
+use fastcaps::cache::CacheConfig;
 use fastcaps::config::SystemConfig;
 use fastcaps::coordinator::net::NetServer;
 use fastcaps::coordinator::server::Server;
@@ -68,11 +73,17 @@ fn print_help() {
          \x20                --replicas N scales the executor pool;\n\
          \x20                --listen ADDR serves the wire protocol over TCP\n\
          \x20                instead of driving in-process traffic (drains\n\
-         \x20                gracefully on a wire Shutdown frame)\n\
+         \x20                gracefully on a wire Shutdown frame);\n\
+         \x20                --cache-entries N bounds the content-addressed\n\
+         \x20                response cache (default 4096 with --listen,\n\
+         \x20                0 = off otherwise)\n\
          \x20 bench-net      drive a listening server over TCP:\n\
          \x20                --addr HOST:PORT [--clients K] [--requests N]\n\
          \x20                [--window W pipelined depth] [--stop: ask the\n\
          \x20                server to drain and exit after the run]\n\
+         \x20                [--dup-rate P: fraction of requests drawn from\n\
+         \x20                a shared hot pool of --dup-pool N frames —\n\
+         \x20                exercises the server-side inference cache]\n\
          \x20 prune          LAKP/KP-prune weights, print compression;\n\
          \x20                --compile packs survivors into the sparse\n\
          \x20                execution path (CSR / Index-Control layout),\n\
@@ -215,12 +226,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         weights: None,
         seed: args.get_u64("seed", 7),
     };
+    // Content-addressed cache: on by default for the TCP path (real
+    // wire traffic repeats — retries, duplicated sensors, hot classes),
+    // opt-in for the in-process workload (its generated frames are all
+    // distinct, so a cache would only add lookups). --cache-entries 0
+    // disables it explicitly.
+    let cache_entries = args.get_usize(
+        "cache-entries",
+        if args.get("listen").is_some() { 4096 } else { 0 },
+    );
     let registry = Arc::new(BackendRegistry::with_defaults());
     let kind = backend_kind.clone();
     let server = Server::builder(move || registry.build(&kind, &bcfg))
         .replicas(args.get_usize("replicas", 1))
         .max_wait(max_wait)
         .max_queue_depth(args.get_usize("max-queue", 1024))
+        .cache(CacheConfig::with_entries(cache_entries))
         .start();
     if let Some(e) = server.init_error() {
         anyhow::bail!("starting backend '{backend_kind}': {e}");
@@ -252,6 +273,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             c.total_kernels,
             c.pruned_pct(),
             c.index_bytes,
+        );
+    }
+    if cache_entries > 0 {
+        println!(
+            "inference cache: {cache_entries} entries, keyed on input bits + \
+             deployment fingerprint {:016x}",
+            spec.fingerprint,
         );
     }
     if let Some(listen) = args.get("listen") {
@@ -322,21 +350,39 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
     let window = args.get_usize("window", 16).max(1);
     let task = Task::parse(args.get_or("dataset", "mnist"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset (expected mnist|fmnist)"))?;
+    // Duplicate traffic: with probability --dup-rate each request is
+    // drawn from a --dup-pool-sized hot set shared by ALL clients (fixed
+    // seed), instead of the client's own unique frames — the workload
+    // that exercises the server's content-addressed cache and
+    // single-flight coalescing across connections.
+    let dup_rate = args.get_f64("dup-rate", 0.0).clamp(0.0, 1.0);
+    let dup_pool_size = args.get_usize("dup-pool", 8).max(1);
+    let dup_pool = (dup_rate > 0.0).then(|| fastcaps::data::generate(task, dup_pool_size, 9999));
 
     let metrics = Mutex::new(Metrics::default());
     let rejected = AtomicU64::new(0);
     let t0 = Instant::now();
     if n_requests > 0 {
-        println!(
-            "bench-net: {n_requests} requests from {n_clients} pipelined clients \
-             (window {window}) against {addr}"
-        );
+        if dup_rate > 0.0 {
+            println!(
+                "bench-net: {n_requests} requests from {n_clients} pipelined clients \
+                 (window {window}, {:.0}% duplicates from a {dup_pool_size}-frame hot \
+                 pool) against {addr}",
+                dup_rate * 100.0,
+            );
+        } else {
+            println!(
+                "bench-net: {n_requests} requests from {n_clients} pipelined clients \
+                 (window {window}) against {addr}"
+            );
+        }
         std::thread::scope(|scope| -> Result<()> {
             let mut workers = Vec::new();
             for c in 0..n_clients {
                 let addr = addr.as_str();
                 let metrics = &metrics;
                 let rejected = &rejected;
+                let dup_pool = dup_pool.as_ref();
                 let share = n_requests / n_clients + usize::from(c < n_requests % n_clients);
                 workers.push(scope.spawn(move || -> Result<()> {
                     let mut client = NetClient::connect(addr)
@@ -347,11 +393,18 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
                         .set_read_timeout(Some(Duration::from_secs(30)))
                         .map_err(|e| anyhow::anyhow!("{e}"))?;
                     let data = fastcaps::data::generate(task, share, c as u64);
+                    let mut rng = fastcaps::util::rng::Rng::new(0xBE7 + c as u64);
                     // In-order pipelining: responses come back in request
                     // order, so a FIFO of send times prices each response.
                     let mut sent: VecDeque<Instant> = VecDeque::with_capacity(window);
                     let mut local = Metrics::default();
                     for img in &data.images {
+                        let img = match dup_pool {
+                            Some(pool) if rng.f64() < dup_rate => {
+                                &pool.images[rng.below(pool.images.len())]
+                            }
+                            _ => img,
+                        };
                         if sent.len() == window {
                             drain_one(&mut client, &mut sent, &mut local, rejected)?;
                         }
@@ -555,6 +608,11 @@ fn cmd_prune(args: &Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 2);
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
     let max_queue = args.get_usize("max-queue", 1024);
+    // Opt-in cache, like in-process `serve`. Each prune→compile→serve
+    // deployment carries its own weight/mask fingerprint, so re-pruning
+    // at different survivor counts changes every cache key — a fresh
+    // deployment can never serve the previous one's responses.
+    let cache = CacheConfig::with_entries(args.get_usize("cache-entries", 0));
     let server = match backend_kind.as_str() {
         "sim-sparse" => {
             let sys = SystemConfig::masked_with_counts(
@@ -578,6 +636,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
             .replicas(replicas)
             .max_wait(max_wait)
             .max_queue_depth(max_queue)
+            .cache(cache)
             .start()
         }
         "oracle-sparse" => Server::builder(move || {
@@ -587,6 +646,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
         .replicas(replicas)
         .max_wait(max_wait)
         .max_queue_depth(max_queue)
+        .cache(cache)
         .start(),
         other => anyhow::bail!(
             "prune --serve runs the pruned model: \

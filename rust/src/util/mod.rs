@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod rng;
 

@@ -1,0 +1,123 @@
+//! Redeploy isolation for the content-addressed inference cache.
+//!
+//! The prune→compile→serve story: a model is pruned, compiled, served;
+//! then re-pruned at different survivor counts and served again —
+//! *reusing the same cache store* (the allocation survives the
+//! redeploy, `Server::cache_store` → `ServerBuilder::cache_store`).
+//! Because every cache key digests the deployment fingerprint (backend
+//! kind + model name + deployed weight/mask bits), the second
+//! deployment must never see the first one's responses: zero stale
+//! hits, by construction rather than by invalidation.
+
+use fastcaps::backend::{InferenceBackend, SparseOracleBackend};
+use fastcaps::cache::{CacheConfig, CacheStore};
+use fastcaps::capsnet::compiled::CompiledCapsNet;
+use fastcaps::capsnet::CapsNet;
+use fastcaps::config::CapsNetConfig;
+use fastcaps::coordinator::server::Server;
+use fastcaps::pruning::NetworkMasks;
+use fastcaps::tensor::Tensor;
+use fastcaps::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serve the tiny architecture pruned at the given survivor counts.
+fn deploy(keep_conv1: usize, keep_pc: usize, store: Arc<CacheStore>) -> Server {
+    let cfg = CapsNetConfig::tiny();
+    let mut rng = Rng::new(11);
+    let net = CapsNet::random(cfg.clone(), &mut rng);
+    let masks = NetworkMasks::lakp(&net.weights, &cfg, keep_conv1, keep_pc);
+    let compiled = CompiledCapsNet::compile(&net, &masks).expect("compile");
+    Server::builder(move || {
+        Ok(Box::new(SparseOracleBackend::new(compiled.clone())) as Box<dyn InferenceBackend>)
+    })
+    .max_wait(Duration::from_millis(1))
+    .cache_store(store)
+    .start()
+}
+
+fn image(cfg: &CapsNetConfig, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let (c, h, w) = cfg.input;
+    let mut t = Tensor::zeros(&[c, h, w]);
+    for x in t.data.iter_mut() {
+        *x = rng.f32();
+    }
+    t
+}
+
+#[test]
+fn redeploy_with_changed_masks_never_serves_stale_hits() {
+    let cfg = CapsNetConfig::tiny();
+    let store = Arc::new(CacheStore::new(
+        CacheConfig::default().entries,
+        CacheConfig::default().shards,
+    ));
+    let frames: Vec<Tensor> = (0..4).map(|i| image(&cfg, 100 + i)).collect();
+
+    // Deployment v1: fill the cache, then prove it hits.
+    let v1 = deploy(12, 128, store.clone());
+    let fp1 = v1.spec().expect("v1 init").fingerprint;
+    let first: Vec<_> = frames
+        .iter()
+        .map(|f| v1.classify(f.clone()).expect("v1 classify"))
+        .collect();
+    for (f, want) in frames.iter().zip(&first) {
+        let again = v1.classify(f.clone()).expect("v1 re-classify");
+        assert_eq!(
+            again.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "v1 cache hit must be bit-identical"
+        );
+    }
+    let m1 = v1.shutdown();
+    assert_eq!(m1.cache_hits, 4, "second pass must be all hits");
+    assert_eq!(m1.cache_misses, 4);
+    assert_eq!(m1.cache_stale, 0);
+    assert!(!store.is_empty(), "v1 left its responses in the store");
+
+    // Deployment v2: same weights, different survivor masks, SAME
+    // store. Different masks ⇒ different fingerprint ⇒ different keys:
+    // every request misses and runs v2's own (different) model.
+    let v2 = deploy(10, 100, store.clone());
+    let fp2 = v2.spec().expect("v2 init").fingerprint;
+    assert_ne!(fp1, fp2, "changed masks must change the fingerprint");
+    let second: Vec<_> = frames
+        .iter()
+        .map(|f| v2.classify(f.clone()).expect("v2 classify"))
+        .collect();
+    assert!(
+        first
+            .iter()
+            .zip(&second)
+            .any(|(a, b)| a.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                != b.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>()),
+        "different survivor masks should change at least one response \
+         (otherwise a stale hit would be unobservable)"
+    );
+    let m2 = v2.shutdown();
+    assert_eq!(
+        m2.cache_hits, 0,
+        "v2 served a response cached by v1 — stale hit across a redeploy"
+    );
+    assert_eq!(m2.cache_misses, 4);
+    assert_eq!(m2.cache_stale, 0, "fingerprint is in the key; stale is impossible");
+
+    // Deployment v3 = v1's masks again: identical weights + masks
+    // rebuild the identical fingerprint, so v1's entries (still in the
+    // shared store) hit again — and bit-identically.
+    let v3 = deploy(12, 128, store.clone());
+    assert_eq!(v3.spec().expect("v3 init").fingerprint, fp1);
+    for (f, want) in frames.iter().zip(&first) {
+        let got = v3.classify(f.clone()).expect("v3 classify");
+        assert_eq!(
+            got.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "identical redeploy must reuse v1's cached responses"
+        );
+    }
+    let m3 = v3.shutdown();
+    assert_eq!(m3.cache_hits, 4, "identical redeploy must hit v1's entries");
+    assert_eq!(m3.cache_misses, 0);
+    assert_eq!(m3.cache_stale, 0);
+}

@@ -25,6 +25,7 @@ fn toy_spec(buckets: Vec<usize>) -> BackendSpec {
         reports_timing: false,
         max_replicas: None,
         compression: None,
+        fingerprint: 0,
     }
 }
 

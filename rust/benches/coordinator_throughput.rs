@@ -26,6 +26,9 @@ fn spec(kind: &str) -> BackendSpec {
         max_replicas: None,
         compression: None,
         fingerprint: 0,
+        routing: String::new(),
+        workers: 1,
+        coupling_fingerprint: None,
     }
 }
 
@@ -266,6 +269,55 @@ fn main() {
         );
     } else {
         println!("(single-core host: skipping the pool-scaling assertion)");
+    }
+
+    b.section("intra-replica batch sharding (fp32 oracle forward, batch 16)");
+    // The multi-core data-reuse path: one replica shards a 16-frame
+    // batch over scoped worker threads. Frames are independent, so the
+    // sharded outputs are bit-identical to the serial ones (asserted
+    // here and property-tested in capsnet/fpga); the gate is the
+    // speedup — ≥3x at 4 workers when the host has the cores.
+    {
+        use fastcaps::capsnet::{weights::Weights, CapsNet};
+        use fastcaps::config::CapsNetConfig;
+        use fastcaps::routing::RoutingMode;
+        let arch = CapsNetConfig::paper_pruned_mnist();
+        let mode = RoutingMode::Iterative(arch.routing_iters);
+        let net = CapsNet {
+            weights: Weights::random(&arch, &mut fastcaps::util::rng::Rng::new(7)),
+            config: arch,
+        };
+        let images = generate(Task::Digits, 16, 77).images;
+        let serial = net.forward_batch_sharded(&images, mode, None, 1).unwrap();
+        let sharded = net.forward_batch_sharded(&images, mode, None, 4).unwrap();
+        for (a, s) in serial.iter().zip(&sharded) {
+            assert_eq!(
+                a.class_lengths(),
+                s.class_lengths(),
+                "sharded batch diverged from the serial reference"
+            );
+        }
+        let serial_ns = b
+            .bench("forward_batch_sharded workers=1", || {
+                net.forward_batch_sharded(&images, mode, None, 1).unwrap().len()
+            })
+            .mean_ns;
+        let sharded_ns = b
+            .bench("forward_batch_sharded workers=4", || {
+                net.forward_batch_sharded(&images, mode, None, 4).unwrap().len()
+            })
+            .mean_ns;
+        let speedup = serial_ns / sharded_ns;
+        report_model("sharding speedup 4 vs 1 workers", speedup, "x");
+        if cores >= 4 {
+            assert!(
+                speedup >= 3.0,
+                "batch sharding below the 3x gate at 4 workers on a \
+                 {cores}-core host: {speedup:.2}x"
+            );
+        } else {
+            println!("({cores}-core host: skipping the 3x sharding assertion)");
+        }
     }
 
     b.section("batch-native sim path vs the per-frame reference loop (bucket 8)");

@@ -7,7 +7,9 @@ use fastcaps::fixed::latency::Op;
 use fastcaps::fixed::Q12;
 use fastcaps::fpga::pe::PeArray;
 use fastcaps::fpga::routing_module::{routing_timing, RoutingGeometry, RoutingHardware};
-use fastcaps::routing::fixed::{dynamic_routing_q12, PredictionsQ12, SoftmaxMode};
+use fastcaps::routing::fixed::{
+    accumulated_routing_q12, dynamic_routing_q12, quantize_coupling, PredictionsQ12, SoftmaxMode,
+};
 use fastcaps::routing::Predictions;
 use fastcaps::util::bench::{report_model, Bencher};
 use fastcaps::util::rng::Rng;
@@ -52,4 +54,48 @@ fn main() {
         }
         acc
     });
+
+    b.section("accumulated-coefficients fast path (zero routing iterations)");
+    // Host cost: one weighted sum + squash vs the 3-iteration schedule.
+    let coupling = quantize_coupling(&vec![0.1f32; 252 * 10]);
+    b.bench("accumulated_routing_q12 (baked coefficients)", || {
+        accumulated_routing_q12(&pred, &coupling).counts
+    });
+    // Modeled cycles: the whole routing module degenerates to the
+    // zero-iteration schedule.
+    let mut g0 = g;
+    g0.iterations = 0;
+    let acc_t = routing_timing(&g0, &RoutingHardware::optimized(), &pe);
+    report_model("total accumulated (0 iters)", acc_t.total() as f64, "cycles");
+
+    // Regression gate: an Accumulated deployment and one pinned to
+    // Iterative(0) must price identically — same routing cycles, same
+    // frame cycles, same DDR bytes — and both must undercut the default
+    // iterative schedule.
+    use fastcaps::config::SystemConfig;
+    use fastcaps::fpga::DeployedModel;
+    use fastcaps::routing::RoutingMode;
+    let sys = SystemConfig::proposed("mnist");
+    let n = sys.sparsity.num_primary_caps(&sys.model) * sys.model.num_classes;
+    let mut acc_m = DeployedModel::timing_stub(&sys, 7);
+    acc_m
+        .bake_accumulated(&vec![1.0 / sys.model.num_classes as f32; n])
+        .unwrap();
+    let mut zero_m = DeployedModel::timing_stub(&sys, 7);
+    zero_m.set_routing_mode(RoutingMode::Iterative(0)).unwrap();
+    let default_m = DeployedModel::timing_stub(&sys, 7);
+    assert_eq!(
+        acc_m.ddr_bytes(),
+        zero_m.ddr_bytes(),
+        "accumulated DDR pricing must equal iterative(0)"
+    );
+    assert_eq!(
+        acc_m.estimate_frame().total_cycles(),
+        zero_m.estimate_frame().total_cycles(),
+        "accumulated frame cycles must equal iterative(0)"
+    );
+    assert!(
+        acc_m.estimate_frame().total_cycles() < default_m.estimate_frame().total_cycles(),
+        "accumulated mode must undercut the default iterative schedule"
+    );
 }

@@ -112,4 +112,64 @@ fn main() {
             > dense_f.estimate_batch(8).steady_state_fps(),
         "f-mnist sparse sim must dominate the dense sim"
     );
+
+    b.section("routing fast path: accumulated coefficients vs iterative(3)");
+    // Modeled serving: the accumulated deployment drops the whole routing
+    // stage AND the per-iteration û DDR replay, so the sim-sparse
+    // steady-state FPS must at least double (ISSUE 7 acceptance gate).
+    let calib = generate(Task::Digits, 32, 0xacc0).images;
+    let mut acc_sim =
+        DeployedModel::new(SystemConfig::masked("mnist"), &w, &masks.conv1, &masks.pc).unwrap();
+    let coupling_q = acc_sim.accumulate_coupling(&calib).unwrap();
+    acc_sim.bake_accumulated(&coupling_q).unwrap();
+    let iter_fps = sparse_sim.estimate_batch(16).steady_state_fps();
+    let acc_fps = acc_sim.estimate_batch(16).steady_state_fps();
+    report_model("sim-sparse iterative(3) steady-state", iter_fps, "FPS");
+    report_model("sim-sparse accumulated steady-state", acc_fps, "FPS");
+    assert!(
+        acc_fps >= 2.0 * iter_fps,
+        "accumulated routing must at least double modeled sim-sparse FPS: \
+         {acc_fps:.1} vs {iter_fps:.1}"
+    );
+
+    // Oracle accuracy: the accumulated fast path must track the iterative
+    // reference within 1 percentage point absolute on both datasets
+    // (disjoint calibration / eval seeds).
+    use fastcaps::routing::RoutingMode;
+    for (ds, task, arch) in [
+        ("mnist", Task::Digits, CapsNetConfig::paper_pruned_mnist()),
+        ("fmnist", Task::Garments, CapsNetConfig::paper_pruned_fmnist()),
+    ] {
+        let weights = Weights::random(&arch, &mut Rng::new(7));
+        let net = CapsNet {
+            config: arch,
+            weights,
+        };
+        let coupling = net
+            .accumulate_coupling(&generate(task, 32, 0xacc0).images)
+            .unwrap();
+        let eval = generate(task, 256, 0xe7a1);
+        let (mut hit_iter, mut hit_acc) = (0usize, 0usize);
+        for (img, &label) in eval.images.iter().zip(&eval.labels) {
+            hit_iter += usize::from(net.forward(img).unwrap().predicted_class() == label);
+            hit_acc += usize::from(
+                net.forward_mode(img, RoutingMode::Accumulated, Some(&coupling))
+                    .unwrap()
+                    .predicted_class()
+                    == label,
+            );
+        }
+        let n = eval.images.len() as f64;
+        let (acc_i, acc_a) = (100.0 * hit_iter as f64 / n, 100.0 * hit_acc as f64 / n);
+        report_model(
+            &format!("{ds} accuracy delta (accumulated − iterative)"),
+            acc_a - acc_i,
+            "pp",
+        );
+        assert!(
+            (acc_i - acc_a).abs() <= 1.0,
+            "accumulated routing drifted >1pp from iterative on {ds}: \
+             {acc_i:.2}% vs {acc_a:.2}%"
+        );
+    }
 }

@@ -163,6 +163,21 @@ pub struct BackendSpec {
     /// means "no fingerprint" and disables cache reuse guarantees
     /// (test-only backends that don't care may leave it 0).
     pub fingerprint: u64,
+    /// Active routing schedule in display form (`"iterative(3)"` /
+    /// `"accumulated"`) for banners and metrics. The *content* of the
+    /// mode (including baked coefficients) is folded into
+    /// [`BackendSpec::fingerprint`] by the executor's own content hash.
+    pub routing: String,
+    /// Worker threads each replica shards a batch over. Display /
+    /// scheduling metadata only — never part of the fingerprint, because
+    /// sharding is bit-identical by construction
+    /// ([`crate::util::parallel`]).
+    pub workers: usize,
+    /// Content hash of the baked accumulated-coupling matrix when the
+    /// backend serves in accumulated mode (`None` for iterative): the
+    /// banner surfaces it so operators can confirm which calibration
+    /// artifact a replica is actually serving.
+    pub coupling_fingerprint: Option<u64>,
 }
 
 impl BackendSpec {
@@ -200,6 +215,17 @@ impl BackendSpec {
     /// duplicated per call site.
     pub fn input_wire_bytes(&self) -> usize {
         self.input_elems() * std::mem::size_of::<f32>()
+    }
+
+    /// One-line routing/worker summary for the serve banner and metrics:
+    /// `routing=accumulated workers=4 coupling=0x…` (the coupling hash
+    /// only appears in accumulated mode).
+    pub fn routing_summary(&self) -> String {
+        let mut s = format!("routing={} workers={}", self.routing, self.workers);
+        if let Some(fp) = self.coupling_fingerprint {
+            s.push_str(&format!(" coupling={fp:#018x}"));
+        }
+        s
     }
 
     /// Canonical bucket ladder for host-synchronous backends: powers of
@@ -270,6 +296,14 @@ pub struct BackendConfig {
     pub weights: Option<PathBuf>,
     /// Seed for synthetic weights where no trained weights exist.
     pub seed: u64,
+    /// Routing-schedule override for executors that route (`oracle`,
+    /// `oracle-sparse`, `sim`, `sim-sparse`). `None` = the model
+    /// config's iterative schedule (the pre-existing behavior);
+    /// `Some(Accumulated)` makes the factory load sidecar coefficients
+    /// or self-calibrate at construction.
+    pub routing: Option<crate::routing::RoutingMode>,
+    /// Worker threads each replica shards a batch over (≤ 1 = serial).
+    pub workers: usize,
 }
 
 impl Default for BackendConfig {
@@ -281,6 +315,8 @@ impl Default for BackendConfig {
             artifacts: PathBuf::from("artifacts"),
             weights: None,
             seed: 7,
+            routing: None,
+            workers: 1,
         }
     }
 }
@@ -324,6 +360,18 @@ impl BackendConfig {
         }
     }
 
+    /// The effective routing mode for a model config: the explicit
+    /// override, else the model's iterative schedule.
+    pub fn routing_mode(&self, model: &crate::config::CapsNetConfig) -> crate::routing::RoutingMode {
+        self.routing
+            .unwrap_or(crate::routing::RoutingMode::Iterative(model.routing_iters))
+    }
+
+    /// Worker count clamped to at least one.
+    pub fn worker_count(&self) -> usize {
+        self.workers.max(1)
+    }
+
     /// The simulator/oracle system config for this dataset + variant
     /// (dataset canonicalized so task aliases pick the right model).
     pub fn system_config(&self) -> crate::config::SystemConfig {
@@ -335,6 +383,35 @@ impl BackendConfig {
             _ => SystemConfig::proposed(dataset),
         }
     }
+}
+
+/// Frames in the deterministic calibration set the factories use for
+/// the offline accumulation pass when no `.fcw` sidecar provides
+/// coefficients.
+pub const CALIBRATION_FRAMES: usize = 32;
+
+/// Deterministic calibration set for the offline accumulation pass:
+/// `frames` synthetic frames from the dataset's generator at a fixed
+/// seed, so every replica (and every rebuild) bakes bit-identical
+/// coefficients — replicas of one deployment must share one
+/// fingerprint.
+pub fn calibration_set(cfg: &BackendConfig, frames: usize) -> Vec<Tensor> {
+    let task = if cfg.is_fmnist() {
+        crate::data::Task::Garments
+    } else {
+        crate::data::Task::Digits
+    };
+    crate::data::generate(task, frames, 0xacc0).images
+}
+
+/// Content hash of an f32 accumulated-coupling matrix, surfaced as
+/// [`BackendSpec::coupling_fingerprint`]. (Executors separately fold
+/// the same coefficients into their own content fingerprints — this one
+/// exists for the banner, not the cache.)
+pub fn coupling_fingerprint(coupling: &[f32]) -> u64 {
+    let mut h = crate::util::hash::Hash64::new(0x6370_6c67); // "cplg"
+    h.absorb_f32s(coupling);
+    h.finish()
 }
 
 /// Factory signature: build one backend replica from a config.

@@ -9,16 +9,61 @@
 use super::{BackendConfig, BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
 use crate::capsnet::{weights::Weights, CapsNet};
 use crate::config::CapsNetConfig;
+use crate::routing::RoutingMode;
 use crate::util::rng::Rng;
 
 pub struct OracleBackend {
     net: CapsNet,
+    routing: RoutingMode,
+    coupling: Option<Vec<f32>>,
+    workers: usize,
     spec: BackendSpec,
 }
 
 impl OracleBackend {
-    /// Wrap an existing model.
+    /// Wrap an existing model on the config's iterative schedule.
     pub fn new(net: CapsNet) -> OracleBackend {
+        let iters = net.config.routing_iters;
+        OracleBackend::with_routing(net, RoutingMode::Iterative(iters), None, 1)
+            .expect("iterative oracle construction cannot fail")
+    }
+
+    /// Wrap a model with an explicit routing schedule and worker count.
+    /// `Accumulated` requires a coupling matrix of `n_caps × n_classes`
+    /// mean coefficients (e.g. from [`CapsNet::accumulate_coupling`]).
+    pub fn with_routing(
+        net: CapsNet,
+        routing: RoutingMode,
+        coupling: Option<Vec<f32>>,
+        workers: usize,
+    ) -> Result<OracleBackend, BackendError> {
+        if routing.is_accumulated() && coupling.is_none() {
+            return Err(BackendError::Init(
+                "accumulated routing requires coupling coefficients (run `fastcaps accumulate`)"
+                    .into(),
+            ));
+        }
+        if let Some(c) = &coupling {
+            let want = net.config.num_primary_caps() * net.config.num_classes;
+            if c.len() != want {
+                return Err(BackendError::Init(format!(
+                    "coupling has {} entries, geometry needs {want}",
+                    c.len()
+                )));
+            }
+        }
+        // The routing mode (and any baked coefficients) changes what this
+        // executor computes, so both join the weight bits in the content
+        // hash; worker count does not — sharding is bit-identical by
+        // construction.
+        let mut h = crate::util::hash::Hash64::new(0x726f_7574); // "rout"
+        h.absorb(net.weights.fingerprint());
+        h.absorb(routing.fingerprint_tag());
+        if let Some(c) = &coupling {
+            h.absorb_f32s(c);
+        }
+        let content = h.finish();
+        let workers = workers.max(1);
         let spec = BackendSpec {
             kind: "oracle".into(),
             model: net.config.name.clone(),
@@ -27,20 +72,28 @@ impl OracleBackend {
             reports_timing: false,
             max_replicas: None,
             compression: None,
-            fingerprint: BackendSpec::deployment_fingerprint(
-                "oracle",
-                &net.config.name,
-                net.weights.fingerprint(),
-            ),
+            fingerprint: BackendSpec::deployment_fingerprint("oracle", &net.config.name, content),
+            routing: routing.to_string(),
+            workers,
+            coupling_fingerprint: coupling.as_deref().map(super::coupling_fingerprint),
         }
         .normalize();
-        OracleBackend { net, spec }
+        Ok(OracleBackend {
+            net,
+            routing,
+            coupling,
+            workers,
+            spec,
+        })
     }
 
     /// Registry factory: the pruned paper architecture for the dataset,
     /// with trained `.fcw` weights when present and seeded random
     /// weights otherwise (predictions are then noise, but the serving
-    /// path is exercised end to end).
+    /// path is exercised end to end). In accumulated mode the factory
+    /// takes coefficients from the `.fcw` sidecar when one matches the
+    /// geometry, else self-calibrates on the deterministic calibration
+    /// set through this model's own f32 numerics.
     pub fn from_config(cfg: &BackendConfig) -> Result<OracleBackend, BackendError> {
         let arch = if cfg.is_fmnist() {
             CapsNetConfig::paper_pruned_fmnist()
@@ -57,10 +110,29 @@ impl OracleBackend {
         } else {
             Weights::random(&arch, &mut Rng::new(cfg.seed))
         };
-        Ok(OracleBackend::new(CapsNet {
+        let net = CapsNet {
             config: arch,
             weights,
-        }))
+        };
+        let routing = cfg.routing_mode(&net.config);
+        let coupling = if routing.is_accumulated() {
+            let want = net.config.num_primary_caps() * net.config.num_classes;
+            let sidecar = weights_path
+                .exists()
+                .then(|| crate::capsnet::weights::load_coupling(&weights_path).ok().flatten())
+                .flatten()
+                .filter(|t| t.data.len() == want)
+                .map(|t| t.data);
+            Some(match sidecar {
+                Some(c) => c,
+                None => net
+                    .accumulate_coupling(&super::calibration_set(cfg, super::CALIBRATION_FRAMES))
+                    .map_err(|e| BackendError::Init(format!("accumulation pass: {e:#}")))?,
+            })
+        } else {
+            None
+        };
+        OracleBackend::with_routing(net, routing, coupling, cfg.worker_count())
     }
 }
 
@@ -73,7 +145,12 @@ impl InferenceBackend for OracleBackend {
         self.validate(req)?;
         let acts = self
             .net
-            .forward_batch(&req.images)
+            .forward_batch_sharded(
+                &req.images,
+                self.routing,
+                self.coupling.as_deref(),
+                self.workers,
+            )
             .map_err(|e| BackendError::Execution(format!("oracle forward: {e:#}")))?;
         Ok(InferOutput::untimed(
             acts.iter().map(|a| a.class_lengths()).collect(),
@@ -111,5 +188,46 @@ mod tests {
             let want = b.net.forward(img).unwrap().class_lengths();
             assert_eq!(got, &want);
         }
+    }
+
+    #[test]
+    fn accumulated_oracle_rekeys_and_matches_accumulated_forward() {
+        let mut rng = Rng::new(5);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        let images: Vec<Tensor> = (0..3)
+            .map(|_| Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0)))
+            .collect();
+        let coupling = net.accumulate_coupling(&images).unwrap();
+        let iter = OracleBackend::new(net.clone());
+        let mut acc = OracleBackend::with_routing(
+            net.clone(),
+            RoutingMode::Accumulated,
+            Some(coupling.clone()),
+            4,
+        )
+        .unwrap();
+        // Satellite pin: iterative and accumulated deployments of the
+        // same weights can never share a cache key.
+        assert_ne!(iter.spec().fingerprint, acc.spec().fingerprint);
+        assert_eq!(iter.spec().routing, "iterative(3)");
+        assert_eq!(acc.spec().routing, "accumulated");
+        assert_eq!(acc.spec().workers, 4);
+        assert!(acc.spec().coupling_fingerprint.is_some());
+        assert!(iter.spec().coupling_fingerprint.is_none());
+        // Sharded accumulated serving matches the direct per-image
+        // accumulated forward bit for bit.
+        let out = acc.infer(&InferRequest::new(images.clone())).unwrap();
+        for (img, got) in images.iter().zip(&out.lengths) {
+            let want = net
+                .forward_mode(img, RoutingMode::Accumulated, Some(&coupling))
+                .unwrap()
+                .class_lengths();
+            assert_eq!(got, &want);
+        }
+        // Accumulated mode without coefficients is a typed init error.
+        assert!(matches!(
+            OracleBackend::with_routing(net, RoutingMode::Accumulated, None, 1),
+            Err(BackendError::Init(_))
+        ));
     }
 }

@@ -63,6 +63,11 @@ impl PjrtBackend {
                 }
                 h.finish()
             }),
+            // The routing schedule is frozen inside the AOT artifact at
+            // export time; nothing here re-derives or overrides it.
+            routing: "aot".into(),
+            workers: 1,
+            coupling_fingerprint: None,
         }
         .normalize();
         Ok(PjrtBackend { engines, spec })

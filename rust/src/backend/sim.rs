@@ -11,13 +11,22 @@ use crate::fpga::{BatchScratch, DeployedModel};
 
 pub struct SimBackend {
     model: DeployedModel,
+    workers: usize,
     spec: BackendSpec,
     scratch: BatchScratch,
 }
 
 impl SimBackend {
-    /// Wrap a deployed (quantized + masked) model.
+    /// Wrap a deployed (quantized + masked) model (serial batches).
     pub fn new(model: DeployedModel) -> SimBackend {
+        SimBackend::with_workers(model, 1)
+    }
+
+    /// Wrap a deployed model, sharding each batch over up to `workers`
+    /// cores. The deployment carries its own routing mode and baked
+    /// coefficients — [`DeployedModel::fingerprint`] folds both in.
+    pub fn with_workers(model: DeployedModel, workers: usize) -> SimBackend {
+        let workers = workers.max(1);
         let spec = BackendSpec {
             kind: "sim".into(),
             model: model.config.model.name.clone(),
@@ -35,25 +44,70 @@ impl SimBackend {
                 &model.config.model.name,
                 model.fingerprint(),
             ),
+            routing: model.routing.to_string(),
+            workers,
+            coupling_fingerprint: model
+                .acc_coupling()
+                .map(|c| super::coupling_fingerprint(&c.iter().map(|q| q.to_f32()).collect::<Vec<_>>())),
         }
         .normalize();
         SimBackend {
             model,
+            workers,
             spec,
             scratch: BatchScratch::new(),
         }
     }
 
     /// Registry factory: synthetic deployment of the configured variant
-    /// (`original`/`pruned`/`proposed`) for the dataset.
+    /// (`original`/`pruned`/`proposed`) for the dataset. In accumulated
+    /// mode the factory self-calibrates on the deterministic calibration
+    /// set through the quantized iterative pipeline and bakes the mean
+    /// coefficients (synthetic deployments have no `.fcw` sidecar).
     pub fn from_config(cfg: &BackendConfig) -> Result<SimBackend, BackendError> {
         let sys = cfg.system_config();
-        Ok(SimBackend::new(DeployedModel::synthetic(&sys, cfg.seed)))
+        let mut model = DeployedModel::synthetic(&sys, cfg.seed);
+        bake_from_config(&mut model, cfg)?;
+        Ok(SimBackend::with_workers(model, cfg.worker_count()))
     }
 
     pub fn model(&self) -> &DeployedModel {
         &self.model
     }
+}
+
+/// Shared accumulated-mode setup for the simulator factories: honor the
+/// config's routing override on an already-deployed model, taking
+/// coefficients from a `.fcw` sidecar when one matches the geometry and
+/// self-calibrating on the deterministic calibration set otherwise.
+pub(super) fn bake_from_config(
+    model: &mut DeployedModel,
+    cfg: &BackendConfig,
+) -> Result<(), BackendError> {
+    let mode = cfg.routing_mode(&model.config.model);
+    if mode.is_accumulated() {
+        let m = &model.config.model;
+        let want = model.config.sparsity.num_primary_caps(m) * m.num_classes;
+        let sidecar = cfg
+            .full_weights_path()
+            .and_then(|p| crate::capsnet::weights::load_coupling(&p).ok().flatten())
+            .filter(|t| t.data.len() == want)
+            .map(|t| t.data);
+        let coupling = match sidecar {
+            Some(c) => c,
+            None => model
+                .accumulate_coupling(&super::calibration_set(cfg, super::CALIBRATION_FRAMES))
+                .map_err(|e| BackendError::Init(format!("accumulation pass: {e:#}")))?,
+        };
+        model
+            .bake_accumulated(&coupling)
+            .map_err(|e| BackendError::Init(format!("baking coupling: {e:#}")))?;
+    } else {
+        model
+            .set_routing_mode(mode)
+            .map_err(|e| BackendError::Init(format!("routing mode: {e:#}")))?;
+    }
+    Ok(())
 }
 
 impl InferenceBackend for SimBackend {
@@ -63,10 +117,12 @@ impl InferenceBackend for SimBackend {
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
         self.validate(req)?;
-        let out = self
-            .model
-            .run_batch(&req.images, &mut self.scratch)
-            .map_err(|e| BackendError::Execution(format!("sim batch: {e:#}")))?;
+        let out = if self.workers > 1 && req.images.len() > 1 {
+            self.model.run_batch_sharded(&req.images, self.workers)
+        } else {
+            self.model.run_batch(&req.images, &mut self.scratch)
+        }
+        .map_err(|e| BackendError::Execution(format!("sim batch: {e:#}")))?;
         // The per-frame loop this replaces overwrote `latency` every
         // iteration and reported only the *last* frame's number as the
         // batch's time; the batch figures now come from the pipelined
@@ -120,5 +176,29 @@ mod tests {
         let batch = out.batch_latency_s.unwrap();
         assert!(batch > frame && batch < 4.0 * frame, "batch {batch} frame {frame}");
         assert!(out.steady_state_fps.unwrap() > 1.0 / frame);
+    }
+
+    #[test]
+    fn accumulated_workers_serve_bit_identical_to_serial_iterative_baseline() {
+        // One config, two factories: accumulated + 4 workers must agree
+        // with its own serial run bit for bit, and must re-key vs the
+        // iterative deployment of the same seed.
+        let base = BackendConfig::default();
+        let acc_cfg = BackendConfig {
+            routing: Some(crate::routing::RoutingMode::Accumulated),
+            workers: 4,
+            ..base.clone()
+        };
+        let iter = SimBackend::from_config(&base).unwrap();
+        let mut acc = SimBackend::from_config(&acc_cfg).unwrap();
+        assert_ne!(iter.spec().fingerprint, acc.spec().fingerprint);
+        assert_eq!(acc.spec().routing, "accumulated");
+        assert_eq!(acc.spec().workers, 4);
+        let data = generate(Task::Digits, 4, 53);
+        let out = acc.infer(&InferRequest::new(data.images.clone())).unwrap();
+        let direct = acc.model().clone();
+        let mut scratch = BatchScratch::new();
+        let serial = direct.run_batch(&data.images, &mut scratch).unwrap();
+        assert_eq!(out.lengths, serial.lengths);
     }
 }

@@ -27,6 +27,7 @@ use crate::util::rng::Rng;
 
 pub struct SimSparseBackend {
     model: DeployedModel,
+    workers: usize,
     spec: BackendSpec,
     scratch: BatchScratch,
 }
@@ -37,7 +38,15 @@ impl SimSparseBackend {
     /// hand-pruned deployments (the `fastcaps prune --serve --backend
     /// sim-sparse` path).
     pub fn new(model: DeployedModel) -> SimSparseBackend {
+        SimSparseBackend::with_workers(model, 1)
+    }
+
+    /// Wrap a deployed model, sharding each batch over up to `workers`
+    /// cores. Routing mode and baked coefficients live on the model and
+    /// are already part of [`DeployedModel::fingerprint`].
+    pub fn with_workers(model: DeployedModel, workers: usize) -> SimSparseBackend {
         let stats = model.compression();
+        let workers = workers.max(1);
         let spec = BackendSpec {
             kind: "sim-sparse".into(),
             model: format!("{}-sparse", model.config.model.name),
@@ -53,10 +62,18 @@ impl SimSparseBackend {
                 &model.config.model.name,
                 model.fingerprint(),
             ),
+            routing: model.routing.to_string(),
+            workers,
+            coupling_fingerprint: model.acc_coupling().map(|c| {
+                super::coupling_fingerprint(
+                    &c.iter().map(|q| q.to_f32()).collect::<Vec<_>>(),
+                )
+            }),
         }
         .normalize();
         SimSparseBackend {
             model,
+            workers,
             spec,
             scratch: BatchScratch::new(),
         }
@@ -84,9 +101,10 @@ impl SimSparseBackend {
             None => Weights::random(&sys.model, &mut Rng::new(cfg.seed)),
         };
         let masks = NetworkMasks::from_plan(&weights, &sys.model, &sys.sparsity);
-        let model = DeployedModel::new(sys, &weights, &masks.conv1, &masks.pc)
+        let mut model = DeployedModel::new(sys, &weights, &masks.conv1, &masks.pc)
             .map_err(|e| BackendError::Init(format!("sparse deployment: {e:#}")))?;
-        Ok(SimSparseBackend::new(model))
+        super::sim::bake_from_config(&mut model, cfg)?;
+        Ok(SimSparseBackend::with_workers(model, cfg.worker_count()))
     }
 
     pub fn model(&self) -> &DeployedModel {
@@ -101,10 +119,12 @@ impl InferenceBackend for SimSparseBackend {
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
         self.validate(req)?;
-        let out = self
-            .model
-            .run_batch(&req.images, &mut self.scratch)
-            .map_err(|e| BackendError::Execution(format!("sim-sparse batch: {e:#}")))?;
+        let out = if self.workers > 1 && req.images.len() > 1 {
+            self.model.run_batch_sharded(&req.images, self.workers)
+        } else {
+            self.model.run_batch(&req.images, &mut self.scratch)
+        }
+        .map_err(|e| BackendError::Execution(format!("sim-sparse batch: {e:#}")))?;
         Ok(InferOutput {
             lengths: out.lengths,
             frame_latency_s: Some(out.timing.frame.latency_s()),
@@ -176,6 +196,29 @@ mod tests {
         assert!(
             sparse.model().estimate_batch(8).steady_state_fps()
                 > dense.estimate_batch(8).steady_state_fps()
+        );
+    }
+
+    #[test]
+    fn accumulated_mode_rekeys_and_boosts_modeled_fps() {
+        let iter = SimSparseBackend::from_config(&no_artifacts()).unwrap();
+        let acc_cfg = BackendConfig {
+            routing: Some(crate::routing::RoutingMode::Accumulated),
+            ..no_artifacts()
+        };
+        let acc = SimSparseBackend::from_config(&acc_cfg).unwrap();
+        // Satellite pin: iterative and accumulated deployments of the
+        // same weights never share a cache key.
+        assert_ne!(iter.spec().fingerprint, acc.spec().fingerprint);
+        assert_eq!(iter.spec().routing, "iterative(3)");
+        assert_eq!(acc.spec().routing, "accumulated");
+        assert!(acc.spec().coupling_fingerprint.is_some());
+        assert!(iter.spec().coupling_fingerprint.is_none());
+        // Dropping the routing iterations shrinks both the routing stage
+        // and the û DDR spill, so modeled sustained FPS strictly rises.
+        assert!(
+            acc.model().estimate_batch(16).steady_state_fps()
+                > iter.model().estimate_batch(16).steady_state_fps()
         );
     }
 }

@@ -22,13 +22,24 @@ use crate::util::rng::Rng;
 
 pub struct SparseOracleBackend {
     net: CompiledCapsNet,
+    workers: usize,
     spec: BackendSpec,
 }
 
 impl SparseOracleBackend {
-    /// Wrap an already-compiled model.
+    /// Wrap an already-compiled model (serial batches).
     pub fn new(net: CompiledCapsNet) -> SparseOracleBackend {
+        SparseOracleBackend::with_workers(net, 1)
+    }
+
+    /// Wrap an already-compiled model, sharding each batch over up to
+    /// `workers` cores. The compiled model carries its own routing mode
+    /// (and any baked coefficients) — [`CompiledCapsNet::fingerprint`]
+    /// already folds both in, so iterative and accumulated deployments
+    /// of the same weights never share a cache key.
+    pub fn with_workers(net: CompiledCapsNet, workers: usize) -> SparseOracleBackend {
         let stats = net.stats();
+        let workers = workers.max(1);
         let spec = BackendSpec {
             kind: "oracle-sparse".into(),
             model: format!("{}-compiled", net.config.name),
@@ -42,9 +53,12 @@ impl SparseOracleBackend {
                 &net.config.name,
                 net.fingerprint(),
             ),
+            routing: net.routing.to_string(),
+            workers,
+            coupling_fingerprint: net.acc_coupling().map(super::coupling_fingerprint),
         }
         .normalize();
-        SparseOracleBackend { net, spec }
+        SparseOracleBackend { net, workers, spec }
     }
 
     /// Registry factory: the full paper architecture for the dataset,
@@ -93,9 +107,31 @@ impl SparseOracleBackend {
             weights,
         };
         let masks = NetworkMasks::from_plan(&net.weights, &net.config, &plan);
-        let compiled = CompiledCapsNet::compile(&net, &masks)
+        let mut compiled = CompiledCapsNet::compile(&net, &masks)
             .map_err(|e| BackendError::Init(format!("sparse compile: {e:#}")))?;
-        Ok(SparseOracleBackend::new(compiled))
+        let mode = cfg.routing_mode(&compiled.config);
+        if mode.is_accumulated() {
+            let want = compiled.config.num_primary_caps() * compiled.config.num_classes;
+            let sidecar = cfg
+                .full_weights_path()
+                .and_then(|p| crate::capsnet::weights::load_coupling(&p).ok().flatten())
+                .filter(|t| t.data.len() == want)
+                .map(|t| t.data);
+            let coupling = match sidecar {
+                Some(c) => c,
+                None => compiled
+                    .accumulate_coupling(&super::calibration_set(cfg, super::CALIBRATION_FRAMES))
+                    .map_err(|e| BackendError::Init(format!("accumulation pass: {e:#}")))?,
+            };
+            compiled
+                .bake_accumulated(coupling)
+                .map_err(|e| BackendError::Init(format!("baking coupling: {e:#}")))?;
+        } else {
+            // Explicit `iterative:N` overrides must land in the model
+            // (and therefore its fingerprint), not just the config.
+            compiled.routing = mode;
+        }
+        Ok(SparseOracleBackend::with_workers(compiled, cfg.worker_count()))
     }
 
     pub fn model(&self) -> &CompiledCapsNet {
@@ -112,7 +148,7 @@ impl InferenceBackend for SparseOracleBackend {
         self.validate(req)?;
         let acts = self
             .net
-            .forward_batch(&req.images)
+            .forward_batch_sharded(&req.images, self.workers)
             .map_err(|e| BackendError::Execution(format!("sparse oracle forward: {e:#}")))?;
         Ok(InferOutput::untimed(
             acts.iter().map(|a| a.class_lengths()).collect(),
@@ -174,5 +210,35 @@ mod tests {
         assert_eq!(c.total_kernels, 256 + 65536);
         assert!(c.pruned_pct() > 99.0);
         assert_eq!(b.spec().input_shape, (1, 28, 28));
+        assert_eq!(b.spec().routing, "iterative(3)");
+        assert_eq!(b.spec().workers, 1);
+    }
+
+    #[test]
+    fn accumulated_from_config_bakes_and_rekeys() {
+        let base = BackendConfig {
+            artifacts: std::path::PathBuf::from("/nonexistent/artifacts"),
+            ..BackendConfig::default()
+        };
+        let iter = SparseOracleBackend::from_config(&base).unwrap();
+        let acc_cfg = BackendConfig {
+            routing: Some(crate::routing::RoutingMode::Accumulated),
+            workers: 2,
+            ..base
+        };
+        let mut acc = SparseOracleBackend::from_config(&acc_cfg).unwrap();
+        // Satellite pin: the two modes never share a cache key.
+        assert_ne!(iter.spec().fingerprint, acc.spec().fingerprint);
+        assert_eq!(acc.spec().routing, "accumulated");
+        assert_eq!(acc.spec().workers, 2);
+        assert!(acc.spec().coupling_fingerprint.is_some());
+        // Served (sharded) accumulated lengths match the direct
+        // accumulated forward of the same compiled model.
+        let images = crate::backend::calibration_set(&acc_cfg, 2);
+        let out = acc.infer(&InferRequest::new(images.clone())).unwrap();
+        for (img, got) in images.iter().zip(&out.lengths) {
+            let want = acc.model().forward(img).unwrap().class_lengths();
+            assert_eq!(got, &want);
+        }
     }
 }

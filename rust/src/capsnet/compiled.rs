@@ -36,6 +36,7 @@ use super::{
 use crate::config::CapsNetConfig;
 use crate::fpga::index_control::{IndexControl, PackedRows};
 use crate::pruning::{KernelMask, NetworkMasks};
+use crate::routing::{mean_coupling, RoutingMode};
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -105,6 +106,15 @@ impl SparseConvLayer {
     /// `conv2d` loop nest with the input-channel loop replaced by this
     /// output channel's alive-kernel list. Dead output channels (empty
     /// rows) still produce `bias` like the dense path.
+    ///
+    /// The loop nest is *weight-stationary* (CapsAcc-style reuse): each
+    /// surviving kernel row (`kw` weights) is held resident while it
+    /// sweeps every output position it touches, instead of re-fetching
+    /// all survivor weights per output pixel. Per output element the
+    /// contributions still arrive in (survivor ascending, ky, kx)
+    /// order — the exact sequence of f32 adds the position-major nest
+    /// performed — so results are bit-identical; the masked-dense
+    /// property test pins this.
     pub fn forward(&self, input: &Tensor) -> Result<Tensor> {
         anyhow::ensure!(
             input.rank() == 3 && input.shape[0] == self.in_ch,
@@ -119,26 +129,30 @@ impl SparseConvLayer {
         let kk = self.kh * self.kw;
         let mut out = Tensor::zeros(&[self.out_ch, oh, ow]);
         for o in 0..self.out_ch {
-            let b = self.bias[o];
             let row_start = self.index.row_ptr[o] as usize;
             let row = self.index.row(o);
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = b;
-                    for (n, &i) in row.iter().enumerate() {
-                        let kernel = &self.data[(row_start + n) * kk..][..kk];
-                        let i = i as usize;
-                        for ky in 0..self.kh {
-                            let iy = oy * self.stride + ky;
-                            let in_row =
-                                &input.data[(i * h + iy) * w + ox * self.stride..];
-                            let w_row = &kernel[ky * self.kw..][..self.kw];
-                            for (kx, &wv) in w_row.iter().enumerate() {
-                                acc += in_row[kx] * wv;
+            let plane = &mut out.data[o * oh * ow..][..oh * ow];
+            // Bias seeds every accumulator first, exactly as the scalar
+            // `acc = b` did.
+            plane.fill(self.bias[o]);
+            for (n, &i) in row.iter().enumerate() {
+                let kernel = &self.data[(row_start + n) * kk..][..kk];
+                let i = i as usize;
+                for ky in 0..self.kh {
+                    let w_row = &kernel[ky * self.kw..][..self.kw];
+                    for oy in 0..oh {
+                        let iy = oy * self.stride + ky;
+                        let in_row = &input.data[(i * h + iy) * w..][..w];
+                        let out_row = &mut plane[oy * ow..][..ow];
+                        for (ox, acc) in out_row.iter_mut().enumerate() {
+                            let patch = &in_row[ox * self.stride..][..self.kw];
+                            let mut a = *acc;
+                            for (&x, &wv) in patch.iter().zip(w_row) {
+                                a += x * wv;
                             }
+                            *acc = a;
                         }
                     }
-                    out.data[(o * oh + oy) * ow + ox] = acc;
                 }
             }
         }
@@ -205,6 +219,13 @@ pub struct CompiledCapsNet {
     /// dense: it is tiny and its dead-capsule work is already skipped
     /// value-wise (`û += 0 · w` short-circuits in the projection).
     w_ij: Tensor,
+    /// How the routing tail runs. `compile` defaults to the config's
+    /// iterative count; [`CompiledCapsNet::bake_accumulated`] switches
+    /// to the fast path.
+    pub routing: RoutingMode,
+    /// The baked accumulated coupling (`[n_caps][n_classes]` flat) —
+    /// present exactly when `routing` is [`RoutingMode::Accumulated`].
+    acc_coupling: Option<Vec<f32>>,
 }
 
 impl CompiledCapsNet {
@@ -232,11 +253,58 @@ impl CompiledCapsNet {
             &masks.pc,
         )?;
         Ok(CompiledCapsNet {
+            routing: RoutingMode::Iterative(cfg.routing_iters),
             config: cfg.clone(),
             conv1,
             pc,
             w_ij: net.weights.w_ij.clone(),
+            acc_coupling: None,
         })
+    }
+
+    /// Bake an accumulated coupling matrix (from
+    /// [`CompiledCapsNet::accumulate_coupling`] or a stored `.fcw`
+    /// sidecar) and switch the routing tail to the iteration-free fast
+    /// path. The baked bits join the deployment fingerprint, so a
+    /// mode flip can never alias a cached iterative response.
+    pub fn bake_accumulated(&mut self, coupling: Vec<f32>) -> Result<()> {
+        let want = self.config.num_primary_caps() * self.config.num_classes;
+        anyhow::ensure!(
+            coupling.len() == want,
+            "coupling len {} != n_caps × n_classes {}",
+            coupling.len(),
+            want
+        );
+        self.acc_coupling = Some(coupling);
+        self.routing = RoutingMode::Accumulated;
+        Ok(())
+    }
+
+    /// The baked coupling matrix, when the fast path is active.
+    pub fn acc_coupling(&self) -> Option<&[f32]> {
+        self.acc_coupling.as_deref()
+    }
+
+    /// The offline accumulation pass over this compiled model's own
+    /// numerics: iterative routing over a calibration set, coupling
+    /// averaged per (capsule, class). See
+    /// [`CapsNet::accumulate_coupling`].
+    pub fn accumulate_coupling(&self, images: &[Tensor]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!images.is_empty(), "accumulation needs a calibration set");
+        let stages: Vec<PrimaryStage> = images
+            .iter()
+            .map(|img| self.primary_stage(img))
+            .collect::<Result<_>>()?;
+        let acts = finish_forward_batch(
+            &self.config,
+            &self.w_ij,
+            stages,
+            RoutingMode::Iterative(self.config.routing_iters),
+            None,
+        );
+        Ok(mean_coupling(
+            acts.iter().map(|a| a.routing.coupling.as_slice()),
+        ))
     }
 
     pub fn stats(&self) -> CompressionStats {
@@ -263,6 +331,13 @@ impl CompiledCapsNet {
             h.absorb(d as u64);
         }
         h.absorb_f32s(&self.w_ij.data);
+        // Routing mode + baked coefficients re-key the deployment: an
+        // accumulated deployment must never alias the iterative one in
+        // the inference cache (PR 6 keys mix this fingerprint).
+        h.absorb(self.routing.fingerprint_tag());
+        if let Some(c) = &self.acc_coupling {
+            h.absorb_f32s(c);
+        }
         h.finish()
     }
 
@@ -293,7 +368,13 @@ impl CompiledCapsNet {
     /// path's own routing tail ([`finish_forward`]).
     pub fn forward(&self, image: &Tensor) -> Result<Activations> {
         let stage = self.primary_stage(image)?;
-        Ok(finish_forward(&self.config, &self.w_ij, stage))
+        Ok(finish_forward(
+            &self.config,
+            &self.w_ij,
+            stage,
+            self.routing,
+            self.acc_coupling.as_deref(),
+        ))
     }
 
     /// Forward a batch — the sparse primary stage per frame, then the
@@ -306,7 +387,34 @@ impl CompiledCapsNet {
             .iter()
             .map(|img| self.primary_stage(img))
             .collect::<Result<_>>()?;
-        Ok(finish_forward_batch(&self.config, &self.w_ij, stages))
+        Ok(finish_forward_batch(
+            &self.config,
+            &self.w_ij,
+            stages,
+            self.routing,
+            self.acc_coupling.as_deref(),
+        ))
+    }
+
+    /// [`CompiledCapsNet::forward_batch`] sharded over `workers` scoped
+    /// threads (contiguous frame chunks; bit-identical to serial for
+    /// every worker count).
+    pub fn forward_batch_sharded(
+        &self,
+        images: &[Tensor],
+        workers: usize,
+    ) -> Result<Vec<Activations>> {
+        if workers <= 1 || images.len() <= 1 {
+            return self.forward_batch(images);
+        }
+        let chunks = crate::util::parallel::shard_chunks(images, workers, |chunk| {
+            self.forward_batch(chunk)
+        });
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in chunks {
+            out.extend(chunk?);
+        }
+        Ok(out)
     }
 
     /// Classify one image through the batch path.
@@ -418,6 +526,49 @@ mod tests {
                 })
             },
         );
+    }
+
+    #[test]
+    fn baking_accumulated_coupling_rekeys_the_fingerprint() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(78);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 128);
+        let iter = CompiledCapsNet::compile(&net, &masks).unwrap();
+        let img = Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0));
+        let coupling = iter.accumulate_coupling(std::slice::from_ref(&img)).unwrap();
+        let mut acc = iter.clone();
+        acc.bake_accumulated(coupling).unwrap();
+        assert_ne!(
+            iter.fingerprint(),
+            acc.fingerprint(),
+            "a mode flip must re-key the deployment (cache isolation)"
+        );
+        assert_eq!(acc.routing, RoutingMode::Accumulated);
+        // Wrong-shaped coupling is rejected before it can be served.
+        assert!(acc.clone().bake_accumulated(vec![0.1; 3]).is_err());
+        // The accumulated forward serves the baked constant coupling.
+        let out = acc.forward(&img).unwrap();
+        assert_eq!(out.routing.coupling.as_slice(), acc.acc_coupling().unwrap());
+    }
+
+    #[test]
+    fn sharded_compiled_batch_is_bit_identical() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(79);
+        let net = CapsNet::random(cfg.clone(), &mut rng);
+        let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 96);
+        let compiled = CompiledCapsNet::compile(&net, &masks).unwrap();
+        let images: Vec<Tensor> = (0..5)
+            .map(|_| Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0)))
+            .collect();
+        let serial = compiled.forward_batch(&images).unwrap();
+        for workers in [2usize, 4] {
+            let sharded = compiled.forward_batch_sharded(&images, workers).unwrap();
+            for (a, b) in serial.iter().zip(&sharded) {
+                assert_eq!(a.routing.v, b.routing.v, "workers={workers}");
+            }
+        }
     }
 
     #[test]

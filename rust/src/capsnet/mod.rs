@@ -14,7 +14,8 @@ pub use compiled::CompiledCapsNet;
 
 use crate::config::CapsNetConfig;
 use crate::routing::{
-    dynamic_routing, dynamic_routing_with, Predictions, RoutingOutput, RoutingScratch,
+    accumulated_routing_with, dynamic_routing_with, mean_coupling, Predictions, RoutingMode,
+    RoutingOutput, RoutingScratch,
 };
 use crate::tensor::{conv2d, Tensor};
 use crate::util::rng::Rng;
@@ -98,10 +99,30 @@ impl CapsNet {
         })
     }
 
-    /// Forward one `[c, h, w]` image through the full network.
+    /// Forward one `[c, h, w]` image through the full network
+    /// (iterative routing at the config's iteration count).
     pub fn forward(&self, image: &Tensor) -> Result<Activations> {
+        self.forward_mode(image, RoutingMode::Iterative(self.config.routing_iters), None)
+    }
+
+    /// [`CapsNet::forward`] under an explicit [`RoutingMode`].
+    /// `Accumulated` requires the precomputed coupling matrix
+    /// (`[n_caps][num_classes]` flat — see
+    /// [`CapsNet::accumulate_coupling`]).
+    pub fn forward_mode(
+        &self,
+        image: &Tensor,
+        mode: RoutingMode,
+        coupling: Option<&[f32]>,
+    ) -> Result<Activations> {
         let stage = self.primary_stage(image)?;
-        Ok(finish_forward(&self.config, &self.weights.w_ij, stage))
+        Ok(finish_forward(
+            &self.config,
+            &self.weights.w_ij,
+            stage,
+            mode,
+            coupling,
+        ))
     }
 
     /// Forward a batch of images, restructured around shared weight
@@ -115,11 +136,68 @@ impl CapsNet {
     /// (each û element still sums over `kk` ascending), so the results are
     /// bit-exact equal to the per-image path — a property test pins this.
     pub fn forward_batch(&self, images: &[Tensor]) -> Result<Vec<Activations>> {
+        self.forward_batch_mode(
+            images,
+            RoutingMode::Iterative(self.config.routing_iters),
+            None,
+        )
+    }
+
+    /// [`CapsNet::forward_batch`] under an explicit [`RoutingMode`].
+    pub fn forward_batch_mode(
+        &self,
+        images: &[Tensor],
+        mode: RoutingMode,
+        coupling: Option<&[f32]>,
+    ) -> Result<Vec<Activations>> {
         let stages: Vec<PrimaryStage> = images
             .iter()
             .map(|img| self.primary_stage(img))
             .collect::<Result<_>>()?;
-        Ok(finish_forward_batch(&self.config, &self.weights.w_ij, stages))
+        Ok(finish_forward_batch(
+            &self.config,
+            &self.weights.w_ij,
+            stages,
+            mode,
+            coupling,
+        ))
+    }
+
+    /// [`CapsNet::forward_batch_mode`] sharded across `workers` scoped
+    /// threads (contiguous frame chunks). Frames are independent and
+    /// each chunk runs the exact serial pipeline, so the result is
+    /// bit-identical for every worker count — a property test pins it.
+    pub fn forward_batch_sharded(
+        &self,
+        images: &[Tensor],
+        mode: RoutingMode,
+        coupling: Option<&[f32]>,
+        workers: usize,
+    ) -> Result<Vec<Activations>> {
+        if workers <= 1 || images.len() <= 1 {
+            return self.forward_batch_mode(images, mode, coupling);
+        }
+        let chunks = crate::util::parallel::shard_chunks(images, workers, |chunk| {
+            self.forward_batch_mode(chunk, mode, coupling)
+        });
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in chunks {
+            out.extend(chunk?);
+        }
+        Ok(out)
+    }
+
+    /// The offline accumulation pass (Zhao et al.): run *iterative*
+    /// routing over a calibration set and average the final coupling
+    /// coefficients into one `[n_caps][num_classes]` matrix. Serving
+    /// with [`RoutingMode::Accumulated`] then replays this matrix with
+    /// zero routing iterations.
+    pub fn accumulate_coupling(&self, images: &[Tensor]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!images.is_empty(), "accumulation needs a calibration set");
+        let acts = self.forward_batch(images)?;
+        Ok(mean_coupling(
+            acts.iter().map(|a| a.routing.coupling.as_slice()),
+        ))
     }
 
     /// The masked-dense form of this model under `masks`: pruned kernels
@@ -168,15 +246,39 @@ struct PrimaryStage {
 /// [`compiled::CompiledCapsNet::forward`] — the bit-exactness contract
 /// between the dense and sparse paths is that everything after the conv
 /// stages is literally the same code.
-fn finish_forward(cfg: &CapsNetConfig, w_ij: &Tensor, stage: PrimaryStage) -> Activations {
+fn finish_forward(
+    cfg: &CapsNetConfig,
+    w_ij: &Tensor,
+    stage: PrimaryStage,
+    mode: RoutingMode,
+    coupling: Option<&[f32]>,
+) -> Activations {
     let u_hat = project_u_hat(cfg, w_ij, &stage.primary_caps);
     let pred = Predictions::new(cfg.num_primary_caps(), cfg.num_classes, cfg.dc_dim, u_hat);
-    let routing = dynamic_routing(&pred, cfg.routing_iters);
+    let routing = route(&pred, mode, coupling, &mut RoutingScratch::new());
     Activations {
         conv1: stage.conv1,
         pc_conv: stage.pc_conv,
         primary_caps: stage.primary_caps,
         routing,
+    }
+}
+
+/// Dispatch one frame's routing by mode — iterative loop or the
+/// accumulated-coefficients fast path (which must have its matrix).
+fn route(
+    pred: &Predictions,
+    mode: RoutingMode,
+    coupling: Option<&[f32]>,
+    scratch: &mut RoutingScratch,
+) -> RoutingOutput {
+    match mode {
+        RoutingMode::Iterative(r) => dynamic_routing_with(pred, r, scratch),
+        RoutingMode::Accumulated => accumulated_routing_with(
+            pred,
+            coupling.expect("accumulated routing requires a coupling matrix"),
+            scratch,
+        ),
     }
 }
 
@@ -188,6 +290,8 @@ fn finish_forward_batch(
     cfg: &CapsNetConfig,
     w_ij: &Tensor,
     stages: Vec<PrimaryStage>,
+    mode: RoutingMode,
+    coupling: Option<&[f32]>,
 ) -> Vec<Activations> {
     let caps: Vec<&[f32]> = stages.iter().map(|s| s.primary_caps.as_slice()).collect();
     let u_hats = project_u_hat_batch(cfg, w_ij, &caps);
@@ -198,7 +302,7 @@ fn finish_forward_batch(
         .map(|(stage, u_hat)| {
             let pred =
                 Predictions::new(cfg.num_primary_caps(), cfg.num_classes, cfg.dc_dim, u_hat);
-            let routing = dynamic_routing_with(&pred, cfg.routing_iters, &mut scratch);
+            let routing = route(&pred, mode, coupling, &mut scratch);
             Activations {
                 conv1: stage.conv1,
                 pc_conv: stage.pc_conv,
@@ -418,6 +522,74 @@ mod tests {
         // accuracy path must score 100% — any batch/per-image divergence
         // shows up as a miss.
         assert_eq!(net.accuracy(&data).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn property_sharded_forward_is_bit_identical_across_worker_counts() {
+        // Contiguous frame sharding never changes any frame's
+        // arithmetic, so 1/2/4 workers (and worker counts past the
+        // batch size) agree bit for bit with the serial batch path.
+        let mut rng = Rng::new(31);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        let images: Vec<Tensor> = (0..6)
+            .map(|_| Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0)))
+            .collect();
+        let coupling = net.accumulate_coupling(&images).unwrap();
+        for (mode, c) in [
+            (RoutingMode::Iterative(3), None),
+            (RoutingMode::Accumulated, Some(coupling.as_slice())),
+        ] {
+            let serial = net.forward_batch_mode(&images, mode, c).unwrap();
+            for workers in [1usize, 2, 4, 9] {
+                let sharded = net
+                    .forward_batch_sharded(&images, mode, c, workers)
+                    .unwrap();
+                assert_eq!(serial.len(), sharded.len());
+                for (a, b) in serial.iter().zip(&sharded) {
+                    assert_eq!(a.routing.v, b.routing.v, "{mode} workers={workers}");
+                    assert_eq!(a.primary_caps, b.primary_caps);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulated_mode_runs_iteration_free_and_deterministic() {
+        let mut rng = Rng::new(32);
+        let net = CapsNet::random(CapsNetConfig::tiny(), &mut rng);
+        let cal: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::randn(&[1, 20, 20], 0.4, &mut rng).map(|x| x.abs().min(1.0)))
+            .collect();
+        let coupling = net.accumulate_coupling(&cal).unwrap();
+        let cfg = &net.config;
+        assert_eq!(coupling.len(), cfg.num_primary_caps() * cfg.num_classes);
+        // Every row of the accumulated matrix is a convex combination
+        // of softmax rows — still ~normalized.
+        for i in 0..cfg.num_primary_caps() {
+            let row: f32 = coupling[i * cfg.num_classes..(i + 1) * cfg.num_classes]
+                .iter()
+                .sum();
+            assert!((row - 1.0).abs() < 1e-3, "row {i} sums to {row}");
+        }
+        let img = &cal[0];
+        let a = net
+            .forward_mode(img, RoutingMode::Accumulated, Some(&coupling))
+            .unwrap();
+        let b = net
+            .forward_mode(img, RoutingMode::Accumulated, Some(&coupling))
+            .unwrap();
+        assert_eq!(a.routing.v, b.routing.v);
+        // The served coupling is exactly the accumulated constant.
+        assert_eq!(a.routing.coupling, coupling);
+        // Batch and per-image accumulated paths agree bit for bit.
+        let batched = net
+            .forward_batch_mode(
+                std::slice::from_ref(img),
+                RoutingMode::Accumulated,
+                Some(&coupling),
+            )
+            .unwrap();
+        assert_eq!(batched[0].routing.v, a.routing.v);
     }
 
     #[test]

@@ -148,15 +148,27 @@ impl Weights {
 
     /// Serialize to the `.fcw` interchange format.
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_with_coupling(path, None)
+    }
+
+    /// Serialize, optionally appending the offline-accumulated routing
+    /// coupling (`fastcaps accumulate`) as an extra named tensor
+    /// (`[n_caps, n_classes]`). Readers that predate the tensor ignore
+    /// it — [`Weights::load`] takes only the five canonical tensors —
+    /// so the sidecar is backward compatible by construction.
+    pub fn save_with_coupling(&self, path: &Path, coupling: Option<&Tensor>) -> Result<()> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(b"FCW1");
-        let tensors: Vec<(&str, &Tensor)> = vec![
+        let mut tensors: Vec<(&str, &Tensor)> = vec![
             ("conv1_w", &self.conv1_w),
             ("conv1_b", &self.conv1_b),
             ("pc_w", &self.pc_w),
             ("pc_b", &self.pc_b),
             ("w_ij", &self.w_ij),
         ];
+        if let Some(c) = coupling {
+            tensors.push((ACC_COUPLING, c));
+        }
         buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
         for (name, t) in tensors {
             buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
@@ -194,6 +206,22 @@ impl Weights {
             w_ij: take("w_ij")?,
         })
     }
+}
+
+/// Name of the optional accumulated-coupling sidecar tensor in `.fcw`
+/// files (`[n_caps, n_classes]`, written by `fastcaps accumulate`).
+pub const ACC_COUPLING: &str = "acc_coupling";
+
+/// Read the accumulated-coupling sidecar tensor from a `.fcw` file.
+/// `Ok(None)` when the file has no sidecar (weights written before an
+/// accumulation pass).
+pub fn load_coupling(path: &Path) -> Result<Option<Tensor>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    let mut map = parse_fcw(&buf)?;
+    Ok(map.remove(ACC_COUPLING))
 }
 
 /// Parse an `.fcw` byte buffer into named tensors.
@@ -291,6 +319,34 @@ mod tests {
         assert_eq!(loaded.conv1_w, w.conv1_w);
         assert_eq!(loaded.w_ij, w.w_ij);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn coupling_sidecar_round_trips_and_stays_backward_compatible() {
+        let cfg = CapsNetConfig::tiny();
+        let mut rng = Rng::new(7);
+        let w = Weights::random(&cfg, &mut rng);
+        let coupling = Tensor::from_vec(
+            &[cfg.num_primary_caps(), cfg.num_classes],
+            vec![1.0 / cfg.num_classes as f32; cfg.num_primary_caps() * cfg.num_classes],
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("fastcaps-test-weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny-acc.fcw");
+        w.save_with_coupling(&path, Some(&coupling)).unwrap();
+        // The five canonical tensors still load (the sidecar is ignored).
+        let loaded = Weights::load(&path).unwrap();
+        assert_eq!(loaded.w_ij, w.w_ij);
+        // The sidecar round-trips bit for bit.
+        let side = load_coupling(&path).unwrap().unwrap();
+        assert_eq!(side, coupling);
+        // A file without the sidecar reads back as None.
+        let plain = dir.join("tiny-plain.fcw");
+        w.save(&plain).unwrap();
+        assert!(load_coupling(&plain).unwrap().is_none());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&plain).ok();
     }
 
     #[test]

@@ -692,6 +692,9 @@ mod tests {
                     max_replicas: None,
                     compression: None,
                     fingerprint: 0,
+                    routing: String::new(),
+                    workers: 1,
+                    coupling_fingerprint: None,
                 },
                 delay,
                 calls,
@@ -866,6 +869,9 @@ mod tests {
                 max_replicas: None,
                 compression: None,
                 fingerprint: 0,
+                routing: String::new(),
+                workers: 1,
+                coupling_fingerprint: None,
             })) as Box<dyn InferenceBackend>)
         })
         .max_batch(2)
@@ -897,6 +903,9 @@ mod tests {
                 max_replicas: None,
                 compression: None,
                 fingerprint: 0,
+                routing: String::new(),
+                workers: 1,
+                coupling_fingerprint: None,
             })) as Box<dyn InferenceBackend>)
         })
         .max_wait(Duration::from_millis(1))
@@ -932,6 +941,9 @@ mod tests {
                     max_replicas: None,
                     compression: None,
                     fingerprint: 0,
+                    routing: String::new(),
+                    workers: 1,
+                    coupling_fingerprint: None,
                 },
                 calls: 0,
                 fail_on,
@@ -1031,6 +1043,9 @@ mod tests {
                     max_replicas: None,
                     compression: None,
                     fingerprint: 0,
+                    routing: String::new(),
+                    workers: 1,
+                    coupling_fingerprint: None,
                 };
                 Ok(Box::new(PanicAndFlag(spec, died2.clone())) as Box<dyn InferenceBackend>)
             } else {
@@ -1140,6 +1155,9 @@ mod tests {
                 max_replicas: Some(1),
                 compression: None,
                 fingerprint: 0,
+                routing: String::new(),
+                workers: 1,
+                coupling_fingerprint: None,
             })) as Box<dyn InferenceBackend>)
         })
         .replicas(8)

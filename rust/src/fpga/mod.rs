@@ -24,8 +24,10 @@ use crate::config::{SparsityPlan, SystemConfig};
 use crate::fixed::{Q12, Q8};
 use crate::pruning::KernelMask;
 use crate::routing::fixed::{
-    dynamic_routing_q12, OpCounts, PredictionsQ12, RoutingScratch, SoftmaxMode,
+    accumulated_routing_q12, dynamic_routing_q12, quantize_coupling, OpCounts, PredictionsQ12,
+    RoutingScratch, SoftmaxMode,
 };
+use crate::routing::RoutingMode;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -138,6 +140,16 @@ pub struct DeployedModel {
     pub pc: ConvModule,
     /// DigitCaps transform in Q4.12: `[pc_types][n_classes][d_in][d_out]`.
     pub w_ij: Vec<Q12>,
+    /// Active routing schedule. Defaults to the config's iteration count;
+    /// [`DeployedModel::bake_accumulated`] switches to the
+    /// iteration-free accumulated-coefficients path.
+    pub routing: RoutingMode,
+    /// Baked per-class mean coupling coefficients in the Q4.12 datapath
+    /// format (`[n_caps][n_classes]`), present once accumulated mode has
+    /// been baked. At 23 KB for the full 1152×10 geometry they sit in
+    /// BRAM next to the survivor weights, so the DDR model never prices
+    /// them — accumulated mode is exactly the effective-r=0 schedule.
+    acc_coupling_q: Option<Vec<Q12>>,
 }
 
 impl DeployedModel {
@@ -174,11 +186,14 @@ impl DeployedModel {
             false,
         );
         let w_ij = weights.w_ij.data.iter().map(|&x| Q12::from_f32(x)).collect();
+        let routing = RoutingMode::Iterative(cfg.model.routing_iters);
         Ok(DeployedModel {
             config: cfg,
             conv1,
             pc,
             w_ij,
+            routing,
+            acc_coupling_q: None,
         })
     }
 
@@ -229,7 +244,85 @@ impl DeployedModel {
         for q in &self.w_ij {
             h.absorb(q.raw() as u16 as u64);
         }
+        // Routing mode + any baked accumulated coefficients are part of
+        // the computed function: the same weight bits route differently
+        // under Iterative(r) vs Accumulated, so the inference cache must
+        // re-key. Worker count is deliberately absent — sharding is
+        // bit-identical by construction (`util::parallel`).
+        h.absorb(self.routing.fingerprint_tag());
+        if let Some(c) = &self.acc_coupling_q {
+            h.absorb(c.len() as u64);
+            for q in c {
+                h.absorb(q.raw() as u16 as u64);
+            }
+        }
         h.finish()
+    }
+
+    /// Routing iterations the cycle model prices: `r` for
+    /// `Iterative(r)`, 0 for `Accumulated` (no softmax / agreement /
+    /// logit passes; the single FC + squash rides the û projection).
+    pub fn effective_iters(&self) -> usize {
+        self.routing.effective_iters()
+    }
+
+    /// Baked accumulated coupling coefficients, if any.
+    pub fn acc_coupling(&self) -> Option<&[Q12]> {
+        self.acc_coupling_q.as_deref()
+    }
+
+    /// Bake an f32 accumulated-coupling matrix (from
+    /// [`DeployedModel::accumulate_coupling`] or a `.fcw` sidecar) into
+    /// the Q4.12 datapath and switch to accumulated routing.
+    pub fn bake_accumulated(&mut self, coupling: &[f32]) -> Result<()> {
+        let m = &self.config.model;
+        let n = self.config.sparsity.num_primary_caps(m) * m.num_classes;
+        anyhow::ensure!(
+            coupling.len() == n,
+            "accumulated coupling has {} entries, geometry needs {n}",
+            coupling.len()
+        );
+        self.acc_coupling_q = Some(quantize_coupling(coupling));
+        self.routing = RoutingMode::Accumulated;
+        Ok(())
+    }
+
+    /// Select the routing schedule. `Accumulated` requires coefficients
+    /// baked first ([`DeployedModel::bake_accumulated`]).
+    pub fn set_routing_mode(&mut self, mode: RoutingMode) -> Result<()> {
+        anyhow::ensure!(
+            !(mode.is_accumulated() && self.acc_coupling_q.is_none()),
+            "accumulated routing requires baked coupling coefficients (run `fastcaps accumulate`)"
+        );
+        self.routing = mode;
+        Ok(())
+    }
+
+    /// Offline accumulation pass (Zhao et al.): run the *iterative*
+    /// Q4.12 pipeline over a calibration set and average the converged
+    /// coupling coefficients per (capsule, class) in f64. The result
+    /// feeds [`DeployedModel::bake_accumulated`] — derived on the same
+    /// quantized datapath it will later replace.
+    pub fn accumulate_coupling(&self, images: &[Tensor]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            !images.is_empty(),
+            "accumulate needs at least one calibration frame"
+        );
+        let m = &self.config.model;
+        let n = self.config.sparsity.num_primary_caps(m) * m.num_classes;
+        let iters = m.routing_iters.max(1);
+        let mode = self.softmax_mode();
+        let mut scratch = BatchScratch::new();
+        let mut sum = vec![0f64; n];
+        for image in images {
+            self.project_frame(image, &mut scratch)?;
+            let out = scratch.routing.run(iters, mode);
+            for (s, q) in sum.iter_mut().zip(&out.coupling) {
+                *s += q.to_f32() as f64;
+            }
+        }
+        let inv = 1.0 / images.len() as f64;
+        Ok(sum.into_iter().map(|s| (s * inv) as f32).collect())
     }
 
     fn pe(&self) -> PeArray {
@@ -316,11 +409,14 @@ impl DeployedModel {
                 (self.config.sparsity.num_primary_caps(m) * m.num_classes * m.dc_dim)
                     as u64
                     * 2;
-            let r = m.routing_iters as u64;
-            // 1 write + R FC reads + (R−1) agreement reads. The
-            // agreement term saturates: with r = 0 there is no agreement
-            // pass at all (a plain `r - 1` would underflow u64 and panic
-            // in debug / wrap to ~2⁶⁴ streamed bytes in release).
+            let r = self.effective_iters() as u64;
+            // 1 write + R FC reads + (R−1) agreement reads, with R the
+            // *effective* iteration count: accumulated mode runs zero
+            // routing iterations, so its û traffic is exactly the
+            // Iterative(0) figure (pinned by test). The agreement term
+            // saturates: with r = 0 there is no agreement pass at all (a
+            // plain `r - 1` would underflow u64 and panic in debug /
+            // wrap to ~2⁶⁴ streamed bytes in release).
             u_bytes * (1 + r + r.saturating_sub(1))
         } else {
             0
@@ -354,7 +450,10 @@ impl DeployedModel {
         let t1 = self.conv1.timing(ih, iw, &pe, conv_ii, mem_bw);
         let t2 = self.pc.timing(h1, w1, &pe, conv_ii, mem_bw);
         let n_caps = self.config.sparsity.num_primary_caps(m);
-        let g = RoutingGeometry::from_config(m, n_caps);
+        let mut g = RoutingGeometry::from_config(m, n_caps);
+        // Price the *effective* schedule: accumulated mode collapses the
+        // routing stage to the 0-iteration formula (û projection only).
+        g.iterations = self.effective_iters();
         let rt = routing_timing(&g, &hw, &pe);
         // Primary-capsule squash stage (before routing): n_caps squashes
         // through the dedicated Squash unit.
@@ -419,6 +518,66 @@ impl DeployedModel {
     /// allocates per frame, and the cycle model is priced once per batch
     /// instead of once per frame.
     pub fn run_batch(&self, images: &[Tensor], scratch: &mut BatchScratch) -> Result<BatchOutput> {
+        let mode = self.softmax_mode();
+        let mut classes = Vec::with_capacity(images.len());
+        let mut lengths = Vec::with_capacity(images.len());
+        for image in images {
+            self.project_frame(image, scratch)?;
+            let out = match self.routing {
+                RoutingMode::Iterative(r) => scratch.routing.run(r, mode),
+                RoutingMode::Accumulated => scratch.routing.run_accumulated(
+                    self.acc_coupling_q
+                        .as_deref()
+                        .expect("accumulated mode always carries baked coupling"),
+                ),
+            };
+            let lens = out.lengths_f32();
+            classes.push(crate::util::argmax(&lens));
+            lengths.push(lens);
+        }
+        Ok(BatchOutput {
+            classes,
+            lengths,
+            timing: self.estimate_batch(images.len()),
+        })
+    }
+
+    /// Shard a batch over up to `workers` cores (contiguous frame
+    /// chunks, one scoped thread + private [`BatchScratch`] each) and
+    /// splice the per-chunk results back in input order. Frames are
+    /// independent, so the output is bit-identical to
+    /// [`DeployedModel::run_batch`] for every worker count (pinned by a
+    /// property test); the batch timing still models one fabric.
+    pub fn run_batch_sharded(&self, images: &[Tensor], workers: usize) -> Result<BatchOutput> {
+        if workers <= 1 || images.len() <= 1 {
+            let mut scratch = BatchScratch::new();
+            return self.run_batch(images, &mut scratch);
+        }
+        let chunks = crate::util::parallel::shard_chunks(images, workers, |frames| {
+            let mut scratch = BatchScratch::new();
+            self.run_batch(frames, &mut scratch)
+        });
+        let mut classes = Vec::with_capacity(images.len());
+        let mut lengths = Vec::with_capacity(images.len());
+        for chunk in chunks {
+            let out = chunk?;
+            classes.extend(out.classes);
+            lengths.extend(out.lengths);
+        }
+        Ok(BatchOutput {
+            classes,
+            lengths,
+            timing: self.estimate_batch(images.len()),
+        })
+    }
+
+    /// Per-frame front half of the serving pipeline: quantized conv
+    /// stages, capsule regroup + squash, and the weight-block-stationary
+    /// û projection, leaving `scratch.routing` prepared with û filled.
+    /// Shared verbatim by [`DeployedModel::run_batch`] (both routing
+    /// modes) and [`DeployedModel::accumulate_coupling`], so the
+    /// calibration pass sees exactly the serving datapath.
+    fn project_frame(&self, image: &Tensor, scratch: &mut BatchScratch) -> Result<()> {
         let m = &self.config.model;
         let (c_in, ih, iw) = m.input;
         let (h1, w1) = m.conv1_out();
@@ -429,87 +588,73 @@ impl DeployedModel {
         let spatial = h2 * w2;
         let n_out = m.num_classes;
         let d_out = m.dc_dim;
-        let mode = self.softmax_mode();
+        anyhow::ensure!(
+            image.shape == vec![c_in, ih, iw],
+            "input shape {:?} != {:?}",
+            image.shape,
+            (c_in, ih, iw)
+        );
+        // Conv stages in Q8.8.
+        scratch.input_q.clear();
+        scratch
+            .input_q
+            .extend(image.data.iter().map(|&x| Q8::from_f32(x)));
+        self.conv1.forward_into(
+            &scratch.input_q,
+            ih,
+            iw,
+            &mut scratch.conv_acc,
+            &mut scratch.conv1_out,
+        );
+        self.pc.forward_into(
+            &scratch.conv1_out,
+            h1,
+            w1,
+            &mut scratch.conv_acc,
+            &mut scratch.pc_out,
+        );
 
-        let mut classes = Vec::with_capacity(images.len());
-        let mut lengths = Vec::with_capacity(images.len());
-        for image in images {
-            anyhow::ensure!(
-                image.shape == vec![c_in, ih, iw],
-                "input shape {:?} != {:?}",
-                image.shape,
-                (c_in, ih, iw)
-            );
-            // Conv stages in Q8.8.
-            scratch.input_q.clear();
-            scratch
-                .input_q
-                .extend(image.data.iter().map(|&x| Q8::from_f32(x)));
-            self.conv1.forward_into(
-                &scratch.input_q,
-                ih,
-                iw,
-                &mut scratch.conv_acc,
-                &mut scratch.conv1_out,
-            );
-            self.pc.forward_into(
-                &scratch.conv1_out,
-                h1,
-                w1,
-                &mut scratch.conv_acc,
-                &mut scratch.pc_out,
-            );
+        // Regroup into capsules and squash (Q4.12 from here on).
+        let mut counts = OpCounts::default();
+        scratch.primary.clear();
+        scratch.primary.resize(n_caps * d, Q12::ZERO);
+        for t in 0..types {
+            for p in 0..spatial {
+                let cap = t * spatial + p;
+                scratch.s_raw.clear();
+                scratch
+                    .s_raw
+                    .extend((0..d).map(|k| scratch.pc_out[(t * d + k) * spatial + p].raw()));
+                crate::routing::fixed::squash_q88_into(
+                    &scratch.s_raw,
+                    &mut scratch.primary[cap * d..(cap + 1) * d],
+                    &mut counts,
+                );
+            }
+        }
 
-            // Regroup into capsules and squash (Q4.12 from here on).
-            let mut counts = OpCounts::default();
-            scratch.primary.clear();
-            scratch.primary.resize(n_caps * d, Q12::ZERO);
-            for t in 0..types {
+        // û projection on the PE array, weight-block-stationary over
+        // (type, class), written straight into the routing scratch.
+        scratch.routing.prepare(n_caps, n_out, d_out);
+        let u_hat = scratch.routing.u_hat_mut();
+        for t in 0..types {
+            for j in 0..n_out {
+                let base = ((t * n_out) + j) * d * d_out;
+                let wblock = &self.w_ij[base..base + d * d_out];
                 for p in 0..spatial {
                     let cap = t * spatial + p;
-                    scratch.s_raw.clear();
-                    scratch
-                        .s_raw
-                        .extend((0..d).map(|k| scratch.pc_out[(t * d + k) * spatial + p].raw()));
-                    crate::routing::fixed::squash_q88_into(
-                        &scratch.s_raw,
-                        &mut scratch.primary[cap * d..(cap + 1) * d],
-                        &mut counts,
-                    );
-                }
-            }
-
-            // û projection on the PE array, weight-block-stationary over
-            // (type, class), written straight into the routing scratch.
-            scratch.routing.prepare(n_caps, n_out, d_out);
-            let u_hat = scratch.routing.u_hat_mut();
-            for t in 0..types {
-                for j in 0..n_out {
-                    let base = ((t * n_out) + j) * d * d_out;
-                    let wblock = &self.w_ij[base..base + d * d_out];
-                    for p in 0..spatial {
-                        let cap = t * spatial + p;
-                        let u = &scratch.primary[cap * d..(cap + 1) * d];
-                        for k_out in 0..d_out {
-                            let mut acc = 0i64;
-                            for (kk, &uk) in u.iter().enumerate() {
-                                acc = uk.mac(wblock[kk * d_out + k_out], acc);
-                            }
-                            u_hat[(cap * n_out + j) * d_out + k_out] = Q12::from_acc(acc);
+                    let u = &scratch.primary[cap * d..(cap + 1) * d];
+                    for k_out in 0..d_out {
+                        let mut acc = 0i64;
+                        for (kk, &uk) in u.iter().enumerate() {
+                            acc = uk.mac(wblock[kk * d_out + k_out], acc);
                         }
+                        u_hat[(cap * n_out + j) * d_out + k_out] = Q12::from_acc(acc);
                     }
                 }
             }
-            let out = scratch.routing.run(m.routing_iters, mode);
-            let lens = out.lengths_f32();
-            classes.push(crate::util::argmax(&lens));
-            lengths.push(lens);
         }
-        Ok(BatchOutput {
-            classes,
-            lengths,
-            timing: self.estimate_batch(images.len()),
-        })
+        Ok(())
     }
 
     /// Run one frame functionally (quantized datapath) and return the
@@ -575,7 +720,15 @@ impl DeployedModel {
             d_out,
             u_hat,
         };
-        let out = dynamic_routing_q12(&pred, m.routing_iters, self.softmax_mode());
+        let out = match self.routing {
+            RoutingMode::Iterative(r) => dynamic_routing_q12(&pred, r, self.softmax_mode()),
+            RoutingMode::Accumulated => accumulated_routing_q12(
+                &pred,
+                self.acc_coupling_q
+                    .as_deref()
+                    .expect("accumulated mode always carries baked coupling"),
+            ),
+        };
         let lengths = out.lengths_f32();
         let class = crate::util::argmax(&lengths);
         Ok((class, lengths, self.estimate_frame()))
@@ -1038,5 +1191,103 @@ mod tests {
             }
         }
         assert!(agree >= n - 1, "only {agree}/{n} predictions agree");
+    }
+
+    #[test]
+    fn accumulated_timing_equals_iterative_zero() {
+        // Satellite pin: the cycle/DDR model treats accumulated routing
+        // as exactly the 0-iteration schedule — coefficients are modeled
+        // resident in BRAM, so no term differs from Iterative(0).
+        for cfg in [
+            SystemConfig::proposed("mnist"),
+            SystemConfig::original("mnist"),
+            SystemConfig::masked("fmnist"),
+        ] {
+            let base = DeployedModel::timing_stub(&cfg, 7);
+            let n = cfg.sparsity.num_primary_caps(&cfg.model) * cfg.model.num_classes;
+            let mut acc = base.clone();
+            acc.bake_accumulated(&vec![0.1f32; n]).unwrap();
+            let mut iter0 = base.clone();
+            iter0.set_routing_mode(RoutingMode::Iterative(0)).unwrap();
+            assert_eq!(acc.ddr_bytes(), iter0.ddr_bytes(), "{}", cfg.model.name);
+            let (ta, t0) = (acc.estimate_frame(), iter0.estimate_frame());
+            assert_eq!(ta.routing.total(), t0.routing.total(), "{}", cfg.model.name);
+            assert_eq!(ta.total_cycles(), t0.total_cycles(), "{}", cfg.model.name);
+            // And strictly cheaper than the iterative default (r ≥ 3
+            // softmax/FC/agreement passes all vanish).
+            assert!(
+                ta.total_cycles() < base.estimate_frame().total_cycles(),
+                "{}",
+                cfg.model.name
+            );
+        }
+    }
+
+    #[test]
+    fn property_sharded_run_batch_bit_identical_across_worker_counts() {
+        // Satellite pin: run_batch output is bit-identical for worker
+        // counts 1/2/4 (and an oversubscribed 9), in both routing modes
+        // — worker count can never key a cache entry.
+        let mut base = DeployedModel::synthetic(&SystemConfig::proposed("mnist"), 5);
+        let mut rng = Rng::new(17);
+        let imgs: Vec<Tensor> = (0..6)
+            .map(|c| crate::data::digits::render(c % 10, &mut rng))
+            .collect();
+        let coupling = base.accumulate_coupling(&imgs).unwrap();
+        let iterative = base.clone();
+        base.bake_accumulated(&coupling).unwrap();
+        for model in [&iterative, &base] {
+            let mut scratch = BatchScratch::new();
+            let serial = model.run_batch(&imgs, &mut scratch).unwrap();
+            for workers in [1usize, 2, 4, 9] {
+                let sharded = model.run_batch_sharded(&imgs, workers).unwrap();
+                assert_eq!(
+                    serial.classes, sharded.classes,
+                    "workers={workers} ({})",
+                    model.routing
+                );
+                assert_eq!(
+                    serial.lengths, sharded.lengths,
+                    "workers={workers} ({})",
+                    model.routing
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn accumulated_mode_rekeys_fingerprint_and_stays_frame_batch_bitwise() {
+        let cfg = SystemConfig::proposed("mnist");
+        let mut d = DeployedModel::synthetic(&cfg, 9);
+        let fp_iter = d.fingerprint();
+        assert!(
+            d.set_routing_mode(RoutingMode::Accumulated).is_err(),
+            "accumulated mode must refuse to run without baked coefficients"
+        );
+        let mut rng = Rng::new(3);
+        let cal: Vec<Tensor> = (0..8)
+            .map(|c| crate::data::digits::render(c % 10, &mut rng))
+            .collect();
+        let coupling = d.accumulate_coupling(&cal).unwrap();
+        assert_eq!(
+            coupling.len(),
+            cfg.sparsity.num_primary_caps(&cfg.model) * cfg.model.num_classes
+        );
+        d.bake_accumulated(&coupling).unwrap();
+        assert!(d.routing.is_accumulated());
+        assert_ne!(
+            d.fingerprint(),
+            fp_iter,
+            "mode + coefficients must re-key the deployment"
+        );
+        // run_frame and run_batch stay bitwise identical in accumulated
+        // mode (same datapath invariant as the iterative pin above).
+        let mut scratch = BatchScratch::new();
+        let out = d.run_batch(&cal, &mut scratch).unwrap();
+        for (i, img) in cal.iter().enumerate() {
+            let (class, lens, _) = d.run_frame(img).unwrap();
+            assert_eq!(out.classes[i], class, "frame {i}");
+            assert_eq!(out.lengths[i], lens, "frame {i}");
+        }
     }
 }

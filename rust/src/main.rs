@@ -1,10 +1,15 @@
 //! `fastcaps` — CLI for the FastCaps reproduction.
 //!
 //! ```text
-//! fastcaps report <table1|table2|table3|fig1|fig5|fig8|fig14|sparse|all>
+//! fastcaps report <table1|table2|table3|fig1|fig5|fig8|fig14|sparse|routing|all>
 //! fastcaps simulate [--dataset mnist|fmnist] [--config original|pruned|proposed] [--frames N]
+//! fastcaps accumulate [--dataset mnist|fmnist] [--arch pruned|full]
+//!                   [--weights FILE.fcw] [--frames N] [--out FILE.fcw]
+//!                     # offline accumulation pass: bake per-class mean
+//!                     # coupling coefficients into the .fcw sidecar
 //! fastcaps serve    [--backend oracle|oracle-sparse|sim|sim-sparse|pjrt]
 //!                   [--model capsnet-mnist-pruned] [--dataset mnist|fmnist]
+//!                   [--routing-mode iterative[:N]|accumulated] [--workers N]
 //!                   [--replicas N] [--max-queue N]
 //!                   [--requests N] [--clients K] [--artifacts DIR]
 //!                   [--listen ADDR]   # TCP front-end; drains on a wire
@@ -18,6 +23,7 @@
 //! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
 //!                   [--sparsity S] [--compile] [--serve]
 //!                   [--backend oracle-sparse|sim-sparse] [--replicas N]
+//!                   [--routing-mode iterative[:N]|accumulated] [--workers N]
 //!                   [--requests N] [--clients K] [--cache-entries N]
 //! fastcaps selftest
 //! ```
@@ -41,6 +47,7 @@ fn main() {
     let code = match cmd {
         "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&args),
+        "accumulate" => cmd_accumulate(&args),
         "serve" => cmd_serve(&args),
         "bench-net" => cmd_bench_net(&args),
         "prune" => cmd_prune(&args),
@@ -62,8 +69,13 @@ fn print_help() {
          subcommands:\n\
          \x20 report <exp>   regenerate a paper table/figure\n\
          \x20                exps: table1 table2 table3 fig1 fig5 fig8 fig14\n\
-         \x20                sparse (dense-vs-pruned modeled FPS/DDR/BRAM) all\n\
+         \x20                sparse (dense-vs-pruned modeled FPS/DDR/BRAM)\n\
+         \x20                routing (iterative-vs-accumulated accuracy delta) all\n\
          \x20 simulate       run frames through the cycle-level accelerator simulator\n\
+         \x20 accumulate     offline accumulation pass: run the iterative router\n\
+         \x20                over a deterministic calibration set and bake the\n\
+         \x20                per-class mean coupling coefficients into the .fcw\n\
+         \x20                sidecar (serve --routing-mode accumulated picks it up)\n\
          \x20 serve          start the serving coordinator and drive a workload\n\
          \x20                backends: oracle (fp32 reference), oracle-sparse\n\
          \x20                (sparse-compiled pruned fp32), sim (FPGA\n\
@@ -71,6 +83,11 @@ fn print_help() {
          \x20                over CSR survivors: pipelined timing +\n\
          \x20                compression), pjrt (AOT artifacts);\n\
          \x20                --replicas N scales the executor pool;\n\
+         \x20                --routing-mode iterative[:N]|accumulated picks the\n\
+         \x20                routing schedule (accumulated = zero routing\n\
+         \x20                iterations, baked mean coefficients);\n\
+         \x20                --workers N shards each batch over N cores\n\
+         \x20                per replica (bit-identical to serial);\n\
          \x20                --listen ADDR serves the wire protocol over TCP\n\
          \x20                instead of driving in-process traffic (drains\n\
          \x20                gracefully on a wire Shutdown frame);\n\
@@ -106,6 +123,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         "table3" => print!("{}", fastcaps::report::table3()),
         "fig8" => print!("{}", fastcaps::report::fig8()),
         "fig14" => print!("{}", fastcaps::report::fig14()),
+        "routing" => print!("{}", fastcaps::report::routing()),
         "ablation" => print!("{}", fastcaps::report::ablation()),
         "sparse" => print!("{}", fastcaps::report::sparse()),
         "table1" => print!("{}", fastcaps::report::table1(&dir)?),
@@ -189,6 +207,111 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fastcaps accumulate`: the offline accumulation pass. Runs the
+/// iterative router over the deterministic calibration set (same seed
+/// the backend factories self-calibrate with), averages the coupling
+/// coefficients per (capsule, class), and writes them back into the
+/// `.fcw` file as the `acc_coupling` sidecar tensor — `serve
+/// --routing-mode accumulated` then loads them instead of
+/// re-calibrating at every replica boot.
+fn cmd_accumulate(args: &Args) -> Result<()> {
+    use fastcaps::capsnet::{weights::Weights, CapsNet};
+
+    let raw_dataset = args.get_or("dataset", "mnist");
+    let task = Task::parse(raw_dataset).ok_or_else(|| {
+        anyhow::anyhow!("unknown dataset '{raw_dataset}' (expected mnist|fmnist)")
+    })?;
+    let dataset = match task {
+        Task::Digits => "mnist",
+        Task::Garments => "fmnist",
+    };
+    // `pruned` matches the oracle/sim presets' weights file; `full`
+    // matches the prune-at-deploy backends' `weights-<dataset>-full.fcw`.
+    let arch_kind = args.get_or("arch", "pruned").to_string();
+    let (arch, default_file) = match arch_kind.as_str() {
+        "full" => (
+            fastcaps::config::CapsNetConfig::paper_full(&format!("capsnet-{dataset}")),
+            format!("weights-{dataset}-full.fcw"),
+        ),
+        "pruned" => (
+            if task == Task::Garments {
+                fastcaps::config::CapsNetConfig::paper_pruned_fmnist()
+            } else {
+                fastcaps::config::CapsNetConfig::paper_pruned_mnist()
+            },
+            format!("weights-{dataset}.fcw"),
+        ),
+        other => anyhow::bail!("unknown --arch '{other}' (expected pruned|full)"),
+    };
+    let path = match args.get("weights") {
+        Some(p) => PathBuf::from(p),
+        None => artifacts_dir(args).join(default_file),
+    };
+    let weights = if path.exists() {
+        let w = Weights::load(&path)?;
+        w.validate(&arch)?;
+        w
+    } else {
+        println!(
+            "(no weights at {}; using seeded random weights — coefficients are \
+             structurally valid but not meaningful)",
+            path.display()
+        );
+        Weights::random(&arch, &mut fastcaps::util::rng::Rng::new(args.get_u64("seed", 7)))
+    };
+    let net = CapsNet {
+        config: arch,
+        weights,
+    };
+
+    let frames = args.get_usize("frames", fastcaps::backend::CALIBRATION_FRAMES);
+    // Fixed seed: every accumulation of the same weights produces the
+    // same sidecar bits (and matches what a factory self-calibrates to).
+    let images = fastcaps::data::generate(task, frames, 0xacc0).images;
+    let iters = net.config.routing_iters;
+    println!(
+        "accumulating over {frames} calibration frames on {} \
+         (iterative({iters}) → per-class mean coupling)",
+        net.config.name,
+    );
+    let coupling = net.accumulate_coupling(&images)?;
+
+    let n_caps = net.config.num_primary_caps();
+    let n_classes = net.config.num_classes;
+    // Per-class coupling mass: softmax columns each sum to ~n_caps/n_classes
+    // under uniform routing; skew shows which classes dominate agreement.
+    for j in 0..n_classes {
+        let mass: f32 = (0..n_caps).map(|i| coupling[i * n_classes + j]).sum();
+        print!("  class {j}: {:.4}", mass / n_caps as f32);
+        if (j + 1) % 5 == 0 {
+            println!();
+        }
+    }
+    if n_classes % 5 != 0 {
+        println!();
+    }
+    println!(
+        "coupling: {n_caps}x{n_classes} f32 ({} KB on-chip), fingerprint {:#018x}",
+        (n_caps * n_classes * 2) / 1024, // Q4.12 residency, 2 B/coefficient
+        fastcaps::backend::coupling_fingerprint(&coupling),
+    );
+
+    let out = args.get("out").map(PathBuf::from).unwrap_or(path);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let sidecar = fastcaps::tensor::Tensor::from_vec(&[n_caps, n_classes], coupling)?;
+    net.weights.save_with_coupling(&out, Some(&sidecar))?;
+    println!(
+        "wrote weights + acc_coupling sidecar to {} \
+         (serve with: fastcaps serve --routing-mode accumulated)",
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let backend_kind = args.get_or("backend", "sim").to_string();
     let n_requests = args.get_usize("requests", 64);
@@ -218,6 +341,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Task::Garments => "capsnet-fmnist-pruned".to_string(),
     });
 
+    // Routing override: `--routing-mode accumulated` serves the
+    // zero-iteration fast path (the factory loads `fastcaps accumulate`'s
+    // sidecar coefficients, or self-calibrates); `iterative[:N]` pins an
+    // explicit schedule. No flag = the model config's schedule.
+    let routing = match args.get("routing-mode") {
+        Some(s) => Some(fastcaps::routing::RoutingMode::parse(s, 3).ok_or_else(|| {
+            anyhow::anyhow!("unknown --routing-mode '{s}' (expected iterative[:N]|accumulated)")
+        })?),
+        None => None,
+    };
+    let workers = args.get_usize("workers", 1).max(1);
+
     let bcfg = BackendConfig {
         dataset: dataset.clone(),
         model: model_name.clone(),
@@ -225,6 +360,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         artifacts: artifacts_dir(args),
         weights: None,
         seed: args.get_u64("seed", 7),
+        routing,
+        workers,
     };
     // Content-addressed cache: on by default for the TCP path (real
     // wire traffic repeats — retries, duplicated sensors, hot classes),
@@ -252,18 +389,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "serving {n_requests} requests from {n_clients} client threads \
              (backend={backend_kind}, model={}, dataset={dataset}, \
-             replicas={}, buckets={:?})",
+             replicas={}, buckets={:?}, {})",
             spec.model,
             server.pool_size(),
             spec.batch_buckets,
+            spec.routing_summary(),
         );
     } else {
         println!(
             "serving over TCP (backend={backend_kind}, model={}, dataset={dataset}, \
-             replicas={}, buckets={:?})",
+             replicas={}, buckets={:?}, {})",
             spec.model,
             server.pool_size(),
             spec.batch_buckets,
+            spec.routing_summary(),
         );
     }
     if let Some(c) = &spec.compression {
@@ -563,7 +702,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
         config: cfg.clone(),
         weights,
     };
-    let compiled = CompiledCapsNet::compile(&net, &masks)?;
+    let mut compiled = CompiledCapsNet::compile(&net, &masks)?;
     let stats = compiled.stats();
     println!(
         "compiled: {} / {} kernels packed ({:.2}% pruned, {} B index memory)",
@@ -608,6 +747,24 @@ fn cmd_prune(args: &Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 2);
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
     let max_queue = args.get_usize("max-queue", 1024);
+    // Routing fast path + per-replica batch sharding, same flags as
+    // `serve`. Accumulated mode self-calibrates on the deterministic
+    // calibration set through the freshly pruned model — a hand-pruned
+    // deployment has no sidecar to load.
+    let routing = match args.get("routing-mode") {
+        Some(s) => Some(
+            fastcaps::routing::RoutingMode::parse(s, cfg.routing_iters).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown --routing-mode '{s}' (expected iterative[:N]|accumulated)"
+                )
+            })?,
+        ),
+        None => None,
+    };
+    let workers = args.get_usize("workers", 1).max(1);
+    let calib = || {
+        fastcaps::data::generate(task, fastcaps::backend::CALIBRATION_FRAMES, 0xacc0).images
+    };
     // Opt-in cache, like in-process `serve`. Each prune→compile→serve
     // deployment carries its own weight/mask fingerprint, so re-pruning
     // at different survivor counts changes every cache key — a fresh
@@ -620,7 +777,15 @@ fn cmd_prune(args: &Args) -> Result<()> {
                 masks.conv1.survived(),
                 masks.pc.survived(),
             );
-            let deployed = DeployedModel::new(sys, &net.weights, &masks.conv1, &masks.pc)?;
+            let mut deployed = DeployedModel::new(sys, &net.weights, &masks.conv1, &masks.pc)?;
+            if let Some(mode) = routing {
+                if mode.is_accumulated() {
+                    let coupling = deployed.accumulate_coupling(&calib())?;
+                    deployed.bake_accumulated(&coupling)?;
+                } else {
+                    deployed.set_routing_mode(mode)?;
+                }
+            }
             let t = deployed.estimate_batch(8);
             println!(
                 "deployed on the sparse FPGA datapath: modeled {:.1} FPS steady-state \
@@ -630,8 +795,10 @@ fn cmd_prune(args: &Args) -> Result<()> {
                 deployed.ddr_bytes(),
             );
             Server::builder(move || {
-                Ok(Box::new(fastcaps::backend::SimSparseBackend::new(deployed.clone()))
-                    as Box<dyn fastcaps::backend::InferenceBackend>)
+                Ok(Box::new(fastcaps::backend::SimSparseBackend::with_workers(
+                    deployed.clone(),
+                    workers,
+                )) as Box<dyn fastcaps::backend::InferenceBackend>)
             })
             .replicas(replicas)
             .max_wait(max_wait)
@@ -639,15 +806,27 @@ fn cmd_prune(args: &Args) -> Result<()> {
             .cache(cache)
             .start()
         }
-        "oracle-sparse" => Server::builder(move || {
-            Ok(Box::new(fastcaps::backend::SparseOracleBackend::new(compiled.clone()))
-                as Box<dyn fastcaps::backend::InferenceBackend>)
-        })
-        .replicas(replicas)
-        .max_wait(max_wait)
-        .max_queue_depth(max_queue)
-        .cache(cache)
-        .start(),
+        "oracle-sparse" => {
+            if let Some(mode) = routing {
+                if mode.is_accumulated() {
+                    let coupling = compiled.accumulate_coupling(&calib())?;
+                    compiled.bake_accumulated(coupling)?;
+                } else {
+                    compiled.routing = mode;
+                }
+            }
+            Server::builder(move || {
+                Ok(Box::new(fastcaps::backend::SparseOracleBackend::with_workers(
+                    compiled.clone(),
+                    workers,
+                )) as Box<dyn fastcaps::backend::InferenceBackend>)
+            })
+            .replicas(replicas)
+            .max_wait(max_wait)
+            .max_queue_depth(max_queue)
+            .cache(cache)
+            .start()
+        }
         other => anyhow::bail!(
             "prune --serve runs the pruned model: \
              --backend oracle-sparse|sim-sparse (got '{other}')"
@@ -659,11 +838,12 @@ fn cmd_prune(args: &Args) -> Result<()> {
     let spec = server.spec().expect("init succeeded").clone();
     println!(
         "serving {n_requests} requests from {n_clients} client threads \
-         (backend={}, model={}, replicas={}, {:.2}% kernels pruned)",
+         (backend={}, model={}, replicas={}, {:.2}% kernels pruned, {})",
         spec.kind,
         spec.model,
         server.pool_size(),
         spec.compression.as_ref().map(|c| c.pruned_pct()).unwrap_or(0.0),
+        spec.routing_summary(),
     );
     drive_workload(server, task, n_requests, n_clients);
     Ok(())

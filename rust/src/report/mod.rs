@@ -54,6 +54,34 @@ pub fn fig1() -> String {
             if cfg.is_pruned() { "on-chip" } else { "DDR-streaming" },
         ));
     }
+    // Accumulated-coefficients fast path: the proposed deployments again
+    // with zero routing iterations. Uniform coupling stands in for the
+    // baked mean — the timing model reads only the iteration count, and
+    // the fpga property tests pin Accumulated ≡ Iterative(0) exactly.
+    for (name, cfg) in [
+        ("proposed-mnist+acc", SystemConfig::proposed("mnist")),
+        ("proposed-fmnist+acc", SystemConfig::proposed("fmnist")),
+    ] {
+        let mut model = DeployedModel::timing_stub(&cfg, 7);
+        let n = cfg.sparsity.num_primary_caps(&cfg.model) * cfg.model.num_classes;
+        model
+            .bake_accumulated(&vec![1.0 / cfg.model.num_classes as f32; n])
+            .expect("uniform coupling matches the geometry");
+        let t = model.estimate_frame();
+        let pipe = model.estimate_batch(8).steady_state_fps();
+        let u = resources::estimate(&cfg);
+        let fpj = pm.fpj(t.fps(), &u, !cfg.is_pruned());
+        out.push_str(&format!(
+            "{:<22} {:>10.1} {:>12} {:>10.1} {:>8.1} {:>8}   {}\n",
+            name,
+            t.fps(),
+            "—",
+            pipe,
+            fpj,
+            "—",
+            "accumulated routing (0 iters)",
+        ));
+    }
     out
 }
 
@@ -231,7 +259,95 @@ pub fn fig8() -> String {
         crate::util::fmt_thousands(opt.total()),
         base.total() as f64 / opt.total() as f64
     ));
+    // Accumulated-coefficients mode skips every routing iteration (the
+    // coefficients are baked offline), so the whole module degenerates
+    // to the zero-iteration schedule — the fpga tests pin that
+    // Accumulated and Iterative(0) price identically.
+    let mut g0 = g;
+    g0.iterations = 0;
+    let acc = routing_timing(&g0, &RoutingHardware::optimized(), &pe);
+    out.push_str(&format!(
+        "{:<26} {:>14} {:>12}\n",
+        "accumulated (0 iters)",
+        "—",
+        crate::util::fmt_thousands(acc.total()),
+    ));
     out.push_str("\nUnit latencies (§III-B): exp 27→14 cycles, div 49→36 cycles\n");
+    out
+}
+
+/// `fastcaps report routing`: iterative vs accumulated routing through
+/// the fp32 oracle on both datasets. Coefficients come from an
+/// accumulation pass over the deterministic calibration set (the same
+/// seed the backend factories self-calibrate with); the eval set is
+/// disjoint. With seeded random weights absolute accuracy is chance —
+/// the load-bearing columns are the absolute accuracy delta and the
+/// top-1 agreement between the two modes.
+pub fn routing() -> String {
+    use crate::capsnet::{weights::Weights, CapsNet};
+    use crate::config::CapsNetConfig;
+    use crate::data::{generate, Task};
+    use crate::routing::RoutingMode;
+    use crate::util::rng::Rng;
+
+    const CALIB: usize = 32;
+    const EVAL: usize = 64;
+    let mut out = String::new();
+    out.push_str("Routing modes — iterative vs accumulated (fp32 oracle, synthetic eval)\n");
+    out.push_str(&format!(
+        "{:<10} {:>10} {:>10} {:>8} {:>10} {:>12}\n",
+        "dataset", "iter acc", "accum acc", "|Δacc|", "agreement", "mean |Δlen|"
+    ));
+    out.push_str(&hline(66));
+    out.push('\n');
+    for (ds, task, arch) in [
+        ("mnist", Task::Digits, CapsNetConfig::paper_pruned_mnist()),
+        ("fmnist", Task::Garments, CapsNetConfig::paper_pruned_fmnist()),
+    ] {
+        let weights = Weights::random(&arch, &mut Rng::new(7));
+        let net = CapsNet {
+            config: arch,
+            weights,
+        };
+        let coupling = net
+            .accumulate_coupling(&generate(task, CALIB, 0xacc0).images)
+            .expect("accumulation over the calibration set");
+        let eval = generate(task, EVAL, 0xe7a1);
+        let (mut hit_i, mut hit_a, mut agree) = (0usize, 0usize, 0usize);
+        let mut dlen = 0.0f64;
+        for (img, &label) in eval.images.iter().zip(&eval.labels) {
+            let it = net.forward(img).expect("iterative forward");
+            let ac = net
+                .forward_mode(img, RoutingMode::Accumulated, Some(&coupling))
+                .expect("accumulated forward");
+            let (ci, ca) = (it.predicted_class(), ac.predicted_class());
+            hit_i += usize::from(ci == label);
+            hit_a += usize::from(ca == label);
+            agree += usize::from(ci == ca);
+            let (li, la) = (it.class_lengths(), ac.class_lengths());
+            dlen += li
+                .iter()
+                .zip(&la)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / li.len() as f64;
+        }
+        let pct = |n: usize| 100.0 * n as f64 / EVAL as f64;
+        out.push_str(&format!(
+            "{:<10} {:>9.1}% {:>9.1}% {:>7.1}% {:>9.1}% {:>12.4}\n",
+            ds,
+            pct(hit_i),
+            pct(hit_a),
+            (pct(hit_i) - pct(hit_a)).abs(),
+            pct(agree),
+            dlen / EVAL as f64,
+        ));
+    }
+    out.push_str(
+        "\n(seeded random weights: absolute accuracy is chance — the accumulated\n \
+         column must *track* the iterative one, not beat the task.\n \
+         benches/pruning_bench.rs gates the ≤1pp absolute delta.)\n",
+    );
     out
 }
 
@@ -375,6 +491,19 @@ mod tests {
         // The sparse-datapath dense-vs-pruned table renders.
         assert!(s.contains("sim-sparse-mnist"));
         assert!(s.contains("Sparse datapath"));
+        // The accumulated-routing rows ride along in Fig. 1 and Fig. 8.
+        assert!(s.contains("proposed-mnist+acc"));
+        assert!(s.contains("accumulated (0 iters)"));
+    }
+
+    #[test]
+    fn routing_report_renders_both_datasets() {
+        let s = routing();
+        assert!(s.contains("Routing modes"));
+        assert!(s.contains("mnist"));
+        assert!(s.contains("fmnist"));
+        assert!(s.contains("agreement"));
+        assert!(s.contains("1pp"));
     }
 
     #[test]

@@ -298,6 +298,55 @@ impl RoutingScratch {
         &mut self.u_hat
     }
 
+    /// Accumulated-coefficients routing over the prepared buffers
+    /// (Zhao et al. fast path, Q4.12): the coupling matrix is a
+    /// precomputed constant loaded straight into the `c` buffer, and
+    /// the stage runs exactly one FC + squash pass — the same loop
+    /// body, accumulation order, and wide-register staging as one
+    /// iteration of [`RoutingScratch::run`], with zero softmax,
+    /// agreement, or logit-update ops in the [`OpCounts`].
+    pub fn run_accumulated(&mut self, coupling: &[Q12]) -> RoutingOutputQ12 {
+        let (n_in, n_out, d) = (self.n_in, self.n_out, self.d_out);
+        assert_eq!(
+            coupling.len(),
+            n_in * n_out,
+            "accumulated coupling shape mismatch"
+        );
+        let RoutingScratch {
+            u_hat,
+            c,
+            v,
+            s_acc,
+            s_raw,
+            ..
+        } = self;
+        c.copy_from_slice(coupling);
+        let mut counts = OpCounts::default();
+        for j in 0..n_out {
+            s_acc.fill(0);
+            for i in 0..n_in {
+                let cij = c[i * n_out + j];
+                let u = &u_hat[(i * n_out + j) * d..][..d];
+                for (a, &uk) in s_acc.iter_mut().zip(u) {
+                    *a = cij.mac(uk, *a);
+                }
+            }
+            counts.macs += (n_in * d) as u64;
+            for (r, &a) in s_raw.iter_mut().zip(s_acc.iter()) {
+                *r = ((a + (1 << 15)) >> 16).clamp(i16::MIN as i64, i16::MAX as i64)
+                    as i16;
+            }
+            squash_q88_into(s_raw, &mut v[j * d..(j + 1) * d], &mut counts);
+        }
+        RoutingOutputQ12 {
+            v: v.clone(),
+            coupling: c.clone(),
+            n_out,
+            d_out: d,
+            counts,
+        }
+    }
+
     /// Run dynamic routing over the prepared buffers. Identical
     /// arithmetic, schedule, and [`OpCounts`] to [`dynamic_routing_q12`]
     /// (which delegates here) — only the allocations differ.
@@ -393,6 +442,22 @@ pub fn dynamic_routing_q12_with(
     scratch.prepare(pred.n_in, pred.n_out, pred.d_out);
     scratch.u_hat_mut().copy_from_slice(&pred.u_hat);
     scratch.run(iterations, mode)
+}
+
+/// Accumulated-coefficients routing on the Q4.12 datapath (allocating
+/// form; [`RoutingScratch::run_accumulated`] is the batch hot path).
+pub fn accumulated_routing_q12(pred: &PredictionsQ12, coupling: &[Q12]) -> RoutingOutputQ12 {
+    let mut scratch = RoutingScratch::new();
+    scratch.prepare(pred.n_in, pred.n_out, pred.d_out);
+    scratch.u_hat_mut().copy_from_slice(&pred.u_hat);
+    scratch.run_accumulated(coupling)
+}
+
+/// Quantize an f32 accumulated-coupling matrix to the Q4.12 datapath
+/// format. Coefficients live in [0, 1], so each entry round-trips
+/// within one Q12 LSB (1/4096) of the f32 value — pinned by test.
+pub fn quantize_coupling(coupling: &[f32]) -> Vec<Q12> {
+    coupling.iter().map(|&x| Q12::from_f32(x)).collect()
 }
 
 #[cfg(test)]
@@ -510,6 +575,68 @@ mod tests {
                 assert_eq!(fresh.coupling, reused.coupling);
                 assert_eq!(fresh.counts, reused.counts);
             }
+        }
+    }
+
+    #[test]
+    fn accumulated_q12_matches_one_pass_of_iterative_fc() {
+        // Feed the accumulated path the coupling the iterative path just
+        // computed: the FC + squash bodies are the same code shape, so v
+        // must match bit for bit.
+        let pred = random_predictions(24, 10, 8, 21);
+        let q = PredictionsQ12::quantize(&pred);
+        let iter1 = dynamic_routing_q12(&q, 1, SoftmaxMode::Taylor);
+        let acc = accumulated_routing_q12(&q, &iter1.coupling);
+        assert_eq!(iter1.v, acc.v);
+        assert_eq!(iter1.coupling, acc.coupling);
+    }
+
+    #[test]
+    fn accumulated_q12_op_counts_collapse() {
+        // The fast path's entire budget is one FC pass + squash: zero
+        // exps, zero softmax divides, zero agreement/logit updates.
+        let (n_in, n_out, d) = (12, 4, 8);
+        let pred = random_predictions(n_in, n_out, d, 22);
+        let q = PredictionsQ12::quantize(&pred);
+        let coupling = vec![Q12::from_f32(1.0 / n_out as f32); n_in * n_out];
+        let out = accumulated_routing_q12(&q, &coupling);
+        assert_eq!(out.counts.exps, 0);
+        // divs/sqrts come from squash only: one per output capsule.
+        assert_eq!(out.counts.divs, n_out as u64);
+        assert_eq!(out.counts.sqrts, n_out as u64);
+        // macs: FC (n_in·d per capsule) + squash norm² (d per capsule).
+        assert_eq!(out.counts.macs, (n_out * (n_in * d + d)) as u64);
+    }
+
+    #[test]
+    fn quantized_coupling_round_trips_within_one_lsb() {
+        // Coupling coefficients live in [0, 1]; Q4.12 represents them
+        // within one LSB (1/4096) of the f32 accumulation.
+        let pred = random_predictions(20, 10, 8, 23);
+        let f32_out = dynamic_routing(&pred, 3);
+        let q = quantize_coupling(&f32_out.coupling);
+        let lsb = 1.0 / 4096.0;
+        for (&qc, &fc) in q.iter().zip(&f32_out.coupling) {
+            assert!(
+                (qc.to_f32() - fc).abs() <= lsb,
+                "q12 {} vs f32 {fc}",
+                qc.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn accumulated_q12_tracks_f32_accumulated() {
+        let pred = random_predictions(24, 10, 8, 24);
+        let f32_iter = dynamic_routing(&pred, 3);
+        let mean = crate::routing::mean_coupling(
+            std::iter::once(f32_iter.coupling.as_slice()),
+        );
+        let f32_acc = crate::routing::accumulated_routing(&pred, &mean);
+        let q = PredictionsQ12::quantize(&pred);
+        let q_acc = accumulated_routing_q12(&q, &quantize_coupling(&mean));
+        for (a, b) in q_acc.lengths_f32().iter().zip(&f32_acc.lengths()) {
+            assert!((a - b).abs() < 0.05, "q12 length {a} vs f32 {b}");
         }
     }
 

@@ -14,6 +14,78 @@
 
 pub mod fixed;
 
+use std::fmt;
+
+/// How the routing stage runs at inference time.
+///
+/// * `Iterative(r)` — the classic Sabour et al. loop: `r` rounds of
+///   softmax → weighted sum → squash → agreement. This is what the
+///   paper accelerates and what training produces.
+/// * `Accumulated` — the Zhao et al. fast path ("Fast Inference in
+///   Capsule Networks Using Accumulated Routing Coefficients"): the
+///   coupling coefficients are *precomputed offline* as the mean of the
+///   final iterative coefficients over a calibration set, so serving
+///   does zero routing iterations — one weighted sum + squash, no
+///   softmax, no agreement updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingMode {
+    Iterative(usize),
+    Accumulated,
+}
+
+impl RoutingMode {
+    /// Routing iterations the cycle/DDR models should price: `r` for
+    /// the iterative loop, `0` for the accumulated fast path (the FC +
+    /// squash work rides the existing û stage; all per-iteration
+    /// softmax/agreement/logit terms vanish).
+    pub fn effective_iters(self) -> usize {
+        match self {
+            RoutingMode::Iterative(r) => r,
+            RoutingMode::Accumulated => 0,
+        }
+    }
+
+    /// True for the accumulated-coefficients fast path.
+    pub fn is_accumulated(self) -> bool {
+        matches!(self, RoutingMode::Accumulated)
+    }
+
+    /// Parse a CLI spelling: `accumulated`, `iterative` (model default
+    /// `r`), or `iterative:N`.
+    pub fn parse(s: &str, default_iters: usize) -> Option<RoutingMode> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "accumulated" | "acc" => Some(RoutingMode::Accumulated),
+            "iterative" | "iter" => Some(RoutingMode::Iterative(default_iters)),
+            _ => {
+                let rest = s.strip_prefix("iterative:").or_else(|| s.strip_prefix("iter:"))?;
+                rest.parse::<usize>().ok().map(RoutingMode::Iterative)
+            }
+        }
+    }
+
+    /// Stable tag mixed into deployment fingerprints: the cache must
+    /// never alias an iterative deployment with an accumulated one (or
+    /// two iterative deployments with different iteration counts).
+    /// Worker counts are deliberately *not* part of any fingerprint —
+    /// sharding a batch across cores is bit-identical by construction.
+    pub fn fingerprint_tag(self) -> u64 {
+        match self {
+            RoutingMode::Iterative(r) => 0x6974_6572_0000_0000 | r as u64,
+            RoutingMode::Accumulated => 0x6163_6375_6d5f_636f,
+        }
+    }
+}
+
+impl fmt::Display for RoutingMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RoutingMode::Iterative(r) => write!(f, "iterative({r})"),
+            RoutingMode::Accumulated => write!(f, "accumulated"),
+        }
+    }
+}
+
 /// Squash non-linearity: `v = (‖s‖² / (1 + ‖s‖²)) · s / ‖s‖`.
 pub fn squash(s: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; s.len()];
@@ -208,6 +280,75 @@ pub fn dynamic_routing_with(
     }
 }
 
+/// Accumulated-coefficients routing (Zhao et al.): the coupling matrix
+/// is a precomputed constant, so the whole routing stage collapses to
+/// one weighted sum + squash per output capsule — no softmax, no
+/// agreement, no iterations.
+pub fn accumulated_routing(pred: &Predictions, coupling: &[f32]) -> RoutingOutput {
+    accumulated_routing_with(pred, coupling, &mut RoutingScratch::new())
+}
+
+/// [`accumulated_routing`] with caller-owned scratch. The FC + squash
+/// loop body is *identical* (same accumulation order, element for
+/// element) to one pass of [`dynamic_routing_with`]'s weighted-sum
+/// stage, so the fast path inherits the iterative path's numerics.
+pub fn accumulated_routing_with(
+    pred: &Predictions,
+    coupling: &[f32],
+    scratch: &mut RoutingScratch,
+) -> RoutingOutput {
+    let (n_in, n_out, d) = (pred.n_in, pred.n_out, pred.d_out);
+    assert_eq!(
+        coupling.len(),
+        n_in * n_out,
+        "accumulated coupling shape mismatch"
+    );
+    let RoutingScratch { c, v, s, .. } = scratch;
+    c.clear();
+    c.extend_from_slice(coupling);
+    v.clear();
+    v.resize(n_out * d, 0.0);
+    s.clear();
+    s.resize(d, 0.0);
+    for j in 0..n_out {
+        s.fill(0.0);
+        for i in 0..n_in {
+            let cij = c[i * n_out + j];
+            let u = pred.at(i, j);
+            for (sk, &uk) in s.iter_mut().zip(u) {
+                *sk += cij * uk;
+            }
+        }
+        squash_into(s, &mut v[j * d..(j + 1) * d]);
+    }
+    RoutingOutput {
+        v: v.clone(),
+        coupling: c.clone(),
+        n_out,
+        d_out: d,
+    }
+}
+
+/// Mean of per-frame final coupling matrices — the offline accumulation
+/// pass. Every matrix must share one `[n_in][n_out]` geometry; each row
+/// of the mean still sums to ~1 (a convex combination of softmax rows).
+pub fn mean_coupling<'a>(matrices: impl Iterator<Item = &'a [f32]>) -> Vec<f32> {
+    let mut sum: Vec<f64> = Vec::new();
+    let mut n = 0usize;
+    for m in matrices {
+        if sum.is_empty() {
+            sum.resize(m.len(), 0.0);
+        }
+        assert_eq!(sum.len(), m.len(), "coupling geometry mismatch");
+        for (s, &x) in sum.iter_mut().zip(m) {
+            *s += x as f64;
+        }
+        n += 1;
+    }
+    assert!(n > 0, "mean_coupling needs at least one frame");
+    sum.iter().map(|&s| (s / n as f64) as f32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +473,96 @@ mod tests {
             let reused = dynamic_routing_with(&pred, 3, &mut scratch);
             assert_eq!(fresh.v, reused.v);
             assert_eq!(fresh.coupling, reused.coupling);
+        }
+    }
+
+    #[test]
+    fn routing_mode_parse_and_effective_iters() {
+        assert_eq!(
+            RoutingMode::parse("accumulated", 3),
+            Some(RoutingMode::Accumulated)
+        );
+        assert_eq!(
+            RoutingMode::parse("iterative", 3),
+            Some(RoutingMode::Iterative(3))
+        );
+        assert_eq!(
+            RoutingMode::parse("iterative:5", 3),
+            Some(RoutingMode::Iterative(5))
+        );
+        assert_eq!(RoutingMode::parse("warp", 3), None);
+        assert_eq!(RoutingMode::Iterative(3).effective_iters(), 3);
+        assert_eq!(RoutingMode::Accumulated.effective_iters(), 0);
+        assert_eq!(RoutingMode::Accumulated.to_string(), "accumulated");
+        assert_eq!(RoutingMode::Iterative(3).to_string(), "iterative(3)");
+        // Fingerprint tags never collide across modes or iteration
+        // counts — the cache-isolation satellite rides on this.
+        assert_ne!(
+            RoutingMode::Accumulated.fingerprint_tag(),
+            RoutingMode::Iterative(0).fingerprint_tag()
+        );
+        assert_ne!(
+            RoutingMode::Iterative(0).fingerprint_tag(),
+            RoutingMode::Iterative(3).fingerprint_tag()
+        );
+    }
+
+    #[test]
+    fn accumulated_with_uniform_coupling_matches_one_iteration() {
+        // One iterative round uses exactly-uniform coupling (softmax of
+        // zero logits), so the accumulated path fed the same uniform
+        // matrix must reproduce it bit for bit — same FC loop body.
+        let mut rng = Rng::new(11);
+        let (n_in, n_out, d) = (12, 4, 8);
+        let u: Vec<f32> = (0..n_in * n_out * d)
+            .map(|_| rng.normal_f32(0.0, 0.8))
+            .collect();
+        let pred = Predictions::new(n_in, n_out, d, u);
+        let iter1 = dynamic_routing(&pred, 1);
+        let uniform = vec![1.0f32 / n_out as f32; n_in * n_out];
+        let acc = accumulated_routing(&pred, &uniform);
+        assert_eq!(iter1.v, acc.v);
+        assert_eq!(acc.coupling, uniform);
+    }
+
+    #[test]
+    fn accumulated_scratch_reuse_is_bitwise() {
+        let mut rng = Rng::new(12);
+        let mut scratch = RoutingScratch::new();
+        for (n_in, n_out, d) in [(12, 4, 8), (5, 3, 4), (20, 10, 16)] {
+            let u: Vec<f32> = (0..n_in * n_out * d)
+                .map(|_| rng.normal_f32(0.0, 0.7))
+                .collect();
+            let c: Vec<f32> = (0..n_in * n_out)
+                .map(|_| rng.normal_f32(0.25, 0.05).abs())
+                .collect();
+            let pred = Predictions::new(n_in, n_out, d, u);
+            let fresh = accumulated_routing(&pred, &c);
+            let reused = accumulated_routing_with(&pred, &c, &mut scratch);
+            assert_eq!(fresh.v, reused.v);
+            assert_eq!(fresh.coupling, reused.coupling);
+        }
+    }
+
+    #[test]
+    fn mean_coupling_rows_stay_normalized() {
+        // The offline accumulation pass averages softmax rows, so each
+        // row of the mean is a convex combination and still sums to ~1.
+        let mut rng = Rng::new(13);
+        let (n_in, n_out, d) = (10, 4, 8);
+        let outs: Vec<RoutingOutput> = (0..6)
+            .map(|_| {
+                let u: Vec<f32> = (0..n_in * n_out * d)
+                    .map(|_| rng.normal_f32(0.0, 0.6))
+                    .collect();
+                dynamic_routing(&Predictions::new(n_in, n_out, d, u), 3)
+            })
+            .collect();
+        let mean = mean_coupling(outs.iter().map(|o| o.coupling.as_slice()));
+        assert_eq!(mean.len(), n_in * n_out);
+        for i in 0..n_in {
+            let row: f32 = mean[i * n_out..(i + 1) * n_out].iter().sum();
+            assert!((row - 1.0).abs() < 1e-4, "row {i} sums to {row}");
         }
     }
 

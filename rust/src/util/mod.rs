@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 
 /// Format a f64 with engineering-style thousands separators (`1_234_567`).

@@ -1,0 +1,91 @@
+//! Intra-replica multi-core fan-out (std-only, `std::thread::scope`).
+//!
+//! One coordinator replica historically ran a whole batch on one core.
+//! [`shard_chunks`] splits a batch into contiguous per-worker chunks and
+//! runs one scoped thread per chunk, returning per-chunk results in
+//! order. Frames are independent in every executor (each frame owns its
+//! scratch state), so sharding by frame is bit-identical to the serial
+//! path by construction — worker count can therefore never be part of a
+//! deployment fingerprint.
+
+/// Run `f` over contiguous chunks of `items` on up to `workers` scoped
+/// threads, returning the per-chunk results in input order.
+///
+/// * `workers <= 1` (or a batch of one) runs inline on the caller's
+///   thread — the serial path stays allocation- and thread-free.
+/// * Chunks are `ceil(len / workers)` long, so worker `k` always sees
+///   the same frames regardless of core count.
+/// * A panicking worker propagates the panic to the caller.
+pub fn shard_chunks<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&[T]) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len().max(1));
+    if workers <= 1 {
+        return vec![f(items)];
+    }
+    let chunk = items.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| scope.spawn(move || f(c)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking_preserves_order_and_coverage() {
+        let items: Vec<usize> = (0..17).collect();
+        for workers in [1, 2, 3, 4, 8, 32] {
+            let out: Vec<Vec<usize>> =
+                shard_chunks(&items, workers, |c| c.iter().map(|&x| x * 2).collect());
+            let flat: Vec<usize> = out.into_iter().flatten().collect();
+            assert_eq!(
+                flat,
+                items.iter().map(|&x| x * 2).collect::<Vec<_>>(),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs_run_inline() {
+        let out: Vec<usize> = shard_chunks(&[] as &[usize], 4, |c| c.len());
+        assert_eq!(out, vec![0]);
+        let out: Vec<usize> = shard_chunks(&[42usize], 4, |c| c[0]);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn worker_results_are_deterministic_across_counts() {
+        // The same frame always lands in a deterministic chunk, and the
+        // flattened output never depends on the worker count.
+        let items: Vec<f32> = (0..64).map(|i| i as f32 * 0.25).collect();
+        let serial: Vec<f32> =
+            shard_chunks(&items, 1, |c| c.iter().map(|x| x.sin()).collect::<Vec<_>>())
+                .into_iter()
+                .flatten()
+                .collect();
+        for workers in [2, 4, 7] {
+            let sharded: Vec<f32> =
+                shard_chunks(&items, workers, |c| {
+                    c.iter().map(|x| x.sin()).collect::<Vec<_>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+            assert_eq!(serial, sharded, "workers={workers}");
+        }
+    }
+}

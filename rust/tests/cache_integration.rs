@@ -36,6 +36,26 @@ fn deploy(keep_conv1: usize, keep_pc: usize, store: Arc<CacheStore>) -> Server {
     .start()
 }
 
+/// Serve the same compiled deployment as [`deploy(12, 128, …)`], but in
+/// accumulated-coefficients routing mode (coupling baked from a small
+/// calibration set through the compiled model's own numerics).
+fn deploy_accumulated(store: Arc<CacheStore>) -> Server {
+    let cfg = CapsNetConfig::tiny();
+    let mut rng = Rng::new(11);
+    let net = CapsNet::random(cfg.clone(), &mut rng);
+    let masks = NetworkMasks::lakp(&net.weights, &cfg, 12, 128);
+    let mut compiled = CompiledCapsNet::compile(&net, &masks).expect("compile");
+    let calib: Vec<Tensor> = (0..4).map(|i| image(&cfg, 500 + i)).collect();
+    let coupling = compiled.accumulate_coupling(&calib).expect("accumulate");
+    compiled.bake_accumulated(coupling).expect("bake coupling");
+    Server::builder(move || {
+        Ok(Box::new(SparseOracleBackend::new(compiled.clone())) as Box<dyn InferenceBackend>)
+    })
+    .max_wait(Duration::from_millis(1))
+    .cache_store(store)
+    .start()
+}
+
 fn image(cfg: &CapsNetConfig, seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
     let (c, h, w) = cfg.input;
@@ -120,4 +140,75 @@ fn redeploy_with_changed_masks_never_serves_stale_hits() {
     assert_eq!(m3.cache_hits, 4, "identical redeploy must hit v1's entries");
     assert_eq!(m3.cache_misses, 0);
     assert_eq!(m3.cache_stale, 0);
+}
+
+#[test]
+fn routing_mode_switch_never_serves_cross_mode_hits() {
+    // ISSUE 7 satellite pin: iterative and accumulated deployments of
+    // the SAME weights + masks share a cache store but never a cache
+    // key — the routing mode (and baked coefficients) are part of the
+    // deployment fingerprint, so a mode switch can't replay the other
+    // mode's responses.
+    let cfg = CapsNetConfig::tiny();
+    let store = Arc::new(CacheStore::new(
+        CacheConfig::default().entries,
+        CacheConfig::default().shards,
+    ));
+    let frames: Vec<Tensor> = (0..4).map(|i| image(&cfg, 200 + i)).collect();
+
+    // Iterative deployment fills the store.
+    let iter = deploy(12, 128, store.clone());
+    let fp_iter = iter.spec().expect("iter init").fingerprint;
+    let iter_resp: Vec<_> = frames
+        .iter()
+        .map(|f| iter.classify(f.clone()).expect("iterative classify"))
+        .collect();
+    let m_iter = iter.shutdown();
+    assert_eq!(m_iter.cache_misses, 4);
+    assert!(!store.is_empty());
+
+    // Accumulated deployment of the same model, same store: every
+    // request must miss and run the zero-iteration path.
+    let acc = deploy_accumulated(store.clone());
+    let fp_acc = acc.spec().expect("acc init").fingerprint;
+    assert_ne!(
+        fp_iter, fp_acc,
+        "routing mode must re-key the deployment fingerprint"
+    );
+    let acc_resp: Vec<_> = frames
+        .iter()
+        .map(|f| acc.classify(f.clone()).expect("accumulated classify"))
+        .collect();
+    assert!(
+        iter_resp
+            .iter()
+            .zip(&acc_resp)
+            .any(|(a, b)| a.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                != b.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>()),
+        "the two modes should differ on at least one frame \
+         (otherwise a cross-mode hit would be unobservable)"
+    );
+    let m_acc = acc.shutdown();
+    assert_eq!(
+        m_acc.cache_hits, 0,
+        "accumulated deployment served an iterative deployment's response"
+    );
+    assert_eq!(m_acc.cache_misses, 4);
+    assert_eq!(m_acc.cache_stale, 0);
+
+    // Back to iterative: the original entries are still keyed correctly.
+    let again = deploy(12, 128, store.clone());
+    assert_eq!(again.spec().expect("again init").fingerprint, fp_iter);
+    for (f, want) in frames.iter().zip(&iter_resp) {
+        let got = again.classify(f.clone()).expect("re-iterative classify");
+        assert_eq!(
+            got.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.lengths.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "returning to iterative mode must reuse its own cached responses"
+        );
+    }
+    let m_again = again.shutdown();
+    assert_eq!(m_again.cache_hits, 4);
+    assert_eq!(m_again.cache_misses, 0);
+    assert_eq!(m_again.cache_stale, 0);
 }

@@ -26,6 +26,9 @@ fn toy_spec(buckets: Vec<usize>) -> BackendSpec {
         max_replicas: None,
         compression: None,
         fingerprint: 0,
+        routing: String::new(),
+        workers: 1,
+        coupling_fingerprint: None,
     }
 }
 

@@ -21,9 +21,10 @@
 
 use super::store::{CacheStore, CachedOutput};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::ReplySink;
 use crate::coordinator::Response;
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 /// A parked duplicate request, served (or drop-notified) when the
@@ -31,7 +32,7 @@ use std::time::Instant;
 pub(crate) struct Waiter {
     pub id: u64,
     pub enqueued: Instant,
-    pub tx: mpsc::Sender<Response>,
+    pub sink: ReplySink,
 }
 
 struct FlightState {
@@ -86,8 +87,10 @@ pub(crate) struct FlightTable {
 pub(crate) enum FlightRole {
     /// No open flight: the caller is now the leader and must either run
     /// inference to completion or drop the lead (which drop-notifies).
-    Lead(FlightLead),
-    /// Parked on an existing flight; the caller's `rx` resolves when
+    /// The caller's waiter is handed back — its sink is the leader's own
+    /// delivery path, not parked on the flight.
+    Lead(FlightLead, Waiter),
+    /// Parked on an existing flight; the caller's sink resolves when
     /// the flight finishes.
     Joined,
     /// The flight finished between lookup and join — the waiter is
@@ -114,14 +117,17 @@ impl FlightTable {
         let entry = Arc::new(FlightEntry::new());
         table.insert(key, entry.clone());
         drop(table);
-        FlightRole::Lead(FlightLead {
-            key,
-            fingerprint,
-            entry,
-            store: store.clone(),
-            table: self.clone(),
-            completed: false,
-        })
+        FlightRole::Lead(
+            FlightLead {
+                key,
+                fingerprint,
+                entry,
+                store: store.clone(),
+                table: self.clone(),
+                completed: false,
+            },
+            waiter,
+        )
     }
 
     /// Remove `key` iff it still maps to this exact entry (a defensive
@@ -175,7 +181,7 @@ impl FlightLead {
         for w in self.entry.finish() {
             let r = cached.to_response(w.id, w.enqueued);
             m.record(r.latency_us);
-            let _ = w.tx.send(r); // waiter may have gone away; fine
+            w.sink.send(r); // a vanished waiter is fine
         }
     }
 }
@@ -196,6 +202,7 @@ impl Drop for FlightLead {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc;
 
     fn waiter(id: u64) -> (Waiter, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
@@ -203,7 +210,7 @@ mod tests {
             Waiter {
                 id,
                 enqueued: Instant::now(),
-                tx,
+                sink: ReplySink::Channel(tx),
             },
             rx,
         )
@@ -225,7 +232,7 @@ mod tests {
         let store = Arc::new(CacheStore::new(8, 1));
         let (w0, _rx0) = waiter(1);
         let mut lead = match table.join_or_lead(5, 99, &store, w0) {
-            FlightRole::Lead(l) => l,
+            FlightRole::Lead(l, _w) => l,
             _ => panic!("first caller must lead"),
         };
         let mut waiter_rxs = Vec::new();
@@ -258,7 +265,7 @@ mod tests {
         let store = Arc::new(CacheStore::new(8, 1));
         let (w0, rx0) = waiter(1);
         let lead = match table.join_or_lead(9, 1, &store, w0) {
-            FlightRole::Lead(l) => l,
+            FlightRole::Lead(l, _w) => l,
             _ => panic!("first caller must lead"),
         };
         let (w1, rx1) = waiter(2);
@@ -284,13 +291,16 @@ mod tests {
         let store = Arc::new(CacheStore::new(8, 1));
         let (w0, _rx0) = waiter(1);
         let lead = match table.join_or_lead(3, 1, &store, w0) {
-            FlightRole::Lead(l) => l,
+            FlightRole::Lead(l, _w) => l,
             _ => panic!(),
         };
         drop(lead);
         let (w1, _rx1) = waiter(2);
         assert!(
-            matches!(table.join_or_lead(3, 1, &store, w1), FlightRole::Lead(_)),
+            matches!(
+                table.join_or_lead(3, 1, &store, w1),
+                FlightRole::Lead(_, _)
+            ),
             "an aborted flight must not block retries from leading"
         );
     }
@@ -301,7 +311,7 @@ mod tests {
         let store = Arc::new(CacheStore::new(8, 1));
         let (w0, _rx0) = waiter(1);
         let mut lead = match table.join_or_lead(7, 1, &store, w0) {
-            FlightRole::Lead(l) => l,
+            FlightRole::Lead(l, _w) => l,
             _ => panic!(),
         };
         let mut m = Metrics::default();
@@ -310,7 +320,7 @@ mod tests {
         // Drop (identity check in FlightTable::remove).
         let (w1, _rx1) = waiter(2);
         let lead2 = match table.join_or_lead(7, 1, &store, w1) {
-            FlightRole::Lead(l) => l,
+            FlightRole::Lead(l, _w) => l,
             _ => panic!("store hit is checked by the caller, not the table"),
         };
         drop(lead);

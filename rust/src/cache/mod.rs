@@ -71,10 +71,12 @@ impl CacheConfig {
     }
 }
 
-/// Outcome of a cache lookup, consumed by `Server::submit`.
+/// Outcome of a cache lookup, consumed by `Server::submit_sink`. `Hit`
+/// and `Lead` hand the caller's waiter back — its sink is the delivery
+/// path for the caller's own response and must not die with the lookup.
 pub(crate) enum Lookup {
     /// Fingerprint-validated store hit: serve without touching the pool.
-    Hit(Arc<CachedOutput>),
+    Hit(Arc<CachedOutput>, Waiter),
     /// Parked on an in-flight identical request.
     Joined,
     /// Caller leads: run inference, then `lead.complete(...)`. `stale`
@@ -83,6 +85,7 @@ pub(crate) enum Lookup {
     /// is structurally impossible, and the counter it feeds stays 0.
     Lead {
         lead: flight::FlightLead,
+        waiter: Waiter,
         stale: bool,
     },
 }
@@ -150,7 +153,7 @@ impl InferenceCache {
         loop {
             if let Some(out) = self.store.get(key) {
                 if out.fingerprint == self.fingerprint {
-                    return Lookup::Hit(out);
+                    return Lookup::Hit(out, waiter);
                 }
                 // Refuse to serve it; lead a fresh flight that will
                 // overwrite the entry. (Unreachable by construction.)
@@ -160,7 +163,13 @@ impl InferenceCache {
                 .flights
                 .join_or_lead(key, self.fingerprint, &self.store, waiter)
             {
-                FlightRole::Lead(lead) => return Lookup::Lead { lead, stale },
+                FlightRole::Lead(lead, waiter) => {
+                    return Lookup::Lead {
+                        lead,
+                        waiter,
+                        stale,
+                    }
+                }
                 FlightRole::Joined => return Lookup::Joined,
                 FlightRole::Finished(w) => w,
             };
@@ -184,7 +193,7 @@ mod tests {
             Waiter {
                 id,
                 enqueued: Instant::now(),
-                tx,
+                sink: crate::coordinator::server::ReplySink::Channel(tx),
             },
             rx,
         )
@@ -235,7 +244,9 @@ mod tests {
         let (w, _rx) = waiter(1);
         let key1 = v1.key_of(&img);
         match v1.lookup(key1, w) {
-            Lookup::Lead { mut lead, stale } => {
+            Lookup::Lead {
+                mut lead, stale, ..
+            } => {
                 assert!(!stale);
                 let resp = crate::coordinator::Response {
                     id: 1,
@@ -251,7 +262,7 @@ mod tests {
         }
         let (w, _rx) = waiter(2);
         assert!(
-            matches!(v1.lookup(key1, w), Lookup::Hit(_)),
+            matches!(v1.lookup(key1, w), Lookup::Hit(_, _)),
             "same deployment must hit"
         );
         let v2 = InferenceCache::with_store(v1.store().clone(), 200);
@@ -294,6 +305,6 @@ mod tests {
             "coalesced response must be bit-identical to the leader's"
         );
         let (w3, _rx3) = waiter(3);
-        assert!(matches!(c.lookup(key, w3), Lookup::Hit(_)));
+        assert!(matches!(c.lookup(key, w3), Lookup::Hit(_, _)));
     }
 }

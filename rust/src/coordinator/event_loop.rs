@@ -1,0 +1,1036 @@
+//! Sharded readiness event loop: the IO half of the network front-end.
+//!
+//! Each *shard* is one thread owning a set of nonblocking connections,
+//! multiplexed with `poll(2)` (std-only: the symbol is reached through
+//! a direct `extern "C"` declaration — std already links libc — with a
+//! portable short-sleep sweep fallback off unix). The acceptor hands
+//! sockets round-robin to shards over an [`Event`] channel; a one-byte
+//! [`Waker`] pipe gets a parked shard out of `poll` when an event
+//! arrives.
+//!
+//! ```text
+//!  acceptor ──Accept──► shard 0 ─┬─ conn: rbuf ─ parse ─ submit_sink ──► pool
+//!            round-robin shard 1 │        wbuf ◄─ encode ◄─ Done/Failed ◄─┘
+//!                        …       └─ waker pipe (event arrived, leave poll)
+//! ```
+//!
+//! The executor pool never touches a socket: a completed request comes
+//! back as an [`Event::Done`] carried by the [`ShardSink`] the request
+//! was submitted with, and the shard that owns the connection encodes
+//! and writes the frame. Writes go through a bounded per-connection
+//! buffer — a peer that stops reading first loses read service (its
+//! requests stop being parsed at half the budget) and is then
+//! disconnected outright when the buffer overflows
+//! (`net_slow_client_drops` in the metrics), so a slowloris reader can
+//! never stall a replica thread or grow server memory.
+//!
+//! Per-connection protocol state lives in [`Conn`]: wire version
+//! latching (v1 in-order emulation via a tag reorder buffer, v2 writes
+//! completions as they land), graceful-shutdown acks deferred until the
+//! connection's in-flight requests drain, and a lingering close on
+//! desynchronized streams so the typed error frame survives instead of
+//! being destroyed by a TCP reset. The same listener also answers
+//! plaintext probes (`HEALTH`/`READY`/`METRICS`, or HTTP `GET
+//! /healthz|/readyz|/metrics`): the first bytes of a connection are
+//! sniffed, and anything that is neither a probe token nor frame magic
+//! still gets the typed `BadMagic` error frame.
+
+use super::net::NetShared;
+use super::server::ReplySink;
+use super::wire::{self, ErrorCode, Fault, FrameType};
+use super::Response;
+use crate::backend::BackendError;
+use crate::tensor::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Read granularity; also the per-`read` cap a single connection gets
+/// before the shard moves on (fairness under a firehose sender).
+const READ_CHUNK: usize = 16 * 1024;
+/// Reads one connection may issue per readiness tick.
+const READ_ROUNDS: usize = 4;
+/// Lingering-close window on a desynchronized stream: how long (and how
+/// many bytes) of already-sent peer data to swallow so our FIN is not
+/// turned into a RST while the error frame is still in flight.
+const LINGER: Duration = Duration::from_millis(200);
+const LINGER_BUDGET: usize = 64 * 1024;
+/// Hard ceiling on a graceful drain: past this, connections that still
+/// have not flushed are dropped.
+const DRAIN_FORCE: Duration = Duration::from_secs(10);
+/// Largest probe/HTTP request head we accept before declaring the text
+/// peer broken.
+const MAX_TEXT_HEAD: usize = 4096;
+
+// ---------------------------------------------------------------------
+// readiness primitive
+
+/// Minimal `poll(2)` surface. std links libc, so the symbol resolves
+/// without any external crate; the constants and layouts below are the
+/// POSIX-mandated ones.
+#[cfg(unix)]
+mod sys {
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = u64;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = u32;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    }
+
+    /// Block until any fd is ready or `timeout_ms` passes, retrying
+    /// signal interruptions.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+/// Gets a shard out of a blocked `poll` when an event is queued from
+/// another thread (acceptor handoff, executor completion). One byte
+/// down a nonblocking socketpair; a full pipe is fine — the shard is
+/// already guaranteed to wake.
+#[cfg(unix)]
+pub(crate) struct Waker {
+    tx: std::os::unix::net::UnixStream,
+    rx: std::os::unix::net::UnixStream,
+}
+
+#[cfg(unix)]
+impl Waker {
+    fn new() -> io::Result<Waker> {
+        let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Waker { tx, rx })
+    }
+
+    pub(crate) fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+
+    fn read_fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd;
+        self.rx.as_raw_fd()
+    }
+}
+
+/// Off unix the shard falls back to a short-sleep sweep, so the waker
+/// has nothing to do.
+#[cfg(not(unix))]
+pub(crate) struct Waker;
+
+#[cfg(not(unix))]
+impl Waker {
+    fn new() -> io::Result<Waker> {
+        Ok(Waker)
+    }
+
+    pub(crate) fn wake(&self) {}
+
+    fn drain(&self) {}
+}
+
+// ---------------------------------------------------------------------
+// shard mailbox
+
+/// Everything that reaches a shard from outside its own sockets.
+pub(crate) enum Event {
+    /// A connection the acceptor assigned to this shard.
+    Accept(TcpStream),
+    /// The executor finished a request submitted by this shard.
+    Done { conn: u64, tag: u64, resp: Response },
+    /// The executor dropped the request without a response (backend
+    /// failure, shutdown race): the tag gets a typed `Unavailable`.
+    Failed { conn: u64, tag: u64 },
+}
+
+/// The delivery half of one submitted request: carries the owning
+/// connection id and tag back to the shard as an [`Event`]. Dropping a
+/// sink that never sent reports [`Event::Failed`] — exactly the
+/// disconnected-channel semantics the in-process path gets from a
+/// dropped `mpsc::Sender`.
+pub(crate) struct ShardSink {
+    conn: u64,
+    tag: u64,
+    tx: mpsc::Sender<Event>,
+    waker: Arc<Waker>,
+    sent: bool,
+}
+
+impl ShardSink {
+    pub(crate) fn send(mut self, resp: Response) {
+        self.sent = true;
+        let _ = self.tx.send(Event::Done {
+            conn: self.conn,
+            tag: self.tag,
+            resp,
+        });
+        self.waker.wake();
+    }
+
+    /// Consume without any event — for synchronous rejections where the
+    /// shard already answered the tag with a typed error frame.
+    pub(crate) fn dispose(mut self) {
+        self.sent = true;
+    }
+}
+
+impl Drop for ShardSink {
+    fn drop(&mut self) {
+        if !self.sent {
+            let _ = self.tx.send(Event::Failed {
+                conn: self.conn,
+                tag: self.tag,
+            });
+            self.waker.wake();
+        }
+    }
+}
+
+/// The acceptor's (and drain's) handle to one shard.
+#[derive(Clone)]
+pub(crate) struct ShardHandle {
+    tx: mpsc::Sender<Event>,
+    waker: Arc<Waker>,
+}
+
+impl ShardHandle {
+    pub(crate) fn accept(&self, stream: TcpStream) {
+        let _ = self.tx.send(Event::Accept(stream));
+        self.waker.wake();
+    }
+
+    pub(crate) fn wake(&self) {
+        self.waker.wake();
+    }
+}
+
+/// Spawn one IO shard thread. Fails only on resource exhaustion at
+/// bind time (thread or socketpair), before any traffic is accepted.
+pub(crate) fn spawn_shard(
+    idx: usize,
+    shared: Arc<NetShared>,
+) -> io::Result<(ShardHandle, JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel();
+    let waker = Arc::new(Waker::new()?);
+    let handle = ShardHandle {
+        tx: tx.clone(),
+        waker: waker.clone(),
+    };
+    let join = std::thread::Builder::new()
+        .name(format!("fastcaps-net-shard-{idx}"))
+        .spawn(move || {
+            Shard {
+                idx,
+                shared,
+                rx,
+                tx,
+                waker,
+                conns: HashMap::new(),
+                drain_deadline: None,
+            }
+            .run()
+        })?;
+    Ok((handle, join))
+}
+
+// ---------------------------------------------------------------------
+// connection state machine
+
+/// What the first bytes of a connection turned out to be.
+enum Mode {
+    /// Not enough bytes to decide yet.
+    Sniff,
+    /// FastCaps frames (v1 or v2, latched on the first frame).
+    Binary,
+    /// A plaintext probe (`HEALTH`/`READY`/`METRICS` or HTTP GET).
+    Text,
+}
+
+const TEXT_PREFIXES: [&[u8]; 5] = [b"HEALTH", b"READY", b"METRICS", b"GET ", b"HEAD "];
+
+/// One connection owned by one shard. All IO is nonblocking; the shard
+/// only touches it when `poll` reports readiness.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    mode: Mode,
+    /// Wire version latched from the first frame (0 = not yet latched).
+    /// Mixing versions afterwards is a `Malformed` desync.
+    version: u8,
+    /// v1 clients don't tag requests: the server assigns sequential
+    /// internal tags and restores strict request order on the way out.
+    next_v1_tag: u64,
+    /// v1 response order: front = next tag whose frame may be written.
+    inorder: VecDeque<u64>,
+    /// v1 completions that arrived out of order, parked until their
+    /// turn. Bounded by the connection's own in-flight requests.
+    parked: HashMap<u64, Vec<u8>>,
+    /// Requests submitted to the pool and not yet completed/failed.
+    outstanding: usize,
+    /// Stop parsing new requests (shutdown frame, desync, drain, EOF).
+    read_closed: bool,
+    /// Close once everything owed has been written.
+    close_after_flush: bool,
+    /// A graceful-shutdown ack is owed once in-flight work drains.
+    ack_when_drained: bool,
+    /// Lingering close (desync): swallow peer bytes until the deadline,
+    /// the byte budget, or EOF.
+    linger_until: Option<Instant>,
+    linger_budget: usize,
+    /// Set by `poll` (or optimistically at accept); consumed by the
+    /// service pass.
+    ready_read: bool,
+    ready_write: bool,
+    peer_eof: bool,
+    /// Fatal transport state: reap without further IO.
+    dead: bool,
+    /// Dead specifically because the write buffer overflowed.
+    slow_drop: bool,
+    wire_requests: u64,
+    wire_errors: u64,
+}
+
+impl Conn {
+    fn new(id: u64, stream: TcpStream) -> Conn {
+        Conn {
+            id,
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            mode: Mode::Sniff,
+            version: 0,
+            next_v1_tag: 0,
+            inorder: VecDeque::new(),
+            parked: HashMap::new(),
+            outstanding: 0,
+            read_closed: false,
+            close_after_flush: false,
+            ack_when_drained: false,
+            linger_until: None,
+            linger_budget: 0,
+            ready_read: true, // the client may have sent bytes already
+            ready_write: false,
+            peer_eof: false,
+            dead: false,
+            slow_drop: false,
+            wire_requests: 0,
+            wire_errors: 0,
+        }
+    }
+
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    fn lingering(&self) -> bool {
+        self.linger_until.is_some() && !self.peer_eof && self.linger_budget > 0
+    }
+
+    fn wants_read(&self, max_wbuf: usize) -> bool {
+        !self.dead
+            && ((self.lingering())
+                || (!self.read_closed && self.pending_write() < max_wbuf / 2))
+    }
+
+    /// Deliver one completed tag's encoded frame: v2 writes it straight
+    /// out; v1 holds it to the strict request order.
+    fn complete(&mut self, tag: u64, frame: Vec<u8>) {
+        if self.version == wire::V2 {
+            self.wbuf.extend_from_slice(&frame);
+        } else {
+            self.parked.insert(tag, frame);
+            while let Some(&front) = self.inorder.front() {
+                match self.parked.remove(&front) {
+                    Some(f) => {
+                        self.wbuf.extend_from_slice(&f);
+                        self.inorder.pop_front();
+                    }
+                    None => break,
+                }
+            }
+        }
+        self.maybe_ack();
+    }
+
+    /// Emit the deferred shutdown ack once every in-flight request on
+    /// this connection has been answered (v1: and written in order).
+    fn maybe_ack(&mut self) {
+        if self.ack_when_drained && self.outstanding == 0 && self.inorder.is_empty() {
+            self.ack_when_drained = false;
+            let v = if self.version == 0 { wire::VERSION } else { self.version };
+            let ack = wire::encode_empty(v, FrameType::ShutdownAck);
+            self.wbuf.extend_from_slice(&ack);
+            self.close_after_flush = true;
+        }
+    }
+
+    /// Connection-level failure: typed error frame, then a lingering
+    /// close. On a latched v1 stream the error takes a response slot in
+    /// order (after every pipelined response, like the blocking
+    /// front-end wrote it); otherwise it is written directly — with the
+    /// connection tag on v2.
+    fn fail_stream(&mut self, code: ErrorCode, msg: &str) {
+        self.wire_errors += 1;
+        if self.version == wire::VERSION {
+            let tag = self.next_v1_tag;
+            self.next_v1_tag += 1;
+            self.inorder.push_back(tag);
+            let frame = wire::encode_error(wire::VERSION, tag, code, msg);
+            self.complete(tag, frame);
+        } else {
+            let v = if self.version == 0 { wire::VERSION } else { self.version };
+            let frame = wire::encode_error(v, wire::CONN_TAG, code, msg);
+            self.wbuf.extend_from_slice(&frame);
+        }
+        self.read_closed = true;
+        self.close_after_flush = true;
+        self.linger_until = Some(Instant::now() + LINGER);
+        self.linger_budget = LINGER_BUDGET;
+    }
+
+    /// Nonblocking flush of the write buffer.
+    fn flush_wbuf(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > READ_CHUNK {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    /// Nonblocking read into the parse buffer (bounded per tick).
+    fn read_some(&mut self) {
+        let mut buf = [0u8; READ_CHUNK];
+        for _ in 0..READ_ROUNDS {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    self.read_closed = true;
+                    self.close_after_flush = true;
+                    break;
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Lingering-close read: swallow and discard peer bytes.
+    fn linger_read(&mut self) {
+        let mut buf = [0u8; 4096];
+        while self.linger_budget > 0 {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    break;
+                }
+                Ok(n) => self.linger_budget = self.linger_budget.saturating_sub(n),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Whether the shard may reap this connection now.
+    fn should_close(&self, now: Instant) -> bool {
+        if self.dead {
+            return true;
+        }
+        if !self.close_after_flush || self.pending_write() > 0 {
+            return false;
+        }
+        if self.outstanding > 0 || !self.inorder.is_empty() || self.ack_when_drained {
+            return false;
+        }
+        match self.linger_until {
+            None => true,
+            Some(t) => self.peer_eof || self.linger_budget == 0 || now >= t,
+        }
+    }
+}
+
+/// Decide what a fresh connection is from its first bytes. `None` =
+/// still ambiguous (a strict prefix of a probe token), read more.
+fn sniff(buf: &[u8]) -> Option<Mode> {
+    if buf.is_empty() {
+        return None;
+    }
+    for p in TEXT_PREFIXES {
+        if buf.len() >= p.len() {
+            if &buf[..p.len()] == p {
+                return Some(Mode::Text);
+            }
+        } else if p.starts_with(buf) {
+            return None;
+        }
+    }
+    Some(Mode::Binary)
+}
+
+// ---------------------------------------------------------------------
+// the shard itself
+
+struct Shard {
+    idx: usize,
+    shared: Arc<NetShared>,
+    rx: mpsc::Receiver<Event>,
+    /// Kept so submitted sinks always have a live channel; also cloned
+    /// into every [`ShardSink`].
+    tx: mpsc::Sender<Event>,
+    waker: Arc<Waker>,
+    conns: HashMap<u64, Conn>,
+    drain_deadline: Option<Instant>,
+}
+
+impl Shard {
+    fn run(mut self) {
+        loop {
+            self.drain_events();
+            let draining = self.shared.draining.load(Ordering::SeqCst);
+            if draining && self.drain_deadline.is_none() {
+                self.drain_deadline = Some(Instant::now() + DRAIN_FORCE);
+                for c in self.conns.values_mut() {
+                    c.read_closed = true;
+                    c.close_after_flush = true;
+                    c.maybe_ack();
+                }
+            }
+
+            // Service pass: write what's owed, read what's ready, parse.
+            let ids: Vec<u64> = self.conns.keys().copied().collect();
+            let now = Instant::now();
+            for id in ids {
+                let Some(mut conn) = self.conns.remove(&id) else {
+                    continue;
+                };
+                self.service(&mut conn);
+                if conn.should_close(now) {
+                    self.close_conn(conn);
+                } else {
+                    self.conns.insert(id, conn);
+                }
+            }
+
+            if draining {
+                if self.conns.is_empty() {
+                    return;
+                }
+                if self.drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                    // Force the stragglers: whatever has not flushed by
+                    // now is not going to.
+                    let leftovers: Vec<Conn> =
+                        self.conns.drain().map(|(_, c)| c).collect();
+                    for c in leftovers {
+                        self.close_conn(c);
+                    }
+                    return;
+                }
+            }
+
+            self.wait_ready(draining);
+        }
+    }
+
+    fn drain_events(&mut self) {
+        while let Ok(ev) = self.rx.try_recv() {
+            match ev {
+                Event::Accept(stream) => self.accept(stream),
+                Event::Done { conn, tag, resp } => {
+                    if let Some(c) = self.conns.get_mut(&conn) {
+                        c.outstanding = c.outstanding.saturating_sub(1);
+                        let frame = wire::encode_response(c.version, tag, &resp);
+                        c.complete(tag, frame);
+                    }
+                }
+                Event::Failed { conn, tag } => {
+                    if let Some(c) = self.conns.get_mut(&conn) {
+                        c.outstanding = c.outstanding.saturating_sub(1);
+                        c.wire_errors += 1;
+                        let frame = wire::encode_error(
+                            c.version,
+                            tag,
+                            ErrorCode::Unavailable,
+                            "executor dropped the request (backend failure or shutdown)",
+                        );
+                        c.complete(tag, frame);
+                    }
+                }
+            }
+        }
+    }
+
+    fn accept(&mut self, stream: TcpStream) {
+        if self.shared.draining.load(Ordering::SeqCst) {
+            return; // dropping the stream closes it
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let id = self.shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        self.shared.server.with_metrics(|m| {
+            m.record_connection_opened();
+            m.record_shard_connection(self.idx);
+        });
+        self.conns.insert(id, Conn::new(id, stream));
+    }
+
+    fn close_conn(&self, conn: Conn) {
+        self.shared.server.with_metrics(|m| {
+            m.record_connection_closed(conn.wire_requests, conn.wire_errors);
+            if conn.slow_drop {
+                m.record_slow_client_drop();
+            }
+        });
+        // Dropping `conn.stream` closes the socket.
+    }
+
+    fn service(&mut self, conn: &mut Conn) {
+        if conn.dead {
+            return;
+        }
+        if conn.ready_write || conn.pending_write() > 0 {
+            conn.flush_wbuf();
+        }
+        if conn.ready_read && !conn.dead {
+            if conn.lingering() {
+                conn.linger_read();
+            } else if !conn.read_closed
+                && conn.pending_write() < self.shared.max_wbuf / 2
+            {
+                conn.read_some();
+            }
+        }
+        conn.ready_read = false;
+        conn.ready_write = false;
+        self.parse(conn);
+        if conn.pending_write() > 0 {
+            conn.flush_wbuf();
+        }
+        if conn.pending_write() > self.shared.max_wbuf {
+            conn.dead = true;
+            conn.slow_drop = true;
+        }
+    }
+
+    fn parse(&mut self, conn: &mut Conn) {
+        if conn.dead || conn.read_closed {
+            return;
+        }
+        if matches!(conn.mode, Mode::Sniff) {
+            match sniff(&conn.rbuf) {
+                None => return,
+                Some(mode) => conn.mode = mode,
+            }
+        }
+        match conn.mode {
+            Mode::Sniff => unreachable!("sniff resolved above"),
+            Mode::Text => self.handle_text(conn),
+            Mode::Binary => self.handle_binary(conn),
+        }
+    }
+
+    fn handle_binary(&mut self, conn: &mut Conn) {
+        loop {
+            match wire::scan_frame(&conn.rbuf) {
+                Ok(None) => break,
+                Ok(Some(f)) => {
+                    let payload = conn.rbuf[wire::HEADER_LEN..f.total_len].to_vec();
+                    conn.rbuf.drain(..f.total_len);
+                    self.process_frame(conn, f.version, f.ty, &payload);
+                    if conn.read_closed || conn.dead {
+                        break;
+                    }
+                }
+                Err(fault) => {
+                    let code = match fault {
+                        Fault::Oversized(_) => ErrorCode::Oversized,
+                        _ => ErrorCode::Malformed,
+                    };
+                    conn.fail_stream(code, &fault.to_string());
+                    break;
+                }
+            }
+        }
+    }
+
+    fn process_frame(&mut self, conn: &mut Conn, version: u8, ty: FrameType, payload: &[u8]) {
+        if conn.version == 0 {
+            conn.version = version;
+        } else if conn.version != version {
+            let negotiated = conn.version;
+            conn.fail_stream(
+                ErrorCode::Malformed,
+                &format!(
+                    "mixed protocol versions on one connection \
+                     (negotiated v{negotiated}, then got a v{version} frame)"
+                ),
+            );
+            return;
+        }
+        match ty {
+            FrameType::Classify => self.process_classify(conn, version, payload),
+            FrameType::Shutdown => {
+                self.shared.request_shutdown();
+                conn.read_closed = true;
+                conn.ack_when_drained = true;
+                conn.maybe_ack();
+            }
+            other => {
+                conn.fail_stream(
+                    ErrorCode::Malformed,
+                    &format!("client sent server-side frame type {other:?}"),
+                );
+            }
+        }
+    }
+
+    fn process_classify(&mut self, conn: &mut Conn, version: u8, payload: &[u8]) {
+        conn.wire_requests += 1;
+        let (tag, image_bytes) = if version == wire::V2 {
+            match wire::decode_classify_v2(payload) {
+                Ok(split) => split,
+                Err(f) => {
+                    conn.fail_stream(ErrorCode::Malformed, &f.to_string());
+                    return;
+                }
+            }
+        } else {
+            let tag = conn.next_v1_tag;
+            conn.next_v1_tag += 1;
+            conn.inorder.push_back(tag);
+            (tag, payload)
+        };
+        let (c, h, w) = self.shared.input_shape;
+        let expected_bytes = self.shared.expected_bytes;
+        let len = image_bytes.len();
+        if len != expected_bytes as usize {
+            // Spec-driven shape validation at the wire boundary: typed
+            // error, connection survives.
+            conn.wire_errors += 1;
+            let frame = wire::encode_error(
+                version,
+                tag,
+                ErrorCode::InvalidRequest,
+                &format!(
+                    "image payload is {len} bytes; backend input shape \
+                     ({c}, {h}, {w}) needs exactly {expected_bytes} \
+                     bytes of f32-le data"
+                ),
+            );
+            conn.complete(tag, frame);
+            return;
+        }
+        let image = match wire::decode_classify(image_bytes)
+            .map_err(|f| f.to_string())
+            .and_then(|data| Tensor::from_vec(&[c, h, w], data).map_err(|e| e.to_string()))
+        {
+            Ok(img) => img,
+            Err(msg) => {
+                conn.wire_errors += 1;
+                let frame =
+                    wire::encode_error(version, tag, ErrorCode::InvalidRequest, &msg);
+                conn.complete(tag, frame);
+                return;
+            }
+        };
+        let sink = ReplySink::Shard(ShardSink {
+            conn: conn.id,
+            tag,
+            tx: self.tx.clone(),
+            waker: self.waker.clone(),
+            sent: false,
+        });
+        match self.shared.server.submit_sink(image, sink) {
+            Ok(()) => conn.outstanding += 1,
+            Err(e) => {
+                conn.wire_errors += 1;
+                let code = match &e {
+                    BackendError::QueueFull { .. } => ErrorCode::QueueFull,
+                    BackendError::Unavailable(_) => ErrorCode::Unavailable,
+                    _ => ErrorCode::Execution,
+                };
+                let frame = wire::encode_error(version, tag, code, &e.to_string());
+                conn.complete(tag, frame);
+            }
+        }
+    }
+
+    /// Plaintext sidecar: raw probe tokens answer on the first line;
+    /// HTTP requests wait for the full header block, answer, and close.
+    fn handle_text(&mut self, conn: &mut Conn) {
+        let Some(line_end) = conn.rbuf.iter().position(|&b| b == b'\n') else {
+            if conn.rbuf.len() > MAX_TEXT_HEAD {
+                conn.dead = true;
+            }
+            return;
+        };
+        let line = String::from_utf8_lossy(&conn.rbuf[..line_end])
+            .trim_end_matches('\r')
+            .to_string();
+        let reply: Vec<u8> = if line.starts_with("GET ") || line.starts_with("HEAD ") {
+            // Wait for the end of the request head so closing our side
+            // doesn't race the client still sending headers.
+            let done = conn.rbuf.windows(4).any(|w| w == b"\r\n\r\n")
+                || conn.rbuf.windows(2).any(|w| w == b"\n\n");
+            if !done {
+                if conn.rbuf.len() > MAX_TEXT_HEAD {
+                    conn.dead = true;
+                }
+                return;
+            }
+            let path = line.split_whitespace().nth(1).unwrap_or("/");
+            let head_only = line.starts_with("HEAD ");
+            let (status, body) = match path {
+                "/healthz" => ("200 OK", "ok\n".to_string()),
+                "/readyz" => {
+                    if self.shared.ready() {
+                        ("200 OK", "ready\n".to_string())
+                    } else {
+                        ("503 Service Unavailable", "not ready\n".to_string())
+                    }
+                }
+                "/metrics" => ("200 OK", self.shared.server.with_metrics(|m| m.exposition())),
+                _ => ("404 Not Found", "not found\n".to_string()),
+            };
+            let mut resp = format!(
+                "HTTP/1.0 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n",
+                body.len()
+            );
+            if !head_only {
+                resp.push_str(&body);
+            }
+            resp.into_bytes()
+        } else {
+            match line.as_str() {
+                "HEALTH" => b"OK\n".to_vec(),
+                "READY" => {
+                    if self.shared.ready() {
+                        b"READY\n".to_vec()
+                    } else {
+                        b"NOT_READY\n".to_vec()
+                    }
+                }
+                "METRICS" => self
+                    .shared
+                    .server
+                    .with_metrics(|m| m.exposition())
+                    .into_bytes(),
+                other => format!("ERR unknown probe {other:?}\n").into_bytes(),
+            }
+        };
+        conn.rbuf.clear();
+        conn.wbuf.extend_from_slice(&reply);
+        conn.read_closed = true;
+        conn.close_after_flush = true;
+    }
+
+    /// Park until a socket is ready, an event arrives (waker), or the
+    /// tick expires (linger/drain deadlines need a clock).
+    #[cfg(unix)]
+    fn wait_ready(&mut self, draining: bool) {
+        use std::os::unix::io::AsRawFd;
+        let timeout_ms = if draining || self.conns.values().any(|c| c.linger_until.is_some())
+        {
+            20
+        } else {
+            250
+        };
+        let mut fds = Vec::with_capacity(self.conns.len() + 1);
+        let mut ids = Vec::with_capacity(self.conns.len());
+        fds.push(sys::PollFd {
+            fd: self.waker.read_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        for (id, c) in &self.conns {
+            let mut events = 0i16;
+            if c.wants_read(self.shared.max_wbuf) {
+                events |= sys::POLLIN;
+            }
+            if c.pending_write() > 0 {
+                events |= sys::POLLOUT;
+            }
+            if events == 0 {
+                continue;
+            }
+            fds.push(sys::PollFd {
+                fd: c.stream.as_raw_fd(),
+                events,
+                revents: 0,
+            });
+            ids.push(*id);
+        }
+        match sys::poll_fds(&mut fds, timeout_ms) {
+            Ok(n) if n > 0 => {
+                for (i, id) in ids.iter().enumerate() {
+                    let r = fds[i + 1].revents;
+                    if r == 0 {
+                        continue;
+                    }
+                    if let Some(c) = self.conns.get_mut(id) {
+                        c.ready_read = r & (sys::POLLIN | sys::POLLERR | sys::POLLHUP) != 0;
+                        c.ready_write = r & (sys::POLLOUT | sys::POLLERR | sys::POLLHUP) != 0;
+                    }
+                }
+            }
+            Ok(_) => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+        self.waker.drain();
+    }
+
+    /// Portable fallback: a short-sleep sweep that treats every
+    /// connection as ready (nonblocking IO makes that correct, just
+    /// less efficient).
+    #[cfg(not(unix))]
+    fn wait_ready(&mut self, _draining: bool) {
+        std::thread::sleep(Duration::from_millis(2));
+        self.waker.drain();
+        for c in self.conns.values_mut() {
+            c.ready_read = true;
+            c.ready_write = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sniff_classifies_probe_binary_and_ambiguous_prefixes() {
+        assert!(matches!(sniff(b"HEALTH\n"), Some(Mode::Text)));
+        assert!(matches!(sniff(b"READY\n"), Some(Mode::Text)));
+        assert!(matches!(sniff(b"METRICS\n"), Some(Mode::Text)));
+        assert!(matches!(sniff(b"GET /metrics HTTP/1.1"), Some(Mode::Text)));
+        assert!(matches!(sniff(b"HEAD /healthz"), Some(Mode::Text)));
+        assert!(matches!(sniff(b"FCAP"), Some(Mode::Binary)));
+        assert!(matches!(sniff(b"garbage"), Some(Mode::Binary)));
+        // Strict prefixes of probe tokens stay ambiguous: wait for more.
+        assert!(sniff(b"").is_none());
+        assert!(sniff(b"HEA").is_none());
+        assert!(sniff(b"GET").is_none());
+        assert!(sniff(b"METRIC").is_none());
+        // Diverging early resolves immediately.
+        assert!(matches!(sniff(b"HEX"), Some(Mode::Binary)));
+    }
+
+    #[test]
+    fn v1_reorder_buffer_restores_request_order() {
+        let stream = loopback_stream();
+        let mut conn = Conn::new(1, stream);
+        conn.version = wire::VERSION;
+        // Three requests in flight, completing 2, 0, 1.
+        for t in 0..3u64 {
+            conn.inorder.push_back(t);
+        }
+        conn.complete(2, vec![b'c']);
+        assert_eq!(conn.pending_write(), 0, "tag 2 must wait for 0 and 1");
+        conn.complete(0, vec![b'a']);
+        assert_eq!(conn.wbuf, b"a", "tag 0 flushes alone");
+        conn.complete(1, vec![b'b']);
+        assert_eq!(conn.wbuf, b"abc", "1 then parked 2 flush together");
+        assert!(conn.inorder.is_empty());
+    }
+
+    #[test]
+    fn v2_completions_write_through_immediately() {
+        let stream = loopback_stream();
+        let mut conn = Conn::new(1, stream);
+        conn.version = wire::V2;
+        conn.complete(7, vec![b'x']);
+        conn.complete(3, vec![b'y']);
+        assert_eq!(conn.wbuf, b"xy", "v2 writes in completion order");
+    }
+
+    #[test]
+    fn shutdown_ack_defers_until_drained() {
+        let stream = loopback_stream();
+        let mut conn = Conn::new(1, stream);
+        conn.version = wire::V2;
+        conn.outstanding = 1;
+        conn.ack_when_drained = true;
+        conn.maybe_ack();
+        assert_eq!(conn.pending_write(), 0, "ack must wait for in-flight work");
+        conn.outstanding = 0;
+        conn.complete(0, Vec::new());
+        assert!(conn.pending_write() > 0, "drained: ack frame written");
+        assert!(conn.close_after_flush);
+    }
+
+    /// A real connected socket pair so Conn has a stream to own; the
+    /// tests above never perform IO on it.
+    fn loopback_stream() -> TcpStream {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let _server = listener.accept().unwrap();
+        client
+    }
+}

@@ -133,6 +133,13 @@ pub struct Metrics {
     /// so this is structurally impossible and must stay 0 — a nonzero
     /// value means the key derivation broke.
     pub cache_stale: u64,
+    /// Connections dropped because their bounded write buffer overflowed
+    /// (a slowloris reader that stops draining responses). The executor
+    /// pool never blocks on these; the connection pays instead.
+    pub slow_client_drops: u64,
+    /// Connections accepted per IO shard (index = shard id). Grows to
+    /// the shard count on first use; all-zero on in-process serving.
+    pub shard_connections: Vec<u64>,
     pub started: Instant,
     /// Wall time frozen by [`Metrics::snapshot`]; `None` while the
     /// metrics are live inside the server.
@@ -158,6 +165,8 @@ impl Default for Metrics {
             cache_coalesced: 0,
             cache_evicted: 0,
             cache_stale: 0,
+            slow_client_drops: 0,
+            shard_connections: Vec::new(),
             started: Instant::now(),
             elapsed: None,
         }
@@ -189,6 +198,18 @@ impl Metrics {
 
     pub fn record_connection_opened(&mut self) {
         self.connections_opened += 1;
+    }
+
+    /// Attribute an accepted connection to its IO shard.
+    pub fn record_shard_connection(&mut self, shard: usize) {
+        if self.shard_connections.len() <= shard {
+            self.shard_connections.resize(shard + 1, 0);
+        }
+        self.shard_connections[shard] += 1;
+    }
+
+    pub fn record_slow_client_drop(&mut self) {
+        self.slow_client_drops += 1;
     }
 
     /// Fold one finished connection's counters in (called once when the
@@ -292,9 +313,94 @@ impl Metrics {
                 self.cache_stale,
             ));
         }
+        if self.slow_client_drops > 0 {
+            s.push_str(&format!(" slow_client_drops={}", self.slow_client_drops));
+        }
         if self.replicas_died > 0 {
             s.push_str(&format!(" replicas_died={}", self.replicas_died));
         }
+        s
+    }
+
+    /// Plaintext exposition of every counter, one `fastcaps_*` metric
+    /// per line in the conventional `# TYPE` + `name value` format, so
+    /// any scraper that speaks the text exposition format can ingest
+    /// the `METRICS` sidecar endpoint (or `GET /metrics`) directly.
+    pub fn exposition(&self) -> String {
+        let mut s = String::with_capacity(1536);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            s.push_str(&format!(
+                "# HELP fastcaps_{name} {help}\n# TYPE fastcaps_{name} counter\nfastcaps_{name} {v}\n"
+            ));
+        };
+        counter("requests_total", "Requests completed.", self.requests);
+        counter("rejected_total", "Requests rejected at admission.", self.rejected);
+        counter("backend_errors_total", "Requests failed in the backend.", self.backend_errors);
+        counter("batches_total", "Batches executed.", self.batches);
+        counter("padded_slots_total", "Padded (wasted) batch slots.", self.padded_slots);
+        counter("replicas_died_total", "Executor replicas that died.", self.replicas_died);
+        counter("connections_opened_total", "TCP connections accepted.", self.connections_opened);
+        counter("connections_closed_total", "TCP connections closed.", self.connections_closed);
+        counter("wire_requests_total", "Classify frames received.", self.wire_requests);
+        counter("wire_errors_total", "Error frames sent.", self.wire_errors);
+        counter(
+            "net_slow_client_drops_total",
+            "Connections dropped for write-buffer overflow.",
+            self.slow_client_drops,
+        );
+        counter("cache_hits_total", "Inference cache hits.", self.cache_hits);
+        counter("cache_misses_total", "Inference cache misses.", self.cache_misses);
+        counter(
+            "cache_coalesced_total",
+            "Requests coalesced onto an in-flight duplicate.",
+            self.cache_coalesced,
+        );
+        counter("cache_evicted_total", "Cache entries evicted.", self.cache_evicted);
+        counter(
+            "cache_stale_total",
+            "Wrong-fingerprint cache sightings (must stay 0).",
+            self.cache_stale,
+        );
+        s.push_str("# HELP fastcaps_shard_connections_total Connections accepted per IO shard.\n");
+        s.push_str("# TYPE fastcaps_shard_connections_total counter\n");
+        for (i, v) in self.shard_connections.iter().enumerate() {
+            s.push_str(&format!("fastcaps_shard_connections_total{{shard=\"{i}\"}} {v}\n"));
+        }
+        let mut gauge = |s: &mut String, name: &str, help: &str, v: String| {
+            s.push_str(&format!(
+                "# HELP fastcaps_{name} {help}\n# TYPE fastcaps_{name} gauge\nfastcaps_{name} {v}\n"
+            ));
+        };
+        gauge(
+            &mut s,
+            "latency_mean_us",
+            "Mean request latency (µs).",
+            format!("{:.0}", self.latency.mean_us()),
+        );
+        gauge(
+            &mut s,
+            "latency_p50_us",
+            "p50 request latency (µs).",
+            self.latency.percentile_us(50.0).to_string(),
+        );
+        gauge(
+            &mut s,
+            "latency_p99_us",
+            "p99 request latency (µs).",
+            self.latency.percentile_us(99.0).to_string(),
+        );
+        gauge(
+            &mut s,
+            "latency_max_us",
+            "Max request latency (µs).",
+            self.latency.max_us().to_string(),
+        );
+        gauge(
+            &mut s,
+            "uptime_seconds",
+            "Seconds this metrics window covers.",
+            format!("{:.3}", self.elapsed().as_secs_f64()),
+        );
         s
     }
 }
@@ -440,6 +546,52 @@ mod tests {
             s.contains("cache(hits=2 misses=1 coalesced=1 evicted=3 stale=0)"),
             "{s}"
         );
+    }
+
+    #[test]
+    fn slow_client_drops_in_summary_only_when_nonzero() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("slow_client_drops"));
+        m.record_slow_client_drop();
+        assert!(m.summary().contains(" slow_client_drops=1"));
+    }
+
+    #[test]
+    fn shard_connection_counters_grow_on_demand() {
+        let mut m = Metrics::default();
+        m.record_shard_connection(2);
+        m.record_shard_connection(0);
+        m.record_shard_connection(2);
+        assert_eq!(m.shard_connections, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn exposition_lists_every_counter_family() {
+        let mut m = Metrics::default();
+        m.record(100);
+        m.record_shard_connection(0);
+        m.record_shard_connection(1);
+        m.record_slow_client_drop();
+        let e = m.exposition();
+        for name in [
+            "fastcaps_requests_total 1",
+            "fastcaps_rejected_total 0",
+            "fastcaps_wire_requests_total 0",
+            "fastcaps_net_slow_client_drops_total 1",
+            "fastcaps_cache_hits_total 0",
+            "fastcaps_shard_connections_total{shard=\"0\"} 1",
+            "fastcaps_shard_connections_total{shard=\"1\"} 1",
+            "fastcaps_latency_p99_us 100",
+            "fastcaps_uptime_seconds",
+        ] {
+            assert!(e.contains(name), "missing {name} in:\n{e}");
+        }
+        // Exposition format discipline: every non-comment line is
+        // `name value` (or `name{labels} value`).
+        for line in e.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad line: {line}");
+            assert!(line.starts_with("fastcaps_"), "bad line: {line}");
+        }
     }
 
     #[test]

@@ -27,16 +27,21 @@
 //!   and network-connection counters shared across the pool. Snapshots
 //!   freeze their wall clock so reported RPS doesn't decay after the
 //!   fact.
-//! * [`wire`] / [`net`] — the network front-end: a length-prefixed
-//!   binary protocol ([`wire`]) and a `TcpListener` serving layer +
-//!   [`net::NetClient`] ([`net`]), so processes that are not `fastcaps`
-//!   can classify images through the same admission queue.
+//! * [`wire`] / [`net`] / [`event_loop`] — the network front-end: a
+//!   length-prefixed binary protocol ([`wire`], v1 in-order and v2
+//!   tagged out-of-order), a sharded readiness event loop over
+//!   nonblocking sockets ([`event_loop`]), and the listener + client
+//!   surface ([`net::NetServer`], [`net::Connection`]), so processes
+//!   that are not `fastcaps` can classify images through the same
+//!   admission queue. The listener doubles as a plaintext sidecar for
+//!   `HEALTH`/`READY` probes and a metrics exposition dump.
 //!
-//! Everything is std-only (threads + condvar queue); the vendored crate
-//! set has no tokio, and the workload (sub-ms model steps) doesn't need
-//! async I/O.
+//! Everything is std-only (threads + condvar queue + `poll(2)` via a
+//! direct FFI declaration); the vendored crate set has no tokio, and
+//! the workload (sub-ms model steps) doesn't need async I/O.
 
 pub mod batcher;
+pub mod event_loop;
 pub mod metrics;
 pub mod net;
 pub mod server;

@@ -1,99 +1,111 @@
-//! Network serving front-end: a `TcpListener` over the executor pool,
-//! making the coordinator reachable from processes that are not
-//! `fastcaps` (the paper's serving story — edge FPGAs answering real
-//! request traffic — rather than threads calling `Server::submit`
-//! in-process).
+//! Network serving front-end: listener, drain orchestration, and the
+//! tag-aware client for the wire protocol.
 //!
 //! ```text
-//!             ┌ acceptor thread (nonblocking accept + stop flag)
-//!  TcpListener┤
-//!             └ per connection: reader thread ──► writer thread
-//!                  │ decode frame (wire.rs)        │ in request order:
-//!                  │ validate vs BackendSpec       │ recv() response,
-//!                  │ Server::submit ───────────────► write Response /
-//!                  │   (bounded admission queue)     typed Error frame
+//!              ┌ acceptor thread (nonblocking accept + stop flag)
+//!  TcpListener ┤        round-robin
+//!              └──► IO shards (event_loop.rs): N threads, each owning
+//!                   a set of nonblocking connections multiplexed with
+//!                   poll(2), submitting into the executor pool and
+//!                   writing completions back as they land
 //! ```
 //!
-//! * **Ordering.** The reader forwards one [`Reply`] per request into an
-//!   in-order channel the writer drains, so responses stream back in
-//!   request order even though the pool executes batches concurrently —
-//!   clients may pipeline without tagging requests.
-//! * **Validation.** The reader checks each classify payload against the
+//! * **Protocol.** v1 clients ([`Connection::v1_compat`]) keep the
+//!   strict in-order response stream; v2 clients ([`Connection::connect`])
+//!   tag every request and may receive completions out of order. The
+//!   version is negotiated per connection from the first frame — see
+//!   [`super::event_loop`] for the server-side state machine and
+//!   [`super::wire`] for the frame layout.
+//! * **Validation.** Each classify payload is checked against the
 //!   backend's [`BackendSpec::input_shape`](crate::backend::BackendSpec)
 //!   *before* admission: a wrong-sized image gets a typed
 //!   [`ErrorCode::InvalidRequest`] frame and the connection stays
 //!   usable. Admission rejections (`QueueFull`) and a dead pool
 //!   (`Unavailable`) surface the same way instead of hanging the client.
-//! * **Drain.** [`NetServer::shutdown`] stops accepting, shuts the read
-//!   side of every connection (no new requests), lets writers finish
-//!   every in-flight response, joins all threads, and only then drains
-//!   and stops the executor pool. A client can request the same drain
-//!   over the wire with a [`FrameType::Shutdown`] frame
-//!   ([`NetClient::shutdown_server`]); `fastcaps serve --listen` blocks
-//!   on [`NetServer::wait_shutdown_requested`] for exactly that.
-//! * **Counters.** Per-connection request/error counts are folded into
-//!   the shared [`Metrics`] when the connection closes
-//!   (`connections_opened/closed`, `wire_requests`, `wire_errors`).
+//! * **Backpressure.** Responses buffer per connection, bounded by
+//!   [`NetConfig::max_write_buffer`]: a peer that stops reading loses
+//!   read service at half the budget and is disconnected on overflow
+//!   (`net_slow_client_drops`); replica threads never block on a socket.
+//! * **Drain.** [`NetServer::shutdown`] stops accepting, lets every
+//!   in-flight request finish and flush, closes connections, joins the
+//!   shards, and only then drains the executor pool. A client can
+//!   request the same drain over the wire with a
+//!   [`FrameType::Shutdown`] frame ([`Connection::shutdown_server`]);
+//!   `fastcaps serve --listen` blocks on
+//!   [`NetServer::wait_shutdown_requested`] for exactly that.
+//! * **Probes.** The same listener answers plaintext `HEALTH`/`READY`
+//!   probes and a `METRICS` exposition dump (also as HTTP `GET
+//!   /healthz`, `/readyz`, `/metrics`) for load balancers and scrapers.
 
+use super::event_loop::{spawn_shard, ShardHandle};
 use super::metrics::Metrics;
 use super::server::Server;
-use super::wire::{self, ErrorCode, Fault, FrameType, ServerFrame, WireResponse};
-use super::Response;
+use super::wire::{self, ErrorCode, FrameType, ServerFrame, WireError, WireResponse};
 use crate::backend::BackendError;
 use crate::tensor::Tensor;
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// Per-connection cap on decoded-but-unwritten replies. A client that
-/// pipelines without reading responses fills this, then the writer's
-/// TCP send buffer; the reader then blocks in `send` instead of growing
-/// server memory — backpressure ends at the client's own socket.
-const REPLY_WINDOW: usize = 256;
-
-/// Upper bound on any single response write. A peer that stops reading
-/// (but keeps the connection alive) would otherwise block the writer —
-/// and therefore drain — forever.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
-
-/// One in-order slot in a connection's response stream.
-enum Reply {
-    /// A response the executor pool will produce.
-    Pending(mpsc::Receiver<Response>),
-    /// A typed error produced at the wire/admission boundary.
-    Reject(ErrorCode, String),
-    /// Acknowledge a graceful-drain request.
-    Ack,
+/// Tuning knobs for the network front-end.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// IO shard threads; each owns a subset of the connections.
+    pub io_shards: usize,
+    /// Per-connection cap on buffered-but-unwritten response bytes.
+    /// Read service stops at half this; overflow disconnects the
+    /// connection and bumps `net_slow_client_drops`.
+    pub max_write_buffer: usize,
 }
 
-struct NetShared {
-    server: Server,
-    input_shape: (usize, usize, usize),
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            io_shards: 2,
+            max_write_buffer: 1 << 20,
+        }
+    }
+}
+
+/// State shared by the acceptor, the IO shards, and the front-end
+/// handle.
+pub(crate) struct NetShared {
+    pub(crate) server: Server,
+    pub(crate) input_shape: (usize, usize, usize),
     /// Exact classify-payload size (`BackendSpec::input_wire_bytes`):
     /// the spec-driven shape check at the wire boundary.
-    expected_bytes: u32,
+    pub(crate) expected_bytes: u32,
     /// Tells the acceptor to stop; set by [`NetServer::shutdown`]/Drop.
-    stop: AtomicBool,
+    pub(crate) stop: AtomicBool,
+    /// Tells the shards to drain: finish in-flight work, flush, close.
+    pub(crate) draining: AtomicBool,
     /// Set when a wire `Shutdown` frame (or local call) requests a
     /// graceful drain; `serve --listen` blocks on it.
     drain_requested: Mutex<bool>,
     drain_cv: Condvar,
-    /// Read-half handles of live connections, keyed by connection id,
-    /// so drain can unblock readers mid-`read`.
-    conns: Mutex<HashMap<u64, TcpStream>>,
-    /// Join handles of spawned connection handler threads.
-    handlers: Mutex<Vec<JoinHandle<()>>>,
-    next_conn: AtomicU64,
+    pub(crate) max_wbuf: usize,
+    pub(crate) next_conn: AtomicU64,
 }
 
 impl NetShared {
-    fn request_shutdown(&self) {
+    pub(crate) fn request_shutdown(&self) {
         *self.drain_requested.lock().unwrap() = true;
         self.drain_cv.notify_all();
+    }
+
+    /// Readiness for the `READY`/`/readyz` probe: serving, no drain
+    /// requested or in progress, and at least one live executor
+    /// replica. Flips to not-ready the moment a drain is *requested*
+    /// (wire `Shutdown` frame or API), so load balancers stop routing
+    /// new work while in-flight requests finish.
+    pub(crate) fn ready(&self) -> bool {
+        !self.draining.load(Ordering::SeqCst)
+            && !*self.drain_requested.lock().unwrap()
+            && self.server.live_replicas() > 0
     }
 }
 
@@ -103,15 +115,26 @@ impl NetShared {
 pub struct NetServer {
     inner: Option<Arc<NetShared>>,
     acceptor: Option<JoinHandle<()>>,
+    shards: Vec<ShardHandle>,
+    shard_joins: Vec<JoinHandle<()>>,
     local_addr: SocketAddr,
 }
 
 impl NetServer {
-    /// Bind a listener and start accepting. `addr` may use port 0 for
-    /// an OS-assigned port ([`NetServer::local_addr`] reports it). A
+    /// Bind with default [`NetConfig`]. `addr` may use port 0 for an
+    /// OS-assigned port ([`NetServer::local_addr`] reports it). A
     /// server whose backend never initialized is rejected here — there
     /// is nothing to serve.
     pub fn bind(addr: &str, server: Server) -> Result<NetServer, BackendError> {
+        NetServer::bind_with(addr, server, NetConfig::default())
+    }
+
+    /// Bind with explicit shard count and write-buffer bound.
+    pub fn bind_with(
+        addr: &str,
+        server: Server,
+        cfg: NetConfig,
+    ) -> Result<NetServer, BackendError> {
         if let Some(e) = server.init_error() {
             return Err(BackendError::Unavailable(format!(
                 "refusing to listen for a backend that never started: {e}"
@@ -136,22 +159,33 @@ impl NetServer {
             input_shape,
             expected_bytes,
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
             drain_requested: Mutex::new(false),
             drain_cv: Condvar::new(),
-            conns: Mutex::new(HashMap::new()),
-            handlers: Mutex::new(Vec::new()),
+            max_wbuf: cfg.max_write_buffer.max(4096),
             next_conn: AtomicU64::new(0),
         });
+        let mut shards = Vec::new();
+        let mut shard_joins = Vec::new();
+        for idx in 0..cfg.io_shards.max(1) {
+            let (handle, join) = spawn_shard(idx, shared.clone())
+                .map_err(|e| BackendError::Init(format!("spawning IO shard {idx}: {e}")))?;
+            shards.push(handle);
+            shard_joins.push(join);
+        }
         let acceptor = {
             let shared = shared.clone();
+            let shards = shards.clone();
             std::thread::Builder::new()
                 .name("fastcaps-net-acceptor".into())
-                .spawn(move || accept_loop(listener, &shared))
+                .spawn(move || accept_loop(listener, &shared, &shards))
                 .expect("spawning acceptor thread")
         };
         Ok(NetServer {
             inner: Some(shared),
             acceptor: Some(acceptor),
+            shards,
+            shard_joins,
             local_addr,
         })
     }
@@ -159,6 +193,11 @@ impl NetServer {
     /// Address the listener is bound to (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// IO shard threads serving this listener.
+    pub fn io_shards(&self) -> usize {
+        self.shards.len()
     }
 
     /// The wrapped server, e.g. for in-process submits alongside the
@@ -193,8 +232,9 @@ impl NetServer {
     }
 
     /// Graceful drain: stop accepting, finish every request already
-    /// read off a connection, close connections, then drain and stop
-    /// the executor pool. Returns the final (frozen) metrics.
+    /// read off a connection, flush and close connections, join the
+    /// shards, then drain and stop the executor pool. Returns the final
+    /// (frozen) metrics.
     pub fn shutdown(mut self) -> Metrics {
         self.begin_drain();
         let inner = self.inner.take().expect("drained once");
@@ -215,15 +255,14 @@ impl NetServer {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
-        // Unblock readers stuck in `read`: no new requests, in-flight
-        // replies still flow (only the read half closes).
-        for stream in shared.conns.lock().unwrap().values() {
-            let _ = stream.shutdown(Shutdown::Read);
+        shared.draining.store(true, Ordering::SeqCst);
+        for s in &self.shards {
+            s.wake();
         }
-        let handlers: Vec<_> = shared.handlers.lock().unwrap().drain(..).collect();
-        for h in handlers {
+        for h in self.shard_joins.drain(..) {
             let _ = h.join();
         }
+        self.shards.clear();
     }
 }
 
@@ -235,37 +274,15 @@ impl Drop for NetServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: &Arc<NetShared>) {
+fn accept_loop(listener: TcpListener, shared: &Arc<NetShared>, shards: &[ShardHandle]) {
+    let mut next = 0usize;
     while !shared.stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                // The accepted socket may inherit the listener's
-                // nonblocking mode on some platforms; handlers want
-                // blocking reads.
-                let _ = stream.set_nonblocking(false);
-                let _ = stream.set_nodelay(true);
-                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-                let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
-                // The conns entry is how drain unblocks this reader; a
-                // connection we cannot register we must not serve, or
-                // shutdown could join a reader nobody can wake (fd
-                // exhaustion is exactly when try_clone fails).
-                let Ok(read_half) = stream.try_clone() else {
-                    continue; // dropping the stream closes it
-                };
-                shared.conns.lock().unwrap().insert(id, read_half);
-                shared.server.with_metrics(|m| m.record_connection_opened());
-                let shared2 = shared.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("fastcaps-net-conn-{id}"))
-                    .spawn(move || handle_connection(id, stream, &shared2))
-                    .expect("spawning connection handler");
-                let mut handlers = shared.handlers.lock().unwrap();
-                // Reap finished connections so a long-running server's
-                // handle list is bounded by *live* connections, not by
-                // every connection ever accepted.
-                handlers.retain(|h| !h.is_finished());
-                handlers.push(handle);
+                // Round-robin handoff; the owning shard does the rest
+                // (nonblocking mode, counters, protocol sniffing).
+                shards[next % shards.len()].accept(stream);
+                next = next.wrapping_add(1);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));
@@ -279,299 +296,289 @@ fn accept_loop(listener: TcpListener, shared: &Arc<NetShared>) {
     }
 }
 
-/// Reader half of one connection; spawns its writer, decodes and
-/// validates frames, forwards work to the pool, and folds counters into
-/// the shared metrics on exit.
-fn handle_connection(id: u64, stream: TcpStream, shared: &Arc<NetShared>) {
-    // Bounded: past REPLY_WINDOW queued replies the reader blocks here
-    // instead of buffering an unreading client's backlog in server
-    // memory. A blocked send unblocks with an error when the writer
-    // exits (client gone or write timeout), so drain cannot wedge on it.
-    let (reply_tx, reply_rx) = mpsc::sync_channel::<Reply>(REPLY_WINDOW);
-    let writer = stream
-        .try_clone()
-        .map(|w| {
-            std::thread::Builder::new()
-                .name(format!("fastcaps-net-write-{id}"))
-                .spawn(move || write_loop(w, reply_rx))
-                .expect("spawning connection writer")
-        })
-        .ok();
-
-    let mut reader = BufReader::new(stream);
-    let (c, h, w) = shared.input_shape;
-    let expected_bytes = shared.expected_bytes;
-    let mut wire_requests = 0u64;
-    let mut wire_errors = 0u64;
-    // Set when the connection dies on a desynchronized stream: unread
-    // inbound bytes must be consumed before closing, or the close turns
-    // into a TCP RST that can destroy the in-flight error frame.
-    let mut linger_drain = false;
-
-    // The reader owns the decision to keep or drop the connection: a
-    // recoverable fault queues a typed error and continues; a
-    // desynchronizing fault queues the error and breaks (the writer
-    // still flushes everything queued before the connection closes).
-    loop {
-        match wire::read_header(&mut reader) {
-            Err(Fault::Closed) | Err(Fault::Truncated) | Err(Fault::Io(_)) => break,
-            Err(
-                fault @ (Fault::BadMagic(_)
-                | Fault::BadVersion(_)
-                | Fault::UnknownType(_)
-                | Fault::BadPayload(_)),
-            ) => {
-                // BadPayload cannot come from read_header today, but a
-                // future header extension would route it here: a
-                // desynchronized stream is fatal either way.
-                wire_errors += 1;
-                linger_drain = true;
-                let _ = reply_tx.send(Reply::Reject(ErrorCode::Malformed, fault.to_string()));
-                break;
-            }
-            Err(fault @ Fault::Oversized(_)) => {
-                wire_errors += 1;
-                linger_drain = true;
-                let _ = reply_tx.send(Reply::Reject(ErrorCode::Oversized, fault.to_string()));
-                break;
-            }
-            Ok((FrameType::Classify, len)) => {
-                wire_requests += 1;
-                let Ok(payload) = wire::read_payload(&mut reader, len) else {
-                    break; // stream died mid-payload
-                };
-                if len != expected_bytes {
-                    // Spec-driven shape validation at the wire boundary:
-                    // typed error, connection survives.
-                    wire_errors += 1;
-                    let _ = reply_tx.send(Reply::Reject(
-                        ErrorCode::InvalidRequest,
-                        format!(
-                            "image payload is {len} bytes; backend input shape \
-                             ({c}, {h}, {w}) needs exactly {expected_bytes} \
-                             bytes of f32-le data"
-                        ),
-                    ));
-                    continue;
-                }
-                let image = match wire::decode_classify(&payload)
-                    .map_err(|f| f.to_string())
-                    .and_then(|data| {
-                        Tensor::from_vec(&[c, h, w], data).map_err(|e| e.to_string())
-                    }) {
-                    Ok(img) => img,
-                    Err(msg) => {
-                        wire_errors += 1;
-                        let _ = reply_tx.send(Reply::Reject(ErrorCode::InvalidRequest, msg));
-                        continue;
-                    }
-                };
-                let reply = match shared.server.submit(image) {
-                    Ok(rx) => Reply::Pending(rx),
-                    Err(e @ BackendError::QueueFull { .. }) => {
-                        wire_errors += 1;
-                        Reply::Reject(ErrorCode::QueueFull, e.to_string())
-                    }
-                    Err(e @ BackendError::Unavailable(_)) => {
-                        wire_errors += 1;
-                        Reply::Reject(ErrorCode::Unavailable, e.to_string())
-                    }
-                    Err(e) => {
-                        wire_errors += 1;
-                        Reply::Reject(ErrorCode::Execution, e.to_string())
-                    }
-                };
-                if reply_tx.send(reply).is_err() {
-                    break; // writer died (client gone)
-                }
-            }
-            Ok((FrameType::Shutdown, len)) => {
-                if wire::read_payload(&mut reader, len).is_err() {
-                    break;
-                }
-                let _ = reply_tx.send(Reply::Ack);
-                shared.request_shutdown();
-                break;
-            }
-            Ok((ty, _len)) => {
-                // A server→client frame type arriving here means the
-                // peer is not a FastCaps client; drop the connection.
-                wire_errors += 1;
-                linger_drain = true;
-                let _ = reply_tx.send(Reply::Reject(
-                    ErrorCode::Malformed,
-                    format!("client sent server-side frame type {ty:?}"),
-                ));
-                break;
-            }
-        }
-    }
-
-    // Let the writer flush every queued reply (in-flight requests get
-    // their responses during drain), then account the connection.
-    drop(reply_tx);
-    let writer_errors = writer.and_then(|h| h.join().ok()).unwrap_or(0);
-    if linger_drain {
-        // Lingering close: swallow whatever the peer already sent
-        // (bounded in bytes and time) so our FIN isn't turned into a
-        // RST while the error frame is still in flight.
-        let mut stream = reader.into_inner();
-        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-        let mut scratch = [0u8; 4096];
-        let mut budget = 64 * 1024usize;
-        loop {
-            match std::io::Read::read(&mut stream, &mut scratch) {
-                Ok(0) | Err(_) => break,
-                Ok(n) => {
-                    budget = budget.saturating_sub(n);
-                    if budget == 0 {
-                        break;
-                    }
-                }
-            }
-        }
-    }
-    shared.conns.lock().unwrap().remove(&id);
-    shared
-        .server
-        .with_metrics(|m| m.record_connection_closed(wire_requests, wire_errors + writer_errors));
-}
-
-/// Writer half: drains the in-order reply stream, waiting on the pool's
-/// response channel per pending request. Returns the number of error
-/// frames it produced itself (dropped requests → `Unavailable`).
-fn write_loop(stream: TcpStream, replies: mpsc::Receiver<Reply>) -> u64 {
-    let mut w = BufWriter::new(stream);
-    let mut own_errors = 0u64;
-    for reply in replies {
-        let ok = match reply {
-            Reply::Pending(rx) => match rx.recv() {
-                Ok(resp) => wire::write_response(&mut w, &resp).is_ok(),
-                Err(_) => {
-                    // The executor dropped the request (backend failure
-                    // or shutdown race): the client gets a typed error
-                    // instead of a silent hole in the response stream.
-                    own_errors += 1;
-                    wire::write_error(
-                        &mut w,
-                        ErrorCode::Unavailable,
-                        "executor dropped the request (backend failure or shutdown)",
-                    )
-                    .is_ok()
-                }
-            },
-            Reply::Reject(code, msg) => wire::write_error(&mut w, code, &msg).is_ok(),
-            Reply::Ack => wire::write_empty(&mut w, FrameType::ShutdownAck).is_ok(),
-        };
-        if !ok || w.flush().is_err() {
-            break; // client gone; reader will notice on its next read
-        }
-    }
-    own_errors
-}
-
 // ---------------------------------------------------------------------
 // client
 
-/// Client-side error for the socket path.
-#[derive(Debug)]
-pub enum NetError {
-    /// Transport failed (connect, read, write, truncated stream).
-    Io(String),
-    /// The byte stream was not valid protocol.
-    Protocol(String),
-    /// The server answered with a typed error frame.
-    Rejected { code: ErrorCode, message: String },
+/// Tag-aware blocking client for the wire protocol.
+///
+/// Three usage shapes:
+/// * lockstep — [`Connection::classify`] round-trips one image;
+/// * pipelined in-order — [`Connection::submit`] N times, then
+///   [`Connection::recv`] N times;
+/// * out-of-order (v2 only) — [`Connection::submit`] freely and match
+///   responses to requests by the returned tag via [`Connection::recv`]
+///   or the non-blocking [`Connection::poll`].
+///
+/// [`Connection::connect`] speaks v2; [`Connection::v1_compat`] keeps
+/// the untagged v1 dialect (strict in-order responses) for old servers
+/// and for pinning the v1 path in tests. All failures — transport,
+/// protocol, and typed server rejections — surface as one
+/// [`WireError`], whose `code` round-trips the server's taxonomy
+/// losslessly.
+pub struct Connection {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    version: u8,
+    next_tag: u64,
+    /// v1 responses are untagged: tags are assigned client-side in send
+    /// order and consumed FIFO as responses arrive.
+    pending_v1: VecDeque<u64>,
 }
 
-impl std::fmt::Display for NetError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            NetError::Io(m) => write!(f, "net io: {m}"),
-            NetError::Protocol(m) => write!(f, "net protocol: {m}"),
-            NetError::Rejected { code, message } => {
-                write!(f, "server rejected request ({code:?}): {message}")
-            }
-        }
+impl Connection {
+    /// Connect speaking wire protocol v2 (tagged, out-of-order).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Connection, WireError> {
+        Connection::connect_with(addr, wire::V2)
     }
-}
 
-impl std::error::Error for NetError {}
-
-impl From<Fault> for NetError {
-    fn from(f: Fault) -> NetError {
-        match f {
-            Fault::Closed | Fault::Truncated | Fault::Io(_) => NetError::Io(f.to_string()),
-            other => NetError::Protocol(other.to_string()),
-        }
+    /// Connect speaking wire protocol v1 (untagged, strict in-order) —
+    /// the exact semantics of the pre-v2 client.
+    pub fn v1_compat<A: ToSocketAddrs>(addr: A) -> Result<Connection, WireError> {
+        Connection::connect_with(addr, wire::VERSION)
     }
-}
 
-/// Blocking client for the wire protocol. Supports both the simple
-/// round-trip ([`NetClient::classify`]) and pipelining
-/// ([`NetClient::send`] N times, then [`NetClient::recv`] N times —
-/// responses come back in request order).
-pub struct NetClient {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl NetClient {
-    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient, NetError> {
-        let stream = TcpStream::connect(addr).map_err(|e| NetError::Io(e.to_string()))?;
+    /// Connect with an explicit protocol version (1 or 2).
+    pub fn connect_with<A: ToSocketAddrs>(addr: A, version: u8) -> Result<Connection, WireError> {
+        if version != wire::VERSION && version != wire::V2 {
+            return Err(WireError::protocol(format!(
+                "unsupported wire protocol version {version} (want {} or {})",
+                wire::VERSION,
+                wire::V2
+            )));
+        }
+        let stream = TcpStream::connect(addr).map_err(|e| WireError::io(&e))?;
         let _ = stream.set_nodelay(true);
-        let writer = stream.try_clone().map_err(|e| NetError::Io(e.to_string()))?;
-        Ok(NetClient {
-            reader: BufReader::new(stream),
-            writer,
+        Ok(Connection {
+            stream,
+            rbuf: Vec::new(),
+            version,
+            next_tag: 0,
+            pending_v1: VecDeque::new(),
         })
     }
 
-    /// Bound how long [`NetClient::recv`] may block (None = forever).
+    /// The wire protocol version this connection speaks (1 or 2).
+    pub fn protocol_version(&self) -> u8 {
+        self.version
+    }
+
+    /// Bound how long [`Connection::recv`] may block (None = forever).
     /// Tests use this so a server regression fails instead of hanging.
-    pub fn set_read_timeout(&self, dur: Option<Duration>) -> Result<(), NetError> {
-        self.reader
-            .get_ref()
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> Result<(), WireError> {
+        self.stream
             .set_read_timeout(dur)
-            .map_err(|e| NetError::Io(e.to_string()))
+            .map_err(|e| WireError::io(&e))
     }
 
     /// Send one classify request without waiting for the response.
-    pub fn send(&mut self, image: &Tensor) -> Result<(), NetError> {
-        wire::write_classify(&mut self.writer, &image.data)
-            .map_err(|e| NetError::Io(e.to_string()))
+    /// Returns the request's tag; on v2 the server echoes it on the
+    /// matching response, on v1 it is the client-side sequence number
+    /// responses will be matched against in order.
+    pub fn submit(&mut self, image: &Tensor) -> Result<u64, WireError> {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let frame = wire::encode_classify(self.version, tag, &image.data);
+        self.stream
+            .write_all(&frame)
+            .map_err(|e| WireError::io(&e))?;
+        if self.version == wire::VERSION {
+            self.pending_v1.push_back(tag);
+        }
+        Ok(tag)
     }
 
-    /// Receive the next response in request order. A typed error frame
-    /// becomes [`NetError::Rejected`]; the connection stays usable for
+    /// Receive the next response the server has ready, blocking (up to
+    /// the read timeout). A typed error frame becomes `Err` with the
+    /// offending request's tag; the connection stays usable for
     /// recoverable codes (`QueueFull`, `InvalidRequest`, `Unavailable`).
-    pub fn recv(&mut self) -> Result<WireResponse, NetError> {
-        match wire::read_server_frame(&mut self.reader)? {
-            ServerFrame::Response(resp) => Ok(resp),
-            ServerFrame::Error { code, message } => Err(NetError::Rejected { code, message }),
-            ServerFrame::ShutdownAck => Err(NetError::Protocol(
-                "unexpected shutdown ack (no shutdown was requested)".into(),
-            )),
+    pub fn recv(&mut self) -> Result<(u64, WireResponse), WireError> {
+        let (tag, frame) = self.next_frame()?;
+        self.finish_frame(tag, frame)
+    }
+
+    /// Non-blocking receive: `Ok(None)` when no complete response is
+    /// buffered or readable right now.
+    pub fn poll(&mut self) -> Result<Option<(u64, WireResponse)>, WireError> {
+        if let Some((tag, frame)) = self.take_frame()? {
+            return self.finish_frame(tag, frame).map(Some);
+        }
+        self.stream
+            .set_nonblocking(true)
+            .map_err(|e| WireError::io(&e))?;
+        let mut io_err: Option<WireError> = None;
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    io_err = Some(WireError::new(
+                        ErrorCode::Io,
+                        "connection closed by server",
+                        None,
+                    ));
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&buf[..n]);
+                    if !matches!(wire::scan_frame(&self.rbuf), Ok(None)) {
+                        break; // a full frame (or a fault the scan will report)
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    io_err = Some(WireError::io(&e));
+                    break;
+                }
+            }
+        }
+        let restore = self.stream.set_nonblocking(false);
+        if let Some(e) = io_err {
+            return Err(e);
+        }
+        restore.map_err(|e| WireError::io(&e))?;
+        match self.take_frame()? {
+            Some((tag, frame)) => self.finish_frame(tag, frame).map(Some),
+            None => Ok(None),
         }
     }
 
-    /// Round-trip one image.
-    pub fn classify(&mut self, image: &Tensor) -> Result<WireResponse, NetError> {
-        self.send(image)?;
-        self.recv()
+    /// Round-trip one image (lockstep convenience). Errors if the
+    /// server answers a different outstanding tag — mixing `classify`
+    /// with un-received `submit`s is not supported; drain with
+    /// [`Connection::recv`] first.
+    pub fn classify(&mut self, image: &Tensor) -> Result<WireResponse, WireError> {
+        let tag = self.submit(image)?;
+        let (got, resp) = self.recv()?;
+        if got != tag {
+            return Err(WireError::protocol(format!(
+                "response tag {got} does not answer the classify request (tag {tag}); \
+                 drain pipelined submits with recv() before using classify()"
+            )));
+        }
+        Ok(resp)
     }
 
     /// Ask the server for a graceful drain and wait for the
-    /// acknowledgement. Pending pipelined responses are drained first
-    /// (they arrive before the ack, in order).
-    pub fn shutdown_server(mut self) -> Result<(), NetError> {
-        wire::write_empty(&mut self.writer, FrameType::Shutdown)
-            .map_err(|e| NetError::Io(e.to_string()))?;
+    /// acknowledgement. Responses to outstanding requests are drained
+    /// (and discarded) on the way; the server sends the ack only after
+    /// answering everything this connection submitted.
+    pub fn shutdown_server(mut self) -> Result<(), WireError> {
+        let frame = wire::encode_empty(self.version, FrameType::Shutdown);
+        self.stream
+            .write_all(&frame)
+            .map_err(|e| WireError::io(&e))?;
         loop {
-            match wire::read_server_frame(&mut self.reader)? {
-                ServerFrame::ShutdownAck => return Ok(()),
-                ServerFrame::Response(_) | ServerFrame::Error { .. } => continue,
+            let (_, frame) = self.next_frame()?;
+            if matches!(frame, ServerFrame::ShutdownAck) {
+                return Ok(());
             }
+        }
+    }
+
+    /// Scan one complete frame out of the receive buffer, if present.
+    fn take_frame(&mut self) -> Result<Option<(Option<u64>, ServerFrame)>, WireError> {
+        match wire::scan_frame(&self.rbuf) {
+            Ok(None) => Ok(None),
+            Ok(Some(f)) => {
+                if f.version != self.version {
+                    return Err(WireError::protocol(format!(
+                        "server answered protocol v{} on a v{} connection",
+                        f.version, self.version
+                    )));
+                }
+                let payload = &self.rbuf[wire::HEADER_LEN..f.total_len];
+                let (tag, frame) = wire::decode_server_payload(f.version, f.ty, payload)?;
+                self.rbuf.drain(..f.total_len);
+                Ok(Some((tag, frame)))
+            }
+            Err(fault) => Err(fault.into()),
+        }
+    }
+
+    /// Blocking read until one complete frame is buffered.
+    fn next_frame(&mut self) -> Result<(Option<u64>, ServerFrame), WireError> {
+        loop {
+            if let Some(f) = self.take_frame()? {
+                return Ok(f);
+            }
+            let mut buf = [0u8; 16 * 1024];
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    return Err(WireError::new(
+                        ErrorCode::Io,
+                        "connection closed by server",
+                        None,
+                    ))
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(WireError::new(
+                        ErrorCode::Io,
+                        "read timed out waiting for a response",
+                        None,
+                    ))
+                }
+                Err(e) => return Err(WireError::io(&e)),
+            }
+        }
+    }
+
+    /// Resolve one decoded frame into the caller-facing result: attach
+    /// the tag (v2 echoes it, v1 consumes the client-side FIFO), and
+    /// turn error frames into typed [`WireError`]s.
+    fn finish_frame(
+        &mut self,
+        tag: Option<u64>,
+        frame: ServerFrame,
+    ) -> Result<(u64, WireResponse), WireError> {
+        let tag = match tag {
+            // Connection-level v2 error: not tied to any request.
+            Some(wire::CONN_TAG) => {
+                return match frame {
+                    ServerFrame::Error { code, message } => {
+                        Err(WireError::new(code, message, None))
+                    }
+                    _ => Err(WireError::protocol(
+                        "server sent a non-error frame on the connection tag",
+                    )),
+                };
+            }
+            Some(t) => t,
+            None => match frame {
+                ServerFrame::ShutdownAck => {
+                    return Err(WireError::protocol(
+                        "unexpected shutdown ack (no shutdown was requested)",
+                    ))
+                }
+                _ => match self.pending_v1.pop_front() {
+                    Some(t) => t,
+                    // An untagged error with nothing outstanding is a
+                    // connection-level fault (e.g. desync report).
+                    None => {
+                        return match frame {
+                            ServerFrame::Error { code, message } => {
+                                Err(WireError::new(code, message, None))
+                            }
+                            _ => Err(WireError::protocol(
+                                "server sent a response with no request outstanding",
+                            )),
+                        }
+                    }
+                },
+            },
+        };
+        match frame {
+            ServerFrame::Response(resp) => Ok((tag, resp)),
+            ServerFrame::Error { code, message } => Err(WireError::new(code, message, Some(tag))),
+            ServerFrame::ShutdownAck => Err(WireError::protocol(
+                "unexpected shutdown ack (no shutdown was requested)",
+            )),
         }
     }
 }

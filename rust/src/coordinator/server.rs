@@ -26,6 +26,40 @@ use std::time::{Duration, Instant};
 
 type Job = (Request, Completion);
 
+/// Where a finished response is delivered. The in-process path is a
+/// plain mpsc sender; the event-loop path hands the response back to
+/// the IO shard that owns the submitting connection (as a queued
+/// completion event plus a waker byte — the executor never blocks on a
+/// slow client).
+///
+/// Dropping a sink without sending is the failure notification: a
+/// `Channel` receiver disconnects (typed `Unavailable` at `classify`),
+/// a `Shard` sink enqueues a `Failed` event for its tag.
+pub(crate) enum ReplySink {
+    Channel(mpsc::Sender<Response>),
+    Shard(crate::coordinator::event_loop::ShardSink),
+}
+
+impl ReplySink {
+    pub(crate) fn send(self, resp: Response) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(resp); // receiver may have gone away; fine
+            }
+            ReplySink::Shard(sink) => sink.send(resp),
+        }
+    }
+
+    /// Consume the sink *without* any notification — for synchronous
+    /// rejections where the submitter already holds the typed error and
+    /// a `Failed` event would double-report.
+    fn dispose(self) {
+        if let ReplySink::Shard(sink) = self {
+            sink.dispose();
+        }
+    }
+}
+
 /// Where a finished job's response goes: straight back to the one
 /// submitter, or through the single-flight lead — which also publishes
 /// the response to the cache and fans it out to coalesced waiters.
@@ -33,14 +67,11 @@ type Job = (Request, Completion);
 /// Dropping a `Flight` completion without delivering (admission
 /// rejection, failed batch, pool death, shutdown with a cleared queue)
 /// drops the [`FlightLead`], which aborts the flight: every parked
-/// waiter's channel disconnects and surfaces as the same typed
+/// waiter's sink drops undelivered and surfaces as the same typed
 /// `Unavailable` the leader gets.
 pub(crate) enum Completion {
-    Direct(mpsc::Sender<Response>),
-    Flight {
-        tx: mpsc::Sender<Response>,
-        lead: FlightLead,
-    },
+    Direct(ReplySink),
+    Flight { sink: ReplySink, lead: FlightLead },
 }
 
 impl Completion {
@@ -49,12 +80,24 @@ impl Completion {
     /// latency).
     fn deliver(self, resp: Response, m: &mut Metrics) {
         match self {
-            Completion::Direct(tx) => {
-                let _ = tx.send(resp); // receiver may have gone away; fine
-            }
-            Completion::Flight { tx, mut lead } => {
+            Completion::Direct(sink) => sink.send(resp),
+            Completion::Flight { sink, mut lead } => {
                 lead.complete(&resp, m);
-                let _ = tx.send(resp);
+                sink.send(resp);
+            }
+        }
+    }
+
+    /// Tear down a completion after a synchronous admission rejection:
+    /// the submitter's own sink is disposed silently (it has the typed
+    /// error in hand), while a flight lead drops normally so coalesced
+    /// waiters still get their abort notification.
+    fn reject(self) {
+        match self {
+            Completion::Direct(sink) => sink.dispose(),
+            Completion::Flight { sink, lead } => {
+                sink.dispose();
+                drop(lead);
             }
         }
     }
@@ -342,45 +385,60 @@ impl Server {
     /// pays queue admission and a backend pass.
     pub fn submit(&self, image: Tensor) -> Result<mpsc::Receiver<Response>, BackendError> {
         let (rtx, rrx) = mpsc::channel();
+        self.submit_sink(image, ReplySink::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Submit with an explicit delivery sink — the entry point the
+    /// event-loop front-end uses so a completion lands back on the IO
+    /// shard that owns the connection. On a typed rejection the sink is
+    /// consumed *silently* (no `Failed` event): the caller holds the
+    /// error and answers the request itself.
+    pub(crate) fn submit_sink(&self, image: Tensor, sink: ReplySink) -> Result<(), BackendError> {
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             enqueued: Instant::now(),
         };
         let completion = match &self.cache {
-            None => Completion::Direct(rtx),
+            None => Completion::Direct(sink),
             Some(cache) => {
                 let key = cache.key_of(&req.image);
-                // The flight parks a clone; `rtx` stays with this call
-                // for the hit / lead paths.
-                let parked = Waiter {
+                let waiter = Waiter {
                     id: req.id,
                     enqueued: req.enqueued,
-                    tx: rtx.clone(),
+                    sink,
                 };
-                match cache.lookup(key, parked) {
-                    Lookup::Hit(out) => {
+                match cache.lookup(key, waiter) {
+                    Lookup::Hit(out, waiter) => {
                         let resp = out.to_response(req.id, req.enqueued);
                         {
                             let mut m = self.shared.metrics.lock().unwrap();
                             m.record_cache_hit();
                             m.record(resp.latency_us);
                         }
-                        let _ = rtx.send(resp);
-                        return Ok(rrx);
+                        waiter.sink.send(resp);
+                        return Ok(());
                     }
                     Lookup::Joined => {
                         self.shared.metrics.lock().unwrap().record_cache_coalesced();
-                        return Ok(rrx);
+                        return Ok(());
                     }
-                    Lookup::Lead { lead, stale } => {
+                    Lookup::Lead {
+                        lead,
+                        waiter,
+                        stale,
+                    } => {
                         let mut m = self.shared.metrics.lock().unwrap();
                         m.record_cache_miss();
                         if stale {
                             m.record_cache_stale();
                         }
                         drop(m);
-                        Completion::Flight { tx: rtx, lead }
+                        Completion::Flight {
+                            sink: waiter.sink,
+                            lead,
+                        }
                     }
                 }
             }
@@ -392,6 +450,8 @@ impl Server {
             // last replica dies. Enqueueing past this point would strand
             // the caller's `recv()` forever, so fail typed instead.
             if !st.open {
+                drop(st);
+                completion.reject();
                 return Err(BackendError::Unavailable(match &self.init_error {
                     Some(e) => format!("backend never started: {e}"),
                     None if self.shared.pool_died.load(Ordering::SeqCst) => {
@@ -406,8 +466,9 @@ impl Server {
                 drop(st);
                 self.shared.metrics.lock().unwrap().record_rejected();
                 // A rejected lead drops its `Completion::Flight`, which
-                // aborts the flight and disconnects any waiters that
-                // managed to coalesce onto it — nobody hangs.
+                // aborts the flight and fails any waiters that managed
+                // to coalesce onto it — nobody hangs.
+                completion.reject();
                 return Err(BackendError::QueueFull {
                     depth: self.shared.max_depth,
                 });
@@ -415,7 +476,7 @@ impl Server {
             st.jobs.push_back((req, completion));
         }
         self.shared.cv.notify_one();
-        Ok(rrx)
+        Ok(())
     }
 
     /// Submit and wait for the response.

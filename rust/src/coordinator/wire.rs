@@ -14,6 +14,19 @@
 //!               a graceful drain)    ShutdownAck (len = 0)
 //! ```
 //!
+//! **Protocol v2** keeps the same header layout but prefixes every
+//! `Classify`, `Response`, and `Error` payload with a `tag: u64le` the
+//! client chose. The server echoes the tag on the frame that answers
+//! that request, so responses may complete *out of order* — the event
+//! loop front-end writes each response the moment its inference
+//! finishes instead of head-of-line-blocking the connection. Version is
+//! negotiated per connection: the version byte of the first frame a
+//! client sends latches the connection's dialect, and mixing versions
+//! afterwards is a [`ErrorCode::Malformed`] fault. `Shutdown` /
+//! `ShutdownAck` stay tagless in both versions. A v2 `Error` frame that
+//! answers no particular request (a connection-level fault like bad
+//! magic) carries the reserved [`CONN_TAG`] sentinel.
+//!
 //! Error frames are *typed* ([`ErrorCode`]): admission overload
 //! (`QueueFull`), spec violations (`InvalidRequest` — e.g. a payload
 //! whose byte count is not the backend's input shape), dead/stopped
@@ -33,8 +46,13 @@ use std::io::{self, Read, Write};
 /// Frame preamble: identifies a FastCaps peer before any length field
 /// is trusted.
 pub const MAGIC: [u8; 4] = *b"FCAP";
-/// Protocol version; bumped on any incompatible framing change.
+/// Protocol version 1: untagged frames, strict in-order replies.
 pub const VERSION: u8 = 1;
+/// Protocol version 2: tagged frames, out-of-order completion.
+pub const V2: u8 = 2;
+/// Reserved v2 tag for connection-level errors that answer no request
+/// (bad magic, oversized prefix). Clients must not submit it.
+pub const CONN_TAG: u64 = u64::MAX;
 /// Hard cap on any payload (4 MiB — far above any spec input shape). A
 /// larger length prefix is a [`Fault::Oversized`] and the connection is
 /// dropped rather than allocating attacker-controlled sizes.
@@ -93,6 +111,12 @@ pub enum ErrorCode {
     Oversized = 5,
     /// The backend failed executing a well-formed request.
     Execution = 6,
+    /// Client-local: the transport failed (connect/read/write error,
+    /// timeout). Never sent by a server.
+    Io = 100,
+    /// Client-local: the peer violated the protocol (unexpected frame,
+    /// undecodable payload). Never sent by a server.
+    Protocol = 101,
 }
 
 impl ErrorCode {
@@ -104,6 +128,10 @@ impl ErrorCode {
             4 => Some(ErrorCode::Malformed),
             5 => Some(ErrorCode::Oversized),
             6 => Some(ErrorCode::Execution),
+            // The client-local codes decode too, so a WireError written
+            // into an error frame in a test round-trips losslessly.
+            100 => Some(ErrorCode::Io),
+            101 => Some(ErrorCode::Protocol),
             _ => None,
         }
     }
@@ -138,7 +166,9 @@ impl std::fmt::Display for Fault {
             Fault::Closed => write!(f, "connection closed"),
             Fault::Truncated => write!(f, "stream truncated mid-frame"),
             Fault::BadMagic(m) => write!(f, "bad magic {m:02x?} (want {MAGIC:02x?})"),
-            Fault::BadVersion(v) => write!(f, "unsupported protocol version {v} (want {VERSION})"),
+            Fault::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION} or {V2})")
+            }
             Fault::UnknownType(t) => write!(f, "unknown frame type {t:#04x}"),
             Fault::Oversized(n) => {
                 write!(f, "length prefix {n} exceeds max payload {MAX_PAYLOAD}")
@@ -180,34 +210,22 @@ pub struct WireResponse {
 // ---------------------------------------------------------------------
 // encoding
 
-fn frame_bytes(ty: FrameType, payload: &[u8]) -> Vec<u8> {
+fn frame_bytes(version: u8, ty: FrameType, payload: &[u8]) -> Vec<u8> {
     debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     buf.extend_from_slice(&MAGIC);
-    buf.push(VERSION);
+    buf.push(version);
     buf.push(ty as u8);
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(payload);
     buf
 }
 
-/// Write a classify request: the image as f32-le words.
-pub fn write_classify(w: &mut impl Write, image: &[f32]) -> io::Result<()> {
-    let mut payload = Vec::with_capacity(image.len() * 4);
-    for v in image {
-        payload.extend_from_slice(&v.to_le_bytes());
+fn response_payload(tag: Option<u64>, resp: &Response) -> Vec<u8> {
+    let mut p = Vec::with_capacity(10 + resp.lengths.len() * 4 + 12);
+    if let Some(t) = tag {
+        p.extend_from_slice(&t.to_le_bytes());
     }
-    w.write_all(&frame_bytes(FrameType::Classify, &payload))
-}
-
-/// Write an empty-payload frame (`Shutdown` / `ShutdownAck`).
-pub fn write_empty(w: &mut impl Write, ty: FrameType) -> io::Result<()> {
-    w.write_all(&frame_bytes(ty, &[]))
-}
-
-/// Write a successful classification response.
-pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
-    let mut p = Vec::with_capacity(2 + resp.lengths.len() * 4 + 12);
     p.extend_from_slice(&(resp.lengths.len() as u16).to_le_bytes());
     for v in &resp.lengths {
         p.extend_from_slice(&v.to_le_bytes());
@@ -215,18 +233,77 @@ pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
     p.extend_from_slice(&(resp.predicted as u16).to_le_bytes());
     p.extend_from_slice(&resp.latency_us.to_le_bytes());
     p.extend_from_slice(&(resp.batch as u16).to_le_bytes());
-    w.write_all(&frame_bytes(FrameType::Response, &p))
+    p
 }
 
-/// Write a typed error frame.
-pub fn write_error(w: &mut impl Write, code: ErrorCode, message: &str) -> io::Result<()> {
+fn error_payload(tag: Option<u64>, code: ErrorCode, message: &str) -> Vec<u8> {
     // Bound the message so the frame itself can't be oversized.
     let msg = &message.as_bytes()[..message.len().min(1024)];
-    let mut p = Vec::with_capacity(3 + msg.len());
+    let mut p = Vec::with_capacity(11 + msg.len());
+    if let Some(t) = tag {
+        p.extend_from_slice(&t.to_le_bytes());
+    }
     p.push(code as u8);
     p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
     p.extend_from_slice(msg);
-    w.write_all(&frame_bytes(FrameType::Error, &p))
+    p
+}
+
+fn classify_payload(tag: Option<u64>, image: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + image.len() * 4);
+    if let Some(t) = tag {
+        p.extend_from_slice(&t.to_le_bytes());
+    }
+    for v in image {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+/// Encode a `Response` frame in either dialect. `tag` is ignored for v1
+/// (untagged) frames. The event loop appends these bytes to per-conn
+/// write buffers; the `write_*` helpers below wrap them for stream IO.
+pub fn encode_response(version: u8, tag: u64, resp: &Response) -> Vec<u8> {
+    let t = (version == V2).then_some(tag);
+    frame_bytes(version, FrameType::Response, &response_payload(t, resp))
+}
+
+/// Encode a typed `Error` frame in either dialect (tag ignored for v1).
+pub fn encode_error(version: u8, tag: u64, code: ErrorCode, message: &str) -> Vec<u8> {
+    let t = (version == V2).then_some(tag);
+    frame_bytes(version, FrameType::Error, &error_payload(t, code, message))
+}
+
+/// Encode an empty-payload frame (`Shutdown` / `ShutdownAck`) — tagless
+/// in both dialects.
+pub fn encode_empty(version: u8, ty: FrameType) -> Vec<u8> {
+    frame_bytes(version, ty, &[])
+}
+
+/// Encode a classify request in either dialect (tag ignored for v1).
+pub fn encode_classify(version: u8, tag: u64, image: &[f32]) -> Vec<u8> {
+    let t = (version == V2).then_some(tag);
+    frame_bytes(version, FrameType::Classify, &classify_payload(t, image))
+}
+
+/// Write a v1 classify request: the image as f32-le words.
+pub fn write_classify(w: &mut impl Write, image: &[f32]) -> io::Result<()> {
+    w.write_all(&encode_classify(VERSION, 0, image))
+}
+
+/// Write a v1 empty-payload frame (`Shutdown` / `ShutdownAck`).
+pub fn write_empty(w: &mut impl Write, ty: FrameType) -> io::Result<()> {
+    w.write_all(&encode_empty(VERSION, ty))
+}
+
+/// Write a v1 successful classification response.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
+    w.write_all(&encode_response(VERSION, 0, resp))
+}
+
+/// Write a v1 typed error frame.
+pub fn write_error(w: &mut impl Write, code: ErrorCode, message: &str) -> io::Result<()> {
+    w.write_all(&encode_error(VERSION, 0, code, message))
 }
 
 // ---------------------------------------------------------------------
@@ -369,6 +446,162 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, Fault> {
         other => Err(Fault::BadPayload(format!(
             "unexpected client-side frame type {other:?} from server"
         ))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// incremental (buffer-based) parsing — the event-loop front-end and the
+// tag-aware client never block in a frame reader; they accumulate bytes
+// in a receive buffer and scan complete frames out of it.
+
+/// One complete frame scanned out of a receive buffer. `payload` is
+/// `buf[HEADER_LEN..total_len]`; the caller drains `total_len` bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct ScannedFrame {
+    pub version: u8,
+    pub ty: FrameType,
+    pub total_len: usize,
+}
+
+/// Scan the front of a receive buffer for one complete frame.
+///
+/// * `Ok(Some(_))` — a whole frame (header + payload) is buffered.
+/// * `Ok(None)` — the buffer holds a valid prefix; read more bytes.
+/// * `Err(_)` — the stream is desynchronized (bad magic/version/type or
+///   oversized length); the connection cannot be resynchronized.
+///
+/// Accepts both [`VERSION`] and [`V2`] headers — per-connection version
+/// pinning is the caller's policy, not the codec's.
+pub fn scan_frame(buf: &[u8]) -> Result<Option<ScannedFrame>, Fault> {
+    if buf.len() >= 4 && buf[0..4] != MAGIC {
+        return Err(Fault::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+    }
+    if buf.len() < HEADER_LEN {
+        // Cheap early reject: a short prefix that already diverges from
+        // the magic can fault without waiting for a full header.
+        if !MAGIC.starts_with(&buf[..buf.len().min(4)]) {
+            let mut m = [0u8; 4];
+            m[..buf.len().min(4)].copy_from_slice(&buf[..buf.len().min(4)]);
+            return Err(Fault::BadMagic(m));
+        }
+        return Ok(None);
+    }
+    let version = buf[4];
+    if version != VERSION && version != V2 {
+        return Err(Fault::BadVersion(version));
+    }
+    let ty = FrameType::from_u8(buf[5]).ok_or(Fault::UnknownType(buf[5]))?;
+    let len = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]);
+    if len > MAX_PAYLOAD {
+        return Err(Fault::Oversized(len));
+    }
+    let total_len = HEADER_LEN + len as usize;
+    if buf.len() < total_len {
+        return Ok(None);
+    }
+    Ok(Some(ScannedFrame {
+        version,
+        ty,
+        total_len,
+    }))
+}
+
+/// Split a v2 classify payload into its tag and the raw image bytes.
+pub fn decode_classify_v2(payload: &[u8]) -> Result<(u64, &[u8]), Fault> {
+    if payload.len() < 8 {
+        return Err(Fault::BadPayload(format!(
+            "v2 classify payload of {} bytes is shorter than its 8-byte tag",
+            payload.len()
+        )));
+    }
+    let tag = u64::from_le_bytes(payload[..8].try_into().expect("8 bytes"));
+    Ok((tag, &payload[8..]))
+}
+
+/// Decode a server→client payload in either dialect. Returns the echoed
+/// tag (`None` for v1 frames and tagless v2 frames like `ShutdownAck`).
+pub fn decode_server_payload(
+    version: u8,
+    ty: FrameType,
+    payload: &[u8],
+) -> Result<(Option<u64>, ServerFrame), Fault> {
+    let (tag, body) = if version == V2 && matches!(ty, FrameType::Response | FrameType::Error) {
+        let (t, rest) = decode_classify_v2(payload).map_err(|_| {
+            Fault::BadPayload(format!("v2 {ty:?} payload too short for its tag"))
+        })?;
+        (Some(t), rest)
+    } else {
+        (None, payload)
+    };
+    let frame = match ty {
+        FrameType::Response => ServerFrame::Response(decode_response(body)?),
+        FrameType::Error => {
+            let (code, message) = decode_error(body)?;
+            ServerFrame::Error { code, message }
+        }
+        FrameType::ShutdownAck => ServerFrame::ShutdownAck,
+        other => {
+            return Err(Fault::BadPayload(format!(
+                "unexpected client-side frame type {other:?} from server"
+            )))
+        }
+    };
+    Ok((tag, frame))
+}
+
+// ---------------------------------------------------------------------
+// unified error taxonomy
+
+/// The one typed error surface shared by client, server, and `bench-net`
+/// — a typed server fault round-trips losslessly instead of being
+/// flattened to a string. `code` is the wire taxonomy; `tag` is the
+/// request the error answers (`None`: connection-level fault, a v1
+/// stream, or a client-side transport error).
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub tag: Option<u64>,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>, tag: Option<u64>) -> WireError {
+        WireError {
+            code,
+            message: message.into(),
+            tag,
+        }
+    }
+
+    /// Client-side transport failure (never sent by a server).
+    pub fn io(e: &io::Error) -> WireError {
+        WireError::new(ErrorCode::Io, format!("io error: {e}"), None)
+    }
+
+    /// Client-side protocol violation by the peer (never sent by a
+    /// server).
+    pub fn protocol(message: impl Into<String>) -> WireError {
+        WireError::new(ErrorCode::Protocol, message, None)
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.tag {
+            Some(t) => write!(f, "{:?} (tag {t}): {}", self.code, self.message),
+            None => write!(f, "{:?}: {}", self.code, self.message),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<Fault> for WireError {
+    fn from(fault: Fault) -> WireError {
+        match fault {
+            Fault::Io(m) => WireError::new(ErrorCode::Io, format!("io error: {m}"), None),
+            other => WireError::protocol(other.to_string()),
+        }
     }
 }
 
@@ -648,5 +881,116 @@ mod tests {
             ServerFrame::Error { message, .. } => assert_eq!(message.len(), 1024),
             other => panic!("expected error frame, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn v2_response_roundtrips_with_tag() {
+        let resp = Response {
+            id: 7,
+            lengths: vec![0.25, 0.75, 1.0e-20],
+            predicted: 1,
+            latency_us: 987,
+            batch: 4,
+        };
+        let buf = encode_response(V2, 0xDEAD_BEEF_0000_0042, &resp);
+        let f = scan_frame(&buf).unwrap().expect("complete frame");
+        assert_eq!(f.version, V2);
+        assert_eq!(f.ty, FrameType::Response);
+        assert_eq!(f.total_len, buf.len());
+        let (tag, frame) =
+            decode_server_payload(f.version, f.ty, &buf[HEADER_LEN..f.total_len]).unwrap();
+        assert_eq!(tag, Some(0xDEAD_BEEF_0000_0042));
+        match frame {
+            ServerFrame::Response(w) => {
+                for (a, b) in w.lengths.iter().zip(&resp.lengths) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(w.predicted, 1);
+                assert_eq!(w.batch, 4);
+            }
+            other => panic!("expected response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_error_roundtrips_with_tag_and_code() {
+        let buf = encode_error(V2, 9, ErrorCode::QueueFull, "admission queue full");
+        let f = scan_frame(&buf).unwrap().unwrap();
+        let (tag, frame) =
+            decode_server_payload(f.version, f.ty, &buf[HEADER_LEN..f.total_len]).unwrap();
+        assert_eq!(tag, Some(9));
+        match frame {
+            ServerFrame::Error { code, message } => {
+                assert_eq!(code, ErrorCode::QueueFull);
+                assert!(message.contains("queue"));
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_classify_splits_tag_from_image() {
+        let image = vec![1.0f32, -2.5, 0.125];
+        let buf = encode_classify(V2, 31337, &image);
+        let f = scan_frame(&buf).unwrap().unwrap();
+        assert_eq!(f.version, V2);
+        assert_eq!(f.ty, FrameType::Classify);
+        let (tag, raw) = decode_classify_v2(&buf[HEADER_LEN..f.total_len]).unwrap();
+        assert_eq!(tag, 31337);
+        let got = decode_classify(raw).unwrap();
+        for (a, b) in got.iter().zip(&image) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn v2_classify_shorter_than_tag_is_typed() {
+        assert!(matches!(
+            decode_classify_v2(&[0u8; 7]),
+            Err(Fault::BadPayload(_))
+        ));
+    }
+
+    #[test]
+    fn scan_frame_is_incremental_and_typed() {
+        let buf = encode_classify(V2, 5, &[0.5f32; 8]);
+        // Every strict prefix: either "need more bytes" or — never — a
+        // fault, since the prefix stays magic-consistent.
+        for cut in 0..buf.len() {
+            assert!(
+                matches!(scan_frame(&buf[..cut]), Ok(None)),
+                "prefix of {cut} bytes should be incomplete, not a fault"
+            );
+        }
+        let f = scan_frame(&buf).unwrap().unwrap();
+        assert_eq!(f.total_len, buf.len());
+        // Garbage faults immediately, even before a full header arrives.
+        assert!(matches!(scan_frame(b"XX"), Err(Fault::BadMagic(_))));
+        assert!(matches!(
+            scan_frame(b"XXXXgarbage-not-a-frame"),
+            Err(Fault::BadMagic(_))
+        ));
+        // Bad version / unknown type / oversized are typed.
+        let mut v = buf.clone();
+        v[4] = 99;
+        assert!(matches!(scan_frame(&v), Err(Fault::BadVersion(99))));
+        let mut t = buf.clone();
+        t[5] = 0x7f;
+        assert!(matches!(scan_frame(&t), Err(Fault::UnknownType(0x7f))));
+        let mut o = buf;
+        o[6..10].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(scan_frame(&o), Err(Fault::Oversized(_))));
+    }
+
+    #[test]
+    fn wire_error_reports_code_and_tag() {
+        let e = WireError::new(ErrorCode::QueueFull, "depth 64", Some(3));
+        let s = e.to_string();
+        assert!(s.contains("QueueFull") && s.contains("tag 3"), "{s}");
+        assert_eq!(ErrorCode::from_u8(ErrorCode::Io as u8), Some(ErrorCode::Io));
+        assert_eq!(
+            ErrorCode::from_u8(ErrorCode::Protocol as u8),
+            Some(ErrorCode::Protocol)
+        );
     }
 }

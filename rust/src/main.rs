@@ -14,10 +14,13 @@
 //!                   [--requests N] [--clients K] [--artifacts DIR]
 //!                   [--listen ADDR]   # TCP front-end; drains on a wire
 //!                                     # Shutdown frame (bench-net --stop)
+//!                   [--io-shards N]   # IO event-loop shards (default 2)
 //!                   [--cache-entries N]  # content-addressed response cache
 //!                                        # (default 4096 with --listen, else 0)
 //! fastcaps bench-net --addr ADDR [--clients K] [--requests N]
 //!                   [--window W] [--dataset mnist|fmnist] [--stop]
+//!                   [--wire v1|v2]  # protocol dialect (default v2: tagged,
+//!                                   # out-of-order completion)
 //!                   [--dup-rate P] [--dup-pool N]  # P of traffic drawn from a
 //!                                                  # shared N-frame hot pool
 //! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
@@ -31,7 +34,7 @@
 use fastcaps::backend::{BackendConfig, BackendRegistry};
 use fastcaps::cache::CacheConfig;
 use fastcaps::config::SystemConfig;
-use fastcaps::coordinator::net::NetServer;
+use fastcaps::coordinator::net::{NetConfig, NetServer};
 use fastcaps::coordinator::server::Server;
 use fastcaps::data::Task;
 use fastcaps::fpga::{power::PowerModel, resources, DeployedModel};
@@ -90,7 +93,11 @@ fn print_help() {
          \x20                per replica (bit-identical to serial);\n\
          \x20                --listen ADDR serves the wire protocol over TCP\n\
          \x20                instead of driving in-process traffic (drains\n\
-         \x20                gracefully on a wire Shutdown frame);\n\
+         \x20                gracefully on a wire Shutdown frame); the same\n\
+         \x20                listener answers HEALTH/READY/METRICS probes\n\
+         \x20                (also HTTP GET /healthz /readyz /metrics);\n\
+         \x20                --io-shards N sets the IO event-loop shard\n\
+         \x20                count (default 2);\n\
          \x20                --cache-entries N bounds the content-addressed\n\
          \x20                response cache (default 4096 with --listen,\n\
          \x20                0 = off otherwise)\n\
@@ -98,6 +105,8 @@ fn print_help() {
          \x20                --addr HOST:PORT [--clients K] [--requests N]\n\
          \x20                [--window W pipelined depth] [--stop: ask the\n\
          \x20                server to drain and exit after the run]\n\
+         \x20                [--wire v1|v2: protocol dialect, default v2\n\
+         \x20                (tagged requests, out-of-order completion)]\n\
          \x20                [--dup-rate P: fraction of requests drawn from\n\
          \x20                a shared hot pool of --dup-pool N frames —\n\
          \x20                exercises the server-side inference cache]\n\
@@ -426,12 +435,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // in-process traffic. Blocks until a client requests a graceful
         // drain (`fastcaps bench-net --addr ... --stop`), then finishes
         // in-flight work and exits 0 — CI asserts exactly that.
-        let net = NetServer::bind(listen, server)
+        let cfg = NetConfig {
+            io_shards: args.get_usize("io-shards", 2).max(1),
+            ..NetConfig::default()
+        };
+        let net = NetServer::bind_with(listen, server, cfg)
             .map_err(|e| anyhow::anyhow!("starting TCP front-end on {listen}: {e}"))?;
         println!(
-            "listening on {} (input {}x{}x{} f32; stop with: \
+            "listening on {} (wire=v2 shards={} input {}x{}x{} f32; stop with: \
              fastcaps bench-net --addr {} --requests 0 --stop)",
             net.local_addr(),
+            net.io_shards(),
             spec.input_shape.0,
             spec.input_shape.1,
             spec.input_shape.2,
@@ -455,27 +469,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// side.
 fn cmd_bench_net(args: &Args) -> Result<()> {
     use fastcaps::coordinator::metrics::Metrics;
-    use fastcaps::coordinator::net::{NetClient, NetError};
-    use std::collections::VecDeque;
+    use fastcaps::coordinator::net::Connection;
+    use fastcaps::coordinator::wire::ErrorCode;
+    use std::collections::HashMap;
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::Mutex;
     use std::time::Instant;
 
-    /// Receive the next in-order response, pricing it against the FIFO
-    /// of send times. Typed server rejections are counted, not fatal.
+    /// Receive one response (any tag — v2 servers complete out of
+    /// order), pricing it against its own send time. Typed server
+    /// rejections are counted, not fatal; transport/protocol faults are.
     fn drain_one(
-        client: &mut NetClient,
-        sent: &mut VecDeque<Instant>,
+        client: &mut Connection,
+        sent: &mut HashMap<u64, Instant>,
         local: &mut Metrics,
         rejected: &AtomicU64,
     ) -> Result<()> {
-        let t = sent.pop_front().expect("response without a request");
         match client.recv() {
-            Ok(_resp) => local.record(t.elapsed().as_micros() as u64),
-            Err(NetError::Rejected { .. }) => {
+            Ok((tag, _resp)) => {
+                let t = sent
+                    .remove(&tag)
+                    .ok_or_else(|| anyhow::anyhow!("response for unknown tag {tag}"))?;
+                local.record(t.elapsed().as_micros() as u64);
+            }
+            Err(e) if matches!(e.code, ErrorCode::Io | ErrorCode::Protocol) => {
+                anyhow::bail!("recv: {e}");
+            }
+            Err(e) => {
+                let tag = e
+                    .tag
+                    .ok_or_else(|| anyhow::anyhow!("connection-level server error: {e}"))?;
+                anyhow::ensure!(sent.remove(&tag).is_some(), "rejection for unknown tag {tag}");
                 rejected.fetch_add(1, Ordering::Relaxed);
             }
-            Err(e) => anyhow::bail!("recv: {e}"),
         }
         Ok(())
     }
@@ -487,6 +513,11 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 256);
     let n_clients = args.get_usize("clients", 4).max(1);
     let window = args.get_usize("window", 16).max(1);
+    let wire_version = match args.get_or("wire", "v2") {
+        "v1" | "1" => fastcaps::coordinator::wire::VERSION,
+        "v2" | "2" => fastcaps::coordinator::wire::V2,
+        other => anyhow::bail!("unknown --wire '{other}' (expected v1|v2)"),
+    };
     let task = Task::parse(args.get_or("dataset", "mnist"))
         .ok_or_else(|| anyhow::anyhow!("unknown dataset (expected mnist|fmnist)"))?;
     // Duplicate traffic: with probability --dup-rate each request is
@@ -505,14 +536,14 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
         if dup_rate > 0.0 {
             println!(
                 "bench-net: {n_requests} requests from {n_clients} pipelined clients \
-                 (window {window}, {:.0}% duplicates from a {dup_pool_size}-frame hot \
-                 pool) against {addr}",
+                 (window {window}, wire v{wire_version}, {:.0}% duplicates from a \
+                 {dup_pool_size}-frame hot pool) against {addr}",
                 dup_rate * 100.0,
             );
         } else {
             println!(
                 "bench-net: {n_requests} requests from {n_clients} pipelined clients \
-                 (window {window}) against {addr}"
+                 (window {window}, wire v{wire_version}) against {addr}"
             );
         }
         std::thread::scope(|scope| -> Result<()> {
@@ -524,7 +555,7 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
                 let dup_pool = dup_pool.as_ref();
                 let share = n_requests / n_clients + usize::from(c < n_requests % n_clients);
                 workers.push(scope.spawn(move || -> Result<()> {
-                    let mut client = NetClient::connect(addr)
+                    let mut client = Connection::connect_with(addr, wire_version)
                         .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
                     // A wedged server must fail the bench, not hang it
                     // (CI waits on this process).
@@ -533,9 +564,10 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
                         .map_err(|e| anyhow::anyhow!("{e}"))?;
                     let data = fastcaps::data::generate(task, share, c as u64);
                     let mut rng = fastcaps::util::rng::Rng::new(0xBE7 + c as u64);
-                    // In-order pipelining: responses come back in request
-                    // order, so a FIFO of send times prices each response.
-                    let mut sent: VecDeque<Instant> = VecDeque::with_capacity(window);
+                    // Tag-keyed send times: v2 servers may complete out
+                    // of order, and each response prices against its own
+                    // request regardless of arrival order.
+                    let mut sent: HashMap<u64, Instant> = HashMap::with_capacity(window);
                     let mut local = Metrics::default();
                     for img in &data.images {
                         let img = match dup_pool {
@@ -547,10 +579,11 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
                         if sent.len() == window {
                             drain_one(&mut client, &mut sent, &mut local, rejected)?;
                         }
-                        sent.push_back(Instant::now());
-                        client
-                            .send(img)
+                        let t = Instant::now();
+                        let tag = client
+                            .submit(img)
                             .map_err(|e| anyhow::anyhow!("send: {e}"))?;
+                        sent.insert(tag, t);
                     }
                     while !sent.is_empty() {
                         drain_one(&mut client, &mut sent, &mut local, rejected)?;
@@ -590,8 +623,8 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
     }
 
     if args.flag("stop") {
-        let client =
-            NetClient::connect(&addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let client = Connection::connect_with(&addr, wire_version)
+            .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
         // Bound the wait for the ack the same way: a server that never
         // acks is a failure to report, not a hang.
         client

@@ -1,0 +1,391 @@
+//! Hostile-traffic and v2 out-of-order tests for the sharded network
+//! front-end: clients that trickle, stall, overflow, half-open, or mix
+//! protocol dialects must never wedge the event loop or the executor
+//! pool — and the v2 tagged path must complete out of order around a
+//! stalled head-of-line request, bit-identical to in-process serving.
+
+use fastcaps::backend::{BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
+use fastcaps::coordinator::net::{Connection, NetConfig, NetServer};
+use fastcaps::coordinator::server::Server;
+use fastcaps::coordinator::wire::{self, ErrorCode, ServerFrame, V2, VERSION};
+use fastcaps::tensor::Tensor;
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn toy_spec() -> BackendSpec {
+    BackendSpec {
+        kind: "toy".into(),
+        model: "toy".into(),
+        input_shape: (1, 4, 4),
+        batch_buckets: vec![1],
+        reports_timing: false,
+        max_replicas: None,
+        compression: None,
+        fingerprint: 0,
+        routing: String::new(),
+        workers: 1,
+        coupling_fingerprint: None,
+    }
+}
+
+/// Marker pixel value: images whose first element is `STALL` make the
+/// backend sleep, pinning one replica — the head-of-line stall.
+const STALL: f32 = 9.0;
+
+/// Deterministic backend: lengths one-hot-encode the image mean (so
+/// wire and in-process answers compare bit for bit); `STALL`-marked
+/// images additionally sleep before answering.
+struct ToyBackend {
+    spec: BackendSpec,
+    stall: Duration,
+    lengths: usize,
+}
+
+impl InferenceBackend for ToyBackend {
+    fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutput, BackendError> {
+        self.validate(req)?;
+        if req.images.iter().any(|img| img.data[0] == STALL) {
+            std::thread::sleep(self.stall);
+        }
+        Ok(InferOutput::untimed(
+            req.images
+                .iter()
+                .map(|img| {
+                    let m = img.sum() / img.len() as f32;
+                    let mut l = vec![0.1f32; self.lengths];
+                    l[(m * 10.0) as usize % self.lengths] = 0.9;
+                    l
+                })
+                .collect(),
+        ))
+    }
+}
+
+fn toy_server(replicas: usize, stall: Duration, lengths: usize) -> Server {
+    Server::builder(move || {
+        Ok(Box::new(ToyBackend {
+            spec: toy_spec(),
+            stall,
+            lengths,
+        }) as Box<dyn InferenceBackend>)
+    })
+    .replicas(replicas)
+    .max_wait(Duration::from_micros(100))
+    .max_queue_depth(1024)
+    .start()
+}
+
+fn toy_net(cfg: NetConfig) -> NetServer {
+    NetServer::bind_with("127.0.0.1:0", toy_server(2, Duration::ZERO, 10), cfg)
+        .expect("bind loopback")
+}
+
+/// Image whose toy prediction is `k % 10` (mean = k/10 + 0.05).
+fn image_for(k: usize) -> Tensor {
+    Tensor::full(&[1, 4, 4], (k % 10) as f32 / 10.0 + 0.05)
+}
+
+/// Image carrying the stall marker in pixel 0.
+fn stall_image() -> Tensor {
+    let mut data = vec![0.0f32; 16];
+    data[0] = STALL;
+    Tensor::from_vec(&[1, 4, 4], data).unwrap()
+}
+
+fn read_frame(stream: &TcpStream) -> Result<ServerFrame, wire::Fault> {
+    stream.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let mut r = BufReader::new(stream);
+    wire::read_server_frame(&mut r)
+}
+
+/// A slowloris trickling one byte every millisecond must not stall the
+/// shard: a well-behaved client on the SAME shard keeps being served
+/// concurrently, and the slow request itself completes once assembled.
+#[test]
+fn slowloris_does_not_stall_the_shard() {
+    let net = toy_net(NetConfig {
+        io_shards: 1,
+        ..NetConfig::default()
+    });
+    let addr = net.local_addr();
+    let frame = wire::encode_classify(VERSION, 0, &image_for(3).data);
+    let slow = std::thread::spawn(move || {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        for b in &frame {
+            raw.write_all(std::slice::from_ref(b)).unwrap();
+            raw.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        match read_frame(&raw).unwrap() {
+            ServerFrame::Response(r) => assert_eq!(r.predicted, 3),
+            other => panic!("slow client expected a response, got {other:?}"),
+        }
+    });
+    // While the trickle is in progress, fast traffic flows normally.
+    let mut client = Connection::v1_compat(addr).expect("connect");
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    let t0 = Instant::now();
+    for k in 0..20 {
+        assert_eq!(client.classify(&image_for(k)).unwrap().predicted as usize, k % 10);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "fast client was starved behind a slowloris: {:?}",
+        t0.elapsed()
+    );
+    slow.join().unwrap();
+    net.shutdown();
+}
+
+/// Half-open peers (connected but silent, or write-shutdown mid-frame)
+/// must not block a graceful drain.
+#[test]
+fn half_open_connections_do_not_block_drain() {
+    let net = toy_net(NetConfig::default());
+    let addr = net.local_addr();
+    // Silent connection: never sends a byte.
+    let _silent = TcpStream::connect(addr).unwrap();
+    // Mid-frame half-open: partial header, then write side shut down.
+    let mut partial = TcpStream::connect(addr).unwrap();
+    partial.write_all(b"FCAP").unwrap();
+    partial.shutdown(std::net::Shutdown::Write).unwrap();
+    // A real request proves the server noticed all three connections.
+    let mut client = Connection::v1_compat(addr).expect("connect");
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    assert_eq!(client.classify(&image_for(1)).unwrap().predicted, 1);
+    let t0 = Instant::now();
+    let m = net.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "drain blocked on half-open connections: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(m.connections_closed, m.connections_opened);
+}
+
+/// The whole point of the readiness loop: connections are state, not
+/// threads. A pile of idle connections must not grow the thread count.
+#[cfg(target_os = "linux")]
+#[test]
+fn idle_connections_do_not_spawn_threads() {
+    fn threads() -> usize {
+        let status = std::fs::read_to_string("/proc/self/status").unwrap();
+        status
+            .lines()
+            .find_map(|l| l.strip_prefix("Threads:"))
+            .and_then(|v| v.trim().parse().ok())
+            .expect("Threads: line in /proc/self/status")
+    }
+    let net = toy_net(NetConfig {
+        io_shards: 2,
+        ..NetConfig::default()
+    });
+    let baseline = threads();
+    let n = 256usize;
+    let idle: Vec<TcpStream> = (0..n)
+        .map(|_| TcpStream::connect(net.local_addr()).unwrap())
+        .collect();
+    // Wait until every connection has been accepted and handed to a
+    // shard (accept is async to connect returning).
+    let t0 = Instant::now();
+    while net.server().metrics().connections_opened < n as u64 {
+        assert!(t0.elapsed() < RECV_TIMEOUT, "server never accepted {n} connections");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let with_idle = threads();
+    assert!(
+        with_idle <= baseline + 2,
+        "{n} idle connections grew the thread count {baseline} -> {with_idle}"
+    );
+    // They are still live connections, not dropped on the floor.
+    drop(idle);
+    let m = net.shutdown();
+    assert!(m.connections_opened >= n as u64);
+}
+
+/// v2 out-of-order completion: a stalled head-of-line request must not
+/// hold back later submissions — they complete first, tagged, and the
+/// results are bit-identical to in-process classification.
+#[test]
+fn v2_stalled_head_completes_out_of_order_bit_identical() {
+    let server = toy_server(2, Duration::from_millis(400), 10);
+    let net = NetServer::bind_with("127.0.0.1:0", server, NetConfig::default()).unwrap();
+    let mut client = Connection::connect(net.local_addr()).expect("connect");
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    assert_eq!(client.protocol_version(), V2);
+
+    let stall_tag = client.submit(&stall_image()).unwrap();
+    let fast: Vec<(u64, Tensor)> = (0..4)
+        .map(|k| {
+            let img = image_for(k);
+            (client.submit(&img).unwrap(), img)
+        })
+        .collect();
+
+    let mut order = Vec::new();
+    let mut responses = Vec::new();
+    for _ in 0..5 {
+        let (tag, resp) = client.recv().unwrap();
+        order.push(tag);
+        responses.push((tag, resp));
+    }
+    // The stalled request pins one replica for 400ms; the fast four run
+    // on the other replica and answer while it sleeps.
+    assert_ne!(order[0], stall_tag, "stalled head blocked later requests");
+    assert_eq!(
+        order.last().copied(),
+        Some(stall_tag),
+        "stalled request should complete last, got order {order:?}"
+    );
+    // Bit-identical to in-process serving, matched up by tag.
+    for (tag, img) in &fast {
+        let direct = net.server().classify(img.clone()).unwrap();
+        let wired = &responses.iter().find(|(t, _)| t == tag).unwrap().1;
+        assert_eq!(wired.lengths.len(), direct.lengths.len());
+        for (a, b) in wired.lengths.iter().zip(&direct.lengths) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    let m = net.shutdown();
+    assert_eq!(m.wire_requests, 5);
+    assert_eq!(m.wire_errors, 0);
+}
+
+/// A client that pipelines requests but never reads responses must be
+/// disconnected when its write buffer overflows — counted in
+/// `net_slow_client_drops` — while the server keeps serving others.
+#[test]
+fn slow_reader_is_dropped_not_buffered_forever() {
+    // ~120KB per response (30k lengths) against the minimum 4KiB write
+    // buffer: a handful of unread responses overflow it no matter how
+    // much the kernel socket buffers absorb.
+    let server = toy_server(2, Duration::ZERO, 30_000);
+    let net = NetServer::bind_with(
+        "127.0.0.1:0",
+        server,
+        NetConfig {
+            io_shards: 1,
+            max_write_buffer: 4096,
+        },
+    )
+    .unwrap();
+    let mut hog = Connection::connect(net.local_addr()).expect("connect");
+    for k in 0..100 {
+        // The server may cut the connection (the point of this test)
+        // while submissions are still in flight — that's not a failure.
+        if hog.submit(&image_for(k)).is_err() {
+            break;
+        }
+    }
+    // Never read: the server must cut the connection, not buffer 12MB.
+    let t0 = Instant::now();
+    while net.server().metrics().slow_client_drops == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "server buffered a non-reading client forever"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // The server survives and serves well-behaved clients.
+    let mut client = Connection::connect(net.local_addr()).expect("connect");
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    assert_eq!(client.classify(&image_for(2)).unwrap().predicted, 2);
+    drop(hog);
+    let m = net.shutdown();
+    assert!(m.slow_client_drops >= 1);
+    assert!(m.summary().contains("slow_client_drops="), "{}", m.summary());
+}
+
+/// Mixing wire dialects on one connection is a desync: the server
+/// answers what it accepted, reports `Malformed`, and closes.
+#[test]
+fn mixed_version_frames_are_malformed_desync() {
+    let net = toy_net(NetConfig::default());
+    let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+    raw.write_all(&wire::encode_classify(VERSION, 0, &image_for(4).data))
+        .unwrap();
+    raw.write_all(&wire::encode_classify(V2, 7, &image_for(5).data))
+        .unwrap();
+    raw.flush().unwrap();
+    // The accepted v1 request is still answered, in order...
+    match read_frame(&raw).unwrap() {
+        ServerFrame::Response(r) => assert_eq!(r.predicted, 4),
+        other => panic!("expected the v1 response first, got {other:?}"),
+    }
+    // ...then the dialect mix surfaces as a typed desync error...
+    match read_frame(&raw).unwrap() {
+        ServerFrame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::Malformed);
+            assert!(message.contains("mixed"), "{message}");
+        }
+        other => panic!("expected a Malformed error frame, got {other:?}"),
+    }
+    // ...and the stream closes (it cannot be resynchronized).
+    assert!(matches!(read_frame(&raw), Err(wire::Fault::Closed)));
+    let m = net.shutdown();
+    assert_eq!(m.wire_errors, 1);
+}
+
+/// Raw-text probe round-trip on the serving port: the sidecar answers
+/// HEALTH/READY/METRICS without speaking the binary protocol.
+#[test]
+fn plaintext_probes_roundtrip_on_the_serving_port() {
+    fn ask(addr: std::net::SocketAddr, req: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+        s.write_all(req).unwrap();
+        s.flush().unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+    let net = toy_net(NetConfig::default());
+    let addr = net.local_addr();
+    // Serve one request so the counters are nonzero in the exposition.
+    let mut client = Connection::connect(addr).expect("connect");
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    assert_eq!(client.classify(&image_for(6)).unwrap().predicted, 6);
+
+    assert_eq!(ask(addr, b"HEALTH\n"), "OK\n");
+    assert_eq!(ask(addr, b"READY\n"), "READY\n");
+    let metrics = ask(addr, b"METRICS\n");
+    assert!(metrics.contains("fastcaps_requests_total 1"), "{metrics}");
+    assert!(metrics.contains("fastcaps_shard_connections_total"), "{metrics}");
+
+    // The same endpoints speak enough HTTP for curl/probes.
+    let health = ask(addr, b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(health.starts_with("HTTP/1.0 200 OK\r\n"), "{health}");
+    assert!(health.ends_with("ok\n"), "{health}");
+    let ready = ask(addr, b"GET /readyz HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(ready.starts_with("HTTP/1.0 200 OK\r\n"), "{ready}");
+    let http_metrics = ask(addr, b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(http_metrics.contains("fastcaps_wire_requests_total"), "{http_metrics}");
+    let missing = ask(addr, b"GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(missing.starts_with("HTTP/1.0 404"), "{missing}");
+    net.shutdown();
+}
+
+/// After a wire-initiated drain begins, READY flips to NOT_READY while
+/// HEALTH stays OK — the probe split load balancers rely on.
+#[test]
+fn readiness_flips_during_drain_health_does_not() {
+    let net = toy_net(NetConfig::default());
+    let addr = net.local_addr();
+    let client = Connection::connect(addr).expect("connect");
+    client.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    client.shutdown_server().expect("shutdown ack");
+    net.wait_shutdown_requested();
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    s.write_all(b"READY\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert_eq!(out, "NOT_READY\n");
+    net.shutdown();
+}

@@ -4,9 +4,13 @@
 //! typed error frame without poisoning the connection or the server,
 //! pipelined ordering under concurrency, graceful drain, and the
 //! dead-pool path surfacing as a typed error instead of a hang.
+//!
+//! All connections here use [`Connection::v1_compat`]: these tests pin
+//! the v1 in-order semantics that pre-v2 clients rely on. The v2
+//! out-of-order path is covered by `net_hostile.rs`.
 
 use fastcaps::backend::{BackendError, BackendSpec, InferOutput, InferRequest, InferenceBackend};
-use fastcaps::coordinator::net::{NetClient, NetError, NetServer};
+use fastcaps::coordinator::net::{Connection, NetServer};
 use fastcaps::coordinator::server::Server;
 use fastcaps::coordinator::wire::{self, ErrorCode, ServerFrame, MAGIC, MAX_PAYLOAD, VERSION};
 use fastcaps::tensor::Tensor;
@@ -76,8 +80,8 @@ fn toy_net(delay: Duration, max_wait: Duration, max_queue: usize) -> NetServer {
     NetServer::bind("127.0.0.1:0", server).expect("bind loopback")
 }
 
-fn connect(net: &NetServer) -> NetClient {
-    let c = NetClient::connect(net.local_addr()).expect("connect");
+fn connect(net: &NetServer) -> Connection {
+    let c = Connection::v1_compat(net.local_addr()).expect("connect");
     c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
     c
 }
@@ -201,12 +205,13 @@ fn wrong_input_shape_typed_error_connection_survives() {
     let mut client = connect(&net);
     // 2×2 image against a (1,4,4) spec: 16 bytes instead of 64.
     match client.classify(&Tensor::full(&[1, 2, 2], 0.5)) {
-        Err(NetError::Rejected { code, message }) => {
-            assert_eq!(code, ErrorCode::InvalidRequest);
+        Err(e) => {
+            assert_eq!(e.code, ErrorCode::InvalidRequest);
+            let message = &e.message;
             assert!(message.contains("64"), "should name expected bytes: {message}");
             assert!(message.contains("(1, 4, 4)"), "should name the spec shape: {message}");
         }
-        other => panic!("expected InvalidRequest rejection, got {other:?}"),
+        Ok(resp) => panic!("expected InvalidRequest rejection, got {resp:?}"),
     }
     // Same connection still serves a well-formed request afterwards.
     assert_eq!(client.classify(&image_for(5)).unwrap().predicted, 5);
@@ -224,11 +229,15 @@ fn concurrent_pipelined_clients_get_responses_in_request_order() {
             scope.spawn(move || {
                 let mut client = connect(net);
                 let n = 16;
+                let mut tags = Vec::with_capacity(n);
                 for k in 0..n {
-                    client.send(&image_for(c + 2 * k)).unwrap();
+                    tags.push(client.submit(&image_for(c + 2 * k)).unwrap());
                 }
                 for k in 0..n {
-                    let resp = client.recv().unwrap();
+                    let (tag, resp) = client.recv().unwrap();
+                    // v1 compat: responses arrive strictly in request
+                    // order, so the synthesized tags match FIFO order.
+                    assert_eq!(tag, tags[k], "client {c} got response {k} out of order");
                     assert_eq!(
                         resp.predicted as usize,
                         (c + 2 * k) % 10,
@@ -249,15 +258,15 @@ fn graceful_drain_finishes_in_flight_requests() {
     let mut client = connect(&net);
     let n = 6;
     for k in 0..n {
-        client.send(&image_for(k)).unwrap();
+        client.submit(&image_for(k)).unwrap();
     }
-    // Let the reader thread pull everything off the socket so the
-    // requests count as in-flight when the drain cuts the read side.
+    // Let the IO shard pull everything off the socket so the requests
+    // count as in-flight when the drain cuts the read side.
     std::thread::sleep(Duration::from_millis(100));
     let collector = std::thread::spawn(move || {
         let mut got = 0usize;
         for k in 0..n {
-            let resp = client.recv().expect("in-flight response lost in drain");
+            let (_, resp) = client.recv().expect("in-flight response lost in drain");
             assert_eq!(resp.predicted as usize, k % 10);
             got += 1;
         }
@@ -291,17 +300,14 @@ fn queue_full_surfaces_as_typed_error_over_wire() {
     let mut client = connect(&net);
     let n = 12;
     for k in 0..n {
-        client.send(&image_for(k)).unwrap();
+        client.submit(&image_for(k)).unwrap();
     }
     let mut ok = 0;
     let mut rejected = 0;
     for _ in 0..n {
         match client.recv() {
             Ok(_) => ok += 1,
-            Err(NetError::Rejected { code, .. }) => {
-                assert_eq!(code, ErrorCode::QueueFull);
-                rejected += 1;
-            }
+            Err(e) if e.code == ErrorCode::QueueFull => rejected += 1,
             Err(other) => panic!("unexpected transport error: {other}"),
         }
     }
@@ -317,7 +323,7 @@ fn queue_full_surfaces_as_typed_error_over_wire() {
                 served = true;
                 break;
             }
-            Err(NetError::Rejected { code, .. }) if code == ErrorCode::QueueFull => {
+            Err(e) if e.code == ErrorCode::QueueFull => {
                 std::thread::sleep(Duration::from_millis(10));
             }
             Err(other) => panic!("unexpected error: {other}"),
@@ -350,16 +356,16 @@ fn dead_pool_is_typed_error_over_wire_not_a_hang() {
     // First request rides the panicking replica: the dropped response
     // must come back as a typed Unavailable frame within the timeout.
     match client.classify(&image_for(0)) {
-        Err(NetError::Rejected { code, .. }) => assert_eq!(code, ErrorCode::Unavailable),
-        other => panic!("expected Unavailable rejection, got {other:?}"),
+        Err(e) => assert_eq!(e.code, ErrorCode::Unavailable),
+        Ok(resp) => panic!("expected Unavailable rejection, got {resp:?}"),
     }
     // Later requests are rejected at admission (dead pool), same type.
     match client.classify(&image_for(1)) {
-        Err(NetError::Rejected { code, message }) => {
-            assert_eq!(code, ErrorCode::Unavailable);
-            assert!(message.contains("died"), "{message}");
+        Err(e) => {
+            assert_eq!(e.code, ErrorCode::Unavailable);
+            assert!(e.message.contains("died"), "{}", e.message);
         }
-        other => panic!("expected Unavailable rejection, got {other:?}"),
+        Ok(resp) => panic!("expected Unavailable rejection, got {resp:?}"),
     }
     let m = net.shutdown();
     assert_eq!(m.replicas_died, 1);

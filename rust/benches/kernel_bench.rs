@@ -1,0 +1,293 @@
+//! Scalar-vs-AVX2 microbenchmarks for the SIMD kernel layer
+//! (`fastcaps::kernels`), over the shapes the datapaths actually run:
+//! the Q8.8 conv-row MAC, the Q4.12 û-projection / routing-FC axpy,
+//! the routing reductions, the squash requantize writeback, and the
+//! fp32 axpy.
+//!
+//! On hosts with AVX2 the run gates on a ≥2× geometric-mean speedup of
+//! the vector path over the scalar path (both called directly, no
+//! dispatch). Elsewhere the comparison is skipped cleanly — there is
+//! only one implementation to measure.
+//!
+//! Each timed sample batches `REPS` kernel calls: a single call is a
+//! handful of nanoseconds, well under the sampling-clock overhead, and
+//! an unbatched comparison would gate on `Instant::now` instead of the
+//! kernels. Inputs pass through `black_box` so the loop cannot be
+//! hoisted or folded.
+//!
+//! Every pair first asserts the two implementations agree bit-for-bit
+//! on its operands (the module's property tests cover the general
+//! claim; this pins it on the benchmarked shapes too).
+
+use fastcaps::util::bench::Bencher;
+use fastcaps::util::rng::Rng;
+use std::hint::black_box;
+
+/// Kernel calls per timed sample.
+const REPS: usize = 512;
+
+fn rand_i16(r: &mut Rng) -> i16 {
+    (r.below(65536) as i32 - 32768) as i16
+}
+
+/// Operand set shared by both paths: conv output row (96-wide, the
+/// Q8.8 conv-row MAC), û projection / routing-FC row (dc_dim = 16),
+/// reduction rows (64-wide), and a squash requantize row.
+struct Operands {
+    conv_w: Vec<i16>,
+    conv_acc: Vec<i64>,
+    fc_w: Vec<i16>,
+    fc_acc: Vec<i64>,
+    red_a: Vec<i16>,
+    red_b: Vec<i16>,
+    sq_in: Vec<i16>,
+    f32_w: Vec<f32>,
+    f32_acc: Vec<f32>,
+}
+
+impl Operands {
+    fn generate() -> Operands {
+        let mut rng = Rng::new(0xBE9C);
+        Operands {
+            conv_w: (0..96).map(|_| rand_i16(&mut rng)).collect(),
+            conv_acc: vec![3i64; 96],
+            fc_w: (0..16).map(|_| rand_i16(&mut rng)).collect(),
+            fc_acc: vec![-7i64; 16],
+            red_a: (0..64).map(|_| rand_i16(&mut rng)).collect(),
+            red_b: (0..64).map(|_| rand_i16(&mut rng)).collect(),
+            sq_in: (0..16).map(|_| rand_i16(&mut rng)).collect(),
+            f32_w: (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            f32_acc: vec![0.25f32; 64],
+        }
+    }
+}
+
+fn main() {
+    #[cfg(target_arch = "x86_64")]
+    if fastcaps::kernels::avx2_supported() {
+        gated_comparison();
+        return;
+    }
+    scalar_only();
+}
+
+/// Non-AVX2 hosts: time the scalar kernels so the bench still produces
+/// numbers, and skip the speedup gate (nothing to compare against).
+fn scalar_only() {
+    use fastcaps::kernels::scalar;
+    let mut op = Operands::generate();
+    let mut b = Bencher::new();
+    b.section("kernel microbench (scalar only — host has no AVX2)");
+    b.bench("conv-row axpy_i16 scalar x512", || {
+        for _ in 0..REPS {
+            scalar::axpy_i16(&mut op.conv_acc, 77, black_box(&op.conv_w));
+        }
+    });
+    b.bench("fc axpy_i16 scalar x512", || {
+        for _ in 0..REPS {
+            scalar::axpy_i16(&mut op.fc_acc, -1234, black_box(&op.fc_w));
+        }
+    });
+    b.bench("dot_i16 scalar x512", || {
+        for _ in 0..REPS {
+            black_box(scalar::dot_i16(black_box(&op.red_a), &op.red_b));
+        }
+    });
+    b.bench("scale_i16_q scalar x512", || {
+        let mut out = [0i16; 16];
+        for _ in 0..REPS {
+            scalar::scale_i16_q::<12>(black_box(&op.sq_in), 2048, &mut out);
+            black_box(&mut out);
+        }
+    });
+    b.bench("axpy_f32 scalar x512", || {
+        for _ in 0..REPS {
+            scalar::axpy_f32(&mut op.f32_acc, 0.5, black_box(&op.f32_w));
+        }
+    });
+    println!("\nno AVX2 on this host; scalar-vs-vector gate skipped");
+}
+
+#[cfg(target_arch = "x86_64")]
+fn gated_comparison() {
+    use fastcaps::kernels::{avx2, scalar};
+
+    let op = Operands::generate();
+
+    // Bit-identity spot checks on the benchmarked shapes.
+    {
+        let mut a = op.conv_acc.clone();
+        let mut v = op.conv_acc.clone();
+        scalar::axpy_i16(&mut a, 77, &op.conv_w);
+        unsafe { avx2::axpy_i16(&mut v, 77, &op.conv_w) };
+        assert_eq!(a, v, "axpy_i16 bit-identity");
+        assert_eq!(
+            scalar::dot_i16(&op.red_a, &op.red_b),
+            unsafe { avx2::dot_i16(&op.red_a, &op.red_b) },
+            "dot_i16 bit-identity"
+        );
+        let mut s = [0i16; 16];
+        let mut t = [0i16; 16];
+        scalar::scale_i16_q::<12>(&op.sq_in, 2048, &mut s);
+        unsafe { avx2::scale_i16_q::<12>(&op.sq_in, 2048, &mut t) };
+        assert_eq!(s, t, "scale_i16_q bit-identity");
+        let mut fa = op.f32_acc.clone();
+        let mut fv = op.f32_acc.clone();
+        scalar::axpy_f32(&mut fa, 0.5, &op.f32_w);
+        unsafe { avx2::axpy_f32(&mut fv, 0.5, &op.f32_w) };
+        let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&fa), bits(&fv), "axpy_f32 bit-identity");
+    }
+
+    let mut b = Bencher::new();
+    let mut speedups: Vec<(&'static str, f64)> = Vec::new();
+
+    b.section("Q8.8 conv-row MAC (96-wide axpy_i16, x512)");
+    {
+        let mut acc = op.conv_acc.clone();
+        let s = b
+            .bench("conv axpy_i16 scalar", || {
+                for _ in 0..REPS {
+                    scalar::axpy_i16(&mut acc, 77, black_box(&op.conv_w));
+                }
+            })
+            .mean_ns;
+        let mut acc = op.conv_acc.clone();
+        let v = b
+            .bench("conv axpy_i16 avx2", || {
+                for _ in 0..REPS {
+                    unsafe { avx2::axpy_i16(&mut acc, 77, black_box(&op.conv_w)) };
+                }
+            })
+            .mean_ns;
+        speedups.push(("conv axpy_i16", s / v.max(1e-9)));
+    }
+
+    b.section("Q4.12 û-projection / routing-FC (16-wide axpy_i16, x512)");
+    {
+        let mut acc = op.fc_acc.clone();
+        let s = b
+            .bench("fc axpy_i16 scalar", || {
+                for _ in 0..REPS {
+                    scalar::axpy_i16(&mut acc, -1234, black_box(&op.fc_w));
+                }
+            })
+            .mean_ns;
+        let mut acc = op.fc_acc.clone();
+        let v = b
+            .bench("fc axpy_i16 avx2", || {
+                for _ in 0..REPS {
+                    unsafe { avx2::axpy_i16(&mut acc, -1234, black_box(&op.fc_w)) };
+                }
+            })
+            .mean_ns;
+        speedups.push(("fc axpy_i16", s / v.max(1e-9)));
+    }
+
+    b.section("routing reductions (64-wide, x512)");
+    {
+        let s = b
+            .bench("dot_i16 scalar", || {
+                for _ in 0..REPS {
+                    black_box(scalar::dot_i16(black_box(&op.red_a), &op.red_b));
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("dot_i16 avx2", || {
+                for _ in 0..REPS {
+                    black_box(unsafe { avx2::dot_i16(black_box(&op.red_a), &op.red_b) });
+                }
+            })
+            .mean_ns;
+        speedups.push(("dot_i16", s / v.max(1e-9)));
+        let s = b
+            .bench("sumsq_i16 scalar", || {
+                for _ in 0..REPS {
+                    black_box(scalar::sumsq_i16(black_box(&op.red_a)));
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("sumsq_i16 avx2", || {
+                for _ in 0..REPS {
+                    black_box(unsafe { avx2::sumsq_i16(black_box(&op.red_a)) });
+                }
+            })
+            .mean_ns;
+        speedups.push(("sumsq_i16", s / v.max(1e-9)));
+    }
+
+    b.section("squash/softmax staging (x512)");
+    {
+        let s = b
+            .bench("scale_i16_q scalar", || {
+                let mut out = [0i16; 16];
+                for _ in 0..REPS {
+                    scalar::scale_i16_q::<12>(black_box(&op.sq_in), 2048, &mut out);
+                    black_box(&mut out);
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("scale_i16_q avx2", || {
+                let mut out = [0i16; 16];
+                for _ in 0..REPS {
+                    unsafe { avx2::scale_i16_q::<12>(black_box(&op.sq_in), 2048, &mut out) };
+                    black_box(&mut out);
+                }
+            })
+            .mean_ns;
+        speedups.push(("scale_i16_q", s / v.max(1e-9)));
+        let s = b
+            .bench("max_i16 scalar", || {
+                for _ in 0..REPS {
+                    black_box(scalar::max_i16(black_box(&op.red_a)));
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("max_i16 avx2", || {
+                for _ in 0..REPS {
+                    black_box(unsafe { avx2::max_i16(black_box(&op.red_a)) });
+                }
+            })
+            .mean_ns;
+        speedups.push(("max_i16", s / v.max(1e-9)));
+    }
+
+    b.section("fp32 û-projection axpy (64-wide, x512)");
+    {
+        let mut acc = op.f32_acc.clone();
+        let s = b
+            .bench("axpy_f32 scalar", || {
+                for _ in 0..REPS {
+                    scalar::axpy_f32(&mut acc, 0.5, black_box(&op.f32_w));
+                }
+            })
+            .mean_ns;
+        let mut acc = op.f32_acc.clone();
+        let v = b
+            .bench("axpy_f32 avx2", || {
+                for _ in 0..REPS {
+                    unsafe { avx2::axpy_f32(&mut acc, 0.5, black_box(&op.f32_w)) };
+                }
+            })
+            .mean_ns;
+        speedups.push(("axpy_f32", s / v.max(1e-9)));
+    }
+
+    println!("\n== speedups (scalar time / avx2 time) ==");
+    let mut log_sum = 0.0f64;
+    for (name, x) in &speedups {
+        println!("{name:<24} {x:>6.2}x");
+        log_sum += x.ln();
+    }
+    let geomean = (log_sum / speedups.len() as f64).exp();
+    println!("{:<24} {geomean:>6.2}x", "geomean");
+    assert!(
+        geomean >= 2.0,
+        "AVX2 kernel geomean speedup {geomean:.2}x is below the 2x gate"
+    );
+    println!("\nkernel gate ok: geomean {geomean:.2}x >= 2x");
+}

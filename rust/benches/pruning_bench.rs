@@ -172,4 +172,62 @@ fn main() {
              {acc_i:.2}% vs {acc_a:.2}%"
         );
     }
+
+    b.section("SIMD dispatch: functional Q8.8/Q4.12 forward, scalar vs AVX2");
+    simd_forward_section(&mut b, &sparse_sim);
+}
+
+/// Force each dispatch level in turn and run the functional fixed-point
+/// batch forward. The integer kernels are bit-identical by construction
+/// (wide accumulators make every summation order exact — zero drift, a
+/// stronger property than the ≤1e-5 gate the issue allows), so the AVX2
+/// pass must reproduce the scalar outputs bit-for-bit AND beat it by
+/// ≥1.5× wall clock at batch 16.
+#[cfg(target_arch = "x86_64")]
+fn simd_forward_section(b: &mut Bencher, sim: &fastcaps::fpga::DeployedModel) {
+    use fastcaps::fpga::BatchScratch;
+    use fastcaps::kernels::{self, SimdLevel};
+    if !kernels::avx2_supported() {
+        println!("  (no AVX2 on this host; SIMD forward gate skipped)");
+        return;
+    }
+    let images = generate(Task::Digits, 16, 0x51D0).images;
+    let mut scratch = BatchScratch::new();
+
+    kernels::force_level(SimdLevel::Scalar);
+    let want = sim.run_batch(&images, &mut scratch).unwrap();
+    let scalar_ns = b
+        .bench("sim-sparse run_batch(16) scalar", || {
+            sim.run_batch(&images, &mut scratch).unwrap().classes.len()
+        })
+        .mean_ns;
+
+    kernels::force_level(SimdLevel::Avx2);
+    let got = sim.run_batch(&images, &mut scratch).unwrap();
+    assert_eq!(got.classes, want.classes, "AVX2 forward changed predictions");
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    for (frame, (sc, av)) in want.lengths.iter().zip(&got.lengths).enumerate() {
+        assert_eq!(
+            bits(sc),
+            bits(av),
+            "AVX2 forward is not bit-identical to scalar at frame {frame}"
+        );
+    }
+    let avx2_ns = b
+        .bench("sim-sparse run_batch(16) avx2", || {
+            sim.run_batch(&images, &mut scratch).unwrap().classes.len()
+        })
+        .mean_ns;
+
+    let speedup = scalar_ns / avx2_ns.max(1e-9);
+    report_model("AVX2 functional forward speedup", speedup, "x");
+    assert!(
+        speedup >= 1.5,
+        "AVX2 batch-16 functional forward must be ≥1.5x scalar, got {speedup:.2}x"
+    );
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn simd_forward_section(_b: &mut Bencher, _sim: &fastcaps::fpga::DeployedModel) {
+    println!("  (non-x86_64 host; SIMD forward gate skipped)");
 }

@@ -218,10 +218,18 @@ impl BackendSpec {
     }
 
     /// One-line routing/worker summary for the serve banner and metrics:
-    /// `routing=accumulated workers=4 coupling=0x…` (the coupling hash
-    /// only appears in accumulated mode).
+    /// `routing=accumulated workers=4 simd=avx2 coupling=0x…` (the
+    /// coupling hash only appears in accumulated mode). `simd` is the
+    /// active kernel dispatch — like `workers`, it is runtime metadata
+    /// and deliberately not part of any deployment fingerprint (kernels
+    /// are bit-identical across dispatch levels).
     pub fn routing_summary(&self) -> String {
-        let mut s = format!("routing={} workers={}", self.routing, self.workers);
+        let mut s = format!(
+            "routing={} workers={} simd={}",
+            self.routing,
+            self.workers,
+            crate::kernels::active_name()
+        );
         if let Some(fp) = self.coupling_fingerprint {
             s.push_str(&format!(" coupling={fp:#018x}"));
         }

@@ -35,6 +35,7 @@ use super::{
 };
 use crate::config::CapsNetConfig;
 use crate::fpga::index_control::{IndexControl, PackedRows};
+use crate::kernels;
 use crate::pruning::{KernelMask, NetworkMasks};
 use crate::routing::{mean_coupling, RoutingMode};
 use crate::tensor::Tensor;
@@ -144,13 +145,13 @@ impl SparseConvLayer {
                         let iy = oy * self.stride + ky;
                         let in_row = &input.data[(i * h + iy) * w..][..w];
                         let out_row = &mut plane[oy * ow..][..ow];
-                        for (ox, acc) in out_row.iter_mut().enumerate() {
-                            let patch = &in_row[ox * self.stride..][..self.kw];
-                            let mut a = *acc;
-                            for (&x, &wv) in patch.iter().zip(w_row) {
-                                a += x * wv;
-                            }
-                            *acc = a;
+                        // Tap-outer: each weight tap is one strided f32
+                        // axpy over the output row (SIMD-dispatched).
+                        // Per output element the adds still arrive in
+                        // (survivor, ky, kx) order — one rounded multiply
+                        // + one rounded add each — so bits are unchanged.
+                        for (kx, &wv) in w_row.iter().enumerate() {
+                            kernels::axpy_strided_f32(out_row, wv, &in_row[kx..], self.stride);
                         }
                     }
                 }

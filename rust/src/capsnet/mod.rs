@@ -368,9 +368,7 @@ pub(crate) fn project_u_hat(
                     continue;
                 }
                 let wrow = &w_ij.data[base + kk * d_out..][..d_out];
-                for (o, &wv) in out.iter_mut().zip(wrow) {
-                    *o += uk * wv;
-                }
+                crate::kernels::axpy_f32(out, uk, wrow);
             }
         }
     }
@@ -408,9 +406,7 @@ pub(crate) fn project_u_hat_batch(
                             continue;
                         }
                         let wrow = &wblock[kk * d_out..][..d_out];
-                        for (o, &wv) in out.iter_mut().zip(wrow) {
-                            *o += uk * wv;
-                        }
+                        crate::kernels::axpy_f32(out, uk, wrow);
                     }
                 }
             }

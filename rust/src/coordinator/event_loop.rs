@@ -699,9 +699,15 @@ impl Shard {
             match wire::scan_frame(&conn.rbuf) {
                 Ok(None) => break,
                 Ok(Some(f)) => {
-                    let payload = conn.rbuf[wire::HEADER_LEN..f.total_len].to_vec();
+                    // Detach the read buffer so the payload can be
+                    // borrowed from it while `process_frame` mutates the
+                    // connection — steady state moves a pointer instead
+                    // of copying the payload (the alloc-regression test
+                    // pins the decode path allocation-free).
+                    let rbuf = std::mem::take(&mut conn.rbuf);
+                    self.process_frame(conn, f.version, f.ty, &rbuf[wire::HEADER_LEN..f.total_len]);
+                    conn.rbuf = rbuf;
                     conn.rbuf.drain(..f.total_len);
-                    self.process_frame(conn, f.version, f.ty, &payload);
                     if conn.read_closed || conn.dead {
                         break;
                     }

@@ -401,8 +401,36 @@ impl Metrics {
             "Seconds this metrics window covers.",
             format!("{:.3}", self.elapsed().as_secs_f64()),
         );
+        gauge(
+            &mut s,
+            "rss_bytes",
+            "Resident set size of the serving process (0 where unavailable).",
+            resident_set_bytes().to_string(),
+        );
         s
     }
+}
+
+/// Resident set size of this process in bytes, read from
+/// `/proc/self/status` (`VmRSS`). Returns 0 on platforms without procfs
+/// — the gauge is then present but inert, so scrapers and the bench-net
+/// soak mode degrade gracefully.
+pub fn resident_set_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
 }
 
 #[cfg(test)]

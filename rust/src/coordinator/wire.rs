@@ -359,16 +359,29 @@ pub fn read_payload(r: &mut impl Read, len: u32) -> Result<Vec<u8>, Fault> {
 /// Decode a classify payload into f32 words. The *shape* check against
 /// the backend spec is the server's job; this only checks alignment.
 pub fn decode_classify(payload: &[u8]) -> Result<Vec<f32>, Fault> {
+    let mut out = Vec::new();
+    decode_classify_into(payload, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode_classify`] into a caller-owned buffer: once the buffer has
+/// grown to the spec's input size, repeated decodes reuse its capacity
+/// and the steady-state decode path performs no heap allocation (pinned
+/// by `tests/alloc_regression.rs`).
+pub fn decode_classify_into(payload: &[u8], out: &mut Vec<f32>) -> Result<(), Fault> {
     if payload.len() % 4 != 0 {
         return Err(Fault::BadPayload(format!(
             "classify payload of {} bytes is not a whole number of f32 words",
             payload.len()
         )));
     }
-    Ok(payload
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    out.clear();
+    out.extend(
+        payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(())
 }
 
 struct Cursor<'a> {

@@ -18,8 +18,24 @@ pub mod latency;
 pub mod taylor;
 
 /// Saturating 16-bit fixed-point number with `F` fractional bits.
+/// `repr(transparent)` over its raw i16 so slices of `Fx` can be viewed
+/// as raw bit slices for the SIMD kernels ([`raw_slice`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+#[repr(transparent)]
 pub struct Fx<const F: u32>(pub i16);
+
+/// View a Q-format slice as its raw i16 values (sound because `Fx` is
+/// `repr(transparent)` over `i16`).
+#[inline]
+pub fn raw_slice<const F: u32>(xs: &[Fx<F>]) -> &[i16] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const i16, xs.len()) }
+}
+
+/// Mutable raw view of a Q-format slice (see [`raw_slice`]).
+#[inline]
+pub fn raw_slice_mut<const F: u32>(xs: &mut [Fx<F>]) -> &mut [i16] {
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut i16, xs.len()) }
+}
 
 /// Main conv datapath format (Q8.8).
 pub type Q8 = Fx<8>;

@@ -21,7 +21,8 @@
 
 use super::index_control::{IndexControl, PackedRows};
 use super::pe::PeArray;
-use crate::fixed::Q8;
+use crate::fixed::{raw_slice, Q8};
+use crate::kernels;
 use crate::tensor::Tensor;
 
 /// Timing summary of one stage of the accelerator.
@@ -236,11 +237,11 @@ impl ConvModule {
     /// summation order cannot change a single bit.
     ///
     /// The restructure is what makes the batch path fast host-side: the
-    /// surviving kernel's 9-tap weight row is hoisted to a slice per
-    /// `ky`, and the inner dot product runs over `zip`ped subslices
-    /// instead of 4-array indexed accesses, so the per-tap bounds checks
-    /// of the reference loop disappear and the compiler can unroll the
-    /// k-wide window.
+    /// loop nest runs tap-outer / output-column-inner, so each weight tap
+    /// becomes one strided axpy over the whole output row and dispatches
+    /// into the SIMD kernel layer ([`crate::kernels::axpy_strided_i16`]).
+    /// Reordering the integer sum is free: the i64 accumulators never
+    /// overflow, so any summation order produces identical bits.
     pub fn forward_into(
         &self,
         input: &[Q8],
@@ -268,15 +269,10 @@ impl ConvModule {
                     let arow = &mut acc[arow_off..arow_off + ow];
                     for ky in 0..self.k {
                         let iy = oy * self.stride + ky;
-                        let irow = &input[(i * h + iy) * w..][..w];
+                        let irow = raw_slice(&input[(i * h + iy) * w..][..w]);
                         let wrow = &wk[ky * self.k..][..self.k];
-                        for (ox, a) in arow.iter_mut().enumerate() {
-                            let win = &irow[ox * self.stride..][..self.k];
-                            let mut s = 0i64;
-                            for (&wv, xv) in wrow.iter().zip(win) {
-                                s += wv as i64 * xv.raw() as i64;
-                            }
-                            *a += s;
+                        for (kx, &wv) in wrow.iter().enumerate() {
+                            kernels::axpy_strided_i16(arow, wv, &irow[kx..], self.stride);
                         }
                     }
                 }

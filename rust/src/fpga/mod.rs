@@ -21,7 +21,8 @@ pub mod routing_module;
 use crate::capsnet::compiled::CompressionStats;
 use crate::capsnet::weights::Weights;
 use crate::config::{SparsityPlan, SystemConfig};
-use crate::fixed::{Q12, Q8};
+use crate::fixed::{raw_slice, Q12, Q8};
+use crate::kernels;
 use crate::pruning::KernelMask;
 use crate::routing::fixed::{
     accumulated_routing_q12, dynamic_routing_q12, quantize_coupling, OpCounts, PredictionsQ12,
@@ -644,12 +645,22 @@ impl DeployedModel {
                 for p in 0..spatial {
                     let cap = t * spatial + p;
                     let u = &scratch.primary[cap * d..(cap + 1) * d];
-                    for k_out in 0..d_out {
-                        let mut acc = 0i64;
-                        for (kk, &uk) in u.iter().enumerate() {
-                            acc = uk.mac(wblock[kk * d_out + k_out], acc);
-                        }
-                        u_hat[(cap * n_out + j) * d_out + k_out] = Q12::from_acc(acc);
+                    // Capsule-row-stationary: each û row accumulates all
+                    // d_out lanes at once, one axpy per input dim. The
+                    // i64 accumulators make the reorder bit-free, and the
+                    // contiguous `d_out`-wide weight rows vectorize.
+                    scratch.u_acc.clear();
+                    scratch.u_acc.resize(d_out, 0);
+                    for (kk, &uk) in u.iter().enumerate() {
+                        kernels::axpy_i16(
+                            &mut scratch.u_acc,
+                            uk.raw(),
+                            raw_slice(&wblock[kk * d_out..(kk + 1) * d_out]),
+                        );
+                    }
+                    let urow = &mut u_hat[(cap * n_out + j) * d_out..][..d_out];
+                    for (o, &a) in urow.iter_mut().zip(&scratch.u_acc) {
+                        *o = Q12::from_acc(a);
                     }
                 }
             }
@@ -748,6 +759,8 @@ pub struct BatchScratch {
     pc_out: Vec<Q8>,
     primary: Vec<Q12>,
     s_raw: Vec<i16>,
+    /// i64 accumulator row for the û projection (one `dc_dim` row).
+    u_acc: Vec<i64>,
     routing: RoutingScratch,
 }
 

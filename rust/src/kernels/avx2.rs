@@ -1,0 +1,259 @@
+//! AVX2 (x86_64 `std::arch`) kernel implementations.
+//!
+//! Every function here is `unsafe` only because of
+//! `#[target_feature(enable = "avx2")]` — the slices are bounds-handled
+//! explicitly and the single safety precondition is that the CPU
+//! supports AVX2 (the dispatch wrappers in the parent module guarantee
+//! it via `is_x86_feature_detected!`).
+//!
+//! Bit-exactness strategy (see the module docs in `kernels`):
+//!
+//! * Integer kernels widen i16 lanes to i32, multiply exactly
+//!   (`_mm256_mullo_epi32` — products of two i16s fit i32), then widen
+//!   to i64 before accumulating, so no lane can ever overflow mid-sum
+//!   and any accumulation order yields the scalar path's bits.
+//! * f32 kernels use separate `_mm256_mul_ps` + `_mm256_add_ps`
+//!   (never FMA) so each lane performs exactly the scalar
+//!   one-rounded-multiply + one-rounded-add sequence, and
+//!   `_mm256_div_ps` which is IEEE correctly rounded per lane like the
+//!   scalar `/`.
+
+use core::arch::x86_64::*;
+
+/// Widen the low 4 i32 lanes and the high 4 i32 lanes of `v` to i64 and
+/// add both into `acc`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn add_i32x8_into_i64x4(acc: __m256i, v: __m256i) -> __m256i {
+    let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v));
+    let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(v));
+    _mm256_add_epi64(_mm256_add_epi64(acc, lo), hi)
+}
+
+/// Horizontal sum of the 4 i64 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i64x4(v: __m256i) -> i64 {
+    let mut lanes = [0i64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+/// `acc[i] += x · w[i]` with i64 accumulators.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_i16(acc: &mut [i64], x: i16, w: &[i16]) {
+    let n = acc.len().min(w.len());
+    let xv = _mm256_set1_epi32(x as i32);
+    let mut i = 0;
+    while i + 8 <= n {
+        let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+        let prod = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(wv), xv);
+        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+        let a0 = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        let a1 = _mm256_loadu_si256(acc.as_ptr().add(i + 4) as *const __m256i);
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi64(a0, lo),
+        );
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i + 4) as *mut __m256i,
+            _mm256_add_epi64(a1, hi),
+        );
+        i += 8;
+    }
+    while i < n {
+        acc[i] += x as i64 * w[i] as i64;
+        i += 1;
+    }
+}
+
+/// `Σ a[i]·b[i]` in i64.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_i16(a: &[i16], b: &[i16]) -> i64 {
+    let n = a.len().min(b.len());
+    let mut vacc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 8 <= n {
+        let av = _mm256_cvtepi16_epi32(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+        let bv = _mm256_cvtepi16_epi32(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+        vacc = add_i32x8_into_i64x4(vacc, _mm256_mullo_epi32(av, bv));
+        i += 8;
+    }
+    let mut acc = hsum_i64x4(vacc);
+    while i < n {
+        acc += a[i] as i64 * b[i] as i64;
+        i += 1;
+    }
+    acc
+}
+
+/// `Σ x[i]²` in i64.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sumsq_i16(x: &[i16]) -> i64 {
+    let mut vacc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 8 <= x.len() {
+        let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+        vacc = add_i32x8_into_i64x4(vacc, _mm256_mullo_epi32(v, v));
+        i += 8;
+    }
+    let mut acc = hsum_i64x4(vacc);
+    while i < x.len() {
+        acc += x[i] as i64 * x[i] as i64;
+        i += 1;
+    }
+    acc
+}
+
+/// `Σ x[i]` in i64.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn sum_i16(x: &[i16]) -> i64 {
+    let mut vacc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 8 <= x.len() {
+        let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+        vacc = add_i32x8_into_i64x4(vacc, v);
+        i += 8;
+    }
+    let mut acc = hsum_i64x4(vacc);
+    while i < x.len() {
+        acc += x[i] as i64;
+        i += 1;
+    }
+    acc
+}
+
+/// Max-fold (i16::MIN on empty input).
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn max_i16(x: &[i16]) -> i16 {
+    let mut vmax = _mm256_set1_epi16(i16::MIN);
+    let mut i = 0;
+    while i + 16 <= x.len() {
+        let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        vmax = _mm256_max_epi16(vmax, v);
+        i += 16;
+    }
+    let mut lanes = [i16::MIN; 16];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vmax);
+    let mut m = i16::MIN;
+    for &v in &lanes {
+        if v > m {
+            m = v;
+        }
+    }
+    while i < x.len() {
+        if x[i] > m {
+            m = x[i];
+        }
+        i += 1;
+    }
+    m
+}
+
+/// `out[i] = sat16((x[i]·scale + 1<<(SHIFT-1)) >> SHIFT)` — the i32
+/// lane computation mirrors `scalar::scale_i16_q` exactly, and
+/// `_mm_packs_epi32` performs the identical signed saturation to i16.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale_i16_q<const SHIFT: i32>(x: &[i16], scale: i32, out: &mut [i16]) {
+    let n = x.len().min(out.len());
+    let sv = _mm256_set1_epi32(scale);
+    let round = _mm256_set1_epi32(1 << (SHIFT - 1));
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+        let p = _mm256_srai_epi32::<SHIFT>(_mm256_add_epi32(_mm256_mullo_epi32(v, sv), round));
+        let packed = _mm_packs_epi32(
+            _mm256_castsi256_si128(p),
+            _mm256_extracti128_si256::<1>(p),
+        );
+        _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, packed);
+        i += 8;
+    }
+    while i < n {
+        let p = (x[i] as i32 * scale + (1 << (SHIFT - 1))) >> SHIFT;
+        out[i] = p.clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+        i += 1;
+    }
+}
+
+/// `acc[i] += x · w[i]` in f32 (mul + add, never fused).
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_f32(acc: &mut [f32], x: f32, w: &[f32]) {
+    let n = acc.len().min(w.len());
+    let xv = _mm256_set1_ps(x);
+    let mut i = 0;
+    while i + 8 <= n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(
+            acc.as_mut_ptr().add(i),
+            _mm256_add_ps(av, _mm256_mul_ps(xv, wv)),
+        );
+        i += 8;
+    }
+    while i < n {
+        acc[i] += x * w[i];
+        i += 1;
+    }
+}
+
+/// `out[i] = x[i] · s`.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mul_f32(x: &[f32], s: f32, out: &mut [f32]) {
+    let n = x.len().min(out.len());
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(v, sv));
+        i += 8;
+    }
+    while i < n {
+        out[i] = x[i] * s;
+        i += 1;
+    }
+}
+
+/// `x[i] /= d` in place.
+///
+/// # Safety
+/// The CPU must support AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn div_in_place_f32(x: &mut [f32], d: f32) {
+    let dv = _mm256_set1_ps(d);
+    let mut i = 0;
+    while i + 8 <= x.len() {
+        let v = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_div_ps(v, dv));
+        i += 8;
+    }
+    while i < x.len() {
+        x[i] /= d;
+        i += 1;
+    }
+}

@@ -1,0 +1,502 @@
+//! Runtime-dispatched SIMD kernel layer for the hot inner loops of both
+//! numeric datapaths.
+//!
+//! FastCaps gets its FPGA speedup from wide parallel MACs in the conv
+//! and routing PEs; this module is the software image of that width: the
+//! inner loops of the Q8.8/Q4.12 fixed-point simulator path
+//! ([`crate::fpga`], [`crate::routing::fixed`]) and the fp32 oracle
+//! paths ([`crate::capsnet`], [`crate::tensor`]) call these kernels
+//! instead of open-coding element-at-a-time arithmetic.
+//!
+//! Two implementations exist per kernel:
+//!
+//! * [`scalar`] — portable Rust, the reference on every architecture.
+//! * [`avx2`] — x86_64 `std::arch` intrinsics behind
+//!   `#[target_feature(enable = "avx2")]`.
+//!
+//! One is selected **once at startup** via
+//! `is_x86_feature_detected!("avx2")`, overridable with the
+//! `FASTCAPS_SIMD` environment variable (`off` forces the scalar
+//! fallback, `avx2` forces the vector path where supported). The active
+//! dispatch is display metadata only — it appears in serve/prune
+//! banners and the `BackendSpec` summary but is deliberately **not**
+//! part of any deployment fingerprint (same policy as `workers`): the
+//! kernels below are bit-identical across dispatch levels, so a cache
+//! entry produced under one level is valid under the other.
+//!
+//! # Bit-exactness contract
+//!
+//! * **Integer kernels** (`axpy_i16`, `dot_i16`, `sumsq_i16`,
+//!   `sum_i16`, `max_i16`, `scale_i16_q`): every multiply is exact in
+//!   i32 (i16·i16 ≤ 2³⁰) and every sum accumulates in a wide i64
+//!   register that cannot overflow mid-sum, so integer addition is
+//!   associative *and* commutative here — any accumulation order gives
+//!   the same bits. AVX2 is therefore bit-identical to scalar by
+//!   construction, which the property tests below and the existing
+//!   fpga/compiled golden tests pin.
+//! * **f32 kernels** (`axpy_f32`, `axpy_strided_f32`, `mul_f32`,
+//!   `div_in_place_f32`): only *elementwise* loops are vectorized —
+//!   each output lane performs exactly the scalar `a + x*w` (one
+//!   rounded multiply, one rounded add; no FMA contraction) or the
+//!   scalar `x / d`. No floating-point reduction is ever reassociated:
+//!   dot products, norms and softmax sums keep the scalar
+//!   left-to-right order in both implementations. fp32 outputs are
+//!   therefore bit-identical across dispatch levels *and* to the
+//!   pre-SIMD code — the goldens in `tests/compiled_golden.rs` stand
+//!   unchanged and the ISSUE's ≤1e-5 drift budget is met with zero
+//!   drift.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+/// The dispatch level the kernel wrappers route through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loops (the reference implementation).
+    Scalar,
+    /// x86_64 AVX2 intrinsics.
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Short name used in banners and the backend summary (`simd=…`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// 0 = not yet selected, 1 = scalar, 2 = avx2.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the host CPU supports the AVX2 kernel set.
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cold]
+fn init_level() -> SimdLevel {
+    let choice = match std::env::var("FASTCAPS_SIMD") {
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "0" => SimdLevel::Scalar,
+            "avx2" => {
+                if avx2_supported() {
+                    SimdLevel::Avx2
+                } else {
+                    eprintln!(
+                        "fastcaps: FASTCAPS_SIMD=avx2 requested but the host \
+                         CPU does not support AVX2; falling back to scalar"
+                    );
+                    SimdLevel::Scalar
+                }
+            }
+            "" | "auto" => {
+                if avx2_supported() {
+                    SimdLevel::Avx2
+                } else {
+                    SimdLevel::Scalar
+                }
+            }
+            other => {
+                eprintln!(
+                    "fastcaps: unknown FASTCAPS_SIMD value {other:?} \
+                     (want off|avx2|auto); using auto detection"
+                );
+                if avx2_supported() {
+                    SimdLevel::Avx2
+                } else {
+                    SimdLevel::Scalar
+                }
+            }
+        },
+        Err(_) => {
+            if avx2_supported() {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+    };
+    // First selection wins on a race — both racers compute the same
+    // value, since env + cpuid are stable for the process lifetime.
+    LEVEL.store(
+        match choice {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 2,
+        },
+        Ordering::Relaxed,
+    );
+    choice
+}
+
+/// The active dispatch level (selected once, on first use).
+#[inline]
+pub fn active() -> SimdLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Avx2,
+        _ => init_level(),
+    }
+}
+
+/// Short name of the active dispatch (`"scalar"` / `"avx2"`), as
+/// printed in the serve/prune banners and `BackendSpec::summary`.
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+/// Force the dispatch level, bypassing env/detection. For tests and
+/// benches that need to compare both paths in one process; forcing
+/// `Avx2` on a host without AVX2 support falls back to scalar rather
+/// than executing illegal instructions.
+pub fn force_level(level: SimdLevel) {
+    let effective = match level {
+        SimdLevel::Avx2 if !avx2_supported() => SimdLevel::Scalar,
+        other => other,
+    };
+    LEVEL.store(
+        match effective {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+// ---------------------------------------------------------------------
+// dispatch wrappers — the API the datapaths call
+//
+// Each wrapper is a branch on a relaxed atomic (predicted perfectly
+// after the first call) into either implementation; both arms are
+// inlinable, so the scalar path pays no function-pointer indirection.
+
+/// `acc[i] += x · w[i]` with exact i32 products widened into i64
+/// accumulators. The Q12 û-projection / routing-FC inner loop.
+#[inline]
+pub fn axpy_i16(acc: &mut [i64], x: i16, w: &[i16]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::axpy_i16(acc, x, w) },
+        _ => scalar::axpy_i16(acc, x, w),
+    }
+}
+
+/// `acc[i] += x · w[i·stride]` — the packed-CSR conv row MAC
+/// (stride > 1 rows fall back to the scalar loop in both paths, so the
+/// dispatch stays bit-uniform).
+#[inline]
+pub fn axpy_strided_i16(acc: &mut [i64], x: i16, w: &[i16], stride: usize) {
+    if stride == 1 {
+        axpy_i16(acc, x, &w[..acc.len()]);
+    } else {
+        scalar::axpy_strided_i16(acc, x, w, stride);
+    }
+}
+
+/// Wide dot product `Σ a[i]·b[i]` (agreement step).
+#[inline]
+pub fn dot_i16(a: &[i16], b: &[i16]) -> i64 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::dot_i16(a, b) },
+        _ => scalar::dot_i16(a, b),
+    }
+}
+
+/// Wide sum of squares `Σ x[i]²` (squash norm²).
+#[inline]
+pub fn sumsq_i16(x: &[i16]) -> i64 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::sumsq_i16(x) },
+        _ => scalar::sumsq_i16(x),
+    }
+}
+
+/// Wide sum `Σ x[i]` (softmax denominator staging).
+#[inline]
+pub fn sum_i16(x: &[i16]) -> i64 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::sum_i16(x) },
+        _ => scalar::sum_i16(x),
+    }
+}
+
+/// Max-fold over raw i16 values (softmax max staging). Returns
+/// `i16::MIN` on an empty slice.
+#[inline]
+pub fn max_i16(x: &[i16]) -> i16 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::max_i16(x) },
+        _ => scalar::max_i16(x),
+    }
+}
+
+/// `out[i] = sat16((x[i]·scale + 1<<(SHIFT-1)) >> SHIFT)` — the squash
+/// scale-and-requantize writeback. `scale` must be a non-negative value
+/// ≤ i16::MAX so the product fits i32 exactly.
+#[inline]
+pub fn scale_i16_q<const SHIFT: i32>(x: &[i16], scale: i32, out: &mut [i16]) {
+    debug_assert!((0..=i16::MAX as i32).contains(&scale));
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::scale_i16_q::<SHIFT>(x, scale, out) },
+        _ => scalar::scale_i16_q::<SHIFT>(x, scale, out),
+    }
+}
+
+/// `acc[i] += x · w[i]` in f32 — one rounded multiply + one rounded add
+/// per lane, bit-identical to the scalar loop (no FMA contraction).
+#[inline]
+pub fn axpy_f32(acc: &mut [f32], x: f32, w: &[f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::axpy_f32(acc, x, w) },
+        _ => scalar::axpy_f32(acc, x, w),
+    }
+}
+
+/// `acc[i] += x · w[i·stride]` in f32 (stride > 1 stays scalar in both
+/// paths).
+#[inline]
+pub fn axpy_strided_f32(acc: &mut [f32], x: f32, w: &[f32], stride: usize) {
+    if stride == 1 {
+        axpy_f32(acc, x, &w[..acc.len()]);
+    } else {
+        scalar::axpy_strided_f32(acc, x, w, stride);
+    }
+}
+
+/// `out[i] = x[i] · s` (squash writeback).
+#[inline]
+pub fn mul_f32(x: &[f32], s: f32, out: &mut [f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::mul_f32(x, s, out) },
+        _ => scalar::mul_f32(x, s, out),
+    }
+}
+
+/// `x[i] /= d` in place (softmax normalize). IEEE division is correctly
+/// rounded per element, so the vector path is bit-identical to scalar.
+#[inline]
+pub fn div_in_place_f32(x: &mut [f32], d: f32) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::div_in_place_f32(x, d) },
+        _ => scalar::div_in_place_f32(x, d),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_i16(r: &mut Rng) -> i16 {
+        // Full raw range including the i16::MIN corner the saturating
+        // quantizer can produce.
+        (r.below(65536) as i32 - 32768) as i16
+    }
+
+    #[test]
+    fn active_name_is_valid() {
+        assert!(matches!(active_name(), "scalar" | "avx2"));
+        assert_eq!(active().name(), active_name());
+    }
+
+    #[test]
+    fn force_level_round_trips() {
+        let prev = active();
+        force_level(SimdLevel::Scalar);
+        assert_eq!(active(), SimdLevel::Scalar);
+        force_level(SimdLevel::Avx2);
+        if avx2_supported() {
+            assert_eq!(active(), SimdLevel::Avx2);
+        } else {
+            // Forcing AVX2 on an unsupported host must degrade, not UB.
+            assert_eq!(active(), SimdLevel::Scalar);
+        }
+        force_level(prev);
+    }
+
+    // -----------------------------------------------------------------
+    // scalar-vs-AVX2 bit-identity properties (skip where undetected)
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn property_axpy_i16_avx2_bit_identical() {
+        if !avx2_supported() {
+            return;
+        }
+        crate::testing::check(
+            "axpy_i16 avx2 == scalar",
+            200,
+            0x51_0001,
+            |r| {
+                let n = 1 + r.below(40);
+                let x = rand_i16(r);
+                let w: Vec<i16> = (0..n).map(|_| rand_i16(r)).collect();
+                let acc: Vec<i64> = (0..n).map(|_| r.below(1 << 20) as i64 - (1 << 19)).collect();
+                (x, w, acc)
+            },
+            |(x, w, acc)| {
+                let mut a = acc.clone();
+                let mut b = acc.clone();
+                scalar::axpy_i16(&mut a, *x, w);
+                unsafe { avx2::axpy_i16(&mut b, *x, w) };
+                a == b
+            },
+        );
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn property_reductions_avx2_bit_identical() {
+        if !avx2_supported() {
+            return;
+        }
+        crate::testing::check(
+            "dot/sumsq/sum/max avx2 == scalar",
+            200,
+            0x51_0002,
+            |r| {
+                let n = 1 + r.below(67);
+                let a: Vec<i16> = (0..n).map(|_| rand_i16(r)).collect();
+                let b: Vec<i16> = (0..n).map(|_| rand_i16(r)).collect();
+                (a, b)
+            },
+            |(a, b)| unsafe {
+                scalar::dot_i16(a, b) == avx2::dot_i16(a, b)
+                    && scalar::sumsq_i16(a) == avx2::sumsq_i16(a)
+                    && scalar::sum_i16(a) == avx2::sum_i16(a)
+                    && scalar::max_i16(a) == avx2::max_i16(a)
+            },
+        );
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn property_scale_i16_q_avx2_bit_identical() {
+        if !avx2_supported() {
+            return;
+        }
+        crate::testing::check(
+            "scale_i16_q avx2 == scalar",
+            200,
+            0x51_0003,
+            |r| {
+                let n = 1 + r.below(50);
+                let x: Vec<i16> = (0..n).map(|_| rand_i16(r)).collect();
+                let scale = r.below(i16::MAX as usize + 1) as i32;
+                (x, scale)
+            },
+            |(x, scale)| {
+                let mut a = vec![0i16; x.len()];
+                let mut b = vec![0i16; x.len()];
+                scalar::scale_i16_q::<8>(x, *scale, &mut a);
+                unsafe { avx2::scale_i16_q::<8>(x, *scale, &mut b) };
+                a == b
+            },
+        );
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn property_f32_kernels_avx2_bit_identical() {
+        if !avx2_supported() {
+            return;
+        }
+        crate::testing::check(
+            "f32 elementwise kernels avx2 == scalar (bitwise)",
+            200,
+            0x51_0004,
+            |r| {
+                let n = 1 + r.below(45);
+                let x = r.normal_f32(0.0, 2.0);
+                let w: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                let acc: Vec<f32> = (0..n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                (x, w, acc)
+            },
+            |(x, w, acc)| {
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                let mut a = acc.clone();
+                let mut b = acc.clone();
+                scalar::axpy_f32(&mut a, *x, w);
+                unsafe { avx2::axpy_f32(&mut b, *x, w) };
+                let mut ma = vec![0.0f32; w.len()];
+                let mut mb = vec![0.0f32; w.len()];
+                scalar::mul_f32(w, *x, &mut ma);
+                unsafe { avx2::mul_f32(w, *x, &mut mb) };
+                let mut da = w.clone();
+                let mut db = w.clone();
+                let d = 1.0 + x.abs();
+                scalar::div_in_place_f32(&mut da, d);
+                unsafe { avx2::div_in_place_f32(&mut db, d) };
+                bits(&a) == bits(&b) && bits(&ma) == bits(&mb) && bits(&da) == bits(&db)
+            },
+        );
+    }
+
+    #[test]
+    fn property_strided_matches_dense_on_stride_one() {
+        crate::testing::check(
+            "strided kernels at stride 1 == dense kernels",
+            100,
+            0x51_0005,
+            |r| {
+                let n = 1 + r.below(30);
+                let x = rand_i16(r);
+                let w: Vec<i16> = (0..n + 4).map(|_| rand_i16(r)).collect();
+                (n, x, w)
+            },
+            |(n, x, w)| {
+                let mut a = vec![0i64; *n];
+                let mut b = vec![0i64; *n];
+                axpy_strided_i16(&mut a, *x, w, 1);
+                axpy_i16(&mut b, *x, &w[..*n]);
+                a == b
+            },
+        );
+    }
+
+    #[test]
+    fn scalar_strided_walks_stride() {
+        let w: Vec<i16> = (0i16..10).collect();
+        let mut acc = vec![0i64; 4];
+        scalar::axpy_strided_i16(&mut acc, 3, &w, 2);
+        // picks w[0], w[2], w[4], w[6]
+        assert_eq!(acc, vec![0, 6, 12, 18]);
+        let wf: Vec<f32> = (0..10).map(|v| v as f32).collect();
+        let mut af = vec![0.0f32; 3];
+        scalar::axpy_strided_f32(&mut af, 2.0, &wf, 3);
+        assert_eq!(af, vec![0.0, 6.0, 12.0]);
+    }
+
+    #[test]
+    fn max_of_empty_is_min() {
+        assert_eq!(max_i16(&[]), i16::MIN);
+        assert_eq!(scalar::max_i16(&[-5, -9]), -5);
+    }
+}

@@ -1,0 +1,143 @@
+//! Portable scalar kernel implementations — the reference the AVX2 path
+//! must match bit-for-bit (see the module docs for the per-type
+//! contract). These run on every architecture and are what
+//! `FASTCAPS_SIMD=off` selects.
+
+/// `acc[i] += x · w[i]` with i64 accumulation.
+pub fn axpy_i16(acc: &mut [i64], x: i16, w: &[i16]) {
+    let x = x as i64;
+    for (a, &wv) in acc.iter_mut().zip(w) {
+        *a += x * wv as i64;
+    }
+}
+
+/// `acc[i] += x · w[i·stride]` with i64 accumulation.
+pub fn axpy_strided_i16(acc: &mut [i64], x: i16, w: &[i16], stride: usize) {
+    let x = x as i64;
+    for (i, a) in acc.iter_mut().enumerate() {
+        *a += x * w[i * stride] as i64;
+    }
+}
+
+/// `Σ a[i]·b[i]` in i64.
+pub fn dot_i16(a: &[i16], b: &[i16]) -> i64 {
+    let mut acc = 0i64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i64 * y as i64;
+    }
+    acc
+}
+
+/// `Σ x[i]²` in i64.
+pub fn sumsq_i16(x: &[i16]) -> i64 {
+    let mut acc = 0i64;
+    for &v in x {
+        acc += v as i64 * v as i64;
+    }
+    acc
+}
+
+/// `Σ x[i]` in i64.
+pub fn sum_i16(x: &[i16]) -> i64 {
+    let mut acc = 0i64;
+    for &v in x {
+        acc += v as i64;
+    }
+    acc
+}
+
+/// Max-fold (i16::MIN on empty input).
+pub fn max_i16(x: &[i16]) -> i16 {
+    let mut m = i16::MIN;
+    for &v in x {
+        if v > m {
+            m = v;
+        }
+    }
+    m
+}
+
+/// `out[i] = sat16((x[i]·scale + 1<<(SHIFT-1)) >> SHIFT)`. The product
+/// fits i32 exactly (|x| ≤ 2¹⁵, 0 ≤ scale ≤ 2¹⁵−1), so the whole
+/// computation is done in i32 — the contract the AVX2 lanes mirror.
+pub fn scale_i16_q<const SHIFT: i32>(x: &[i16], scale: i32, out: &mut [i16]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        let p = (v as i32 * scale + (1 << (SHIFT - 1))) >> SHIFT;
+        *o = p.clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+    }
+}
+
+/// `acc[i] += x · w[i]` in f32: one rounded multiply + one rounded add
+/// per element (never fused — the bit contract with AVX2).
+pub fn axpy_f32(acc: &mut [f32], x: f32, w: &[f32]) {
+    for (a, &wv) in acc.iter_mut().zip(w) {
+        *a += x * wv;
+    }
+}
+
+/// `acc[i] += x · w[i·stride]` in f32.
+pub fn axpy_strided_f32(acc: &mut [f32], x: f32, w: &[f32], stride: usize) {
+    for (i, a) in acc.iter_mut().enumerate() {
+        *a += x * w[i * stride];
+    }
+}
+
+/// `out[i] = x[i] · s`.
+pub fn mul_f32(x: &[f32], s: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v * s;
+    }
+}
+
+/// `x[i] /= d` in place.
+pub fn div_in_place_f32(x: &mut [f32], d: f32) {
+    for v in x {
+        *v /= d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_known_values() {
+        let mut acc = vec![1i64, 2, 3];
+        axpy_i16(&mut acc, 2, &[10, -20, 30]);
+        assert_eq!(acc, vec![21, -38, 63]);
+    }
+
+    #[test]
+    fn reductions_known_values() {
+        assert_eq!(dot_i16(&[1, 2, 3], &[4, 5, 6]), 32);
+        assert_eq!(sumsq_i16(&[-3, 4]), 25);
+        assert_eq!(sum_i16(&[-3, 4, 10]), 11);
+        assert_eq!(max_i16(&[-3, 7, 2]), 7);
+    }
+
+    #[test]
+    fn scale_rounds_and_saturates() {
+        let mut out = vec![0i16; 3];
+        // 100·256 = 25600; (25600+128)>>8 = 100 — identity at scale 256.
+        scale_i16_q::<8>(&[100, -100, i16::MAX], 256, &mut out);
+        assert_eq!(out[0], 100);
+        assert_eq!(out[1], -100);
+        assert_eq!(out[2], i16::MAX);
+        // A big scale saturates instead of wrapping.
+        scale_i16_q::<8>(&[i16::MAX], i16::MAX as i32, &mut out[..1]);
+        assert_eq!(out[0], i16::MAX);
+    }
+
+    #[test]
+    fn f32_kernels_known_values() {
+        let mut acc = vec![1.0f32, 2.0];
+        axpy_f32(&mut acc, 0.5, &[4.0, -2.0]);
+        assert_eq!(acc, vec![3.0, 1.0]);
+        let mut out = vec![0.0f32; 2];
+        mul_f32(&[3.0, -1.5], 2.0, &mut out);
+        assert_eq!(out, vec![6.0, -3.0]);
+        let mut xs = vec![6.0f32, -3.0];
+        div_in_place_f32(&mut xs, 3.0);
+        assert_eq!(xs, vec![2.0, -1.0]);
+    }
+}

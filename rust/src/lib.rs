@@ -41,6 +41,7 @@ pub mod coordinator;
 pub mod data;
 pub mod fixed;
 pub mod fpga;
+pub mod kernels;
 pub mod pruning;
 pub mod report;
 pub mod routing;

@@ -23,6 +23,8 @@
 //!                                   # out-of-order completion)
 //!                   [--dup-rate P] [--dup-pool N]  # P of traffic drawn from a
 //!                                                  # shared N-frame hot pool
+//!                   [--duration SECS]  # soak mode: sustained load for SECS,
+//!                                      # asserts flat server RSS + stable p99
 //! fastcaps prune    [--dataset mnist|fmnist] [--weights FILE.fcw] [--method lakp|kp]
 //!                   [--sparsity S] [--compile] [--serve]
 //!                   [--backend oracle-sparse|sim-sparse] [--replicas N]
@@ -110,6 +112,10 @@ fn print_help() {
          \x20                [--dup-rate P: fraction of requests drawn from\n\
          \x20                a shared hot pool of --dup-pool N frames —\n\
          \x20                exercises the server-side inference cache]\n\
+         \x20                [--duration SECS: soak mode — sustained load\n\
+         \x20                for SECS seconds, sampling the server's\n\
+         \x20                fastcaps_rss_bytes gauge per window and\n\
+         \x20                asserting flat RSS + stable client p99]\n\
          \x20 prune          LAKP/KP-prune weights, print compression;\n\
          \x20                --compile packs survivors into the sparse\n\
          \x20                execution path (CSR / Index-Control layout),\n\
@@ -529,10 +535,15 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
     let dup_pool_size = args.get_usize("dup-pool", 8).max(1);
     let dup_pool = (dup_rate > 0.0).then(|| fastcaps::data::generate(task, dup_pool_size, 9999));
 
+    let soak_secs = args.get_f64("duration", 0.0);
+    if soak_secs > 0.0 {
+        bench_net_soak(&addr, n_clients, window, wire_version, task, soak_secs)?;
+    }
+
     let metrics = Mutex::new(Metrics::default());
     let rejected = AtomicU64::new(0);
     let t0 = Instant::now();
-    if n_requests > 0 {
+    if soak_secs <= 0.0 && n_requests > 0 {
         if dup_rate > 0.0 {
             println!(
                 "bench-net: {n_requests} requests from {n_clients} pipelined clients \
@@ -635,6 +646,195 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("shutdown: {e}"))?;
         println!("server acknowledged shutdown; draining");
     }
+    Ok(())
+}
+
+/// `bench-net --duration SECS`: sustained closed-loop load against a
+/// listening server, chopped into fixed windows. Per window it records
+/// the client-observed p99 and samples the server's
+/// `fastcaps_rss_bytes` gauge over the plaintext `METRICS` probe, then
+/// asserts the server's memory stays flat (no per-frame leak — the
+/// scratch-reuse/zero-alloc steady state) and the p99 stays stable
+/// (no drift as the run ages). CI runs this at `--duration 5`; locally
+/// 60s is a more convincing soak.
+fn bench_net_soak(
+    addr: &str,
+    n_clients: usize,
+    window: usize,
+    wire_version: u8,
+    task: Task,
+    secs: f64,
+) -> Result<()> {
+    use fastcaps::coordinator::metrics::Metrics;
+    use fastcaps::coordinator::net::Connection;
+    use fastcaps::coordinator::wire::ErrorCode;
+    use std::collections::HashMap;
+    use std::io::{Read, Write};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    /// Scrape `fastcaps_rss_bytes` over the plaintext probe sidecar.
+    fn probe_rss(addr: &str) -> Result<u64> {
+        let mut s = std::net::TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("probe connect {addr}: {e}"))?;
+        s.set_read_timeout(Some(Duration::from_secs(10)))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        s.write_all(b"METRICS\n")
+            .map_err(|e| anyhow::anyhow!("probe send: {e}"))?;
+        let mut body = String::new();
+        s.read_to_string(&mut body)
+            .map_err(|e| anyhow::anyhow!("probe read: {e}"))?;
+        for line in body.lines() {
+            if let Some(v) = line.strip_prefix("fastcaps_rss_bytes ") {
+                return Ok(v.trim().parse().unwrap_or(0));
+            }
+        }
+        anyhow::bail!("METRICS reply has no fastcaps_rss_bytes gauge");
+    }
+
+    const WINDOWS: usize = 5;
+    let win_len = Duration::from_secs_f64(secs / WINDOWS as f64);
+    let stop = AtomicBool::new(false);
+    let per_window: Mutex<Vec<Metrics>> =
+        Mutex::new((0..WINDOWS).map(|_| Metrics::default()).collect());
+    let t0 = Instant::now();
+    println!(
+        "bench-net soak: {n_clients} clients for {secs:.0}s \
+         ({WINDOWS} windows of {:.1}s, window depth {window}, wire v{wire_version}) \
+         against {addr}",
+        win_len.as_secs_f64(),
+    );
+
+    let rss_samples = std::thread::scope(|scope| -> Result<Vec<u64>> {
+        let mut workers = Vec::new();
+        for c in 0..n_clients {
+            let stop = &stop;
+            let per_window = &per_window;
+            workers.push(scope.spawn(move || -> Result<()> {
+                let mut client = Connection::connect_with(addr, wire_version)
+                    .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+                client
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                // A small per-client frame pool, cycled for the whole
+                // soak — steady-state traffic, not a growing working set.
+                let data = fastcaps::data::generate(task, 32, 0x50AC + c as u64);
+                let mut local: Vec<Metrics> =
+                    (0..WINDOWS).map(|_| Metrics::default()).collect();
+                let mut sent: HashMap<u64, Instant> = HashMap::with_capacity(window);
+                let mut drain_one = |client: &mut Connection,
+                                     sent: &mut HashMap<u64, Instant>,
+                                     local: &mut [Metrics]|
+                 -> Result<()> {
+                    match client.recv() {
+                        Ok((tag, _resp)) => {
+                            let t = sent.remove(&tag).ok_or_else(|| {
+                                anyhow::anyhow!("response for unknown tag {tag}")
+                            })?;
+                            let wi = ((t0.elapsed().as_secs_f64()
+                                / win_len.as_secs_f64())
+                                as usize)
+                                .min(WINDOWS - 1);
+                            local[wi].record(t.elapsed().as_micros() as u64);
+                        }
+                        Err(e) if matches!(e.code, ErrorCode::Io | ErrorCode::Protocol) => {
+                            anyhow::bail!("recv: {e}");
+                        }
+                        Err(e) => {
+                            // Typed rejection (queue full etc.): drop the
+                            // sample, keep soaking.
+                            let tag = e.tag.ok_or_else(|| {
+                                anyhow::anyhow!("connection-level server error: {e}")
+                            })?;
+                            sent.remove(&tag);
+                        }
+                    }
+                    Ok(())
+                };
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    if sent.len() == window {
+                        drain_one(&mut client, &mut sent, &mut local)?;
+                    }
+                    let img = &data.images[i % data.images.len()];
+                    i += 1;
+                    let t = Instant::now();
+                    let tag = client
+                        .submit(img)
+                        .map_err(|e| anyhow::anyhow!("send: {e}"))?;
+                    sent.insert(tag, t);
+                }
+                while !sent.is_empty() {
+                    drain_one(&mut client, &mut sent, &mut local)?;
+                }
+                let mut shared = per_window.lock().unwrap();
+                for (g, l) in shared.iter_mut().zip(&local) {
+                    g.requests += l.requests;
+                    g.latency.merge(&l.latency);
+                }
+                Ok(())
+            }));
+        }
+        // The main thread samples the server's RSS at each window edge.
+        let mut rss = Vec::with_capacity(WINDOWS);
+        for _ in 0..WINDOWS {
+            std::thread::sleep(win_len);
+            rss.push(probe_rss(addr)?);
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in workers {
+            w.join().expect("soak client thread panicked")?;
+        }
+        Ok(rss)
+    })?;
+
+    let windows = per_window.into_inner().unwrap();
+    let mut p99s = Vec::new();
+    for (i, (m, &rss)) in windows.iter().zip(&rss_samples).enumerate() {
+        let p99 = m.latency.percentile_us(99.0);
+        println!(
+            "window {i}: requests={} p99={p99}us rss={:.1}MiB",
+            m.requests,
+            rss as f64 / (1024.0 * 1024.0),
+        );
+        if m.requests > 0 {
+            p99s.push(p99);
+        }
+    }
+    anyhow::ensure!(
+        !p99s.is_empty(),
+        "soak completed zero requests — server not serving?"
+    );
+
+    // Flat RSS: the last sample may exceed the first only by a bounded
+    // slack (allocator/cache warm-up), never grow per-frame. 0 means the
+    // platform has no procfs — nothing to assert.
+    let (first_rss, last_rss) = (rss_samples[0], *rss_samples.last().unwrap());
+    if first_rss > 0 {
+        let budget = first_rss + first_rss / 4 + (64 << 20);
+        anyhow::ensure!(
+            last_rss <= budget,
+            "server RSS grew {first_rss} -> {last_rss} bytes over the soak \
+             (budget {budget}): per-frame leak?"
+        );
+    } else {
+        println!("rss gauge unavailable on this platform; skipping flatness assert");
+    }
+
+    // Stable p99: no window may degrade an order of magnitude past the
+    // best window (generous — CI machines jitter, leaks don't hide).
+    let best = p99s.iter().copied().min().unwrap().max(1);
+    let worst = p99s.iter().copied().max().unwrap();
+    anyhow::ensure!(
+        worst <= best.saturating_mul(10),
+        "p99 drifted over the soak: best window {best}us, worst {worst}us"
+    );
+    println!(
+        "soak ok: rss {:.1} -> {:.1} MiB, p99 {best}..{worst}us over {WINDOWS} windows",
+        first_rss as f64 / (1024.0 * 1024.0),
+        last_rss as f64 / (1024.0 * 1024.0),
+    );
     Ok(())
 }
 

@@ -15,7 +15,8 @@
 //! counts exposed by [`OpCounts`] against `fixed::latency`.
 
 use crate::fixed::taylor;
-use crate::fixed::Q12;
+use crate::fixed::{raw_slice, raw_slice_mut, Q12};
+use crate::kernels;
 
 /// Which softmax/divider hardware the datapath uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -86,11 +87,9 @@ pub fn squash_q88(s_raw: &[i16], counts: &mut OpCounts) -> Vec<Q12> {
 /// per-capsule allocation). Identical arithmetic and op counts.
 pub fn squash_q88_into(s_raw: &[i16], out: &mut [Q12], counts: &mut OpCounts) {
     debug_assert_eq!(s_raw.len(), out.len());
-    // norm² in Q16.16 (sum of squared Q8.8 raws).
-    let mut acc: i64 = 0;
-    for &x in s_raw {
-        acc += (x as i64) * (x as i64);
-    }
+    // norm² in Q16.16 (sum of squared Q8.8 raws) — wide integer
+    // accumulation, so the SIMD kernel is bit-identical in any order.
+    let acc: i64 = kernels::sumsq_i16(s_raw);
     counts.macs += s_raw.len() as u64;
     if acc == 0 {
         out.fill(Q12::ZERO);
@@ -106,12 +105,10 @@ pub fn squash_q88_into(s_raw: &[i16], out: &mut [Q12], counts: &mut OpCounts) {
     let scale_q12 = ((norm_q88 << 20) / denom).clamp(0, i16::MAX as i64);
     counts.divs += 1;
     counts.muls += s_raw.len() as u64;
-    for (o, &x) in out.iter_mut().zip(s_raw) {
-        // Q8.8 × Q4.12 -> shift 8 -> Q4.12 (|v| < 1, no saturation).
-        let p = (x as i64) * scale_q12;
-        let r = (p + (1 << 7)) >> 8;
-        *o = Q12::from_raw(r.clamp(i16::MIN as i64, i16::MAX as i64) as i16);
-    }
+    // Q8.8 × Q4.12 -> shift 8 -> Q4.12. The product fits i32 exactly
+    // (|x| ≤ 2¹⁵, 0 ≤ scale ≤ 2¹⁵−1), so the lane kernel's i32 path is
+    // bit-identical to the old i64 element loop.
+    kernels::scale_i16_q::<8>(s_raw, scale_q12 as i32, raw_slice_mut(out));
 }
 
 /// Q4.12 squash on the dedicated Squash unit (Fig. 11a): norm² via MAC
@@ -159,8 +156,8 @@ pub fn softmax_q12(b: &[Q12], mode: SoftmaxMode, counts: &mut OpCounts) -> Vec<Q
 pub fn softmax_q12_into(b: &[Q12], out: &mut [Q12], mode: SoftmaxMode, counts: &mut OpCounts) {
     debug_assert_eq!(b.len(), out.len());
     // Max-shift for range safety (a comparator tree in hardware; counted
-    // as adds).
-    let max = b.iter().fold(Q12::from_raw(i16::MIN), |m, &x| m.max(x));
+    // as adds). Max is order-independent, so the SIMD fold is exact.
+    let max = Q12::from_raw(kernels::max_i16(raw_slice(b)));
     counts.adds += b.len() as u64;
     for (o, &x) in out.iter_mut().zip(b) {
         *o = taylor::exp_taylor_q12(x.sub(max));
@@ -168,11 +165,7 @@ pub fn softmax_q12_into(b: &[Q12], out: &mut [Q12], mode: SoftmaxMode, counts: &
     counts.exps += b.len() as u64;
     // Σ e^x in the wide accumulator (the denominator can exceed the
     // Q4.12 range — the divider/log unit reads the accumulator register).
-    let mut acc: i64 = 0;
-    for &e in out.iter() {
-        acc += e.raw() as i64;
-    }
-    acc = acc.max(1);
+    let acc = kernels::sum_i16(raw_slice(out)).max(1);
     counts.adds += b.len() as u64;
     counts.divs += b.len() as u64;
     match mode {
@@ -327,9 +320,9 @@ impl RoutingScratch {
             for i in 0..n_in {
                 let cij = c[i * n_out + j];
                 let u = &u_hat[(i * n_out + j) * d..][..d];
-                for (a, &uk) in s_acc.iter_mut().zip(u) {
-                    *a = cij.mac(uk, *a);
-                }
+                // acc += c_ij · û lane-parallel in wide registers
+                // (bit-identical to the serial MAC chain).
+                kernels::axpy_i16(s_acc, cij.raw(), raw_slice(u));
             }
             counts.macs += (n_in * d) as u64;
             for (r, &a) in s_raw.iter_mut().zip(s_acc.iter()) {
@@ -396,10 +389,7 @@ impl RoutingScratch {
                     for j in 0..n_out {
                         let u = &u_hat[(i * n_out + j) * d..][..d];
                         let vj = &v[j * d..(j + 1) * d];
-                        let mut acc = 0i64;
-                        for (&uk, &vk) in u.iter().zip(vj) {
-                            acc = uk.mac(vk, acc);
-                        }
+                        let acc = kernels::dot_i16(raw_slice(u), raw_slice(vj));
                         counts.macs += d as u64;
                         b[i * n_out + j] = b[i * n_out + j].add(Q12::from_acc(acc));
                         counts.adds += 1;

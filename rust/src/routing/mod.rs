@@ -104,9 +104,7 @@ pub fn squash_into(s: &[f32], out: &mut [f32]) {
     }
     let norm = norm2.sqrt();
     let scale = norm2 / (1.0 + norm2) / norm;
-    for (o, &x) in out.iter_mut().zip(s) {
-        *o = x * scale;
-    }
+    crate::kernels::mul_f32(s, scale, out);
 }
 
 /// Row softmax: `c_j = e^{b_j} / Σ_k e^{b_k}` (max-shifted for stability).
@@ -124,9 +122,7 @@ pub fn softmax_into(b: &[f32], out: &mut [f32]) {
         *o = (x - max).exp();
     }
     let sum: f32 = out.iter().sum();
-    for o in out.iter_mut() {
-        *o /= sum;
-    }
+    crate::kernels::div_in_place_f32(out, sum);
 }
 
 /// Prediction vectors `û_{j|i}` laid out as `[n_in][n_out][d_out]` flat.
@@ -252,9 +248,7 @@ pub fn dynamic_routing_with(
             for i in 0..n_in {
                 let cij = c[i * n_out + j];
                 let u = pred.at(i, j);
-                for (sk, &uk) in s.iter_mut().zip(u) {
-                    *sk += cij * uk;
-                }
+                crate::kernels::axpy_f32(s, cij, u);
             }
             squash_into(s, &mut v[j * d..(j + 1) * d]);
         }
@@ -315,9 +309,7 @@ pub fn accumulated_routing_with(
         for i in 0..n_in {
             let cij = c[i * n_out + j];
             let u = pred.at(i, j);
-            for (sk, &uk) in s.iter_mut().zip(u) {
-                *sk += cij * uk;
-            }
+            crate::kernels::axpy_f32(s, cij, u);
         }
         squash_into(s, &mut v[j * d..(j + 1) * d]);
     }

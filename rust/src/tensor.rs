@@ -165,9 +165,7 @@ impl Tensor {
                 }
                 let row = &other.data[p * n..(p + 1) * n];
                 let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(row) {
-                    *o += a * b;
-                }
+                crate::kernels::axpy_f32(orow, a, row);
             }
         }
         Tensor::from_vec(&[m, n], out)
@@ -201,24 +199,28 @@ pub fn conv2d(
     let oh = (h - kh) / stride + 1;
     let ow = (w - kw) / stride + 1;
     let mut out = Tensor::zeros(&[c_out, oh, ow]);
+    // Tap-outer nest: bias seeds the whole output plane, then every
+    // weight tap contributes one strided axpy over an output row
+    // (dispatched into the SIMD kernel layer). Per output element the
+    // f32 adds still arrive in (i, ky, kx) order — the same rounded
+    // multiply/add sequence as the classic position-major nest, so the
+    // restructure changes no bits (and the sparse-compiled layer's
+    // masked-dense bit-equality contract keeps holding).
     for o in 0..c_out {
         let b = bias.map(|t| t.data[o]).unwrap_or(0.0);
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut acc = b;
-                for i in 0..c_in {
-                    for ky in 0..kh {
-                        let iy = oy * stride + ky;
-                        let in_row =
-                            &input.data[(i * h + iy) * w + ox * stride..];
-                        let w_row = &weight.data
-                            [((o * c_in + i) * kh + ky) * kw..][..kw];
-                        for (kx, &wv) in w_row.iter().enumerate() {
-                            acc += in_row[kx] * wv;
-                        }
+        let plane = &mut out.data[o * oh * ow..][..oh * ow];
+        plane.fill(b);
+        for i in 0..c_in {
+            for ky in 0..kh {
+                let w_row = &weight.data[((o * c_in + i) * kh + ky) * kw..][..kw];
+                for oy in 0..oh {
+                    let iy = oy * stride + ky;
+                    let in_row = &input.data[(i * h + iy) * w..][..w];
+                    let out_row = &mut plane[oy * ow..][..ow];
+                    for (kx, &wv) in w_row.iter().enumerate() {
+                        crate::kernels::axpy_strided_f32(out_row, wv, &in_row[kx..], stride);
                     }
                 }
-                out.data[(o * oh + oy) * ow + ox] = acc;
             }
         }
     }

@@ -44,6 +44,60 @@ pub fn check_msg<T: std::fmt::Debug>(
     }
 }
 
+/// Heap-allocation-counting wrapper around the system allocator, for
+/// steady-state "this path must not allocate" regression tests
+/// (`tests/alloc_regression.rs` registers it as the `#[global_allocator]`
+/// of that test binary only — the library never installs it).
+pub struct CountingAllocator {
+    inner: std::alloc::System,
+    allocs: std::sync::atomic::AtomicU64,
+}
+
+impl CountingAllocator {
+    pub const fn new() -> CountingAllocator {
+        CountingAllocator {
+            inner: std::alloc::System,
+            allocs: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Number of allocation calls (`alloc` + growing `realloc`) so far.
+    pub fn allocations(&self) -> u64 {
+        self.allocs.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl Default for CountingAllocator {
+    fn default() -> CountingAllocator {
+        CountingAllocator::new()
+    }
+}
+
+// SAFETY: delegates verbatim to `std::alloc::System`; the counter is a
+// relaxed atomic with no allocation of its own.
+unsafe impl std::alloc::GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        self.allocs
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::GlobalAlloc::alloc(&self.inner, layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::GlobalAlloc::dealloc(&self.inner, ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: std::alloc::Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        self.allocs
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::alloc::GlobalAlloc::realloc(&self.inner, ptr, layout, new_size)
+    }
+}
+
 /// Assert two f32 slices are element-wise close.
 pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, ctx: &str) {
     assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");

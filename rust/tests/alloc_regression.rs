@@ -1,0 +1,105 @@
+//! Steady-state allocation regression tests.
+//!
+//! The serving hot path is built around reusable buffers: the event
+//! loop borrows classify payloads straight out of the connection read
+//! buffer (no per-frame copy), `wire::decode_classify_into` reuses a
+//! caller-owned f32 buffer, and the Q4.12 routing stage runs entirely
+//! inside a long-lived [`RoutingScratch`]. This test binary installs a
+//! counting global allocator and pins those properties: once warmed
+//! up, the wire scan/decode path performs **zero** heap allocations per
+//! frame, and a routing pass performs none beyond its two output
+//! clones.
+//!
+//! The counting allocator lives here (and only here) as the
+//! `#[global_allocator]` — the library never installs it.
+
+use fastcaps::coordinator::wire;
+use fastcaps::fixed::Q12;
+use fastcaps::routing::fixed::{RoutingScratch, SoftmaxMode};
+use fastcaps::testing::CountingAllocator;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
+
+/// Allocation calls observed while running `f`.
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOC.allocations();
+    f();
+    ALLOC.allocations() - before
+}
+
+#[test]
+fn wire_scan_and_decode_are_allocation_free_at_steady_state() {
+    // One 28×28 v2 classify frame, built before measurement.
+    let image: Vec<f32> = (0..28 * 28).map(|i| (i % 7) as f32 / 7.0).collect();
+    let frame = wire::encode_classify(wire::V2, 41, &image);
+
+    let mut rbuf: Vec<u8> = Vec::with_capacity(frame.len() * 2);
+    let mut words: Vec<f32> = Vec::new();
+
+    // Warm-up: grows rbuf/words to their steady-state capacity.
+    rbuf.extend_from_slice(&frame);
+    let f = wire::scan_frame(&rbuf).unwrap().expect("whole frame");
+    let (_tag, bytes) =
+        wire::decode_classify_v2(&rbuf[wire::HEADER_LEN..f.total_len]).unwrap();
+    wire::decode_classify_into(bytes, &mut words).unwrap();
+    rbuf.drain(..f.total_len);
+    assert_eq!(words.len(), image.len());
+
+    // Steady state: scan → split → decode → drain must not touch the
+    // heap at all.
+    let frames = 100;
+    let delta = allocs_during(|| {
+        for _ in 0..frames {
+            rbuf.extend_from_slice(&frame);
+            let f = wire::scan_frame(&rbuf).unwrap().expect("whole frame");
+            let (tag, bytes) =
+                wire::decode_classify_v2(&rbuf[wire::HEADER_LEN..f.total_len]).unwrap();
+            assert_eq!(tag, 41);
+            wire::decode_classify_into(bytes, &mut words).unwrap();
+            rbuf.drain(..f.total_len);
+            assert_eq!(words.len(), image.len());
+        }
+    });
+    assert_eq!(
+        delta, 0,
+        "wire scan/decode allocated {delta} times over {frames} steady-state frames"
+    );
+}
+
+#[test]
+fn routing_scratch_reuse_is_allocation_free_at_steady_state() {
+    let (n_in, n_out, d_out) = (72, 10, 16);
+    let mut scratch = RoutingScratch::new();
+
+    // Warm-up sizes every internal buffer.
+    scratch.prepare(n_in, n_out, d_out);
+    fill_u_hat(&mut scratch, n_in * n_out * d_out);
+    let _ = scratch.run(3, SoftmaxMode::Taylor);
+
+    // Steady state: prepare + û refill + a full 3-iteration routing pass.
+    // The only permitted allocations are the two output clones
+    // (`RoutingOutputQ12 { v, coupling, .. }`) the caller receives.
+    let frames = 50;
+    let delta = allocs_during(|| {
+        for _ in 0..frames {
+            scratch.prepare(n_in, n_out, d_out);
+            fill_u_hat(&mut scratch, n_in * n_out * d_out);
+            let out = scratch.run(3, SoftmaxMode::Taylor);
+            assert_eq!(out.v.len(), n_out * d_out);
+        }
+    });
+    assert!(
+        delta <= 2 * frames,
+        "routing pass allocated {delta} times over {frames} frames \
+         (budget: 2 output clones per frame)"
+    );
+}
+
+fn fill_u_hat(scratch: &mut RoutingScratch, n: usize) {
+    let u_hat = scratch.u_hat_mut();
+    assert_eq!(u_hat.len(), n);
+    for (i, u) in u_hat.iter_mut().enumerate() {
+        *u = Q12::from_f32(((i % 31) as f32 - 15.0) / 16.0);
+    }
+}

@@ -1,8 +1,8 @@
 //! Scalar-vs-AVX2 microbenchmarks for the SIMD kernel layer
 //! (`fastcaps::kernels`), over the shapes the datapaths actually run:
 //! the Q8.8 conv-row MAC, the Q4.12 û-projection / routing-FC axpy,
-//! the routing reductions, the squash requantize writeback, and the
-//! fp32 axpy.
+//! the routing reductions (dot/sumsq/sum/max), the squash requantize
+//! writeback, and the fp32 elementwise kernels (axpy/mul/div).
 //!
 //! On hosts with AVX2 the run gates on a ≥2× geometric-mean speedup of
 //! the vector path over the scalar path (both called directly, no
@@ -126,6 +126,11 @@ fn gated_comparison() {
             unsafe { avx2::dot_i16(&op.red_a, &op.red_b) },
             "dot_i16 bit-identity"
         );
+        assert_eq!(
+            scalar::sum_i16(&op.red_a),
+            unsafe { avx2::sum_i16(&op.red_a) },
+            "sum_i16 bit-identity"
+        );
         let mut s = [0i16; 16];
         let mut t = [0i16; 16];
         scalar::scale_i16_q::<12>(&op.sq_in, 2048, &mut s);
@@ -137,6 +142,16 @@ fn gated_comparison() {
         unsafe { avx2::axpy_f32(&mut fv, 0.5, &op.f32_w) };
         let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&fa), bits(&fv), "axpy_f32 bit-identity");
+        let mut ms = vec![0.0f32; op.f32_w.len()];
+        let mut mv = vec![0.0f32; op.f32_w.len()];
+        scalar::mul_f32(&op.f32_w, 1.5, &mut ms);
+        unsafe { avx2::mul_f32(&op.f32_w, 1.5, &mut mv) };
+        assert_eq!(bits(&ms), bits(&mv), "mul_f32 bit-identity");
+        let mut ds = op.f32_w.clone();
+        let mut dv = op.f32_w.clone();
+        scalar::div_in_place_f32(&mut ds, 3.0);
+        unsafe { avx2::div_in_place_f32(&mut dv, 3.0) };
+        assert_eq!(bits(&ds), bits(&dv), "div_in_place_f32 bit-identity");
     }
 
     let mut b = Bencher::new();
@@ -216,6 +231,21 @@ fn gated_comparison() {
             })
             .mean_ns;
         speedups.push(("sumsq_i16", s / v.max(1e-9)));
+        let s = b
+            .bench("sum_i16 scalar", || {
+                for _ in 0..REPS {
+                    black_box(scalar::sum_i16(black_box(&op.red_a)));
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("sum_i16 avx2", || {
+                for _ in 0..REPS {
+                    black_box(unsafe { avx2::sum_i16(black_box(&op.red_a)) });
+                }
+            })
+            .mean_ns;
+        speedups.push(("sum_i16", s / v.max(1e-9)));
     }
 
     b.section("squash/softmax staging (x512)");
@@ -275,6 +305,43 @@ fn gated_comparison() {
             })
             .mean_ns;
         speedups.push(("axpy_f32", s / v.max(1e-9)));
+        let mut out = vec![0.0f32; op.f32_w.len()];
+        let s = b
+            .bench("mul_f32 scalar", || {
+                for _ in 0..REPS {
+                    scalar::mul_f32(black_box(&op.f32_w), 1.5, &mut out);
+                    black_box(&mut out);
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("mul_f32 avx2", || {
+                for _ in 0..REPS {
+                    unsafe { avx2::mul_f32(black_box(&op.f32_w), 1.5, &mut out) };
+                    black_box(&mut out);
+                }
+            })
+            .mean_ns;
+        speedups.push(("mul_f32", s / v.max(1e-9)));
+        // Divide by 1.0: a full-latency IEEE divide per lane whose
+        // output equals its input, so the buffer never drifts toward
+        // subnormals over thousands of reps.
+        let mut buf = op.f32_w.clone();
+        let s = b
+            .bench("div_in_place_f32 scalar", || {
+                for _ in 0..REPS {
+                    scalar::div_in_place_f32(black_box(&mut buf), 1.0);
+                }
+            })
+            .mean_ns;
+        let v = b
+            .bench("div_in_place_f32 avx2", || {
+                for _ in 0..REPS {
+                    unsafe { avx2::div_in_place_f32(black_box(&mut buf), 1.0) };
+                }
+            })
+            .mean_ns;
+        speedups.push(("div_in_place_f32", s / v.max(1e-9)));
     }
 
     println!("\n== speedups (scalar time / avx2 time) ==");

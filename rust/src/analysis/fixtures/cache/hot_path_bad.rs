@@ -1,0 +1,28 @@
+//! fclint fixture: panic sources in a hot path (positive case). The
+//! `cache/` directory name puts it in the default hot-path scope.
+
+use std::collections::HashMap;
+
+pub fn lookup(map: &HashMap<u64, u64>, key: u64) -> u64 {
+    *map.get(&key).unwrap()
+}
+
+pub fn admit(depth: usize, max: usize) {
+    if depth > max {
+        panic!("queue overflow");
+    }
+}
+
+/// Named like a contractually index-free hot fn: indexing is denied.
+pub fn submit(xs: &[u64]) -> u64 {
+    xs[0]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        super::admit(0, 1);
+        assert_eq!(1u64, "1".parse::<u64>().unwrap());
+    }
+}

@@ -1,0 +1,18 @@
+//! fclint fixture: hot path with typed errors only (negative case).
+
+use std::collections::HashMap;
+
+pub fn lookup(map: &HashMap<u64, u64>, key: u64) -> Option<u64> {
+    map.get(&key).copied()
+}
+
+pub fn admit(depth: usize, max: usize) -> Result<(), String> {
+    if depth > max {
+        return Err(format!("queue overflow: {depth} > {max}"));
+    }
+    Ok(())
+}
+
+pub fn submit(xs: &[u64]) -> Option<u64> {
+    xs.first().copied()
+}

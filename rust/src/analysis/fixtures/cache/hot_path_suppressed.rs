@@ -1,0 +1,6 @@
+//! fclint fixture: a documented allow keeps a deliberate panic source.
+
+pub fn checked_shift(x: u32) -> u32 {
+    // fclint: allow(hot-path-no-panic) -- fixture: shift amount is constant
+    x.checked_shl(2).unwrap()
+}

@@ -1,0 +1,18 @@
+//! fclint fixture: fingerprint flow that absorbs a bit-neutral knob
+//! (`workers`) and misses bit-affecting fields (coupling, row_ptr,
+//! w_ij, weights).
+
+pub struct Spec {
+    pub workers: usize,
+    pub routing_tag: u64,
+}
+
+impl Spec {
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h ^= self.workers as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+        h ^= self.routing_tag;
+        h
+    }
+}

@@ -1,0 +1,23 @@
+//! fclint fixture: fingerprint flow absorbing every bit-affecting
+//! field and none of the bit-neutral knobs.
+
+pub struct Model {
+    pub routing_tag: u64,
+    pub acc_coupling_q: i16,
+    pub row_ptr: Vec<u32>,
+    pub w_ij: Vec<i16>,
+    pub conv_weights: Vec<i16>,
+}
+
+impl Model {
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = self.routing_tag ^ self.acc_coupling_q as u64;
+        for &r in &self.row_ptr {
+            h = h.wrapping_mul(31).wrapping_add(r as u64);
+        }
+        for &w in self.w_ij.iter().chain(&self.conv_weights) {
+            h = h.wrapping_mul(31).wrapping_add(w as u16 as u64);
+        }
+        h
+    }
+}

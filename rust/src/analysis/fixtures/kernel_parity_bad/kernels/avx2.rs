@@ -1,0 +1,7 @@
+//! fclint fixture: the AVX2 half of the dispatched pair.
+
+/// # Safety
+/// The CPU must support AVX2.
+pub unsafe fn frob_i16(x: &[i16]) -> i64 {
+    x.iter().map(|&v| v as i64).sum()
+}

@@ -1,0 +1,14 @@
+//! fclint fixture: the dispatcher routes to an AVX2 kernel that has no
+//! scalar twin and no bit-identity bench coverage.
+
+pub mod avx2;
+pub mod scalar;
+
+pub fn frob_i16(x: &[i16]) -> i64 {
+    if cfg!(target_feature = "avx2") {
+        // SAFETY: fixture — dispatch checked the CPU feature.
+        unsafe { avx2::frob_i16(x) }
+    } else {
+        scalar::noop_i16(x)
+    }
+}

@@ -1,0 +1,5 @@
+//! fclint fixture: the scalar twin of `frob_i16` is missing.
+
+pub fn noop_i16(x: &[i16]) -> i64 {
+    x.iter().map(|&v| v as i64).sum()
+}

@@ -1,0 +1,13 @@
+//! fclint fixture: `unsafe` without justification (positive case).
+//! Not part of the crate's module tree — only read by the lint tests.
+
+pub fn copy_heads(dst: &mut [i16], src: &[i16]) {
+    let n = dst.len().min(src.len());
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr(), n);
+    }
+}
+
+pub unsafe fn first_unchecked(xs: &[i16]) -> i16 {
+    *xs.get_unchecked(0)
+}

@@ -1,0 +1,19 @@
+//! fclint fixture: `unsafe` with adjacent justification (negative case).
+
+pub fn copy_heads(dst: &mut [i16], src: &[i16]) {
+    let n = dst.len().min(src.len());
+    // SAFETY: both pointers come from live slices and `n` is clamped to
+    // the shorter length, so the copy stays in bounds.
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr(), n);
+    }
+}
+
+/// Reads the first element without a bounds check.
+///
+/// # Safety
+/// `xs` must be non-empty.
+pub unsafe fn first_unchecked(xs: &[i16]) -> i16 {
+    // SAFETY: the caller promises `xs` is non-empty.
+    unsafe { *xs.get_unchecked(0) }
+}

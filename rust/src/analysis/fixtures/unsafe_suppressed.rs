@@ -1,0 +1,10 @@
+//! fclint fixture: the suppression pragma silences the unsafe lint.
+
+pub fn len_via_ffi(xs: &[i16]) -> usize {
+    // fclint: allow(unsafe-needs-safety) -- fixture: pragma must silence this
+    unsafe { ffi_len(xs.as_ptr(), xs.len()) }
+}
+
+extern "C" {
+    fn ffi_len(ptr: *const i16, n: usize) -> usize;
+}

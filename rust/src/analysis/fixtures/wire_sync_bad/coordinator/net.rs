@@ -1,0 +1,14 @@
+//! fclint fixture: a peer that drifts from wire.rs — it redefines a
+//! version constant, hardcodes the payload cap, and re-spells the
+//! frame magic instead of importing `wire::MAGIC`.
+
+/// Drifted: wire.rs says 2.
+pub const V2: u8 = 3;
+
+pub fn frame_ok(len: u32) -> bool {
+    (len as usize) < 4 << 20 && has_magic()
+}
+
+fn has_magic() -> bool {
+    b"FCAP"[0] == 0x46
+}

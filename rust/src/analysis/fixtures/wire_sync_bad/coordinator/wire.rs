@@ -1,0 +1,7 @@
+//! fclint fixture: the canonical wire constants.
+
+pub const MAGIC: [u8; 4] = *b"FCAP";
+pub const VERSION: u8 = 1;
+pub const V2: u8 = 2;
+pub const MAX_PAYLOAD: u32 = 4 << 20;
+pub const HEADER_LEN: usize = 10;

@@ -1,0 +1,490 @@
+//! The `fclint` lint implementations.
+//!
+//! Each lint is a pure function from scanned sources (plus auxiliary
+//! non-Rust texts: `kernel_bench.rs`, `DESIGN.md`) to findings. They
+//! are registered in [`crate::analysis::registry`] and configured by
+//! [`crate::analysis::LintConfig`]; suppression pragmas are applied
+//! centrally by the engine, not here.
+
+use super::scan::ScannedFile;
+use super::{Finding, LintConfig};
+
+/// Everything a lint may look at.
+pub struct Ctx<'a> {
+    /// Scanned in-tree `.rs` sources.
+    pub files: &'a [ScannedFile],
+    /// Auxiliary raw texts: `(path, text)` for `kernel_bench.rs`,
+    /// `DESIGN.md`, … — consulted by repo-level lints only.
+    pub aux: &'a [(String, String)],
+    pub cfg: &'a LintConfig,
+}
+
+impl Ctx<'_> {
+    fn file_ending_in(&self, suffix: &str) -> Option<&ScannedFile> {
+        self.files.iter().find(|f| f.path.ends_with(suffix))
+    }
+
+    fn aux_ending_in(&self, suffix: &str) -> Option<&(String, String)> {
+        self.aux.iter().find(|(p, _)| p.ends_with(suffix))
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whether `hay` contains `needle` as a word (identifier-bounded).
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let at = from + pos;
+        let before_ok = at == 0 || !hay[..at].chars().next_back().map(is_ident).unwrap_or(false);
+        let after = hay[at + needle.len()..].chars().next();
+        if before_ok && !after.map(is_ident).unwrap_or(false) {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// 1. unsafe-needs-safety
+
+pub const UNSAFE_NEEDS_SAFETY: &str = "unsafe-needs-safety";
+
+/// Every line with an `unsafe` token needs a justification: `SAFETY:`
+/// in a trailing comment or in the contiguous comment/attribute block
+/// directly above (a `/// # Safety` doc section also qualifies for
+/// `unsafe fn` declarations). Test code is **not** exempt — the AVX2
+/// bit-identity tests call `unsafe fn`s too.
+pub fn unsafe_needs_safety(ctx: &Ctx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in ctx.files {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if !contains_word(&line.code, "unsafe") {
+                continue;
+            }
+            if has_safety_note(file, idx) {
+                continue;
+            }
+            let msg = "`unsafe` without an adjacent `// SAFETY:` comment".to_string();
+            out.push(Finding::deny(UNSAFE_NEEDS_SAFETY, &file.path, idx + 1, msg));
+        }
+    }
+    out
+}
+
+fn has_safety_note(file: &ScannedFile, idx: usize) -> bool {
+    let marker = |c: &str| c.contains("SAFETY:") || c.contains("# Safety");
+    if marker(&file.lines[idx].comment) {
+        return true;
+    }
+    // Walk the contiguous comment/attribute block above.
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let line = &file.lines[i];
+        let code = line.code.trim();
+        let is_attr = code.starts_with("#[") || code.starts_with("#![");
+        let is_comment_only = code.is_empty() && !line.comment.trim().is_empty();
+        if !(is_attr || is_comment_only) {
+            return false;
+        }
+        if marker(&line.comment) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// 2. hot-path-no-panic
+
+pub const HOT_PATH_NO_PANIC: &str = "hot-path-no-panic";
+
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Panic sources are denied outside `#[cfg(test)]` in the configured
+/// hot-path scopes. A scope is either a whole file (`fns` empty) or a
+/// named-function subset of one. Additionally, functions listed in
+/// `indexing_hot_fns` must stay free of slice-indexing expressions.
+pub fn hot_path_no_panic(ctx: &Ctx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in ctx.files {
+        let scopes: Vec<_> = ctx
+            .cfg
+            .hot_paths
+            .iter()
+            .filter(|s| file.path.contains(&s.path))
+            .collect();
+        if scopes.is_empty() {
+            continue;
+        }
+        let whole_file = scopes.iter().any(|s| s.fns.is_empty());
+        let scope_fns: Vec<&str> = scopes
+            .iter()
+            .flat_map(|s| s.fns.iter().map(String::as_str))
+            .collect();
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let lineno = idx + 1;
+            let enclosing = file.enclosing_fn(lineno);
+            if enclosing.map(|f| f.in_test).unwrap_or(false) {
+                continue;
+            }
+            let in_scope = whole_file
+                || enclosing
+                    .map(|f| scope_fns.contains(&f.name.as_str()))
+                    .unwrap_or(false);
+            if in_scope {
+                for tok in PANIC_TOKENS {
+                    if line.code.contains(tok) {
+                        out.push(Finding::deny(
+                            HOT_PATH_NO_PANIC,
+                            &file.path,
+                            lineno,
+                            format!("`{tok}` in hot path (typed errors only here)"),
+                        ));
+                    }
+                }
+            }
+            let index_scoped = enclosing
+                .map(|f| ctx.cfg.indexing_hot_fns.iter().any(|n| n == &f.name))
+                .unwrap_or(false);
+            if index_scoped && has_index_expr(&line.code) {
+                let msg = "slice indexing in a contractually index-free hot fn".to_string();
+                out.push(Finding::deny(HOT_PATH_NO_PANIC, &file.path, lineno, msg));
+            }
+        }
+    }
+    out
+}
+
+/// A `[` directly after an identifier, `)`, or `]` is an index (or
+/// fixed-size-array type — close enough for a deny lint on functions
+/// that are contractually index-free). Attribute lines are excluded.
+fn has_index_expr(code: &str) -> bool {
+    let t = code.trim();
+    if t.starts_with("#[") || t.starts_with("#![") {
+        return false;
+    }
+    let chars: Vec<char> = code.chars().collect();
+    chars.windows(2).any(|w| w[1] == '[' && (is_ident(w[0]) || w[0] == ')' || w[0] == ']'))
+}
+
+// ---------------------------------------------------------------------
+// 3. fingerprint-discipline
+
+pub const FINGERPRINT_DISCIPLINE: &str = "fingerprint-discipline";
+
+/// The deployment fingerprint keys the content-addressed cache, so its
+/// input flow must absorb every bit-affecting knob (`required`: routing
+/// mode, coupling, packed masks, weights) and must never absorb
+/// bit-neutral ones (`forbidden`: worker count, SIMD level). Checked
+/// over the union of all non-test fns named in `fingerprint_fns`.
+pub fn fingerprint_discipline(ctx: &Ctx) -> Vec<Finding> {
+    let mut spans: Vec<(&ScannedFile, usize, usize)> = Vec::new();
+    for file in ctx.files {
+        for f in &file.fns {
+            if !f.in_test && ctx.cfg.fingerprint_fns.iter().any(|n| n == &f.name) {
+                spans.push((file, f.start, f.end));
+            }
+        }
+    }
+    let Some(&(first_file, first_line, _)) = spans.first() else {
+        // No fingerprint flow in this tree (e.g. a fixture subset):
+        // nothing to check.
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for req in &ctx.cfg.fingerprint_required {
+        let found = spans.iter().any(|(file, start, end)| {
+            file.lines[*start - 1..*end].iter().any(|l| ident_containing(&l.code, req))
+        });
+        if !found {
+            let msg = format!("bit-affecting field `{req}` missing from the fingerprint flow");
+            out.push(Finding::deny(FINGERPRINT_DISCIPLINE, &first_file.path, first_line, msg));
+        }
+    }
+    for forb in &ctx.cfg.fingerprint_forbidden {
+        for (file, start, end) in &spans {
+            for (off, l) in file.lines[*start - 1..*end].iter().enumerate() {
+                if ident_containing(&l.code, forb) {
+                    let msg = format!("bit-neutral knob `{forb}` flows into the fingerprint");
+                    out.push(Finding::deny(FINGERPRINT_DISCIPLINE, &file.path, start + off, msg));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Whether any identifier in `code` contains `frag` (case-insensitive),
+/// so `coupling` matches `acc_coupling_q`.
+fn ident_containing(code: &str, frag: &str) -> bool {
+    let lower = code.to_ascii_lowercase();
+    let frag = frag.to_ascii_lowercase();
+    let mut from = 0;
+    while let Some(pos) = lower[from..].find(&frag) {
+        let at = from + pos;
+        // Part of an identifier (not, say, an operator sequence).
+        if lower[at..].chars().next().map(is_ident).unwrap_or(false) {
+            return true;
+        }
+        from = at + frag.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// 4. kernel-parity
+
+pub const KERNEL_PARITY: &str = "kernel-parity";
+
+/// Every kernel the dispatcher routes to AVX2 must have a scalar twin
+/// (the bit-exactness reference), an AVX2 definition, and a mention in
+/// `kernel_bench.rs` (where the bit-identity harness lives). Skipped
+/// when the tree has no `kernels/mod.rs`.
+pub fn kernel_parity(ctx: &Ctx) -> Vec<Finding> {
+    let Some(mod_file) = ctx.file_ending_in("kernels/mod.rs") else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let dispatched = qualified_names(mod_file, "avx2::");
+    let scalar_file = ctx.file_ending_in("kernels/scalar.rs");
+    let avx2_file = ctx.file_ending_in("kernels/avx2.rs");
+    let bench = ctx.aux_ending_in("kernel_bench.rs");
+    for (name, lineno) in &dispatched {
+        for (twin, file) in [("scalar", scalar_file), ("avx2", avx2_file)] {
+            let defined = file.map(|f| defines_fn(f, name)).unwrap_or(false);
+            if !defined {
+                out.push(Finding::deny(
+                    KERNEL_PARITY,
+                    &mod_file.path,
+                    *lineno,
+                    format!("dispatched kernel `{name}` has no `{twin}` implementation"),
+                ));
+            }
+        }
+        match bench {
+            None => out.push(Finding::deny(
+                KERNEL_PARITY,
+                &mod_file.path,
+                *lineno,
+                "kernel_bench.rs not found — bit-identity coverage unverifiable".to_string(),
+            )),
+            Some((bench_path, text)) => {
+                if !contains_word(text, name) {
+                    let msg = format!("`{name}` lacks bit-identity coverage in kernel_bench.rs");
+                    out.push(Finding::deny(KERNEL_PARITY, bench_path, 1, msg));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `(name, line)` pairs for identifiers qualified by `prefix` (e.g.
+/// `avx2::`) in non-test code.
+fn qualified_names(file: &ScannedFile, prefix: &str) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let mut from = 0;
+        while let Some(pos) = line.code[from..].find(prefix) {
+            let at = from + pos + prefix.len();
+            let name: String = line.code[at..].chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() && !out.iter().any(|(n, _)| n == &name) {
+                out.push((name, idx + 1));
+            }
+            from = at;
+        }
+    }
+    out
+}
+
+fn defines_fn(file: &ScannedFile, name: &str) -> bool {
+    file.fns.iter().any(|f| f.name == name)
+}
+
+// ---------------------------------------------------------------------
+// 5. wire-constant-sync
+
+pub const WIRE_CONSTANT_SYNC: &str = "wire-constant-sync";
+
+const WATCHED_CONSTS: [&str; 6] = [
+    "MAGIC",
+    "VERSION",
+    "V2",
+    "MAX_PAYLOAD",
+    "HEADER_LEN",
+    "CONN_TAG",
+];
+
+/// `wire.rs` is the single owner of the frame constants. Peers
+/// (`net.rs`, `event_loop.rs`) must reference them qualified — any
+/// local redefinition must be textually identical, and raw `FCAP`
+/// magic or hardcoded payload-cap literals outside `wire.rs` are
+/// denied. `DESIGN.md` must state the same magic and MiB cap.
+pub fn wire_constant_sync(ctx: &Ctx) -> Vec<Finding> {
+    let Some(wire) = ctx.file_ending_in("coordinator/wire.rs") else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let canon: Vec<(&str, String, usize)> = WATCHED_CONSTS
+        .iter()
+        .filter_map(|name| const_value(wire, name).map(|(v, l)| (*name, v, l)))
+        .collect();
+    let cap_entry = canon.iter().find(|(n, _, _)| *n == "MAX_PAYLOAD");
+    let cap = cap_entry.and_then(|(_, v, _)| eval_u64(v));
+
+    for peer_suffix in ["coordinator/net.rs", "coordinator/event_loop.rs"] {
+        let Some(peer) = ctx.file_ending_in(peer_suffix) else {
+            continue;
+        };
+        for (name, canon_value, _) in &canon {
+            if let Some((peer_value, lineno)) = const_value(peer, name) {
+                if normalize(&peer_value) != normalize(canon_value) {
+                    let detail = format!("`{peer_value}` != wire.rs `{canon_value}`");
+                    let msg = format!("local `{name}` is {detail}; import `wire::{name}`");
+                    out.push(Finding::deny(WIRE_CONSTANT_SYNC, &peer.path, lineno, msg));
+                }
+            }
+        }
+        for must_ref in ["wire::VERSION", "wire::V2"] {
+            if !peer.lines.iter().any(|l| l.code.contains(must_ref)) {
+                out.push(Finding::deny(
+                    WIRE_CONSTANT_SYNC,
+                    &peer.path,
+                    1,
+                    format!("never references `{must_ref}` — wire version drift risk"),
+                ));
+            }
+        }
+        for (idx, line) in peer.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            if line.stripped.contains("FCAP") {
+                out.push(Finding::deny(
+                    WIRE_CONSTANT_SYNC,
+                    &peer.path,
+                    idx + 1,
+                    "raw `FCAP` magic outside wire.rs — use `wire::MAGIC`".to_string(),
+                ));
+            }
+            if cap.map(|c| mentions_cap_literal(&line.stripped, c)).unwrap_or(false) {
+                let msg = "hardcoded payload cap — use `wire::MAX_PAYLOAD`".to_string();
+                out.push(Finding::deny(WIRE_CONSTANT_SYNC, &peer.path, idx + 1, msg));
+            }
+        }
+    }
+
+    match ctx.aux_ending_in("DESIGN.md") {
+        None => out.push(Finding::deny(
+            WIRE_CONSTANT_SYNC,
+            &wire.path,
+            1,
+            "DESIGN.md not found — wire constants undocumentable".to_string(),
+        )),
+        Some((design_path, text)) => {
+            if !text.contains("FCAP") {
+                out.push(Finding::deny(
+                    WIRE_CONSTANT_SYNC,
+                    design_path,
+                    1,
+                    "DESIGN.md never states the `FCAP` frame magic".to_string(),
+                ));
+            }
+            if let Some(cap) = cap {
+                let mib = format!("{} MiB", cap >> 20);
+                if !text.contains(&mib) {
+                    let msg = format!("DESIGN.md does not state the `{mib}` payload cap");
+                    out.push(Finding::deny(WIRE_CONSTANT_SYNC, design_path, 1, msg));
+                }
+            }
+            if !text.contains("v2") {
+                out.push(Finding::deny(
+                    WIRE_CONSTANT_SYNC,
+                    design_path,
+                    1,
+                    "DESIGN.md never mentions the v2 wire dialect".to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `(value text, line)` of `const NAME: … = value;` in non-test code,
+/// read from the comment-stripped (but literal-preserving) view.
+fn const_value(file: &ScannedFile, name: &str) -> Option<(String, usize)> {
+    let pat = format!("const {name}:");
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test || !line.stripped.contains(&pat) {
+            continue;
+        }
+        let after_eq = line.stripped.split_once('=')?.1;
+        let value = after_eq.split(';').next().unwrap_or(after_eq).trim();
+        return Some((value.to_string(), idx + 1));
+    }
+    None
+}
+
+fn normalize(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+/// Evaluate a const expression of the shapes used for the payload cap:
+/// a decimal literal (with `_`), `A << B`, or `A * B * C…`.
+fn eval_u64(expr: &str) -> Option<u64> {
+    let s: String = expr
+        .chars()
+        .filter(|c| !c.is_whitespace() && *c != '_' && *c != '(' && *c != ')')
+        .collect();
+    if let Some((a, b)) = s.split_once("<<") {
+        return Some(a.parse::<u64>().ok()? << b.parse::<u64>().ok()?);
+    }
+    if s.contains('*') {
+        return s.split('*').try_fold(1u64, |acc, p| p.parse::<u64>().ok().map(|v| acc * v));
+    }
+    s.parse().ok()
+}
+
+/// Whether a code line hardcodes the payload cap (`4 << 20`, the raw
+/// decimal, or `4 * 1024 * 1024`).
+fn mentions_cap_literal(stripped: &str, cap: u64) -> bool {
+    let mib = cap >> 20;
+    let patterns = [
+        format!("{mib} << 20"),
+        format!("{mib}<<20"),
+        cap.to_string(),
+        format!("{mib} * 1024 * 1024"),
+    ];
+    patterns.iter().any(|p| {
+        let mut from = 0;
+        while let Some(pos) = stripped[from..].find(p.as_str()) {
+            let at = from + pos;
+            let before = stripped[..at].chars().next_back();
+            let after = stripped[at + p.len()..].chars().next();
+            let digit = |c: Option<char>| c.map(|c| c.is_ascii_digit()).unwrap_or(false);
+            if !digit(before) && !digit(after) {
+                return true;
+            }
+            from = at + p.len();
+        }
+        false
+    })
+}

@@ -1,0 +1,508 @@
+//! `fclint` — the repo-invariant static analyzer behind the `fclint`
+//! binary (`src/bin/fclint.rs`) and the blocking CI gate.
+//!
+//! The codebase rests on invariants the compiler cannot see: scalar ↔
+//! AVX2 bit-exactness, the fingerprint discipline that keeps the
+//! content-addressed cache sound, `// SAFETY:` coverage on every
+//! `unsafe` site, panic-free serving hot paths, and wire constants
+//! that agree across modules and docs. This module scans the tree
+//! (see [`scan`]) and checks those invariants as deny-level lints
+//! (see [`lints`]); any finding fails CI.
+//!
+//! Suppression is per line: `// fclint: allow(<lint-name>) -- reason`
+//! on the offending line or the line directly above. The reason is
+//! free text but expected — suppressions without justification don't
+//! survive review. See DESIGN.md §3i for the registry and the
+//! fingerprint manifest.
+
+pub mod lints;
+pub mod scan;
+
+use lints::Ctx;
+use scan::ScannedFile;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Severity. Every current lint denies; `Warn` exists so a future lint
+/// can report without gating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Deny,
+    Warn,
+}
+
+/// One lint hit, anchored to a file and 1-based line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: &'static str,
+    pub level: Level,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn deny(lint: &'static str, path: &str, line: usize, message: String) -> Finding {
+        Finding {
+            lint,
+            level: Level::Deny,
+            path: path.to_string(),
+            line,
+            message,
+        }
+    }
+}
+
+/// A hot-path scope: a path substring, optionally narrowed to named fns
+/// (empty `fns` = the whole file).
+#[derive(Debug, Clone)]
+pub struct HotPathScope {
+    pub path: String,
+    pub fns: Vec<String>,
+}
+
+impl HotPathScope {
+    fn whole(path: &str) -> HotPathScope {
+        HotPathScope {
+            path: path.to_string(),
+            fns: Vec::new(),
+        }
+    }
+
+    fn fns(path: &str, fns: &[&str]) -> HotPathScope {
+        HotPathScope {
+            path: path.to_string(),
+            fns: fns.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Lint configuration. [`LintConfig::repo_default`] encodes this
+/// repository's invariants; fixture tests construct their own.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    pub hot_paths: Vec<HotPathScope>,
+    /// Fns that are contractually free of slice indexing.
+    pub indexing_hot_fns: Vec<String>,
+    /// Fn names whose union forms the fingerprint input flow.
+    pub fingerprint_fns: Vec<String>,
+    /// Ident fragments that must appear in that flow (bit-affecting).
+    pub fingerprint_required: Vec<String>,
+    /// Ident fragments that must not (bit-neutral).
+    pub fingerprint_forbidden: Vec<String>,
+    /// Run only these lints (empty = all).
+    pub only: Vec<String>,
+}
+
+impl LintConfig {
+    /// The checked manifest for this repository (see DESIGN.md §3i).
+    pub fn repo_default() -> LintConfig {
+        let strs = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect();
+        LintConfig {
+            hot_paths: vec![
+                HotPathScope::whole("coordinator/event_loop.rs"),
+                HotPathScope::fns(
+                    "coordinator/server.rs",
+                    &["submit", "submit_sink", "classify", "replica_loop", "run_and_reply"],
+                ),
+                HotPathScope::whole("cache/"),
+                HotPathScope::whole("kernels/"),
+                HotPathScope::whole("routing/"),
+            ],
+            indexing_hot_fns: strs(&["submit", "submit_sink", "classify"]),
+            fingerprint_fns: strs(&[
+                "fingerprint",
+                "deployment_fingerprint",
+                "absorb_fingerprint",
+            ]),
+            // Bit-affecting: routing mode + coupling quantization, the
+            // packed survivor layout (row_ptr), the transformation
+            // matrices (w_ij) and conv weights.
+            fingerprint_required: strs(&["routing", "coupling", "row_ptr", "w_ij", "weights"]),
+            // Bit-neutral: replica/worker counts and the SIMD dispatch
+            // level change scheduling, never output bits.
+            fingerprint_forbidden: strs(&["workers", "simd"]),
+            only: Vec::new(),
+        }
+    }
+}
+
+/// A registered lint.
+pub struct Lint {
+    pub name: &'static str,
+    pub description: &'static str,
+    run: fn(&Ctx) -> Vec<Finding>,
+}
+
+/// The lint registry, in reporting order.
+pub fn registry() -> Vec<Lint> {
+    vec![
+        Lint {
+            name: lints::UNSAFE_NEEDS_SAFETY,
+            description: "every `unsafe` needs an adjacent `// SAFETY:` justification",
+            run: lints::unsafe_needs_safety,
+        },
+        Lint {
+            name: lints::HOT_PATH_NO_PANIC,
+            description: "no unwrap/expect/panic/unreachable (or indexing in \
+                          contracted fns) in serving hot paths outside tests",
+            run: lints::hot_path_no_panic,
+        },
+        Lint {
+            name: lints::FINGERPRINT_DISCIPLINE,
+            description: "bit-affecting knobs flow into the deployment \
+                          fingerprint; bit-neutral knobs never do",
+            run: lints::fingerprint_discipline,
+        },
+        Lint {
+            name: lints::KERNEL_PARITY,
+            description: "every dispatched kernel has scalar + avx2 twins and \
+                          bit-identity bench coverage",
+            run: lints::kernel_parity,
+        },
+        Lint {
+            name: lints::WIRE_CONSTANT_SYNC,
+            description: "wire magic/version/cap constants agree across \
+                          wire.rs, net.rs, event_loop.rs and DESIGN.md",
+            run: lints::wire_constant_sync,
+        },
+    ]
+}
+
+/// An unscanned source handed to [`analyze_sources`] — `path` is what
+/// scoping and suppression reporting see.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// The result of an analysis run.
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings silenced by `// fclint: allow(...)` pragmas.
+    pub suppressed: usize,
+}
+
+impl Report {
+    /// Deny-level findings gate (exit nonzero / fail CI).
+    pub fn denies(&self) -> usize {
+        self.findings.iter().filter(|f| f.level == Level::Deny).count()
+    }
+}
+
+/// Run the registry over in-memory sources. `aux` carries non-scanned
+/// texts (`kernel_bench.rs`, `DESIGN.md`) for the repo-level lints.
+pub fn analyze_sources(
+    sources: &[SourceFile],
+    aux: &[(String, String)],
+    cfg: &LintConfig,
+) -> Report {
+    let scanned: Vec<ScannedFile> = sources
+        .iter()
+        .map(|src| scan::scan(&src.path, &src.text))
+        .collect();
+    let ctx = Ctx {
+        files: &scanned,
+        aux,
+        cfg,
+    };
+    let mut findings = Vec::new();
+    for lint in registry() {
+        if !cfg.only.is_empty() && !cfg.only.iter().any(|n| n == lint.name) {
+            continue;
+        }
+        findings.extend((lint.run)(&ctx));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    let before = findings.len();
+    findings.retain(|f| !is_suppressed(&scanned, f));
+    Report {
+        suppressed: before - findings.len(),
+        files_scanned: scanned.len(),
+        findings,
+    }
+}
+
+/// `// fclint: allow(<lint>)` on the finding's line or the line above.
+fn is_suppressed(scanned: &[ScannedFile], f: &Finding) -> bool {
+    let Some(file) = scanned.iter().find(|s| s.path == f.path) else {
+        return false;
+    };
+    let allows = |idx: usize| {
+        file.lines.get(idx).map(|l| pragma_allows(&l.comment, f.lint)).unwrap_or(false)
+    };
+    allows(f.line - 1) || (f.line >= 2 && allows(f.line - 2))
+}
+
+/// Whether comment text carries `fclint: allow(...)` naming `lint`.
+fn pragma_allows(comment: &str, lint: &str) -> bool {
+    let Some(pos) = comment.find("fclint: allow(") else {
+        return false;
+    };
+    let inner = &comment[pos + "fclint: allow(".len()..];
+    let Some(end) = inner.find(')') else {
+        return false;
+    };
+    inner[..end].split(',').any(|n| n.trim() == lint)
+}
+
+/// Walk `root` for `.rs` sources (skipping `target/`, `vendor/`,
+/// `fixtures/` and VCS dirs), locate the auxiliary texts, and run the
+/// registry. Paths in findings are relative to `root`.
+pub fn analyze_tree(root: &Path, cfg: &LintConfig) -> io::Result<Report> {
+    let mut files = Vec::new();
+    let mut aux: Vec<(String, String)> = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for path in entries {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+            if path.is_dir() {
+                // `fixtures/` is only skipped when nested: pointing the
+                // binary at a fixture tree directly must still lint it.
+                if !matches!(name.as_str(), "target" | "target-native" | "vendor" | ".git")
+                    && name != "fixtures"
+                {
+                    stack.push(path);
+                }
+                continue;
+            }
+            let rel = rel_path(root, &path);
+            if name.ends_with(".rs") {
+                files.push(SourceFile {
+                    path: rel,
+                    text: std::fs::read_to_string(&path)?,
+                });
+            } else if name == "DESIGN.md" {
+                aux.push((rel, std::fs::read_to_string(&path)?));
+            }
+        }
+    }
+    // Aux texts that normally live outside the scan root: the crate's
+    // bench file and the repo-root DESIGN.md.
+    if !aux.iter().any(|(p, _)| p.ends_with("DESIGN.md")) {
+        for up in root.ancestors().skip(1).take(4) {
+            let candidate = up.join("DESIGN.md");
+            if candidate.is_file() {
+                aux.push(("DESIGN.md".into(), std::fs::read_to_string(candidate)?));
+                break;
+            }
+        }
+    }
+    let bench_in_tree = files
+        .iter()
+        .find(|f| f.path.ends_with("kernel_bench.rs"))
+        .map(|f| (f.path.clone(), f.text.clone()));
+    match bench_in_tree {
+        Some(pair) => aux.push(pair),
+        None => {
+            for up in root.ancestors().skip(1).take(2) {
+                let candidate = up.join("benches/kernel_bench.rs");
+                if candidate.is_file() {
+                    aux.push((
+                        "benches/kernel_bench.rs".into(),
+                        std::fs::read_to_string(candidate)?,
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+    Ok(analyze_sources(&files, &aux, cfg))
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(files: &[(&str, &str)], aux: &[(&str, &str)], cfg: &LintConfig) -> Report {
+        let mut srcs = Vec::new();
+        for (p, t) in files {
+            srcs.push(SourceFile { path: p.to_string(), text: t.to_string() });
+        }
+        let mut auxv = Vec::new();
+        for (p, t) in aux {
+            auxv.push((p.to_string(), t.to_string()));
+        }
+        analyze_sources(&srcs, &auxv, cfg)
+    }
+
+    fn only(lint: &str) -> LintConfig {
+        LintConfig { only: vec![lint.to_string()], ..LintConfig::repo_default() }
+    }
+
+    #[test]
+    fn registry_lists_five_lints() {
+        assert_eq!(registry().len(), 5);
+    }
+
+    #[test]
+    fn unsafe_without_note_is_denied() {
+        let cfg = only(lints::UNSAFE_NEEDS_SAFETY);
+        let r = run(&[("k.rs", include_str!("fixtures/unsafe_bad.rs"))], &[], &cfg);
+        assert_eq!(r.denies(), 2, "{:?}", r.findings);
+        assert_eq!(r.findings[0].line, 6);
+        assert_eq!(r.findings[1].line, 11);
+    }
+
+    #[test]
+    fn unsafe_with_note_is_clean() {
+        let cfg = only(lints::UNSAFE_NEEDS_SAFETY);
+        let r = run(&[("k.rs", include_str!("fixtures/unsafe_good.rs"))], &[], &cfg);
+        assert_eq!(r.denies(), 0, "{:?}", r.findings);
+    }
+
+    #[test]
+    fn unsafe_pragma_suppresses_and_is_counted() {
+        let cfg = only(lints::UNSAFE_NEEDS_SAFETY);
+        let r = run(&[("k.rs", include_str!("fixtures/unsafe_suppressed.rs"))], &[], &cfg);
+        assert_eq!(r.denies(), 0, "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn hot_path_panics_are_denied_in_scope() {
+        let cfg = only(lints::HOT_PATH_NO_PANIC);
+        let text = include_str!("fixtures/cache/hot_path_bad.rs");
+        let r = run(&[("cache/hot_path_bad.rs", text)], &[], &cfg);
+        let lines: Vec<usize> = r.findings.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![7, 12, 18], "{:?}", r.findings);
+        let out = run(&[("report/hot_path_bad.rs", text)], &[], &cfg);
+        assert_eq!(out.denies(), 0, "out-of-scope file must not be linted");
+    }
+
+    #[test]
+    fn hot_path_typed_errors_are_clean() {
+        let cfg = only(lints::HOT_PATH_NO_PANIC);
+        let text = include_str!("fixtures/cache/hot_path_good.rs");
+        let r = run(&[("cache/hot_path_good.rs", text)], &[], &cfg);
+        assert_eq!(r.denies(), 0, "{:?}", r.findings);
+    }
+
+    #[test]
+    fn hot_path_pragma_suppresses() {
+        let cfg = only(lints::HOT_PATH_NO_PANIC);
+        let text = include_str!("fixtures/cache/hot_path_suppressed.rs");
+        let r = run(&[("cache/hot_path_suppressed.rs", text)], &[], &cfg);
+        assert_eq!(r.denies(), 0, "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn server_scope_is_limited_to_named_fns() {
+        let cfg = only(lints::HOT_PATH_NO_PANIC);
+        let text = "fn submit(x: Option<u32>) -> u32 {\n\
+                        x.unwrap()\n\
+                    }\n\
+                    fn helper(x: Option<u32>) -> u32 {\n\
+                        x.unwrap()\n\
+                    }\n";
+        let r = run(&[("coordinator/server.rs", text)], &[], &cfg);
+        assert_eq!(r.denies(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].line, 2);
+    }
+
+    #[test]
+    fn fingerprint_gaps_and_leaks_are_denied() {
+        let cfg = only(lints::FINGERPRINT_DISCIPLINE);
+        let text = include_str!("fixtures/fingerprint_bad.rs");
+        let r = run(&[("model.rs", text)], &[], &cfg);
+        assert_eq!(r.denies(), 5, "{:?}", r.findings);
+        let msgs: Vec<&str> = r.findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("`coupling` missing")));
+        assert!(msgs.iter().any(|m| m.contains("`workers` flows into")));
+    }
+
+    #[test]
+    fn fingerprint_full_flow_is_clean() {
+        let cfg = only(lints::FINGERPRINT_DISCIPLINE);
+        let text = include_str!("fixtures/fingerprint_good.rs");
+        let r = run(&[("model.rs", text)], &[], &cfg);
+        assert_eq!(r.denies(), 0, "{:?}", r.findings);
+    }
+
+    #[test]
+    fn fingerprint_lint_skips_trees_without_the_flow() {
+        let cfg = only(lints::FINGERPRINT_DISCIPLINE);
+        let r = run(&[("x.rs", "pub fn plain() {}\n")], &[], &cfg);
+        assert_eq!(r.findings.len(), 0);
+    }
+
+    #[test]
+    fn kernel_without_scalar_twin_or_bench_is_denied() {
+        let cfg = only(lints::KERNEL_PARITY);
+        let files = [
+            ("kernels/mod.rs", include_str!("fixtures/kernel_parity_bad/kernels/mod.rs")),
+            ("kernels/scalar.rs", include_str!("fixtures/kernel_parity_bad/kernels/scalar.rs")),
+            ("kernels/avx2.rs", include_str!("fixtures/kernel_parity_bad/kernels/avx2.rs")),
+        ];
+        let r = run(&files, &[], &cfg);
+        assert_eq!(r.denies(), 2, "{:?}", r.findings);
+        let msgs: Vec<&str> = r.findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("no `scalar` implementation")));
+        assert!(msgs.iter().any(|m| m.contains("kernel_bench.rs not found")));
+    }
+
+    #[test]
+    fn kernel_with_twins_and_bench_is_clean() {
+        let cfg = only(lints::KERNEL_PARITY);
+        let scalar_ok = "pub fn frob_i16(x: &[i16]) -> i64 {\n    x.len() as i64\n}\n";
+        let files = [
+            ("kernels/mod.rs", include_str!("fixtures/kernel_parity_bad/kernels/mod.rs")),
+            ("kernels/scalar.rs", scalar_ok),
+            ("kernels/avx2.rs", include_str!("fixtures/kernel_parity_bad/kernels/avx2.rs")),
+        ];
+        let bench = [("benches/kernel_bench.rs", "frob_i16 bit-identity")];
+        let r = run(&files, &bench, &cfg);
+        assert_eq!(r.denies(), 0, "{:?}", r.findings);
+    }
+
+    #[test]
+    fn wire_drift_is_denied() {
+        let cfg = only(lints::WIRE_CONSTANT_SYNC);
+        let design = "frames: FCAP magic, 4 MiB cap, v1 and v2 dialects\n";
+        let files = [
+            ("coordinator/wire.rs", include_str!("fixtures/wire_sync_bad/coordinator/wire.rs")),
+            ("coordinator/net.rs", include_str!("fixtures/wire_sync_bad/coordinator/net.rs")),
+        ];
+        let r = run(&files, &[("DESIGN.md", design)], &cfg);
+        assert_eq!(r.denies(), 5, "{:?}", r.findings);
+        let msgs: Vec<&str> = r.findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("!= wire.rs")));
+        assert!(msgs.iter().any(|m| m.contains("wire::MAGIC")));
+        assert!(msgs.iter().any(|m| m.contains("wire::MAX_PAYLOAD")));
+    }
+
+    #[test]
+    fn design_doc_drift_is_denied() {
+        let cfg = only(lints::WIRE_CONSTANT_SYNC);
+        let wire = "pub const MAGIC: [u8; 4] = *b\"FCAP\";\n\
+                    pub const VERSION: u8 = 1;\n\
+                    pub const V2: u8 = 2;\n\
+                    pub const MAX_PAYLOAD: u32 = 8 << 20;\n\
+                    pub const HEADER_LEN: usize = 10;\n";
+        let net = "use super::wire;\n\
+                   pub fn ok(v: u8) -> bool {\n\
+                       v == wire::VERSION || v == wire::V2\n\
+                   }\n";
+        let design = "frames: FCAP magic, 4 MiB cap, v1 and v2 dialects\n";
+        let files = [("coordinator/wire.rs", wire), ("coordinator/net.rs", net)];
+        let r = run(&files, &[("DESIGN.md", design)], &cfg);
+        assert_eq!(r.denies(), 1, "{:?}", r.findings);
+        assert!(r.findings[0].message.contains("8 MiB"));
+    }
+}

@@ -1,0 +1,435 @@
+//! A lightweight, line-oriented Rust scanner for `fclint`.
+//!
+//! This is deliberately **not** a parser: the lints need only to tell
+//! code from comments from string literals, to track brace depth, and
+//! to attribute lines to `#[cfg(test)]` regions and named `fn` items.
+//! Per line the scanner produces three views:
+//!
+//! * `code` — comments removed **and** string/char literal contents
+//!   blanked, so lint tokens inside strings (including fclint's own
+//!   message text) never self-trigger;
+//! * `stripped` — comments removed but string literals intact, for
+//!   checks that inspect literal values (wire magic, const values);
+//! * `comment` — the comment text alone, for `// SAFETY:` adjacency
+//!   and `// fclint: allow(...)` suppression pragmas.
+//!
+//! Block comments nest (as in Rust), raw strings (`r"…"`, `r#"…"#`)
+//! are skipped to their terminator, and `'…'` is treated as a char
+//! literal only when it closes like one — a bare `'ident` is a
+//! lifetime and stays in `code`.
+
+/// One scanned source line. Line numbers are implicit (index + 1).
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Comments removed, string/char contents blanked (delimiters kept).
+    pub code: String,
+    /// Comments removed, string literals intact.
+    pub stripped: String,
+    /// Comment text on this line (line + block comments, concatenated).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` / `#[test]` region (or opening one).
+    pub in_test: bool,
+}
+
+/// A named `fn` item and the line span of its body.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub start: usize,
+    /// 1-based line of the body's closing brace.
+    pub end: usize,
+    pub in_test: bool,
+}
+
+/// A scanned file: per-line views plus the extracted `fn` items.
+#[derive(Debug)]
+pub struct ScannedFile {
+    /// Forward-slash path, as given by the caller (repo-relative when
+    /// produced by the tree walker).
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub fns: Vec<FnItem>,
+}
+
+impl ScannedFile {
+    /// The innermost named `fn` containing 1-based line `line`, if any.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnItem> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .min_by_key(|f| f.end - f.start)
+    }
+}
+
+/// Scan `text` into per-line code/comment views plus fn items.
+pub fn scan(path: &str, text: &str) -> ScannedFile {
+    let mut lines = lex(text);
+    let fns = structure(&mut lines);
+    ScannedFile {
+        path: path.to_string(),
+        lines,
+        fns,
+    }
+}
+
+// ---------------------------------------------------------------------
+// pass 1: lexing (comments, strings, char literals)
+
+#[derive(Clone, Copy, PartialEq)]
+enum LexState {
+    Code,
+    /// Nesting depth of `/* … */`.
+    Block(u32),
+    Str,
+    /// Raw string, closed by `"` followed by this many `#`s.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn lex(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = LexState::Code;
+    for raw in text.lines() {
+        let mut line = Line::default();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0;
+        let mut prev_code: Option<char> = None;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match state {
+                LexState::Block(depth) => {
+                    if c == '/' && next == Some('*') {
+                        state = LexState::Block(depth + 1);
+                        i += 2;
+                    } else if c == '*' && next == Some('/') {
+                        state = if depth == 1 {
+                            LexState::Code
+                        } else {
+                            LexState::Block(depth - 1)
+                        };
+                        i += 2;
+                    } else {
+                        line.comment.push(c);
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if c == '\\' {
+                        i += 2;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        state = LexState::Code;
+                        i += 1;
+                    } else {
+                        line.stripped.push(c);
+                        i += 1;
+                    }
+                }
+                LexState::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        state = LexState::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        line.stripped.push(c);
+                        i += 1;
+                    }
+                }
+                LexState::Code => {
+                    if c == '/' && next == Some('/') {
+                        // Line comment: the rest of the line (after the
+                        // `//`) is comment text.
+                        line.comment.push_str(&chars[i + 2..].iter().collect::<String>());
+                        i = chars.len();
+                    } else if c == '/' && next == Some('*') {
+                        state = LexState::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        state = LexState::Str;
+                        i += 1;
+                    } else if c == 'r'
+                        && !prev_code.map(is_ident).unwrap_or(false)
+                        && raw_string_hashes(&chars, i + 1).is_some()
+                    {
+                        let hashes = raw_string_hashes(&chars, i + 1).unwrap_or(0);
+                        line.code.push('"');
+                        line.stripped.push('"');
+                        state = LexState::RawStr(hashes);
+                        i += 2 + hashes as usize;
+                        prev_code = Some('"');
+                        continue;
+                    } else if c == '\'' {
+                        // Char literal vs lifetime. `'\…'` and `'x'`
+                        // are literals (blank them); `'ident` is a
+                        // lifetime (keep the quote, move on).
+                        if next == Some('\\') {
+                            // Skip the escaped char, then find the close
+                            // (handles `'\''` and `'\u{…}'`).
+                            let from = (i + 3).min(chars.len());
+                            let close = chars[from..].iter().position(|&c| c == '\'');
+                            let skip = close.map(|p| from + p + 1).unwrap_or(chars.len());
+                            line.code.push_str("''");
+                            line.stripped.push_str("''");
+                            i = skip;
+                        } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                            line.code.push_str("''");
+                            line.stripped.push_str("''");
+                            i += 3;
+                        } else {
+                            line.code.push('\'');
+                            line.stripped.push('\'');
+                            i += 1;
+                        }
+                        prev_code = Some('\'');
+                        continue;
+                    } else {
+                        line.code.push(c);
+                        line.stripped.push(c);
+                        i += 1;
+                        prev_code = Some(c);
+                        continue;
+                    }
+                }
+            }
+            prev_code = None;
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// After `r` at `chars[start..]`: `Some(n)` if `#^n "` begins a raw
+/// string (n may be 0).
+fn raw_string_hashes(chars: &[char], start: usize) -> Option<u32> {
+    let mut n = 0;
+    let mut i = start;
+    while chars.get(i) == Some(&'#') {
+        n += 1;
+        i += 1;
+    }
+    (chars.get(i) == Some(&'"')).then_some(n)
+}
+
+/// Whether `"` at position `quote_end - 1` is followed by `hashes` `#`s.
+fn closes_raw(chars: &[char], quote_end: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(quote_end + k) == Some(&'#'))
+}
+
+// ---------------------------------------------------------------------
+// pass 2: structure (brace depth, test regions, fn items)
+
+/// A `fn` item seen but not yet attached to a body.
+struct PendingFn {
+    name: String,
+    depth: usize,
+    /// 1-based line of the `fn` keyword.
+    start: usize,
+    /// Char column of the `fn` keyword on that line — same-line braces
+    /// and semicolons *before* it (`let c = '{'; fn f…`) are not the
+    /// fn's own punctuation and must not attach or cancel it.
+    col: usize,
+}
+
+impl PendingFn {
+    fn owns(&self, depth: usize, lineno: usize, col: usize) -> bool {
+        self.depth == depth && (self.start != lineno || col > self.col)
+    }
+}
+
+/// Marks `in_test` on each line and extracts named `fn` spans.
+///
+/// A `#[cfg(test)]` or `#[test]` attribute arms a pending marker at the
+/// current brace depth; the next `{` opening at that depth starts the
+/// test region, which ends when the depth closes back. A `fn name`
+/// token arms a pending fn the same way (cancelled by a `;` after it —
+/// bodyless trait/extern declarations).
+fn structure(lines: &mut [Line]) -> Vec<FnItem> {
+    let mut fns = Vec::new();
+    let mut depth = 0usize;
+    let mut test_stack: Vec<usize> = Vec::new();
+    let mut fn_stack: Vec<(String, usize, usize)> = Vec::new(); // (name, depth, start line)
+    let mut pending_test: Option<usize> = None;
+    let mut pending_fn: Option<PendingFn> = None;
+
+    for (idx, line) in lines.iter_mut().enumerate() {
+        let lineno = idx + 1;
+        let at_start = !test_stack.is_empty();
+
+        if line.code.contains("cfg(test)") || line.code.contains("#[test]") {
+            pending_test = Some(depth);
+        }
+        if let Some((name, col)) = fn_name_on(&line.code) {
+            pending_fn = Some(PendingFn {
+                name,
+                depth,
+                start: lineno,
+                col,
+            });
+        }
+
+        for (col, c) in line.code.chars().enumerate() {
+            match c {
+                '{' => {
+                    if pending_test == Some(depth) {
+                        test_stack.push(depth);
+                        pending_test = None;
+                    }
+                    if let Some(p) = pending_fn.take() {
+                        if p.owns(depth, lineno, col) {
+                            fn_stack.push((p.name, depth, p.start));
+                        } else {
+                            pending_fn = Some(p);
+                        }
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    if fn_stack.last().map(|(_, d, _)| *d) == Some(depth) {
+                        if let Some((name, _, start)) = fn_stack.pop() {
+                            fns.push(FnItem {
+                                name,
+                                start,
+                                end: lineno,
+                                in_test: at_start || !test_stack.is_empty(),
+                            });
+                        }
+                    }
+                }
+                ';' => {
+                    if pending_fn.as_ref().map(|p| p.owns(depth, lineno, col)).unwrap_or(false) {
+                        pending_fn = None;
+                    }
+                    if pending_test == Some(depth) && fn_stack.is_empty() {
+                        // `#[cfg(test)] use …;` — attribute consumed by a
+                        // braceless item. Only clear at item level.
+                        pending_test = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.in_test = at_start || !test_stack.is_empty() || pending_test.is_some();
+    }
+    fns.sort_by_key(|f| f.start);
+    fns
+}
+
+/// The identifier following a word-bounded `fn` keyword plus the
+/// keyword's char column, if the line declares a named function
+/// (`fn(` pointer types have no name).
+fn fn_name_on(code: &str) -> Option<(String, usize)> {
+    let bytes: Vec<char> = code.chars().collect();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        let word_start = i == 0 || !is_ident(bytes[i - 1]);
+        if word_start && bytes[i] == 'f' && bytes[i + 1] == 'n' {
+            let after = bytes.get(i + 2).copied();
+            if after.map(|c| !is_ident(c)).unwrap_or(true) {
+                let mut j = i + 2;
+                while j < bytes.len() && bytes[j] == ' ' {
+                    j += 1;
+                }
+                let name: String = bytes[j..].iter().take_while(|&&c| is_ident(c)).collect();
+                if !name.is_empty() {
+                    return Some((name, i));
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_separated() {
+        let f = scan("t.rs", "let x = \"unsafe // not code\"; // SAFETY: note\n");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].stripped.contains("unsafe // not code"));
+        assert!(f.lines[0].comment.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let f = scan("t.rs", "/* a /* b */ still comment */ code()\nmore();\n");
+        assert!(f.lines[0].code.contains("code()"));
+        assert!(!f.lines[0].code.contains("still"));
+        assert!(f.lines[1].code.contains("more()"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let f = scan("t.rs", "let c = '{'; fn f<'a>(x: &'a str) {}\n");
+        // The brace inside the char literal must not affect depth.
+        assert_eq!(f.fns.len(), 1);
+        assert!(f.lines[0].code.contains("'a>"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let f = scan("t.rs", "let s = r#\"unsafe { } \"#; call();\n");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("call()"));
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let text = "pub fn live() {}\n\
+                    #[cfg(test)]\n\
+                    mod tests {\n\
+                        #[test]\n\
+                        fn t() { x.unwrap(); }\n\
+                    }\n\
+                    pub fn live2() {}\n";
+        let f = scan("t.rs", text);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test, "attribute line is test");
+        assert!(f.lines[4].in_test, "test body is test");
+        assert!(!f.lines[6].in_test, "code after the mod is live");
+        let t = f.fns.iter().find(|x| x.name == "t").expect("fn t");
+        assert!(t.in_test);
+        let live = f.fns.iter().find(|x| x.name == "live").expect("fn live");
+        assert!(!live.in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let f = scan("t.rs", "#[cfg(not(test))]\npub fn live() { x(); }\n");
+        assert!(!f.lines[1].in_test);
+    }
+
+    #[test]
+    fn fn_spans_nest_and_enclose() {
+        let text = "pub fn outer(a: u32) -> u32 {\n\
+                        fn inner(b: u32) -> u32 {\n\
+                            b + 1\n\
+                        }\n\
+                        inner(a)\n\
+                    }\n";
+        let f = scan("t.rs", text);
+        assert_eq!(f.enclosing_fn(3).map(|x| x.name.as_str()), Some("inner"));
+        assert_eq!(f.enclosing_fn(5).map(|x| x.name.as_str()), Some("outer"));
+    }
+
+    #[test]
+    fn bodyless_fns_are_skipped() {
+        let f = scan("t.rs", "extern \"C\" {\n    fn poll(n: u64) -> i32;\n}\n");
+        assert!(f.fns.is_empty());
+    }
+}

@@ -1,0 +1,156 @@
+//! `fclint` — the FastCaps repo-invariant linter (see `src/analysis/`).
+//!
+//! ```text
+//! fclint [PATH] [--format human|json] [--lint NAME]... [--list]
+//! ```
+//!
+//! Scans `PATH` (default: `rust/src` or `src`, whichever exists) with
+//! the repo's lint manifest and exits 1 on any deny-level finding,
+//! 2 on usage/IO errors. CI runs this as a blocking job; see DESIGN.md
+//! §3i for the lint registry and suppression pragma grammar.
+
+use fastcaps::analysis::{self, Level, LintConfig, Report};
+use fastcaps::util::json::{self, Json};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    root: PathBuf,
+    json_output: bool,
+    only: Vec<String>,
+    list: bool,
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("fclint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.list {
+        for lint in analysis::registry() {
+            println!("{:24} {}", lint.name, lint.description);
+        }
+        return ExitCode::SUCCESS;
+    }
+    let mut cfg = LintConfig::repo_default();
+    cfg.only = args.only;
+    let report = match analysis::analyze_tree(&args.root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fclint: scanning {}: {e}", args.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if args.json_output {
+        println!("{}", to_json(&report).to_pretty());
+    } else {
+        print_human(&report);
+    }
+    if report.denies() > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut root: Option<PathBuf> = None;
+    let mut json_output = false;
+    let mut only = Vec::new();
+    let mut list = false;
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        match arg.as_str() {
+            "--format" => {
+                let v = argv.next().ok_or("--format needs `human` or `json`")?;
+                match v.as_str() {
+                    "json" => json_output = true,
+                    "human" => json_output = false,
+                    other => return Err(format!("unknown format `{other}`")),
+                }
+            }
+            "--lint" => only.push(argv.next().ok_or("--lint needs a lint name")?),
+            "--list" => list = true,
+            "--help" | "-h" => {
+                return Err("usage: fclint [PATH] [--format json] [--lint NAME]... [--list]".into());
+            }
+            other if other.starts_with('-') => return Err(format!("unknown flag `{other}`")),
+            other => root = Some(PathBuf::from(other)),
+        }
+    }
+    let root = match root {
+        Some(p) => resolve_root(p)?,
+        None => default_root()?,
+    };
+    Ok(Args {
+        root,
+        json_output,
+        only,
+        list,
+    })
+}
+
+/// Accept the path as given, or with the `rust/` prefix added/stripped
+/// so `fclint rust/src` works from the repo root and from `rust/`.
+fn resolve_root(p: PathBuf) -> Result<PathBuf, String> {
+    if p.is_dir() {
+        return Ok(p);
+    }
+    if let Ok(stripped) = p.strip_prefix("rust") {
+        if stripped.is_dir() {
+            return Ok(stripped.to_path_buf());
+        }
+    }
+    let prefixed = PathBuf::from("rust").join(&p);
+    if prefixed.is_dir() {
+        return Ok(prefixed);
+    }
+    Err(format!("no such directory: {}", p.display()))
+}
+
+fn default_root() -> Result<PathBuf, String> {
+    for candidate in ["rust/src", "src"] {
+        let p = PathBuf::from(candidate);
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    Err("no rust/src or src here; pass a path".to_string())
+}
+
+fn print_human(report: &Report) {
+    for f in &report.findings {
+        let level = match f.level {
+            Level::Deny => "deny",
+            Level::Warn => "warn",
+        };
+        println!("{}:{}: [{}/{}] {}", f.path, f.line, level, f.lint, f.message);
+    }
+    println!(
+        "fclint: {} finding(s), {} suppressed, {} file(s) scanned",
+        report.findings.len(),
+        report.suppressed,
+        report.files_scanned
+    );
+}
+
+fn to_json(report: &Report) -> Json {
+    let findings = report.findings.iter().map(|f| {
+        let mut o = Json::obj();
+        o.set("lint", json::s(f.lint));
+        o.set("level", json::s(if f.level == Level::Deny { "deny" } else { "warn" }));
+        o.set("path", json::s(&f.path));
+        o.set("line", json::num(f.line as f64));
+        o.set("message", json::s(&f.message));
+        o
+    });
+    let mut out = Json::obj();
+    out.set("findings", json::arr(findings));
+    out.set("files_scanned", json::num(report.files_scanned as f64));
+    out.set("suppressed", json::num(report.suppressed as f64));
+    out.set("denies", json::num(report.denies() as f64));
+    out
+}

@@ -102,6 +102,8 @@ mod sys {
     /// signal interruptions.
     pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
         loop {
+            // SAFETY: `fds` is a live `&mut [PollFd]`, so the pointer
+            // and length describe valid, writable memory for the call.
             let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
             if rc >= 0 {
                 return Ok(rc as usize);
@@ -271,10 +273,11 @@ pub(crate) fn spawn_shard(
 // ---------------------------------------------------------------------
 // connection state machine
 
-/// What the first bytes of a connection turned out to be.
+/// What the first bytes of a connection turned out to be. A connection
+/// that has not produced enough bytes to decide has no mode yet
+/// (`Conn::mode` is `None`).
+#[derive(Clone, Copy)]
 enum Mode {
-    /// Not enough bytes to decide yet.
-    Sniff,
     /// FastCaps frames (v1 or v2, latched on the first frame).
     Binary,
     /// A plaintext probe (`HEALTH`/`READY`/`METRICS` or HTTP GET).
@@ -291,7 +294,8 @@ struct Conn {
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     wpos: usize,
-    mode: Mode,
+    /// `None` until the first bytes disambiguate the protocol.
+    mode: Option<Mode>,
     /// Wire version latched from the first frame (0 = not yet latched).
     /// Mixing versions afterwards is a `Malformed` desync.
     version: u8,
@@ -336,7 +340,7 @@ impl Conn {
             rbuf: Vec::new(),
             wbuf: Vec::new(),
             wpos: 0,
-            mode: Mode::Sniff,
+            mode: None,
             version: 0,
             next_v1_tag: 0,
             inorder: VecDeque::new(),
@@ -681,14 +685,18 @@ impl Shard {
         if conn.dead || conn.read_closed {
             return;
         }
-        if matches!(conn.mode, Mode::Sniff) {
-            match sniff(&conn.rbuf) {
+        let mode = match conn.mode {
+            Some(m) => m,
+            None => match sniff(&conn.rbuf) {
+                // Still ambiguous: wait for more bytes.
                 None => return,
-                Some(mode) => conn.mode = mode,
-            }
-        }
-        match conn.mode {
-            Mode::Sniff => unreachable!("sniff resolved above"),
+                Some(m) => {
+                    conn.mode = Some(m);
+                    m
+                }
+            },
+        };
+        match mode {
             Mode::Text => self.handle_text(conn),
             Mode::Binary => self.handle_binary(conn),
         }

@@ -108,6 +108,15 @@ impl Completion {
 pub type ReplicaFactory =
     Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>, BackendError> + Send + Sync>;
 
+/// Lock a mutex, recovering the data from a poisoned lock. A replica
+/// panic already fails its in-flight work via [`ReplicaGuard`], and
+/// every guarded section leaves `QueueState`/`Metrics` consistent at
+/// each unlock, so propagating the poison would only cascade one panic
+/// into server-wide unwinding.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// State shared between submitters and the executor pool.
 struct Shared {
     state: Mutex<QueueState>,
@@ -138,10 +147,7 @@ impl Shared {
     /// and the close. No-op during a requested shutdown (`open` already
     /// false).
     fn close_if_pool_dead(&self) {
-        let mut st = self
-            .state
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut st = lock_clean(&self.state);
         if st.open
             && self.live.load(Ordering::SeqCst) == 0
             && self.booting.load(Ordering::SeqCst) == 0
@@ -162,10 +168,7 @@ impl Shared {
     /// replica from booting to live, so the pool never looks
     /// transiently dead while a healthy replica finishes init.
     fn mark_replica_live(&self) {
-        let _st = self
-            .state
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let _st = lock_clean(&self.state);
         self.live.fetch_add(1, Ordering::SeqCst);
         self.booting.fetch_sub(1, Ordering::SeqCst);
     }
@@ -285,7 +288,7 @@ impl ServerBuilder {
             Err(e) => {
                 // No executor will ever serve; close the queue so
                 // submitters fail fast instead of hanging.
-                shared.state.lock().unwrap().open = false;
+                lock_clean(&shared.state).open = false;
                 (None, Some(e))
             }
         };
@@ -413,7 +416,7 @@ impl Server {
                     Lookup::Hit(out, waiter) => {
                         let resp = out.to_response(req.id, req.enqueued);
                         {
-                            let mut m = self.shared.metrics.lock().unwrap();
+                            let mut m = lock_clean(&self.shared.metrics);
                             m.record_cache_hit();
                             m.record(resp.latency_us);
                         }
@@ -421,7 +424,7 @@ impl Server {
                         return Ok(());
                     }
                     Lookup::Joined => {
-                        self.shared.metrics.lock().unwrap().record_cache_coalesced();
+                        lock_clean(&self.shared.metrics).record_cache_coalesced();
                         return Ok(());
                     }
                     Lookup::Lead {
@@ -429,7 +432,7 @@ impl Server {
                         waiter,
                         stale,
                     } => {
-                        let mut m = self.shared.metrics.lock().unwrap();
+                        let mut m = lock_clean(&self.shared.metrics);
                         m.record_cache_miss();
                         if stale {
                             m.record_cache_stale();
@@ -444,7 +447,7 @@ impl Server {
             }
         };
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_clean(&self.shared.state);
             // Queue closed ⟺ no executor will ever drain new work: set by
             // shutdown, by an init failure, or by `ReplicaGuard` when the
             // last replica dies. Enqueueing past this point would strand
@@ -464,7 +467,7 @@ impl Server {
             }
             if st.jobs.len() >= self.shared.max_depth {
                 drop(st);
-                self.shared.metrics.lock().unwrap().record_rejected();
+                lock_clean(&self.shared.metrics).record_rejected();
                 // A rejected lead drops its `Completion::Flight`, which
                 // aborts the flight and fails any waiters that managed
                 // to coalesce onto it — nobody hangs.
@@ -498,13 +501,13 @@ impl Server {
     /// A point-in-time metrics snapshot: its wall clock is frozen, so
     /// `throughput_rps` stays stable no matter when the caller prints it.
     pub fn metrics(&self) -> Metrics {
-        self.shared.metrics.lock().unwrap().snapshot()
+        lock_clean(&self.shared.metrics).snapshot()
     }
 
     /// Run a closure against the live shared metrics. Crate-internal
     /// hook for the network front-end's per-connection counters.
     pub(crate) fn with_metrics<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
-        f(&mut self.shared.metrics.lock().unwrap())
+        f(&mut lock_clean(&self.shared.metrics))
     }
 
     /// Drain and stop the pool. Returns final (frozen) metrics.
@@ -514,7 +517,7 @@ impl Server {
     }
 
     fn close_and_join(&mut self) {
-        self.shared.state.lock().unwrap().open = false;
+        lock_clean(&self.shared.state).open = false;
         self.shared.cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -550,11 +553,7 @@ impl Drop for ReplicaGuard {
         if std::thread::panicking() {
             // Abnormal exit (backend panic): make the death observable
             // in the metrics even when surviving replicas keep serving.
-            self.shared
-                .metrics
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .record_replica_died();
+            lock_clean(&self.shared.metrics).record_replica_died();
         }
         self.shared.live.fetch_sub(1, Ordering::SeqCst);
         self.shared.close_if_pool_dead();
@@ -645,13 +644,13 @@ fn replica_loop(
     loop {
         // Phase 1: take a batch decision under the queue lock.
         let (bucket, jobs) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_clean(&shared.state);
             loop {
                 if st.jobs.is_empty() {
                     if !st.open {
                         return Ok(());
                     }
-                    st = shared.cv.wait(st).unwrap();
+                    st = shared.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
                     continue;
                 }
                 let draining = !st.open;
@@ -682,7 +681,10 @@ fn replica_loop(
                     .map(|(r, _)| r.enqueued.elapsed())
                     .unwrap_or_default();
                 let budget = shared.max_wait.saturating_sub(oldest);
-                let (guard, _) = shared.cv.wait_timeout(st, budget).unwrap();
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(st, budget)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 st = guard;
             }
         };
@@ -708,7 +710,7 @@ fn run_and_reply(
     images.resize(bucket, blank.clone());
     match backend.infer(&InferRequest::new(images)) {
         Ok(out) => {
-            let mut m = metrics.lock().unwrap();
+            let mut m = lock_clean(metrics);
             m.record_batch(bucket, take);
             for ((req, done), lens) in jobs.into_iter().zip(out.lengths) {
                 let resp = Response::from_lengths(req.id, lens, req.enqueued, bucket);
@@ -722,7 +724,7 @@ fn run_and_reply(
             // their coalesced waiters too), so each caller observes a
             // typed Unavailable error from `classify` — one bad batch
             // does not kill the replica.
-            metrics.lock().unwrap().record_backend_errors(take as u64);
+            lock_clean(metrics).record_backend_errors(take as u64);
             eprintln!("[coordinator] backend error on batch of {take}: {e}");
         }
     }

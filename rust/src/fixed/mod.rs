@@ -28,12 +28,16 @@ pub struct Fx<const F: u32>(pub i16);
 /// `repr(transparent)` over `i16`).
 #[inline]
 pub fn raw_slice<const F: u32>(xs: &[Fx<F>]) -> &[i16] {
+    // SAFETY: `Fx<F>` is `#[repr(transparent)]` over `i16`, so the cast
+    // preserves layout; length and lifetime come from the same slice.
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const i16, xs.len()) }
 }
 
 /// Mutable raw view of a Q-format slice (see [`raw_slice`]).
 #[inline]
 pub fn raw_slice_mut<const F: u32>(xs: &mut [Fx<F>]) -> &mut [i16] {
+    // SAFETY: as in `raw_slice`; the `&mut` borrow guarantees the view
+    // is exclusive for its lifetime.
     unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut i16, xs.len()) }
 }
 

@@ -1,10 +1,13 @@
 //! AVX2 (x86_64 `std::arch`) kernel implementations.
 //!
-//! Every function here is `unsafe` only because of
+//! The public kernels are `unsafe fn` only because of
 //! `#[target_feature(enable = "avx2")]` — the slices are bounds-handled
 //! explicitly and the single safety precondition is that the CPU
 //! supports AVX2 (the dispatch wrappers in the parent module guarantee
-//! it via `is_x86_feature_detected!`).
+//! it via `is_x86_feature_detected!`). Under the crate-wide
+//! `deny(unsafe_op_in_unsafe_fn)`, only the pointer-based load/store
+//! intrinsics need `unsafe` blocks; the lane arithmetic is safe inside
+//! a `target_feature` function.
 //!
 //! Bit-exactness strategy (see the module docs in `kernels`):
 //!
@@ -24,7 +27,7 @@ use core::arch::x86_64::*;
 /// add both into `acc`.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn add_i32x8_into_i64x4(acc: __m256i, v: __m256i) -> __m256i {
+fn add_i32x8_into_i64x4(acc: __m256i, v: __m256i) -> __m256i {
     let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v));
     let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(v));
     _mm256_add_epi64(_mm256_add_epi64(acc, lo), hi)
@@ -33,9 +36,10 @@ unsafe fn add_i32x8_into_i64x4(acc: __m256i, v: __m256i) -> __m256i {
 /// Horizontal sum of the 4 i64 lanes.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn hsum_i64x4(v: __m256i) -> i64 {
+fn hsum_i64x4(v: __m256i) -> i64 {
     let mut lanes = [0i64; 4];
-    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    // SAFETY: `lanes` is exactly 32 bytes and the store is unaligned.
+    unsafe { _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v) };
     lanes[0] + lanes[1] + lanes[2] + lanes[3]
 }
 
@@ -49,20 +53,20 @@ pub unsafe fn axpy_i16(acc: &mut [i64], x: i16, w: &[i16]) {
     let xv = _mm256_set1_epi32(x as i32);
     let mut i = 0;
     while i + 8 <= n {
-        let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
-        let prod = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(wv), xv);
-        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
-        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
-        let a0 = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
-        let a1 = _mm256_loadu_si256(acc.as_ptr().add(i + 4) as *const __m256i);
-        _mm256_storeu_si256(
-            acc.as_mut_ptr().add(i) as *mut __m256i,
-            _mm256_add_epi64(a0, lo),
-        );
-        _mm256_storeu_si256(
-            acc.as_mut_ptr().add(i + 4) as *mut __m256i,
-            _mm256_add_epi64(a1, hi),
-        );
+        // SAFETY: `i + 8 <= n <= acc.len().min(w.len())` keeps every
+        // unaligned lane load and store in bounds.
+        unsafe {
+            let wv = _mm_loadu_si128(w.as_ptr().add(i) as *const __m128i);
+            let prod = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(wv), xv);
+            let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(prod));
+            let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(prod));
+            let a0 = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(acc.as_ptr().add(i + 4) as *const __m256i);
+            let lo_ptr = acc.as_mut_ptr().add(i) as *mut __m256i;
+            let hi_ptr = acc.as_mut_ptr().add(i + 4) as *mut __m256i;
+            _mm256_storeu_si256(lo_ptr, _mm256_add_epi64(a0, lo));
+            _mm256_storeu_si256(hi_ptr, _mm256_add_epi64(a1, hi));
+        }
         i += 8;
     }
     while i < n {
@@ -81,9 +85,13 @@ pub unsafe fn dot_i16(a: &[i16], b: &[i16]) -> i64 {
     let mut vacc = _mm256_setzero_si256();
     let mut i = 0;
     while i + 8 <= n {
-        let av = _mm256_cvtepi16_epi32(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
-        let bv = _mm256_cvtepi16_epi32(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
-        vacc = add_i32x8_into_i64x4(vacc, _mm256_mullo_epi32(av, bv));
+        // SAFETY: `i + 8 <= n <= a.len().min(b.len())` keeps both
+        // unaligned 8-lane loads in bounds.
+        unsafe {
+            let av = _mm256_cvtepi16_epi32(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+            let bv = _mm256_cvtepi16_epi32(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+            vacc = add_i32x8_into_i64x4(vacc, _mm256_mullo_epi32(av, bv));
+        }
         i += 8;
     }
     let mut acc = hsum_i64x4(vacc);
@@ -103,8 +111,11 @@ pub unsafe fn sumsq_i16(x: &[i16]) -> i64 {
     let mut vacc = _mm256_setzero_si256();
     let mut i = 0;
     while i + 8 <= x.len() {
-        let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
-        vacc = add_i32x8_into_i64x4(vacc, _mm256_mullo_epi32(v, v));
+        // SAFETY: `i + 8 <= x.len()` keeps the 8-lane load in bounds.
+        unsafe {
+            let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+            vacc = add_i32x8_into_i64x4(vacc, _mm256_mullo_epi32(v, v));
+        }
         i += 8;
     }
     let mut acc = hsum_i64x4(vacc);
@@ -124,8 +135,11 @@ pub unsafe fn sum_i16(x: &[i16]) -> i64 {
     let mut vacc = _mm256_setzero_si256();
     let mut i = 0;
     while i + 8 <= x.len() {
-        let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
-        vacc = add_i32x8_into_i64x4(vacc, v);
+        // SAFETY: `i + 8 <= x.len()` keeps the 8-lane load in bounds.
+        unsafe {
+            let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+            vacc = add_i32x8_into_i64x4(vacc, v);
+        }
         i += 8;
     }
     let mut acc = hsum_i64x4(vacc);
@@ -145,12 +159,16 @@ pub unsafe fn max_i16(x: &[i16]) -> i16 {
     let mut vmax = _mm256_set1_epi16(i16::MIN);
     let mut i = 0;
     while i + 16 <= x.len() {
-        let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
-        vmax = _mm256_max_epi16(vmax, v);
+        // SAFETY: `i + 16 <= x.len()` keeps the 16-lane load in bounds.
+        unsafe {
+            let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            vmax = _mm256_max_epi16(vmax, v);
+        }
         i += 16;
     }
     let mut lanes = [i16::MIN; 16];
-    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vmax);
+    // SAFETY: `lanes` is exactly 32 bytes and the store is unaligned.
+    unsafe { _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vmax) };
     let mut m = i16::MIN;
     for &v in &lanes {
         if v > m {
@@ -179,13 +197,14 @@ pub unsafe fn scale_i16_q<const SHIFT: i32>(x: &[i16], scale: i32, out: &mut [i1
     let round = _mm256_set1_epi32(1 << (SHIFT - 1));
     let mut i = 0;
     while i + 8 <= n {
-        let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
-        let p = _mm256_srai_epi32::<SHIFT>(_mm256_add_epi32(_mm256_mullo_epi32(v, sv), round));
-        let packed = _mm_packs_epi32(
-            _mm256_castsi256_si128(p),
-            _mm256_extracti128_si256::<1>(p),
-        );
-        _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, packed);
+        // SAFETY: `i + 8 <= n <= x.len().min(out.len())` keeps the
+        // 8-lane load and the packed 8×i16 store in bounds.
+        unsafe {
+            let v = _mm256_cvtepi16_epi32(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+            let p = _mm256_srai_epi32::<SHIFT>(_mm256_add_epi32(_mm256_mullo_epi32(v, sv), round));
+            let (plo, phi) = (_mm256_castsi256_si128(p), _mm256_extracti128_si256::<1>(p));
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, _mm_packs_epi32(plo, phi));
+        }
         i += 8;
     }
     while i < n {
@@ -205,12 +224,13 @@ pub unsafe fn axpy_f32(acc: &mut [f32], x: f32, w: &[f32]) {
     let xv = _mm256_set1_ps(x);
     let mut i = 0;
     while i + 8 <= n {
-        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
-        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
-        _mm256_storeu_ps(
-            acc.as_mut_ptr().add(i),
-            _mm256_add_ps(av, _mm256_mul_ps(xv, wv)),
-        );
+        // SAFETY: `i + 8 <= n <= acc.len().min(w.len())` keeps the
+        // unaligned loads and the store in bounds.
+        unsafe {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(xv, wv)));
+        }
         i += 8;
     }
     while i < n {
@@ -229,8 +249,12 @@ pub unsafe fn mul_f32(x: &[f32], s: f32, out: &mut [f32]) {
     let sv = _mm256_set1_ps(s);
     let mut i = 0;
     while i + 8 <= n {
-        let v = _mm256_loadu_ps(x.as_ptr().add(i));
-        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(v, sv));
+        // SAFETY: `i + 8 <= n <= x.len().min(out.len())` keeps the load
+        // and the store in bounds.
+        unsafe {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(v, sv));
+        }
         i += 8;
     }
     while i < n {
@@ -248,8 +272,12 @@ pub unsafe fn div_in_place_f32(x: &mut [f32], d: f32) {
     let dv = _mm256_set1_ps(d);
     let mut i = 0;
     while i + 8 <= x.len() {
-        let v = _mm256_loadu_ps(x.as_ptr().add(i));
-        _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_div_ps(v, dv));
+        // SAFETY: `i + 8 <= x.len()` keeps the in-place load and store
+        // in bounds.
+        unsafe {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_div_ps(v, dv));
+        }
         i += 8;
     }
     while i < x.len() {

@@ -195,6 +195,7 @@ pub fn force_level(level: SimdLevel) {
 pub fn axpy_i16(acc: &mut [i64], x: i16, w: &[i16]) {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::axpy_i16(acc, x, w) },
         _ => scalar::axpy_i16(acc, x, w),
     }
@@ -217,6 +218,7 @@ pub fn axpy_strided_i16(acc: &mut [i64], x: i16, w: &[i16], stride: usize) {
 pub fn dot_i16(a: &[i16], b: &[i16]) -> i64 {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::dot_i16(a, b) },
         _ => scalar::dot_i16(a, b),
     }
@@ -227,6 +229,7 @@ pub fn dot_i16(a: &[i16], b: &[i16]) -> i64 {
 pub fn sumsq_i16(x: &[i16]) -> i64 {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::sumsq_i16(x) },
         _ => scalar::sumsq_i16(x),
     }
@@ -237,6 +240,7 @@ pub fn sumsq_i16(x: &[i16]) -> i64 {
 pub fn sum_i16(x: &[i16]) -> i64 {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::sum_i16(x) },
         _ => scalar::sum_i16(x),
     }
@@ -248,6 +252,7 @@ pub fn sum_i16(x: &[i16]) -> i64 {
 pub fn max_i16(x: &[i16]) -> i16 {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::max_i16(x) },
         _ => scalar::max_i16(x),
     }
@@ -261,6 +266,7 @@ pub fn scale_i16_q<const SHIFT: i32>(x: &[i16], scale: i32, out: &mut [i16]) {
     debug_assert!((0..=i16::MAX as i32).contains(&scale));
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::scale_i16_q::<SHIFT>(x, scale, out) },
         _ => scalar::scale_i16_q::<SHIFT>(x, scale, out),
     }
@@ -272,6 +278,7 @@ pub fn scale_i16_q<const SHIFT: i32>(x: &[i16], scale: i32, out: &mut [i16]) {
 pub fn axpy_f32(acc: &mut [f32], x: f32, w: &[f32]) {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::axpy_f32(acc, x, w) },
         _ => scalar::axpy_f32(acc, x, w),
     }
@@ -293,6 +300,7 @@ pub fn axpy_strided_f32(acc: &mut [f32], x: f32, w: &[f32], stride: usize) {
 pub fn mul_f32(x: &[f32], s: f32, out: &mut [f32]) {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::mul_f32(x, s, out) },
         _ => scalar::mul_f32(x, s, out),
     }
@@ -304,6 +312,7 @@ pub fn mul_f32(x: &[f32], s: f32, out: &mut [f32]) {
 pub fn div_in_place_f32(x: &mut [f32], d: f32) {
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only returns `Avx2` after runtime detection.
         SimdLevel::Avx2 => unsafe { avx2::div_in_place_f32(x, d) },
         _ => scalar::div_in_place_f32(x, d),
     }
@@ -365,6 +374,7 @@ mod tests {
                 let mut a = acc.clone();
                 let mut b = acc.clone();
                 scalar::axpy_i16(&mut a, *x, w);
+                // SAFETY: guarded by `avx2_supported()` above.
                 unsafe { avx2::axpy_i16(&mut b, *x, w) };
                 a == b
             },
@@ -387,6 +397,7 @@ mod tests {
                 let b: Vec<i16> = (0..n).map(|_| rand_i16(r)).collect();
                 (a, b)
             },
+            // SAFETY: guarded by `avx2_supported()` above.
             |(a, b)| unsafe {
                 scalar::dot_i16(a, b) == avx2::dot_i16(a, b)
                     && scalar::sumsq_i16(a) == avx2::sumsq_i16(a)
@@ -416,6 +427,7 @@ mod tests {
                 let mut a = vec![0i16; x.len()];
                 let mut b = vec![0i16; x.len()];
                 scalar::scale_i16_q::<8>(x, *scale, &mut a);
+                // SAFETY: guarded by `avx2_supported()` above.
                 unsafe { avx2::scale_i16_q::<8>(x, *scale, &mut b) };
                 a == b
             },
@@ -444,15 +456,18 @@ mod tests {
                 let mut a = acc.clone();
                 let mut b = acc.clone();
                 scalar::axpy_f32(&mut a, *x, w);
+                // SAFETY: guarded by `avx2_supported()` above.
                 unsafe { avx2::axpy_f32(&mut b, *x, w) };
                 let mut ma = vec![0.0f32; w.len()];
                 let mut mb = vec![0.0f32; w.len()];
                 scalar::mul_f32(w, *x, &mut ma);
+                // SAFETY: guarded by `avx2_supported()` above.
                 unsafe { avx2::mul_f32(w, *x, &mut mb) };
                 let mut da = w.clone();
                 let mut db = w.clone();
                 let d = 1.0 + x.abs();
                 scalar::div_in_place_f32(&mut da, d);
+                // SAFETY: guarded by `avx2_supported()` above.
                 unsafe { avx2::div_in_place_f32(&mut db, d) };
                 bits(&a) == bits(&b) && bits(&ma) == bits(&mb) && bits(&da) == bits(&db)
             },

@@ -32,7 +32,12 @@
 // fixed-point datapaths); iterator-chain rewrites would obscure that
 // correspondence, so the range-loop style lint is opted out crate-wide.
 #![allow(clippy::needless_range_loop)]
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block
+// with its own `// SAFETY:` note, even inside `unsafe fn` — enforced
+// here at compile time and by `fclint` (see [`analysis`]) in CI.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod backend;
 pub mod cache;
 pub mod capsnet;

@@ -76,16 +76,22 @@ impl Default for CountingAllocator {
 // SAFETY: delegates verbatim to `std::alloc::System`; the counter is a
 // relaxed atomic with no allocation of its own.
 unsafe impl std::alloc::GlobalAlloc for CountingAllocator {
+    // SAFETY: the caller upholds `GlobalAlloc::alloc`'s contract.
     unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
         self.allocs
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        std::alloc::GlobalAlloc::alloc(&self.inner, layout)
+        // SAFETY: `layout` is forwarded unchanged to the delegate.
+        unsafe { std::alloc::GlobalAlloc::alloc(&self.inner, layout) }
     }
 
+    // SAFETY: the caller upholds `GlobalAlloc::dealloc`'s contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
-        std::alloc::GlobalAlloc::dealloc(&self.inner, ptr, layout)
+        // SAFETY: `ptr` was produced by `self.inner` (every allocation
+        // path delegates to it), so returning it unchanged is sound.
+        unsafe { std::alloc::GlobalAlloc::dealloc(&self.inner, ptr, layout) }
     }
 
+    // SAFETY: the caller upholds `GlobalAlloc::realloc`'s contract.
     unsafe fn realloc(
         &self,
         ptr: *mut u8,
@@ -94,7 +100,9 @@ unsafe impl std::alloc::GlobalAlloc for CountingAllocator {
     ) -> *mut u8 {
         self.allocs
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        std::alloc::GlobalAlloc::realloc(&self.inner, ptr, layout, new_size)
+        // SAFETY: `ptr` came from `self.inner`; arguments forwarded
+        // unchanged to the delegate.
+        unsafe { std::alloc::GlobalAlloc::realloc(&self.inner, ptr, layout, new_size) }
     }
 }
 

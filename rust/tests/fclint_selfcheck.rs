@@ -1,0 +1,28 @@
+//! fclint self-check: the analyzer must run clean on this repository's
+//! own source tree (the same invariant the blocking CI job enforces),
+//! and the committed fixtures must keep violating it — otherwise the
+//! positive-case coverage has silently rotted.
+
+use fastcaps::analysis::{self, LintConfig};
+use std::path::Path;
+
+#[test]
+fn repo_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = analysis::analyze_tree(&src, &LintConfig::repo_default()).expect("scan src");
+    assert!(
+        report.findings.is_empty(),
+        "fclint findings on the repo tree: {:#?}",
+        report.findings
+    );
+    assert!(report.files_scanned > 10, "walker found too few files");
+}
+
+#[test]
+fn fixture_tree_still_violates() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/analysis/fixtures");
+    let cfg = LintConfig::repo_default();
+    let report = analysis::analyze_tree(&root, &cfg).expect("scan fixtures");
+    assert!(report.denies() > 0, "fixtures must keep violating fclint");
+    assert!(report.suppressed > 0, "fixture pragmas must keep suppressing");
+}

@@ -229,21 +229,13 @@ pub fn fingerprint_discipline(ctx: &Ctx) -> Vec<Finding> {
     out
 }
 
-/// Whether any identifier in `code` contains `frag` (case-insensitive),
-/// so `coupling` matches `acc_coupling_q`.
+/// Case-insensitive substring search, so `coupling` matches
+/// `acc_coupling_q`. Plain substring semantics are deliberate: the
+/// manifest fragments are identifier-shaped and the `code` view has
+/// comments removed and literal contents blanked, so a hit can only
+/// come from identifier text.
 fn ident_containing(code: &str, frag: &str) -> bool {
-    let lower = code.to_ascii_lowercase();
-    let frag = frag.to_ascii_lowercase();
-    let mut from = 0;
-    while let Some(pos) = lower[from..].find(&frag) {
-        let at = from + pos;
-        // Part of an identifier (not, say, an operator sequence).
-        if lower[at..].chars().next().map(is_ident).unwrap_or(false) {
-            return true;
-        }
-        from = at + frag.len();
-    }
-    false
+    code.to_ascii_lowercase().contains(&frag.to_ascii_lowercase())
 }
 
 // ---------------------------------------------------------------------

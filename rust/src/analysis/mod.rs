@@ -252,6 +252,11 @@ fn pragma_allows(comment: &str, lint: &str) -> bool {
 /// `fixtures/` and VCS dirs), locate the auxiliary texts, and run the
 /// registry. Paths in findings are relative to `root`.
 pub fn analyze_tree(root: &Path, cfg: &LintConfig) -> io::Result<Report> {
+    // Canonicalize before the upward aux searches: a relative root like
+    // `src` (how CI invokes the binary) has only the empty-path
+    // ancestor, which would silently skip every parent directory.
+    let canonical = root.canonicalize().unwrap_or_else(|_| root.to_path_buf());
+    let root = canonical.as_path();
     let mut files = Vec::new();
     let mut aux: Vec<(String, String)> = Vec::new();
     let mut stack = vec![root.to_path_buf()];

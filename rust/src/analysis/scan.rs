@@ -120,6 +120,13 @@ fn lex(text: &str) -> Vec<Line> {
                 }
                 LexState::Str => {
                     if c == '\\' {
+                        // Keep the escape sequence in `stripped`:
+                        // literal-comparing checks (wire-constant-sync)
+                        // must see `"\n"` and `"\t"` as different.
+                        line.stripped.push(c);
+                        if let Some(n) = next {
+                            line.stripped.push(n);
+                        }
                         i += 2;
                     } else if c == '"' {
                         line.code.push('"');
@@ -233,9 +240,10 @@ struct PendingFn {
     depth: usize,
     /// 1-based line of the `fn` keyword.
     start: usize,
-    /// Char column of the `fn` keyword on that line — same-line braces
-    /// and semicolons *before* it (`let c = '{'; fn f…`) are not the
-    /// fn's own punctuation and must not attach or cancel it.
+    /// Char column of the `fn` keyword on that line. Punctuation
+    /// *before* it is not the fn's own: a `;` there (`mod m; fn f…`)
+    /// must not cancel it, and braces there (`impl X { fn g…`) adjust
+    /// `depth` instead of attaching.
     col: usize,
 }
 
@@ -283,6 +291,15 @@ fn structure(lines: &mut [Line]) -> Vec<FnItem> {
                         test_stack.push(depth);
                         pending_test = None;
                     }
+                    if let Some(p) = pending_fn.as_mut() {
+                        if p.start == lineno && col < p.col {
+                            // A brace before the fn keyword on its own
+                            // line (`impl X { fn g…`): the fn sits one
+                            // level inside it, so its own `{`/`;` must
+                            // be matched at the deeper depth.
+                            p.depth += 1;
+                        }
+                    }
                     if let Some(p) = pending_fn.take() {
                         if p.owns(depth, lineno, col) {
                             fn_stack.push((p.name, depth, p.start));
@@ -294,6 +311,16 @@ fn structure(lines: &mut [Line]) -> Vec<FnItem> {
                 }
                 '}' => {
                     depth = depth.saturating_sub(1);
+                    if let Some(p) = pending_fn.as_mut() {
+                        if p.start == lineno && col < p.col {
+                            p.depth = p.depth.saturating_sub(1);
+                        }
+                    }
+                    if pending_fn.as_ref().map(|p| depth < p.depth).unwrap_or(false) {
+                        // The block the fn was declared in closed with
+                        // no body attached — it can never attach now.
+                        pending_fn = None;
+                    }
                     if test_stack.last() == Some(&depth) {
                         test_stack.pop();
                     }
@@ -431,5 +458,42 @@ mod tests {
     fn bodyless_fns_are_skipped() {
         let f = scan("t.rs", "extern \"C\" {\n    fn poll(n: u64) -> i32;\n}\n");
         assert!(f.fns.is_empty());
+    }
+
+    #[test]
+    fn single_line_trait_decl_cancels_pending_fn() {
+        // The fn's `;` sits one brace level deeper than the line start;
+        // it must still cancel the declaration, not leak onto the next
+        // top-level block.
+        let text = "trait T { fn f(&self); }\n\
+                    pub fn live() {\n\
+                        body();\n\
+                    }\n";
+        let f = scan("t.rs", text);
+        let names: Vec<&str> = f.fns.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, vec!["live"], "{:?}", f.fns);
+        assert_eq!(f.enclosing_fn(3).map(|x| x.name.as_str()), Some("live"));
+    }
+
+    #[test]
+    fn single_line_impl_fn_attaches_to_its_own_body() {
+        let text = "impl X { fn g() { inner(); } }\n\
+                    pub fn live() {}\n";
+        let f = scan("t.rs", text);
+        let g = f.fns.iter().find(|x| x.name == "g").expect("fn g");
+        assert_eq!((g.start, g.end), (1, 1));
+        let live = f.fns.iter().find(|x| x.name == "live").expect("fn live");
+        assert_eq!((live.start, live.end), (2, 2));
+    }
+
+    #[test]
+    fn string_escapes_survive_in_stripped() {
+        let f = scan("t.rs", "let a = \"x\\n\";\nlet b = \"x\\t\";\n");
+        assert!(f.lines[0].stripped.contains("\\n"));
+        assert!(f.lines[1].stripped.contains("\\t"));
+        assert_ne!(
+            f.lines[0].stripped.replace("let a", ""),
+            f.lines[1].stripped.replace("let b", "")
+        );
     }
 }

@@ -19,6 +19,26 @@ fn repo_tree_is_clean() {
 }
 
 #[test]
+fn repo_tree_is_clean_from_relative_root() {
+    // CI runs `fclint -- src` with the crate directory as cwd; the
+    // upward searches for the repo-root DESIGN.md and the bench file
+    // must work from a relative root too (a relative path has only the
+    // empty-path ancestor, so the walk needs canonicalization first).
+    // Cargo sets the test cwd to the manifest dir, mirroring CI.
+    assert!(
+        Path::new("src/analysis").is_dir(),
+        "test cwd is not the crate root; relative-root check is void"
+    );
+    let report =
+        analysis::analyze_tree(Path::new("src"), &LintConfig::repo_default()).expect("scan src");
+    assert!(
+        report.findings.is_empty(),
+        "fclint findings from a relative root: {:#?}",
+        report.findings
+    );
+}
+
+#[test]
 fn fixture_tree_still_violates() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/analysis/fixtures");
     let cfg = LintConfig::repo_default();
